@@ -1,0 +1,204 @@
+//! END-TO-END DRIVER (Fig. 1): proves all three layers compose.
+//!
+//! 1. **Train** — ResNet-32 (0.47 M params) is trained for a few
+//!    hundred SGD steps on a synthetic 10-class image corpus, running
+//!    the AOT-exported `resnet32_sgd_b8` graph (L2 JAX fwd+bwd, lowered
+//!    through the L1 Pallas-bearing pipeline) on the PJRT CPU client
+//!    from rust — python is never executed.
+//! 2. **Compress** — the trained conv tensors become the global model
+//!    of a federated fleet; each edge node's TTD compression runs
+//!    through the real Algorithm-1 numerics while the SoC simulator
+//!    accounts cycles + energy on TT-Edge vs Baseline silicon.
+//! 3. **Reconstruct & evaluate** — the leader decodes the TT cores,
+//!    and the reconstructed model is re-evaluated through the
+//!    `resnet32_fwd_b4` artifact: accuracy retention is the paper's
+//!    Table-I accuracy column, measured rather than transcribed.
+//!
+//! Run: `make artifacts && cargo run --release --example federated_round`
+//! The reference run is recorded in EXPERIMENTS.md.
+
+use anyhow::Result;
+use tt_edge::coordinator::{Coordinator, FederatedConfig};
+use tt_edge::model::{conv_layers, ParamStore};
+use tt_edge::runtime::{Engine, Value};
+use tt_edge::sim::SocConfig;
+use tt_edge::ttd::Tensor;
+use tt_edge::util::cli::Args;
+use tt_edge::util::Rng;
+
+/// Synthetic 10-class corpus: class-conditional means + noise, so the
+/// model has real structure to learn (and accuracy is meaningful).
+fn make_corpus(rng: &mut Rng, n: usize) -> (Vec<Vec<f32>>, Vec<Vec<i32>>) {
+    let mut class_means: Vec<Vec<f32>> = Vec::new();
+    for _ in 0..10 {
+        class_means.push(rng.normal_vec(32 * 32 * 3).iter().map(|v| v * 0.8).collect());
+    }
+    let mut batches_x = Vec::new();
+    let mut batches_y = Vec::new();
+    for _ in 0..n {
+        let mut x = Vec::with_capacity(8 * 32 * 32 * 3);
+        let mut y = Vec::with_capacity(8);
+        for _ in 0..8 {
+            let c = rng.below(10);
+            y.push(c as i32);
+            for m in &class_means[c] {
+                x.push(m + 0.35 * rng.normal() as f32);
+            }
+        }
+        batches_x.push(x);
+        batches_y.push(y);
+    }
+    (batches_x, batches_y)
+}
+
+fn accuracy(eng: &mut Engine, params: &ParamStore, xs: &[Vec<f32>], ys: &[Vec<i32>]) -> Result<f64> {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for (x8, y8) in xs.iter().zip(ys) {
+        // fwd artifact is batch-4: split each batch of 8.
+        for half in 0..2 {
+            let xi = &x8[half * 4 * 3072..(half + 1) * 4 * 3072];
+            let mut inputs: Vec<Value> =
+                params.values.iter().map(Value::from_tensor).collect();
+            inputs.push(Value::F32 { shape: vec![4, 32, 32, 3], data: xi.to_vec() });
+            let out = eng.run("resnet32_fwd_b4", &inputs)?;
+            let logits = out[0].as_f32()?;
+            for b in 0..4 {
+                let row = &logits[b * 10..(b + 1) * 10];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred as i32 == y8[half * 4 + b] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+    }
+    Ok(correct as f64 / total as f64)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let steps: usize = args.parse_opt("steps").unwrap_or(240);
+    let eps: f32 = args.parse_opt("eps").unwrap_or(0.08);
+    let nodes: usize = args.parse_opt("nodes").unwrap_or(3);
+    let rounds: usize = args.parse_opt("rounds").unwrap_or(2);
+
+    let mut eng = Engine::load_default()?;
+    println!("PJRT platform: {} | artifacts: {}", eng.platform(), eng.entry_names().len());
+
+    // ------------------------------------------------- 1. training
+    let mut rng = Rng::new(2026);
+    let (xs, ys) = make_corpus(&mut rng, 8); // 64 samples
+    let mut params = ParamStore::init_resnet32(1);
+    // "Pretrained" conv weights: planted low-TT-rank structure scaled
+    // to He magnitude (trained CNNs are TT-compressible — that is the
+    // phenomenon the paper exploits; He-random ones are not, see
+    // DESIGN.md section 2). Fine-tuning then preserves near-low-rank.
+    for l in conv_layers() {
+        let mut crng = rng.fork(0x1000 + l.param_index as u64);
+        let planted =
+            tt_edge::sim::workload::synthetic_trained_conv(&mut crng, &l, 3.55, 0.03);
+        let fan_in = (l.shape[0] * l.shape[1] * l.shape[2]) as f32;
+        let target_rms = (2.0 / fan_in).sqrt();
+        let rms = planted.frobenius() / (planted.numel() as f32).sqrt();
+        let scale = target_rms / rms.max(1e-12);
+        let shape = params.values[l.param_index].shape.clone();
+        params.values[l.param_index] = Tensor::from_vec(
+            &shape,
+            planted.data.iter().map(|v| v * scale).collect(),
+        );
+    }
+    let lr = 0.5f32;
+    println!("\n[1] fine-tuning ResNet-32 ({} params) for {steps} SGD steps (PJRT, batch 8)", params.total_params());
+    let t0 = std::time::Instant::now();
+    let mut first_loss = f32::NAN;
+    let mut last_loss = f32::NAN;
+    for step in 0..steps {
+        let b = step % xs.len();
+        let mut inputs: Vec<Value> = params.values.iter().map(Value::from_tensor).collect();
+        inputs.push(Value::F32 { shape: vec![8, 32, 32, 3], data: xs[b].clone() });
+        inputs.push(Value::I32 { shape: vec![8], data: ys[b].clone() });
+        inputs.push(Value::scalar_f32(lr));
+        let out = eng.run("resnet32_sgd_b8", &inputs)?;
+        // outputs: params' (95) + loss
+        for (t, v) in params.values.iter_mut().zip(&out[..out.len() - 1]) {
+            t.data.copy_from_slice(v.as_f32()?);
+        }
+        let loss = out.last().unwrap().as_f32()?[0];
+        if step == 0 {
+            first_loss = loss;
+        }
+        last_loss = loss;
+        if step % 40 == 0 || step + 1 == steps {
+            println!("  step {step:>4}: loss {loss:.4}");
+        }
+    }
+    println!(
+        "  loss {first_loss:.3} -> {last_loss:.3} in {:.1}s",
+        t0.elapsed().as_secs_f64()
+    );
+    let acc_trained = accuracy(&mut eng, &params, &xs, &ys)?;
+    println!("  trained accuracy on corpus: {:.1}%", acc_trained * 100.0);
+
+    // --------------------------------- 2. federated compression
+    println!("\n[2] federated compression: {nodes} nodes x {rounds} rounds, eps={eps}");
+    let layers = conv_layers();
+    let global: Vec<_> = layers
+        .iter()
+        .map(|l| {
+            let t = params.values[l.param_index].reshape(&l.tt_dims());
+            (l.clone(), t)
+        })
+        .collect();
+    for soc in [SocConfig::baseline(), SocConfig::tt_edge()] {
+        let name = soc.name();
+        let cfg = FederatedConfig { nodes, rounds: 1, eps, drift: 0.0, soc, ..Default::default() };
+        let mut c = Coordinator::with_global(cfg, global.clone());
+        let r = c.round(0);
+        println!(
+            "  {name:<9} per-node compression {:>8.1} ms / {:>7.1} mJ | {:.2}x comm. reduction | agg err {:.4}",
+            r.mean_compress_ms, r.mean_compress_mj, r.communication_reduction, r.aggregate_rel_err
+        );
+    }
+
+    // ------------------------- 3. reconstruct + evaluate accuracy
+    println!("\n[3] accuracy retention after TTD round-trip");
+    let cfg = FederatedConfig {
+        nodes,
+        rounds,
+        eps,
+        drift: 0.0,
+        soc: SocConfig::tt_edge(),
+        ..Default::default()
+    };
+    let mut c = Coordinator::with_global(cfg, global.clone());
+    let reports = c.run();
+    // write reconstructed convs back into the parameter store
+    let mut compressed = params.clone();
+    for (l, (_, w)) in layers.iter().zip(&c.global) {
+        compressed.values[l.param_index] =
+            Tensor::from_vec(&compressed.values[l.param_index].shape.clone(), w.data.clone());
+    }
+    let acc_compressed = accuracy(&mut eng, &compressed, &xs, &ys)?;
+    let total_wire: usize = reports.iter().map(|r| r.wire_bytes).sum();
+    let conv_params: usize = layers.iter().map(|l| l.numel()).sum();
+    println!(
+        "  accuracy {:.1}% -> {:.1}% (delta {:+.1} pts)",
+        acc_trained * 100.0,
+        acc_compressed * 100.0,
+        (acc_compressed - acc_trained) * 100.0
+    );
+    println!(
+        "  wire traffic {:.0} KB over {} node-rounds (dense would be {:.0} KB)",
+        total_wire as f64 / 1024.0,
+        nodes * rounds,
+        (nodes * rounds * 4 * conv_params) as f64 / 1024.0
+    );
+    println!("\nfederated_round e2e OK");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: compress one conv kernel with Algorithm-1 TTD, check
+//! the reconstruction, and see what the TT-Edge SoC buys you.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tt_edge::sim::{HwTimeline, SimReport, SocConfig};
+use tt_edge::trace::{TraceSink, VecSink};
+use tt_edge::ttd::{decompose, reconstruct, relative_error, Tensor};
+use tt_edge::util::Rng;
+
+fn main() {
+    // A "trained-like" 3x3x64x64 conv kernel (planted TT structure +
+    // noise — see DESIGN.md section 2 for why).
+    let layer = tt_edge::model::conv_layers().pop().unwrap();
+    let mut rng = Rng::new(42);
+    let w: Tensor =
+        tt_edge::sim::workload::synthetic_trained_conv(&mut rng, &layer, 3.5, 0.03);
+    println!("input tensor: {:?} ({} params)", w.shape, w.numel());
+
+    // --- Algorithm 1: TTD with prescribed accuracy eps ------------
+    let eps = 0.10;
+    let mut trace = VecSink::default();
+    let d = decompose(&w, eps, None, &mut trace);
+    println!(
+        "TT ranks {:?} -> {} params ({:.2}x compression)",
+        d.ranks,
+        d.param_count(),
+        d.compression_ratio()
+    );
+
+    // --- Eq. (1)/(2): reconstruction -------------------------------
+    let err = relative_error(&w, &d);
+    println!("reconstruction error {err:.4} (budget eps = {eps})");
+    assert!(err <= eps + 1e-3);
+    let wr = reconstruct(&d);
+    assert_eq!(wr.shape, w.shape);
+
+    // --- The same operation stream on both SoCs --------------------
+    for cfg in [SocConfig::baseline(), SocConfig::tt_edge()] {
+        let name = cfg.name();
+        let mut tl = HwTimeline::new(cfg);
+        for op in &trace.ops {
+            tl.op(*op);
+        }
+        let r = SimReport::from_timeline(&tl);
+        println!(
+            "{name:<9} compression of this layer: {:8.2} ms, {:7.2} mJ",
+            r.total_ms, r.total_mj
+        );
+    }
+    println!("quickstart OK");
+}

@@ -1,0 +1,44 @@
+//! Print the modeled SoC pipeline + the simulated Table III.
+use tt_edge::sim::{compress_resnet32, format_table3, SocConfig};
+use tt_edge::sim::timeline::HwTimeline;
+use tt_edge::trace::{HwOp, Phase, TraceSink, VecSink};
+use tt_edge::sim::workload::{synthetic_model, compress_model};
+
+fn main() {
+    let layers = synthetic_model(42, 3.55, 0.035);
+    let mut trace = VecSink::default();
+    let _ = compress_model(&layers, 0.12, &mut trace);
+    // raw per-phase op aggregates
+    let mut phase = Phase::ReshapeEtc;
+    let mut tiles_hbd = 0u64; let mut house_elems = 0u64; let mut vecdiv_elems = 0u64;
+    let mut givens_elems = 0u64; let mut sort_cmps = 0u64; let mut reorder_elems = 0u64;
+    let mut trunc_probes = 0u64; let mut reshape_elems = 0u64; let mut upd_elems = 0u64;
+    let mut house_count = 0u64; let mut gemm_count_hbd = 0u64;
+    for op in &trace.ops {
+        match *op {
+            HwOp::SetPhase(p) => phase = p,
+            HwOp::Gemm { m, n, k } => {
+                let t = tt_edge::sim::gemm::tiles(m as u64, n as u64, k as u64);
+                if phase == Phase::Hbd { tiles_hbd += t; gemm_count_hbd += 1; }
+                if phase == Phase::UpdateSvdInput { upd_elems += (m*n) as u64; }
+            }
+            HwOp::HouseGen { len } => { house_elems += len as u64; house_count += 1; }
+            HwOp::VecDiv { len } => vecdiv_elems += len as u64,
+            HwOp::GivensRot { len } => givens_elems += len as u64,
+            HwOp::Sort { n, .. } => sort_cmps += (n*(n.saturating_sub(1))/2) as u64,
+            HwOp::ReorderBasis { rows, cols } => reorder_elems += (rows*cols) as u64,
+            HwOp::Trunc { probes, .. } => trunc_probes += probes as u64,
+            HwOp::Reshape { elems } => reshape_elems += elems as u64,
+            _ => {}
+        }
+    }
+    println!("tiles_hbd={tiles_hbd} gemms_hbd={gemm_count_hbd} house_count={house_count} house_elems={house_elems} vecdiv_elems={vecdiv_elems}");
+    println!("givens_elems={givens_elems} sort_cmps={sort_cmps} reorder_elems={reorder_elems} trunc_probes={trunc_probes} reshape_elems={reshape_elems} upd_elems={upd_elems}");
+
+    let reports: Vec<_> = [SocConfig::baseline(), SocConfig::tt_edge()].iter().map(|cfg| {
+        let mut tl = HwTimeline::new(cfg.clone());
+        for op in &trace.ops { tl.op(*op); }
+        tt_edge::sim::SimReport::from_timeline(&tl)
+    }).collect();
+    println!("{}", format_table3(&reports[0], &reports[1]));
+}

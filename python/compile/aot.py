@@ -1,0 +1,205 @@
+"""AOT exporter: lower L2 entry points to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compiler_ir("hlo").as_hlo_text()`` via
+``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the published ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Every entry point is lowered with ``return_tuple=True``; the rust side
+unwraps with ``to_tuple()``.  ``manifest.json`` records the flattened
+PJRT argument order (name/shape/dtype per input and output) so the
+rust runtime (rust/src/runtime/) can marshal literals mechanically.
+
+Run once via ``make artifacts``; python never touches the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, resnet
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(x):
+    return {"shape": list(x.shape), "dtype": x.dtype.name}
+
+
+def _flat_specs(tree):
+    return [_spec(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+# --------------------------------------------------------------------------
+# Entry-point registry.  Each builder returns (fn, example_args, note).
+# Shapes are chosen to match the dominant ResNet-32 stage-3 conv layer
+# (3x3x64x64) and the L1 kernel tile sizes -- see DESIGN.md section 4.
+# --------------------------------------------------------------------------
+
+
+def _entry_house_left():
+    v = jnp.zeros((128,), F32)
+    a = jnp.zeros((128, 128), F32)
+    beta = jnp.zeros((), F32)
+    fn = lambda v, a, beta: (model.house_update.house_update_left(v, a, beta),)  # noqa: E731
+    return fn, (v, a, beta), "fused HOUSE_MM_UPDATE order=0, 128x128"
+
+
+def _entry_house_right():
+    v = jnp.zeros((128,), F32)
+    a = jnp.zeros((128, 128), F32)
+    beta = jnp.zeros((), F32)
+    fn = lambda v, a, beta: (model.house_update.house_update_right(v, a, beta),)  # noqa: E731
+    return fn, (v, a, beta), "fused HOUSE_MM_UPDATE order=1, 128x128"
+
+
+def _entry_gemm():
+    x = jnp.zeros((256, 256), F32)
+    y = jnp.zeros((256, 256), F32)
+    fn = lambda x, y: (model.gemm_block.gemm(x, y),)  # noqa: E731
+    return fn, (x, y), "blocked GEMM 256x256x256 (16x16-tile schedule)"
+
+
+def _entry_norm():
+    x = jnp.zeros((4096,), F32)
+    fn = lambda x: (model.norm.norm(x),)  # noqa: E731
+    return fn, (x,), "streaming FP-ALU norm, 4096 elements"
+
+
+def _entry_svd_144x64():
+    a = jnp.zeros((144, 64), F32)
+    fn = lambda a: model.svd(a)  # noqa: E731
+    return fn, (a,), "HBD + Jacobi SVD of a (144, 64) working matrix"
+
+
+def _entry_ttd3_conv64():
+    w = jnp.zeros((3, 3, 64, 64), F32)
+    eps = jnp.zeros((), F32)  # eps is a runtime input (traced scalar)
+
+    def fn(w, eps):
+        t = w.reshape(9, 64, 64)
+        return _ttd3_traced(t, eps)
+
+    return fn, (w, eps), "full TTD of a 3x3x64x64 conv kernel, rank cap 32"
+
+
+def _ttd3_traced(t, eps):
+    """ttd3 with a *traced* eps (delta computed inside the graph)."""
+    from .ttd import delta_threshold, ttd_step
+
+    n1, n2, n3 = t.shape
+    delta = eps / jnp.sqrt(jnp.asarray(2.0, F32)) * jnp.sqrt(jnp.sum(t.astype(F32) ** 2))
+    w1 = t.reshape(n1, n2 * n3)
+    g1, w2, r1 = ttd_step(w1, delta, min(32, n1))
+    k1 = g1.shape[1]
+    w2 = w2.reshape(k1 * n2, n3)
+    g2, w3, r2 = ttd_step(w2, delta, min(32, n3))
+    k2 = g2.shape[1]
+    return (
+        g1.reshape(1, n1, k1),
+        g2.reshape(k1, n2, k2),
+        w3.reshape(k2, n3, 1),
+        r1,
+        r2,
+    )
+
+
+def _entry_tt_rec3_conv64():
+    g1 = jnp.zeros((1, 9, 9), F32)
+    g2 = jnp.zeros((9, 64, 64), F32)
+    g3 = jnp.zeros((64, 64, 1), F32)
+    fn = lambda g1, g2, g3: (model.tt_reconstruct([g1, g2, g3]),)  # noqa: E731
+    return fn, (g1, g2, g3), "TT reconstruction of the 3x3x64x64 conv cores"
+
+
+def _entry_resnet32_fwd():
+    params = resnet.init_params(jax.random.PRNGKey(0))
+    x = jnp.zeros((4, 32, 32, 3), F32)
+    fn = lambda params, x: (resnet.forward(params, x),)  # noqa: E731
+    return fn, (params, x), "ResNet-32 inference, batch 4, NHWC"
+
+
+def _entry_resnet32_sgd():
+    params = resnet.init_params(jax.random.PRNGKey(0))
+    x = jnp.zeros((8, 32, 32, 3), F32)
+    labels = jnp.zeros((8,), jnp.int32)
+    lr = jnp.zeros((), F32)
+
+    def fn(params, x, labels, lr):
+        new_params, loss = resnet.sgd_step(params, x, labels, lr)
+        return tuple(new_params) + (loss,)
+
+    return fn, (params, x, labels, lr), "one SGD step (fwd+bwd), batch 8"
+
+
+ENTRIES = {
+    "house_left_128": _entry_house_left,
+    "house_right_128": _entry_house_right,
+    "gemm_256": _entry_gemm,
+    "norm_4096": _entry_norm,
+    "svd_144x64": _entry_svd_144x64,
+    "ttd3_conv64": _entry_ttd3_conv64,
+    "tt_rec3_conv64": _entry_tt_rec3_conv64,
+    "resnet32_fwd_b4": _entry_resnet32_fwd,
+    "resnet32_sgd_b8": _entry_resnet32_sgd,
+}
+
+
+def export_entry(name: str, out_dir: pathlib.Path) -> dict:
+    fn, args, note = ENTRIES[name]()
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    (out_dir / fname).write_text(text)
+    outs = jax.eval_shape(fn, *args)
+    entry = {
+        "name": name,
+        "file": fname,
+        "note": note,
+        "inputs": _flat_specs(args),
+        "outputs": _flat_specs(outs),
+        "hlo_chars": len(text),
+    }
+    print(f"  {name}: {len(text)} chars, {len(entry['inputs'])} in / {len(entry['outputs'])} out")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", default=None, help="comma-separated entry filter")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    names = list(ENTRIES) if not args.only else args.only.split(",")
+    manifest = {"entries": []}
+    # Preserve an existing manifest when exporting a subset.
+    mpath = out_dir / "manifest.json"
+    if args.only and mpath.exists():
+        manifest = json.loads(mpath.read_text())
+        manifest["entries"] = [e for e in manifest["entries"] if e["name"] not in names]
+    for name in names:
+        manifest["entries"].append(export_entry(name, out_dir))
+    manifest["entries"].sort(key=lambda e: e["name"])
+    mpath.write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {mpath} ({len(manifest['entries'])} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for the TT-Edge compute hot-spot.
+
+Modules:
+  * :mod:`house_update` -- fused HOUSE_MM_UPDATE (Algorithm 2) rank-1 update
+  * :mod:`gemm_block`   -- blocked GEMM mirroring the 16x16 accelerator
+  * :mod:`norm`         -- streaming vector norm (Shared FP-ALU opcode)
+  * :mod:`ref`          -- pure-jnp oracles for all of the above
+"""
+
+from . import gemm_block, house_update, norm, ref  # noqa: F401

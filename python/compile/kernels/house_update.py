@@ -1,0 +1,122 @@
+"""Fused HOUSE_MM_UPDATE Pallas kernels (Algorithm 2, lines 27-32).
+
+The paper's HBD-ACC issues *two consecutive GEMMs* per Householder
+update (``v^T x SubArray`` then the rank-1 outer product), keeping the
+Householder vector resident in the GEMM accelerator's SPM between the
+two.  The TPU analogue (DESIGN.md section 8) keeps ``v`` and ``v/beta``
+VMEM-resident across both contractions and streams each block of ``A``
+through VMEM exactly once per update:
+
+  left  (order=0):  A <- A + outer(v / beta, v^T A)
+  right (order=1):  A <- A + outer(A v,      v / beta)
+
+with ``beta = v1 * q`` computed by the VEC-DIVISION stage (v1 is the
+pivot element of ``v``).  ``beta`` is an explicit operand here because
+the L2 model runs HBD in masked fixed-shape form, where the pivot sits
+at a dynamic row/column index rather than at ``v[0]``.
+
+Grid layout:
+  * left:  one program per *column* block; the block sees all M rows, so
+    ``w = v @ A_blk`` and the outer-product update complete locally.
+  * right: one program per *row* block; symmetric.
+
+This is a single HBM pass over ``A`` versus three for the unfused
+sequence (read for w, read+write for the update), which is exactly the
+traffic the paper eliminates with SPM retention.
+
+All kernels run with ``interpret=True`` (CPU correctness path); real-TPU
+efficiency is estimated analytically in DESIGN.md / EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Column/row block width. 128 matches the TPU lane width; the paper's
+# 16x16 accelerator tiles sub-divide it exactly (DESIGN.md section 8).
+DEFAULT_BLOCK = 128
+
+
+def _left_kernel(v_ref, beta_ref, a_ref, o_ref):
+    """One column-block of ``A + outer(v/beta, v @ A)``."""
+    v = v_ref[...]  # (M,) -- VMEM-resident across both contractions
+    a = a_ref[...]  # (M, bn)
+    beta = beta_ref[0]
+    w = v @ a  # first "GEMM": (bn,)
+    # second "GEMM": rank-1 update, fused -- A is still in VMEM.
+    o_ref[...] = a + (v / beta)[:, None] * w[None, :]
+
+
+def _right_kernel(v_ref, beta_ref, a_ref, o_ref):
+    """One row-block of ``A + outer(A @ v, v/beta)``."""
+    v = v_ref[...]  # (N,)
+    a = a_ref[...]  # (bm, N)
+    beta = beta_ref[0]
+    u = a @ v  # (bm,)
+    o_ref[...] = a + u[:, None] * (v / beta)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def house_update_left(v, a, beta, *, block: int = DEFAULT_BLOCK):
+    """``A + (v/beta)(v^T A)``.  v: (M,), a: (M, N), beta: scalar."""
+    m, n = a.shape
+    bn = min(block, n)
+    pad = (-n) % bn
+    if pad:  # zero column padding: w and the update are zero there
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+    grid = (pl.cdiv(n + pad, bn),)
+    beta = jnp.asarray(beta, a.dtype).reshape(1)
+    out = pl.pallas_call(
+        _left_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m,), lambda j: (0,)),          # v: broadcast
+            pl.BlockSpec((1,), lambda j: (0,)),          # beta
+            pl.BlockSpec((m, bn), lambda j: (0, j)),     # A column block
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n + pad), a.dtype),
+        interpret=True,
+    )(v, beta, a)
+    return out[:, :n] if pad else out
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def house_update_right(v, a, beta, *, block: int = DEFAULT_BLOCK):
+    """``A + (A v)(v/beta)``.  v: (N,), a: (M, N), beta: scalar."""
+    m, n = a.shape
+    bm = min(block, m)
+    pad = (-m) % bm
+    if pad:  # zero row padding: u and the update are zero there
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+    grid = (pl.cdiv(m + pad, bm),)
+    beta = jnp.asarray(beta, a.dtype).reshape(1)
+    out = pl.pallas_call(
+        _right_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),          # v: broadcast
+            pl.BlockSpec((1,), lambda i: (0,)),          # beta
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),     # A row block
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m + pad, n), a.dtype),
+        interpret=True,
+    )(v, beta, a)
+    return out[:m, :] if pad else out
+
+
+def house_update_from_q(q, v, a, order: int, *, block: int = DEFAULT_BLOCK):
+    """HOUSE_MM_UPDATE exactly as Algorithm 2 writes it: beta = v[0]*q.
+
+    Standalone (unmasked) convenience used by pytest to check the kernel
+    against the Algorithm-2 oracle in :mod:`ref`.
+    """
+    beta = v[0] * q
+    if order == 0:
+        return house_update_left(v, a, beta, block=block)
+    return house_update_right(v, a, beta, block=block)

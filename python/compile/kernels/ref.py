@@ -1,0 +1,93 @@
+"""Pure-jnp reference oracles for the TT-Edge Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float
+reassociation) counterpart here; pytest asserts allclose between the
+two.  These functions are also the executable specification of the
+paper's Algorithm 2 primitives:
+
+  * ``house``            -- HOUSE(x): Householder vector + q   (Alg. 2, l. 22-26)
+  * ``house_update_*``   -- HOUSE_MM_UPDATE(q, v, A, order)    (Alg. 2, l. 27-32)
+  * ``gemm``             -- the GEMM accelerator's matmul
+  * ``norm``             -- the Shared FP-ALU's streaming norm opcode
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def norm(x: jnp.ndarray) -> jnp.ndarray:
+    """Shared FP-ALU ``norm``: sqrt(sum(x_i^2)) via MAC stream + SQRT."""
+    x = x.reshape(-1)
+    return jnp.sqrt(jnp.sum(x * x))
+
+
+def house(x: jnp.ndarray):
+    """HOUSE(x) from Algorithm 2.
+
+    Returns ``(q, v)`` with ``q = -sign(x1) * ||x||`` and
+    ``v = x + sign(x1) * ||x|| * e1``.  ``sign`` follows the hardware
+    convention ``sign(0) = +1`` (the FP-ALU reads the IEEE sign bit).
+    """
+    nrm = norm(x)
+    s = jnp.where(jnp.signbit(x[0]), -1.0, 1.0).astype(x.dtype)
+    q = -s * nrm
+    v = x.at[0].add(s * nrm)
+    return q, v
+
+
+def house_update_left(q: jnp.ndarray, v: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """HOUSE_MM_UPDATE with order=0 (left transform).
+
+    ``A <- A + (v / beta) (v^T A)`` with ``beta = v[0] * q``.  This equals
+    ``H A`` for ``H = I - 2 v v^T / (v^T v)`` because
+    ``v^T v = -2 q v[0] = -2 beta`` for a HOUSE-generated ``v``.
+    """
+    beta = v[0] * q
+    w = v @ a  # (n,)
+    return a + jnp.outer(v / beta, w)
+
+
+def house_update_right(q: jnp.ndarray, v: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """HOUSE_MM_UPDATE with order=1 (right transform).
+
+    ``A <- A + (A v^T) (v / beta)`` with ``beta = v[0] * q`` -- i.e. ``A H``.
+    """
+    beta = v[0] * q
+    u = a @ v  # (m,)
+    return a + jnp.outer(u, v / beta)
+
+
+def gemm(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Reference matmul for the blocked GEMM kernel."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def hbd_reference(a: jnp.ndarray):
+    """Straight-line Householder bidiagonalization (Golub & Van Loan 5.4.3).
+
+    Dense, numpy-style loop over shrinking submatrices -- the oracle the
+    masked fixed-shape L2 implementation is tested against.
+    Returns ``(U_B, B, V_B^T)`` with ``A = U_B @ B @ V_B^T``.
+    """
+    m, n = a.shape
+    assert m >= n, "HBD oracle expects a tall (M >= N) matrix"
+    a = a.astype(jnp.float32)
+    u = jnp.eye(m, dtype=jnp.float32)
+    vt = jnp.eye(n, dtype=jnp.float32)
+    for i in range(n):
+        # Left transform: zero sub-diagonal of column i.
+        x = a[i:, i]
+        _, v = house(x)
+        h = jnp.eye(m - i) - 2.0 * jnp.outer(v, v) / (v @ v)
+        a = a.at[i:, i:].set(h @ a[i:, i:])
+        u = u.at[:, i:].set(u[:, i:] @ h)
+        if i < n - 2:
+            # Right transform: zero row i beyond the superdiagonal.
+            y = a[i, i + 1:]
+            _, v = house(y)
+            h = jnp.eye(n - i - 1) - 2.0 * jnp.outer(v, v) / (v @ v)
+            a = a.at[i:, i + 1:].set(a[i:, i + 1:] @ h)
+            vt = vt.at[i + 1:, :].set(h @ vt[i + 1:, :])
+    b = jnp.triu(jnp.tril(a[:n, :n], 1))  # keep main + first super diagonal
+    return u, b, vt

@@ -1,0 +1,59 @@
+"""L2 assembly: the TT-Edge compute graph, built on the L1 kernels.
+
+This module is the single import surface the AOT exporter and the
+pytest suite use.  It stitches together:
+
+  * :mod:`svd`     -- HBD (Pallas ``house_update``/``norm``) + Jacobi
+  * :mod:`ttd`     -- Algorithm 1 on padded fixed shapes + Eq. (1)/(2)
+  * :mod:`resnet`  -- ResNet-32, the compression workload
+  * :mod:`kernels` -- the raw L1 entry points (exported standalone too)
+
+Everything lowers to static-shape HLO; ``aot.py`` writes one artifact
+per entry point plus ``manifest.json`` describing PJRT argument order.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import resnet, ttd
+from .kernels import gemm_block, house_update, norm  # noqa: F401
+from .svd import hbd, jacobi_svd, svd  # noqa: F401
+from .ttd import delta_threshold, tt_reconstruct, ttd3, ttd4, ttd_step  # noqa: F401
+
+
+def ttd_compress_conv(w, eps: float, max_rank: int, *, sweeps: int = 12):
+    """Compress one (kh, kw, cin, cout) conv kernel as a 3-D TT.
+
+    The paper reshapes conv weights before decomposition (Alg. 1 l. 7);
+    we use the (kh*kw, cin, cout) factorization -- the layout TIE/ETTE
+    use for conv layers -- giving three cores.
+    """
+    kh, kw, cin, cout = w.shape
+    t = w.reshape(kh * kw, cin, cout)
+    return ttd3(t, eps, (min(max_rank, kh * kw), min(max_rank, cout)), sweeps=sweeps)
+
+
+def ttd_reconstruct_conv(g1, g2, g3, shape):
+    """Inverse of :func:`ttd_compress_conv`."""
+    t = tt_reconstruct([g1, g2, g3])
+    return t.reshape(shape)
+
+
+def resnet32_forward(params, x):
+    """Alias re-exported for the AOT manifest."""
+    return resnet.forward(params, x)
+
+
+def compression_stats(dims, ranks):
+    """(#params TT, #params dense) for a TT with ``dims``/``ranks``.
+
+    ``ranks`` includes the r_0 = r_N = 1 boundary: len(ranks) = len(dims)+1.
+    Used by pytest to cross-check the rust-side accounting in
+    ``rust/src/ttd/ttd.rs``.
+    """
+    dense = 1
+    for n in dims:
+        dense *= n
+    tt = sum(int(ranks[i]) * dims[i] * int(ranks[i + 1]) for i in range(len(dims)))
+    return tt, dense

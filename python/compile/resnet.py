@@ -1,0 +1,154 @@
+"""L2: ResNet-32 (CIFAR-10) in JAX -- the paper's benchmark model.
+
+Standard He et al. CIFAR ResNet with n=5 (6n+2 = 32 layers) and
+option-A shortcuts (stride-2 subsample + zero channel padding), which
+keeps the parameter count at ~0.47 M exactly as Table I reports for the
+uncompressed model.
+
+BatchNorm is folded to inference form (per-channel scale + bias): the
+compression study operates on *trained, frozen* parameters, matching
+the paper's workflow of compressing a trained local model.
+
+The parameter layout is a flat ordered list (see ``param_specs``) so
+the AOT-exported forward pass has a deterministic PJRT argument order
+that the rust runtime replays from ``artifacts/manifest.json``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NUM_CLASSES = 10
+BLOCKS_PER_STAGE = 5
+STAGE_CHANNELS = (16, 32, 64)
+
+
+def param_specs():
+    """Ordered (name, shape) list of every parameter array."""
+    specs = [
+        ("conv_init/w", (3, 3, 3, 16)),
+        ("bn_init/scale", (16,)),
+        ("bn_init/bias", (16,)),
+    ]
+    in_ch = 16
+    for s, ch in enumerate(STAGE_CHANNELS):
+        for b in range(BLOCKS_PER_STAGE):
+            c_in = in_ch if b == 0 else ch
+            p = f"stage{s}/block{b}"
+            specs += [
+                (f"{p}/conv1/w", (3, 3, c_in, ch)),
+                (f"{p}/bn1/scale", (ch,)),
+                (f"{p}/bn1/bias", (ch,)),
+                (f"{p}/conv2/w", (3, 3, ch, ch)),
+                (f"{p}/bn2/scale", (ch,)),
+                (f"{p}/bn2/bias", (ch,)),
+            ]
+        in_ch = ch
+    specs += [
+        ("fc/w", (STAGE_CHANNELS[-1], NUM_CLASSES)),
+        ("fc/b", (NUM_CLASSES,)),
+    ]
+    return specs
+
+
+def conv_param_specs():
+    """The conv kernels -- the tensors the paper compresses via TTD."""
+    return [(n, s) for n, s in param_specs() if n.endswith("conv1/w") or n.endswith("conv2/w") or n == "conv_init/w"]
+
+
+def param_count() -> int:
+    import math
+
+    return sum(math.prod(s) for _, s in param_specs())
+
+
+def init_params(key):
+    """He-normal initialized flat parameter list."""
+    params = []
+    for name, shape in param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith("/w") and len(shape) == 4:
+            fan_in = shape[0] * shape[1] * shape[2]
+            p = jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+        elif name.endswith("fc/w"):
+            p = jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(1.0 / shape[0])
+        elif name.endswith("bn2/scale"):
+            # Zero-init the last BN scale of each residual block: blocks
+            # start as identity, keeping folded-BN activations bounded
+            # through all 32 layers (no running-stat normalization here).
+            p = jnp.zeros(shape, jnp.float32)
+        elif name.endswith("/scale"):
+            p = jnp.ones(shape, jnp.float32)
+        else:
+            p = jnp.zeros(shape, jnp.float32)
+        params.append(p)
+    return params
+
+
+def _conv(x, w, stride=1):
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _bn(x, scale, bias):
+    return x * scale[None, None, None, :] + bias[None, None, None, :]
+
+
+def _shortcut_a(x, out_ch: int, stride: int):
+    """Option-A shortcut: subsample + zero-pad channels (no params)."""
+    if stride > 1:
+        x = x[:, ::stride, ::stride, :]
+    pad = out_ch - x.shape[-1]
+    if pad > 0:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    return x
+
+
+def forward(params, x):
+    """ResNet-32 inference: x (B, 32, 32, 3) -> logits (B, 10)."""
+    it = iter(params)
+    nxt = lambda: next(it)  # noqa: E731
+
+    h = _bn(_conv(x, nxt()), nxt(), nxt())
+    h = jax.nn.relu(h)
+
+    in_ch = 16
+    for s, ch in enumerate(STAGE_CHANNELS):
+        for b in range(BLOCKS_PER_STAGE):
+            stride = 2 if (s > 0 and b == 0) else 1
+            y = _bn(_conv(h, nxt(), stride), nxt(), nxt())
+            y = jax.nn.relu(y)
+            y = _bn(_conv(y, nxt()), nxt(), nxt())
+            h = jax.nn.relu(y + _shortcut_a(h, ch, stride))
+        in_ch = ch
+
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    return h @ nxt() + nxt()
+
+
+def loss_fn(params, x, labels):
+    """Softmax cross-entropy -- used by the tiny-corpus training run."""
+    logits = forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def sgd_step(params, x, labels, lr: float, clip: float = 1.0):
+    """One SGD step with global-norm gradient clipping.
+
+    Clipping keeps large learning rates stable (the folded-BN model
+    has no activation normalization); exported for the e2e
+    federated-training example.
+    """
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, labels)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+    scale = jnp.minimum(1.0, clip / (gnorm + 1e-12))
+    new_params = [p - lr * scale * g for p, g in zip(params, grads)]
+    return new_params, loss

@@ -1,0 +1,216 @@
+"""L2: SVD via Householder bidiagonalization + one-sided Jacobi.
+
+This is the paper's SVD split (section II-A-2): *bidiagonalization*
+(the HBD-ACC's job, built on the L1 ``house_update`` Pallas kernel) and
+*diagonalization* of the bidiagonal matrix.
+
+Everything here is **fixed-shape**: the algorithmic loops run masked
+over full-size matrices so the whole pipeline AOT-exports to a single
+static HLO module (``aot.py``).  The pivot of each Householder vector
+therefore sits at a *dynamic* index ``i`` instead of position 0, which
+is why the L1 kernels take ``beta`` explicitly.
+
+The paper diagonalizes B with "a standard QR-based procedure"; we use
+fixed-sweep one-sided Jacobi, which is QR-iteration-class numerically
+but has a static control structure (no convergence-dependent shapes),
+making it exportable.  The rust substrate (rust/src/ttd/svd/) carries
+the classic Golub-Kahan implicit-shift QR for the dynamic-shape path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.house_update import house_update_left, house_update_right
+from .kernels.norm import norm as stream_norm
+
+_TINY = 1e-30
+
+
+def _house_masked(x, piv):
+    """HOUSE (Alg. 2, l. 22-26) on the masked tail ``x[piv:]``.
+
+    ``x`` is a full-length vector whose entries below ``piv`` are
+    ignored.  Returns ``(q, v, beta)`` where ``v`` is full-length with
+    zeros outside ``[piv, len)``, and ``beta = v[piv] * q``.  When the
+    tail is (numerically) zero the transform degenerates to the
+    identity: ``v = 0, beta = 1, q = 0``.
+    """
+    (ln,) = x.shape
+    idx = jnp.arange(ln)
+    xm = jnp.where(idx >= piv, x, 0.0)
+    nrm = stream_norm(xm)
+    x1 = xm[piv]
+    s = jnp.where(jnp.signbit(x1), -1.0, 1.0).astype(x.dtype)
+    q = -s * nrm
+    degenerate = nrm <= _TINY
+    v = xm.at[piv].add(s * nrm)
+    v = jnp.where(degenerate, jnp.zeros_like(v), v)
+    beta = jnp.where(degenerate, 1.0, v[piv] * q)
+    q = jnp.where(degenerate, 0.0, q)
+    return q, v, beta
+
+
+@functools.partial(jax.jit, static_argnames=())
+def hbd(a):
+    """Householder bidiagonalization of a tall matrix (Algorithm 2).
+
+    ``a``: (M, N) with M >= N.  Returns ``(U_B, B, V_B^T)`` with
+    ``A = U_B @ B @ V_B^T``; ``U_B`` is (M, N) with orthonormal columns,
+    ``B`` (N, N) upper bidiagonal, ``V_B^T`` (N, N) orthogonal.
+
+    Phase 1 (*Householder Reduction*, Alg. 2 l. 4-13) runs a masked
+    fixed-shape loop calling the fused L1 kernel once per transform;
+    phase 2 (*Householder Accumulation*, l. 14-18) replays the stored
+    vectors backwards over identity matrices.  The vector store ``VL`` /
+    ``VR`` is the software analogue of the paper's on-chip (SPM)
+    retention of Householder vectors.
+    """
+    m, n = a.shape
+    assert m >= n, f"hbd expects tall input, got {a.shape}"
+    a = a.astype(jnp.float32)
+    rows = jnp.arange(m)
+    cols = jnp.arange(n)
+
+    def reduce_step(i, state):
+        a, vl, bl, vr, br = state
+        # -- left transform: eliminate sub-diagonal of column i.
+        x = lax.dynamic_index_in_dim(a, i, axis=1, keepdims=False)
+        q, v, beta = _house_masked(x, i)
+        a = house_update_left(v, a, beta)
+        # Exact cleanup of column i (the hardware writes B[i,i]=q and
+        # never re-reads the eliminated entries).  q == 0 marks the
+        # degenerate (identity) transform: leave the column untouched.
+        col = jnp.where(rows > i, 0.0, jnp.where(rows == i, q, x))
+        a = a.at[:, i].set(jnp.where(q == 0.0, x, col))
+        vl = vl.at[i].set(v)
+        bl = bl.at[i].set(beta)
+
+        # -- right transform: eliminate row i beyond the superdiagonal.
+        do_right = i < n - 2
+        y = lax.dynamic_index_in_dim(a, i, axis=0, keepdims=False)
+        qr_, vr_i, br_i = _house_masked(y, i + 1)
+        vr_i = jnp.where(do_right, vr_i, jnp.zeros_like(vr_i))
+        br_i = jnp.where(do_right, br_i, 1.0)
+        a = house_update_right(vr_i, a, br_i)
+        row = jnp.where(
+            cols > i + 1, 0.0, jnp.where(cols == i + 1, qr_, y)
+        )
+        a = a.at[i, :].set(jnp.where(do_right & (qr_ != 0.0), row, y))
+        vr = vr.at[i].set(vr_i)
+        br = br.at[i].set(br_i)
+        return a, vl, bl, vr, br
+
+    vl0 = jnp.zeros((n, m), jnp.float32)
+    bl0 = jnp.ones((n,), jnp.float32)
+    vr0 = jnp.zeros((n, n), jnp.float32)
+    br0 = jnp.ones((n,), jnp.float32)
+    a_fin, vl, bl, vr, br = lax.fori_loop(
+        0, n, reduce_step, (a, vl0, bl0, vr0, br0)
+    )
+
+    b = jnp.triu(jnp.tril(a_fin[:n, :n], 1))
+
+    # Householder Accumulation (backward replay): U_B = H^L_1..H^L_N I,
+    # V_B^T = I H^R_{N}..H^R_1  (H symmetric involutions).
+    def accum_step(j, state):
+        u, vt = state
+        i = n - 1 - j
+        u = house_update_left(vl[i], u, bl[i])
+        vt = house_update_right(vr[i], vt, br[i])
+        return u, vt
+
+    u0 = jnp.eye(m, n, dtype=jnp.float32)
+    vt0 = jnp.eye(n, dtype=jnp.float32)
+    u, vt = lax.fori_loop(0, n, accum_step, (u0, vt0))
+    return u, b, vt
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps",))
+def jacobi_svd(b, *, sweeps: int = 12):
+    """One-sided Jacobi SVD of a square matrix (the *diagonalization*).
+
+    Fixed ``sweeps`` cyclic sweeps of Givens rotations orthogonalize the
+    columns of ``G = B``; then ``sigma_k = ||G[:,k]||``, ``U = G Sigma^-1``
+    and ``B = U Sigma V^T``.
+
+    The pair order is generated by *nested fori loops with arithmetic
+    indices*, NOT by gathering (p, q) from precomputed index arrays:
+    the published ``xla`` crate's xla_extension 0.5.1 miscompiles the
+    double constant-array gather inside a while loop (verified by the
+    dbg_va/dbg_vb probes -- see DESIGN.md "AOT gotchas"), silently
+    skipping rotations. Nested loops lower to plain while ops and
+    round-trip correctly.
+
+    Returns ``(U, sigma, V^T)`` with ``sigma`` sorted descending -- the
+    sort *is* the paper's Sorting_Basis phase (bubble sort in hardware;
+    the comparison network is order-equivalent).
+    """
+    n = b.shape[0]
+    assert b.shape == (n, n)
+
+    def rotate_pair(g, v, p, q):
+        gp = lax.dynamic_index_in_dim(g, p, axis=1, keepdims=False)
+        gq = lax.dynamic_index_in_dim(g, q, axis=1, keepdims=False)
+        app = gp @ gp
+        aqq = gq @ gq
+        apq = gp @ gq
+        # Givens rotation zeroing the (p,q) Gram entry.
+        rotate = jnp.abs(apq) > 1e-12 * jnp.sqrt(app * aqq + _TINY)
+        tau = (aqq - app) / (2.0 * jnp.where(rotate, apq, 1.0))
+        t = jnp.sign(tau) / (jnp.abs(tau) + jnp.sqrt(1.0 + tau * tau))
+        c = 1.0 / jnp.sqrt(1.0 + t * t)
+        s = c * t
+        c = jnp.where(rotate, c, 1.0)
+        s = jnp.where(rotate, s, 0.0)
+        g = g.at[:, p].set(c * gp - s * gq).at[:, q].set(s * gp + c * gq)
+        vp = lax.dynamic_index_in_dim(v, p, axis=1, keepdims=False)
+        vq = lax.dynamic_index_in_dim(v, q, axis=1, keepdims=False)
+        v = v.at[:, p].set(c * vp - s * vq).at[:, q].set(s * vp + c * vq)
+        return g, v
+
+    def sweep(_, state):
+        def p_loop(p, state):
+            def q_loop(q, state):
+                g, v = state
+                return rotate_pair(g, v, p, q)
+
+            return lax.fori_loop(p + 1, n, q_loop, state)
+
+        return lax.fori_loop(0, n - 1, p_loop, state)
+
+    g0 = b.astype(jnp.float32)
+    v0 = jnp.eye(n, dtype=jnp.float32)
+    g, v = lax.fori_loop(0, sweeps, sweep, (g0, v0))
+
+    sigma = jnp.sqrt(jnp.sum(g * g, axis=0))
+    order = jnp.argsort(-sigma)
+    sigma = sigma[order]
+    g = g[:, order]
+    v = v[:, order]
+    u = g / jnp.maximum(sigma, _TINY)[None, :]
+    return u, sigma, v.T
+
+
+def svd_tall(a, *, sweeps: int = 12):
+    """Full SVD of a tall (M >= N) matrix: HBD then Jacobi on B."""
+    u_b, b, v_bt = hbd(a)
+    u_j, sigma, v_jt = jacobi_svd(b, sweeps=sweeps)
+    return u_b @ u_j, sigma, v_jt @ v_bt
+
+
+def svd(a, *, sweeps: int = 12):
+    """Economy SVD of an arbitrary (M, N) matrix.
+
+    Wide inputs are handled through the transpose (the shape split is
+    static, so each exported module contains exactly one branch).
+    """
+    m, n = a.shape
+    if m >= n:
+        return svd_tall(a, sweeps=sweeps)
+    u2, sigma, v2t = svd_tall(a.T, sweeps=sweeps)
+    return v2t.T, sigma, u2.T

@@ -1,0 +1,143 @@
+"""L2: Tensor-Train Decomposition (Algorithm 1) and TT reconstruction.
+
+Fixed-shape, padded-rank formulation so every step AOT-exports:
+
+* At step ``k`` the working matrix has ``r_{k-1} n_k`` rows and
+  ``prod_{j>k} n_j`` columns -- the column count is rank-independent, so
+  padding the rank dimension with zero rows keeps every shape static.
+  Zero rows only contribute zero singular values, which the
+  delta-truncation discards anyway; the padded pipeline is therefore
+  *exactly* the truncated pipeline plus zero blocks.
+
+* ``delta``-truncation (Alg. 1, l. 27-31) emits a rank ``r`` plus a
+  column mask; cores stay padded, consumers slice to ``r`` (the rust
+  coordinator does, for wire-size accounting).
+
+Reconstruction follows Eq. (1)/(2): chained reshape+matmul, executed on
+the blocked-GEMM Pallas kernel -- the same unit the paper reuses.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.gemm_block import gemm
+from .svd import svd
+
+
+def delta_threshold(w, eps: float, d: int):
+    """``delta = eps / sqrt(d-1) * ||W||_F`` (Alg. 1, l. 5)."""
+    return eps / jnp.sqrt(jnp.asarray(d - 1.0, jnp.float32)) * jnp.sqrt(
+        jnp.sum(w.astype(jnp.float32) ** 2)
+    )
+
+
+def ttd_step(w_mat, delta, max_rank: int, *, sweeps: int = 12):
+    """One Algorithm-1 iteration on the working matrix.
+
+    SVD -> (already sorted) -> delta-truncation -> split.
+
+    Returns ``(g, w_next, r)``:
+      * ``g``      (m, kmax): truncated-U, columns >= r zeroed
+      * ``w_next`` (kmax, n): ``Sigma_t V_t^T``, rows >= r zeroed
+      * ``r``      (): int32 retained rank, 1 <= r <= max_rank
+    where ``kmax = min(m, n)`` (static).  Consumers slice to ``r``.
+    """
+    m, n = w_mat.shape
+    kmax = min(m, n)
+    u, s, vt = svd(w_mat, sweeps=sweeps)
+
+    # delta-truncation: keep the smallest prefix whose discarded tail
+    # has Frobenius norm < delta.  tail[i] = ||s[i:]||_F ; keep i while
+    # tail[i] >= delta.
+    tail = jnp.sqrt(jnp.cumsum((s * s)[::-1])[::-1])
+    r = jnp.sum((tail >= delta).astype(jnp.int32))
+    r = jnp.clip(r, 1, max_rank)
+
+    mask = (jnp.arange(kmax) < r).astype(jnp.float32)
+    g = u * mask[None, :]
+    w_next = (s * mask)[:, None] * vt
+    return g, w_next, r
+
+
+def ttd3(w, eps: float, max_ranks=(None, None), *, sweeps: int = 12):
+    """TTD of a 3-D tensor ``w`` (n1, n2, n3) into padded cores.
+
+    Returns ``(g1, g2, g3, r1, r2)``:
+      * ``g1`` (1, n1, k1)   * ``g2`` (k1, n2, k2)   * ``g3`` (k2, n3, 1)
+    with ``k1 = min(n1, n2*n3)`` and ``k2 = min(k1*n2, n3)`` (static),
+    entries beyond (r1, r2) exactly zero.
+    """
+    n1, n2, n3 = w.shape
+    d = 3
+    delta = delta_threshold(w, eps, d)
+    r1_cap = max_ranks[0] or min(n1, n2 * n3)
+    r2_cap = max_ranks[1] or n3
+
+    w1 = w.reshape(n1, n2 * n3)
+    g1, w2, r1 = ttd_step(w1, delta, r1_cap, sweeps=sweeps)
+    k1 = g1.shape[1]
+
+    w2 = w2.reshape(k1 * n2, n3)
+    g2, w3, r2 = ttd_step(w2, delta, r2_cap, sweeps=sweeps)
+    k2 = g2.shape[1]
+
+    return (
+        g1.reshape(1, n1, k1),
+        g2.reshape(k1, n2, k2),
+        w3.reshape(k2, n3, 1),
+        r1,
+        r2,
+    )
+
+
+def ttd4(w, eps: float, max_ranks=(None, None, None), *, sweeps: int = 12):
+    """TTD of a 4-D tensor ``w`` (n1, n2, n3, n4) into 4 padded cores."""
+    n1, n2, n3, n4 = w.shape
+    delta = delta_threshold(w, eps, 4)
+    caps = [
+        max_ranks[0] or min(n1, n2 * n3 * n4),
+        max_ranks[1] or min(n1 * n2, n3 * n4),
+        max_ranks[2] or n4,
+    ]
+
+    w1 = w.reshape(n1, n2 * n3 * n4)
+    g1, w2, r1 = ttd_step(w1, delta, caps[0], sweeps=sweeps)
+    k1 = g1.shape[1]
+
+    w2 = w2.reshape(k1 * n2, n3 * n4)
+    g2, w3, r2 = ttd_step(w2, delta, caps[1], sweeps=sweeps)
+    k2 = g2.shape[1]
+
+    w3 = w3.reshape(k2 * n3, n4)
+    g3, w4, r3 = ttd_step(w3, delta, caps[2], sweeps=sweeps)
+    k3 = g3.shape[1]
+
+    return (
+        g1.reshape(1, n1, k1),
+        g2.reshape(k1, n2, k2),
+        g3.reshape(k2, n3, k3),
+        w4.reshape(k3, n4, 1),
+        r1,
+        r2,
+        r3,
+    )
+
+
+def tt_reconstruct(cores):
+    """Eq. (1)/(2): ``W_R = G_1 x1 G_2 x1 ... x1 G_N``.
+
+    Each contraction is ``reshape . matmul . reshape`` on the blocked
+    GEMM kernel (the reused accelerator path).  ``cores``: list of
+    (r_{k-1}, n_k, r_k) arrays; returns the (n_1, ..., n_N) tensor.
+    """
+    acc = cores[0]  # (1, n1, k1)
+    dims = [acc.shape[1]]
+    for core in cores[1:]:
+        rk, nk, rk1 = core.shape
+        left = acc.reshape(-1, rk)  # ([n1..n_{k-1}], r_{k-1}) row-major
+        right = core.reshape(rk, nk * rk1)
+        acc = gemm(left, right)  # ([n1..n_{k-1}], n_k * r_k) -- stays flat
+        dims.append(nk)
+    assert cores[-1].shape[2] == 1, "last core must have r_N = 1"
+    return acc.reshape(*dims)

@@ -1,0 +1,65 @@
+"""AOT export invariants: the artifact contract the rust runtime relies on."""
+
+import json
+import pathlib
+
+import jax
+import pytest
+
+from compile import aot
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_entry_registry_complete():
+    expected = {
+        "house_left_128",
+        "house_right_128",
+        "gemm_256",
+        "norm_4096",
+        "svd_144x64",
+        "ttd3_conv64",
+        "tt_rec3_conv64",
+        "resnet32_fwd_b4",
+        "resnet32_sgd_b8",
+    }
+    assert set(aot.ENTRIES) == expected
+
+
+@pytest.mark.parametrize("name", ["house_left_128", "norm_4096"])
+def test_small_entries_lower_without_custom_calls(name):
+    """interpret=True pallas must lower to plain HLO (rust CPU-runnable)."""
+    fn, args, _ = aot.ENTRIES[name]()
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert "ENTRY" in text
+    assert "custom-call" not in text
+
+
+def test_manifest_matches_registry_when_present():
+    """If `make artifacts` has run, the manifest must be complete & sane."""
+    mpath = ARTIFACTS / "manifest.json"
+    if not mpath.exists():
+        pytest.skip("artifacts not built yet (run `make artifacts`)")
+    manifest = json.loads(mpath.read_text())
+    names = {e["name"] for e in manifest["entries"]}
+    assert names == set(aot.ENTRIES)
+    for e in manifest["entries"]:
+        f = ARTIFACTS / e["file"]
+        assert f.exists(), f"missing artifact {e['file']}"
+        assert e["inputs"] and e["outputs"]
+        for spec in e["inputs"] + e["outputs"]:
+            assert spec["dtype"] in ("float32", "int32")
+            assert all(isinstance(d, int) for d in spec["shape"])
+
+
+def test_manifest_resnet_arity():
+    mpath = ARTIFACTS / "manifest.json"
+    if not mpath.exists():
+        pytest.skip("artifacts not built yet")
+    manifest = {e["name"]: e for e in json.loads(mpath.read_text())["entries"]}
+    fwd = manifest["resnet32_fwd_b4"]
+    # 95 parameter arrays + 1 input image batch
+    assert len(fwd["inputs"]) == 96
+    assert fwd["outputs"][0]["shape"] == [4, 10]
+    sgd = manifest["resnet32_sgd_b8"]
+    assert len(sgd["outputs"]) == len(sgd["inputs"]) - 2  # params' + loss

@@ -1,0 +1,189 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (the CORE signal).
+
+Hypothesis sweeps shapes and dtypes; every kernel must agree with its
+``ref.py`` oracle to dtype-appropriate tolerance.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import ref
+from compile.kernels.gemm_block import gemm, tile_count
+from compile.kernels.house_update import (
+    house_update_from_q,
+    house_update_left,
+    house_update_right,
+)
+from compile.kernels.norm import norm as stream_norm
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=20, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+# ---------------------------------------------------------------- norm
+
+
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    seed=st.integers(min_value=0, max_value=2**31),
+    chunk=st.sampled_from([16, 128, 1024]),
+)
+def test_norm_matches_ref(n, seed, chunk):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n,), jnp.float32)
+    got = stream_norm(x, chunk=chunk)
+    want = ref.norm(x)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-6)
+
+
+def test_norm_zero_vector():
+    assert float(stream_norm(jnp.zeros(37, jnp.float32))) == 0.0
+
+
+def test_norm_large_magnitude_accumulates_in_f32():
+    x = jnp.full((1000,), 1e3, jnp.float32)
+    np.testing.assert_allclose(float(stream_norm(x)), 1e3 * np.sqrt(1000.0), rtol=1e-5)
+
+
+# ------------------------------------------------------- house_update
+
+
+@given(
+    m=st.integers(min_value=2, max_value=300),
+    n=st.integers(min_value=1, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**31),
+    block=st.sampled_from([32, 128]),
+)
+def test_house_update_left_matches_ref(m, n, seed, block):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (m, n), jnp.float32)
+    x = _rand(rng, (m,), jnp.float32)
+    q, v = ref.house(x)
+    got = house_update_left(v, a, v[0] * q, block=block)
+    want = ref.house_update_left(q, v, a)
+    np.testing.assert_allclose(np.array(got), np.array(want), **_tol(jnp.float32))
+
+
+@given(
+    m=st.integers(min_value=1, max_value=300),
+    n=st.integers(min_value=2, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**31),
+    block=st.sampled_from([32, 128]),
+)
+def test_house_update_right_matches_ref(m, n, seed, block):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (m, n), jnp.float32)
+    y = _rand(rng, (n,), jnp.float32)
+    q, v = ref.house(y)
+    got = house_update_right(v, a, v[0] * q, block=block)
+    want = ref.house_update_right(q, v, a)
+    np.testing.assert_allclose(np.array(got), np.array(want), **_tol(jnp.float32))
+
+
+@pytest.mark.parametrize("order", [0, 1])
+def test_house_update_from_q_is_algorithm2(order):
+    """The q-based convenience reproduces HOUSE_MM_UPDATE verbatim."""
+    rng = np.random.default_rng(7)
+    a = _rand(rng, (64, 48), jnp.float32)
+    vec = _rand(rng, (64 if order == 0 else 48,), jnp.float32)
+    q, v = ref.house(vec)
+    got = house_update_from_q(q, v, a, order)
+    want = (ref.house_update_left if order == 0 else ref.house_update_right)(q, v, a)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-4, atol=2e-4)
+
+
+def test_house_update_left_is_householder_reflection():
+    """A <- update(A) must equal H @ A for H = I - 2vv^T/(v^Tv)."""
+    rng = np.random.default_rng(3)
+    a = _rand(rng, (40, 24), jnp.float32)
+    x = _rand(rng, (40,), jnp.float32)
+    q, v = ref.house(x)
+    h = np.eye(40) - 2.0 * np.outer(v, v) / float(v @ v)
+    got = house_update_left(v, a, v[0] * q)
+    np.testing.assert_allclose(np.array(got), h @ np.array(a), rtol=1e-4, atol=1e-4)
+
+
+def test_house_update_annihilates_column():
+    """After the left transform the pivot column is q * e1."""
+    rng = np.random.default_rng(4)
+    a = _rand(rng, (32, 8), jnp.float32)
+    q, v = ref.house(a[:, 0])
+    out = np.array(house_update_left(v, a, v[0] * q))
+    np.testing.assert_allclose(out[0, 0], float(q), rtol=1e-5)
+    np.testing.assert_allclose(out[1:, 0], 0.0, atol=1e-4)
+
+
+# ---------------------------------------------------------------- gemm
+
+
+@given(
+    m=st.integers(min_value=1, max_value=200),
+    k=st.integers(min_value=1, max_value=200),
+    n=st.integers(min_value=1, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_gemm_matches_ref_f32(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, k), jnp.float32)
+    y = _rand(rng, (k, n), jnp.float32)
+    got = gemm(x, y)
+    np.testing.assert_allclose(
+        np.array(got), np.array(ref.gemm(x, y)), rtol=1e-4, atol=1e-4
+    )
+
+
+@given(
+    m=st.integers(min_value=1, max_value=96),
+    k=st.integers(min_value=1, max_value=96),
+    n=st.integers(min_value=1, max_value=96),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_gemm_matches_ref_bf16(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, k), jnp.bfloat16)
+    y = _rand(rng, (k, n), jnp.bfloat16)
+    got = gemm(x, y)
+    np.testing.assert_allclose(
+        np.array(got, np.float32),
+        np.array(ref.gemm(x, y), np.float32),
+        **_tol(jnp.bfloat16),
+    )
+
+
+@given(
+    bm=st.sampled_from([32, 64, 128]),
+    bk=st.sampled_from([32, 128]),
+    bn=st.sampled_from([32, 128]),
+)
+def test_gemm_block_shape_invariance(bm, bk, bn):
+    """Result must not depend on the chosen block decomposition."""
+    rng = np.random.default_rng(11)
+    x = _rand(rng, (150, 90), jnp.float32)
+    y = _rand(rng, (90, 170), jnp.float32)
+    got = gemm(x, y, bm=bm, bk=bk, bn=bn)
+    np.testing.assert_allclose(
+        np.array(got), np.array(ref.gemm(x, y)), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_tile_count_matches_paper_pe_array():
+    # 64x64 @ 64x64 on 16x16 tiles: 4*4*4 = 64 tile-ops.
+    assert tile_count(64, 64, 64) == 64
+    assert tile_count(1, 1, 1) == 1
+    assert tile_count(17, 16, 16) == 2

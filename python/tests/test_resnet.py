@@ -1,0 +1,66 @@
+"""ResNet-32 workload: shapes, parameter budget, trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import resnet
+
+
+def test_param_count_matches_table1():
+    """Table I: uncompressed ResNet-32 has ~0.47 M parameters."""
+    n = resnet.param_count()
+    assert 0.44e6 < n < 0.48e6, n
+
+
+def test_param_specs_cover_init():
+    params = resnet.init_params(jax.random.PRNGKey(0))
+    specs = resnet.param_specs()
+    assert len(params) == len(specs)
+    for p, (_, shape) in zip(params, specs):
+        assert p.shape == shape
+
+
+def test_conv_specs_are_the_ttd_targets():
+    convs = resnet.conv_param_specs()
+    # 1 stem + 2 per block * 15 blocks
+    assert len(convs) == 31
+    assert all(len(s) == 4 for _, s in convs)
+
+
+def test_forward_shape_and_finiteness():
+    params = resnet.init_params(jax.random.PRNGKey(1))
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 32, 32, 3)), jnp.float32)
+    logits = resnet.forward(params, x)
+    assert logits.shape == (4, 10)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_forward_batch_invariance():
+    """Row k of a batched forward equals the single-sample forward."""
+    params = resnet.init_params(jax.random.PRNGKey(2))
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((3, 32, 32, 3)), jnp.float32)
+    full = resnet.forward(params, x)
+    one = resnet.forward(params, x[1:2])
+    np.testing.assert_allclose(np.array(full[1]), np.array(one[0]), rtol=1e-4, atol=1e-4)
+
+
+def test_sgd_memorizes_tiny_batch():
+    """A few steps on one batch must reduce the loss (trainability)."""
+    params = resnet.init_params(jax.random.PRNGKey(3))
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((8, 32, 32, 3)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 10, 8), jnp.int32)
+    step = jax.jit(resnet.sgd_step, static_argnames=())
+    losses = []
+    for _ in range(8):
+        params, loss = step(params, x, y, 0.02)
+        losses.append(float(loss))
+    assert np.isfinite(losses).all(), losses
+    assert losses[-1] < losses[0], losses
+
+
+def test_shortcut_option_a_param_free():
+    """Option-A shortcuts add no parameters (keeps the 0.47 M budget)."""
+    names = [n for n, _ in resnet.param_specs()]
+    assert not any("shortcut" in n or "proj" in n for n in names)

@@ -1,0 +1,138 @@
+"""L2 SVD pipeline: masked HBD + one-sided Jacobi vs LAPACK."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+
+from compile.kernels import ref
+from compile.svd import hbd, jacobi_svd, svd, svd_tall
+
+hypothesis.settings.register_profile(
+    "svd", deadline=None, max_examples=12, derandomize=True
+)
+hypothesis.settings.load_profile("svd")
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+# ----------------------------------------------------------------- hbd
+
+
+@given(
+    m=st.integers(min_value=2, max_value=48),
+    n=st.integers(min_value=2, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hbd_factorization_properties(m, n, seed):
+    """A = U_B B V_B^T with bidiagonal B and orthogonal factors."""
+    if m < n:
+        m, n = n, m
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (m, n))
+    u, b, vt = hbd(a)
+    scale = float(np.linalg.norm(np.array(a))) + 1e-6
+    # reconstruction
+    err = np.abs(np.array(u @ b @ vt) - np.array(a)).max() / scale
+    assert err < 5e-5, f"reconstruction error {err}"
+    # bidiagonal structure (exact: the cleanup writes zeros)
+    bn = np.array(b)
+    off = bn - np.triu(np.tril(bn, 1))
+    assert np.abs(off).max() == 0.0
+    # orthogonality
+    assert np.abs(np.array(u.T @ u) - np.eye(n)).max() < 5e-5
+    assert np.abs(np.array(vt @ vt.T) - np.eye(n)).max() < 5e-5
+
+
+def test_hbd_matches_dense_reference():
+    """Same bidiagonal (up to sign) as the straight-line oracle."""
+    rng = np.random.default_rng(5)
+    a = _rand(rng, (20, 10))
+    _, b1, _ = hbd(a)
+    _, b2, _ = ref.hbd_reference(a)
+    np.testing.assert_allclose(
+        np.abs(np.diag(np.array(b1))), np.abs(np.diag(np.array(b2))), rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.abs(np.diag(np.array(b1), 1)), np.abs(np.diag(np.array(b2), 1)), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_hbd_on_rank_deficient_input():
+    """Zero tail columns exercise the degenerate-HOUSE guard."""
+    rng = np.random.default_rng(6)
+    a = np.zeros((16, 8), np.float32)
+    a[:, :3] = rng.standard_normal((16, 3))
+    u, b, vt = hbd(jnp.asarray(a))
+    err = np.abs(np.array(u @ b @ vt) - a).max()
+    assert err < 1e-4
+    assert np.isfinite(np.array(b)).all()
+
+
+def test_hbd_singular_values_preserved():
+    """HBD is orthogonal-equivalent: B has A's singular values."""
+    rng = np.random.default_rng(8)
+    a = _rand(rng, (30, 12))
+    _, b, _ = hbd(a)
+    s_a = np.linalg.svd(np.array(a), compute_uv=False)
+    s_b = np.linalg.svd(np.array(b), compute_uv=False)
+    np.testing.assert_allclose(s_a, s_b, rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------------------- jacobi
+
+
+@given(
+    n=st.integers(min_value=2, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_jacobi_svd_matches_lapack(n, seed):
+    rng = np.random.default_rng(seed)
+    b = _rand(rng, (n, n))
+    u, s, vt = jacobi_svd(b)
+    s_ref = np.linalg.svd(np.array(b), compute_uv=False)
+    np.testing.assert_allclose(np.array(s), s_ref, rtol=1e-3, atol=1e-4)
+    # descending order (the Sorting phase)
+    sn = np.array(s)
+    assert (np.diff(sn) <= 1e-5).all()
+    # factorization
+    np.testing.assert_allclose(
+        np.array((u * s) @ vt), np.array(b), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_jacobi_identity():
+    u, s, vt = jacobi_svd(jnp.eye(6, dtype=jnp.float32))
+    np.testing.assert_allclose(np.array(s), np.ones(6), rtol=1e-6)
+
+
+# ----------------------------------------------------------------- svd
+
+
+@given(
+    m=st.integers(min_value=2, max_value=40),
+    n=st.integers(min_value=2, max_value=40),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_svd_economy_any_aspect(m, n, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (m, n))
+    u, s, vt = svd(a)
+    k = min(m, n)
+    assert u.shape == (m, k) and s.shape == (k,) and vt.shape == (k, n)
+    s_ref = np.linalg.svd(np.array(a), compute_uv=False)
+    np.testing.assert_allclose(np.array(s), s_ref, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(
+        np.array((u * s) @ vt), np.array(a), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_svd_tall_orthogonal_factors():
+    rng = np.random.default_rng(9)
+    a = _rand(rng, (64, 24))
+    u, s, vt = svd_tall(a)
+    assert np.abs(np.array(u.T @ u) - np.eye(24)).max() < 2e-4
+    assert np.abs(np.array(vt @ vt.T) - np.eye(24)).max() < 2e-4

@@ -1,0 +1,152 @@
+"""Algorithm 1 (TTD) on padded fixed shapes + Eq. (1)/(2) reconstruction."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+
+from compile import model
+from compile.ttd import delta_threshold, tt_reconstruct, ttd3, ttd4, ttd_step
+
+hypothesis.settings.register_profile(
+    "ttd", deadline=None, max_examples=8, derandomize=True
+)
+hypothesis.settings.load_profile("ttd")
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+def _rel(a, b):
+    return float(np.linalg.norm(np.array(a) - np.array(b)) / np.linalg.norm(np.array(b)))
+
+
+# ------------------------------------------------------------ ttd_step
+
+
+def test_ttd_step_splits_svd():
+    """g @ w_next must reproduce the input up to the truncation budget."""
+    rng = np.random.default_rng(0)
+    w = _rand(rng, (24, 18))
+    delta = jnp.asarray(0.0, jnp.float32)
+    g, w_next, r = ttd_step(w, delta, 18)
+    assert int(r) == 18
+    np.testing.assert_allclose(np.array(g @ w_next), np.array(w), rtol=1e-3, atol=1e-3)
+
+
+def test_ttd_step_padding_is_exact_zero():
+    """Columns/rows beyond the retained rank are *exactly* zero."""
+    rng = np.random.default_rng(1)
+    # rank-3 matrix => hard truncation with tiny delta
+    a = rng.standard_normal((20, 3)) @ rng.standard_normal((3, 15))
+    w = jnp.asarray(a, jnp.float32)
+    g, w_next, r = ttd_step(w, jnp.asarray(1e-3, jnp.float32), 15)
+    rr = int(r)
+    assert rr <= 4
+    assert np.abs(np.array(g)[:, rr:]).max() == 0.0
+    assert np.abs(np.array(w_next)[rr:, :]).max() == 0.0
+
+
+def test_ttd_step_respects_max_rank():
+    rng = np.random.default_rng(2)
+    w = _rand(rng, (30, 30))
+    g, w_next, r = ttd_step(w, jnp.asarray(0.0, jnp.float32), 7)
+    assert int(r) == 7
+
+
+def test_delta_threshold_formula():
+    w = jnp.ones((4, 4, 4), jnp.float32)
+    d = float(delta_threshold(w, 0.1, 3))
+    np.testing.assert_allclose(d, 0.1 / np.sqrt(2.0) * 8.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------- ttd3
+
+
+@given(
+    n1=st.sampled_from([4, 9]),
+    n2=st.sampled_from([8, 16]),
+    n3=st.sampled_from([8, 16]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_ttd3_reconstruction_error_bound(n1, n2, n3, seed):
+    """Oseledets: ||W - W_R||_F <= eps * ||W||_F for delta = eps/sqrt(d-1)*||W||."""
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, (n1, n2, n3))
+    eps = 0.3
+    g1, g2, g3, r1, r2 = ttd3(w, eps)
+    wr = tt_reconstruct([g1, g2, g3])
+    assert _rel(wr, w) <= eps + 1e-3
+
+
+def test_ttd3_exact_on_low_rank():
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((9, 4))
+    b = rng.standard_normal((4, 256))
+    w = jnp.asarray((a @ b).reshape(9, 16, 16), jnp.float32)
+    g1, g2, g3, r1, r2 = ttd3(w, 0.01)
+    assert int(r1) == 4
+    wr = tt_reconstruct([g1, g2, g3])
+    assert _rel(wr, w) < 1e-3
+
+
+def test_ttd3_core_shapes_and_boundary_ranks():
+    w = jnp.zeros((9, 16, 16), jnp.float32).at[0, 0, 0].set(1.0)
+    g1, g2, g3, r1, r2 = ttd3(w, 0.1)
+    assert g1.shape[0] == 1 and g3.shape[2] == 1  # r_0 = r_N = 1
+    assert g1.shape[2] == g2.shape[0]
+    assert g2.shape[2] == g3.shape[0]
+
+
+# ---------------------------------------------------------------- ttd4
+
+
+def test_ttd4_reconstruction_error_bound():
+    rng = np.random.default_rng(4)
+    w = _rand(rng, (3, 3, 16, 16))
+    eps = 0.35
+    g1, g2, g3, g4, r1, r2, r3 = ttd4(w, eps)
+    wr = tt_reconstruct([g1, g2, g3, g4])
+    assert _rel(wr, w) <= eps + 1e-3
+
+
+# ------------------------------------------------------ reconstruction
+
+
+def test_tt_reconstruct_matches_einsum():
+    rng = np.random.default_rng(5)
+    g1 = _rand(rng, (1, 5, 3))
+    g2 = _rand(rng, (3, 6, 4))
+    g3 = _rand(rng, (4, 7, 1))
+    got = tt_reconstruct([g1, g2, g3])
+    want = np.einsum("aib,bjc,ckd->ijk", np.array(g1), np.array(g2), np.array(g3))
+    np.testing.assert_allclose(np.array(got), want, rtol=1e-4, atol=1e-4)
+
+
+def test_tt_reconstruct_two_cores():
+    rng = np.random.default_rng(6)
+    g1 = _rand(rng, (1, 5, 3))
+    g2 = _rand(rng, (3, 8, 1))
+    got = tt_reconstruct([g1, g2])
+    want = np.einsum("aib,bjc->ij", np.array(g1), np.array(g2))
+    np.testing.assert_allclose(np.array(got), want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ accounting
+
+
+def test_compression_stats():
+    tt, dense = model.compression_stats([9, 64, 64], [1, 9, 32, 1])
+    assert dense == 9 * 64 * 64
+    assert tt == 1 * 9 * 9 + 9 * 64 * 32 + 32 * 64 * 1
+
+
+def test_conv_compress_roundtrip():
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.standard_normal((3, 3, 8, 8)), jnp.float32)
+    g1, g2, g3, r1, r2 = model.ttd_compress_conv(w, 0.4, 8)
+    wr = model.ttd_reconstruct_conv(g1, g2, g3, w.shape)
+    assert wr.shape == w.shape
+    assert _rel(wr, w) <= 0.4 + 1e-3

@@ -1,0 +1,67 @@
+//! Ablation: each TT-Edge mechanism toggled independently (DESIGN.md
+//! section 4). Shows where the 1.7x / 40% actually comes from.
+
+use tt_edge::metrics::{f1, f2, Table};
+use tt_edge::sim::workload::{compress_model, synthetic_model};
+use tt_edge::sim::{Features, HwTimeline, SimReport, SocConfig};
+use tt_edge::trace::{TraceSink, VecSink};
+
+fn main() {
+    // one shared trace: the numerics never change across features
+    let layers = synthetic_model(42, 3.55, 0.035);
+    let mut trace = VecSink::default();
+    let _ = compress_model(&layers, 0.12, &mut trace);
+    let replay = |cfg: SocConfig| -> SimReport {
+        let mut tl = HwTimeline::new(cfg);
+        for op in &trace.ops {
+            tl.op(*op);
+        }
+        SimReport::from_timeline(&tl)
+    };
+
+    let base = replay(SocConfig::baseline());
+    let full = replay(SocConfig::tt_edge());
+
+    let variants: [(&str, Box<dyn Fn(&mut Features)>); 5] = [
+        ("- hbd_acc", Box::new(|f| f.hbd_acc = false)),
+        ("- direct_gemm_link", Box::new(|f| f.direct_gemm_link = false)),
+        ("- spm_retention", Box::new(|f| f.spm_retention = false)),
+        ("- hw_sort_trunc", Box::new(|f| f.hw_sort_trunc = false)),
+        ("- clock_gating", Box::new(|f| f.clock_gating = false)),
+    ];
+
+    let mut t = Table::new(
+        "Feature ablation (full ResNet-32 TTD workload)",
+        &["config", "T (ms)", "E (mJ)", "speedup", "E saving %"],
+    );
+    let row = |t: &mut Table, name: &str, r: &SimReport| {
+        t.row(&[
+            name.into(),
+            f2(r.total_ms),
+            f2(r.total_mj),
+            format!("{:.2}x", base.total_ms / r.total_ms),
+            f1((1.0 - r.total_mj / base.total_mj) * 100.0),
+        ]);
+    };
+    row(&mut t, "Baseline", &base);
+    row(&mut t, "TT-Edge (full)", &full);
+    for (name, tweak) in &variants {
+        let mut f = Features::ALL_ON;
+        tweak(&mut f);
+        let r = replay(SocConfig::tt_edge_with(f));
+        row(&mut t, name, &r);
+    }
+    println!("{}", t.render());
+
+    // sanity: removing any feature must not make it faster than full
+    for (name, tweak) in &variants {
+        let mut f = Features::ALL_ON;
+        tweak(&mut f);
+        let r = replay(SocConfig::tt_edge_with(f));
+        assert!(
+            r.total_ms >= full.total_ms - 1e-9 && r.total_mj >= full.total_mj - 1e-6,
+            "{name} improved on full TT-Edge?"
+        );
+    }
+    println!("ablation_features OK");
+}

@@ -1,0 +1,68 @@
+//! Ablation: the paper's section-I profiling claim — on the edge
+//! processor, bidiagonalization dominates SVD, ~3.6x the cost of
+//! diagonalization — reproduced on the actual ResNet-32 working set.
+//!
+//! The ratio is workload-dependent: tall-skinny working matrices
+//! (ResNet reshapes) are HBD-heavy, near-square random matrices are
+//! QR-heavier. Both views are reported; the paper's number refers to
+//! the TTD workload mix.
+
+use tt_edge::metrics::{f2, Table};
+use tt_edge::sim::workload::{compress_model, synthetic_model};
+use tt_edge::sim::{HwTimeline, SimReport, SocConfig};
+use tt_edge::trace::{Phase, TraceSink, VecSink};
+use tt_edge::ttd::svd::svd;
+use tt_edge::ttd::Matrix;
+use tt_edge::util::Rng;
+
+fn phase_split(trace: &VecSink) -> (f64, f64) {
+    let mut tl = HwTimeline::new(SocConfig::baseline());
+    for op in &trace.ops {
+        tl.op(*op);
+    }
+    let r = SimReport::from_timeline(&tl);
+    (r.phase(Phase::Hbd).time_ms, r.phase(Phase::QrDiag).time_ms)
+}
+
+fn main() {
+    // ---- the real workload: all 31 conv layers --------------------
+    let layers = synthetic_model(42, 3.55, 0.035);
+    let mut trace = VecSink::default();
+    let _ = compress_model(&layers, 0.12, &mut trace);
+    let (hbd_w, qr_w) = phase_split(&trace);
+
+    // ---- per-shape view on representative matrices -----------------
+    let mut rng = Rng::new(9);
+    let shapes = [
+        (144usize, 16usize),
+        (576, 64),
+        (1024, 64),
+        (4096, 9),
+        (64, 64), // near-square: QR-heavy corner
+    ];
+    let mut t = Table::new(
+        "SVD phase split on the baseline SoC",
+        &["matrix", "HBD ms", "QR ms", "HBD/QR"],
+    );
+    for (m, n) in shapes {
+        let a = Matrix::from_vec(m, n, rng.normal_vec(m * n));
+        let mut tr = VecSink::default();
+        let _ = svd(&a, &mut tr);
+        let (h, q) = phase_split(&tr);
+        t.row(&[format!("{m}x{n}"), f2(h), f2(q), f2(h / q)]);
+    }
+    t.row(&[
+        "ResNet-32 TTD workload".into(),
+        f2(hbd_w),
+        f2(qr_w),
+        f2(hbd_w / qr_w),
+    ]);
+    println!("{}", t.render());
+
+    let ratio = hbd_w / qr_w;
+    println!(
+        "workload-weighted HBD/diagonalization ratio: {ratio:.2} (paper: ~3.6)"
+    );
+    assert!((2.8..4.4).contains(&ratio), "workload ratio {ratio}");
+    println!("ablation_svd_phases OK");
+}

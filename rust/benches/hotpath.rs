@@ -1,0 +1,58 @@
+//! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//! L3 numerics (rank-1 updates, HBD, GK, full-layer TTD) and the
+//! simulator replay loop.
+
+use tt_edge::metrics::bench::{black_box, time_it};
+use tt_edge::sim::{HwTimeline, SocConfig};
+use tt_edge::trace::{NullSink, TraceSink, VecSink};
+use tt_edge::ttd::svd::bidiag::bidiagonalize;
+use tt_edge::ttd::svd::house::{apply_left, house};
+use tt_edge::ttd::{decompose, Matrix, Tensor};
+use tt_edge::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    // matmul kernel (512x512)
+    let a = Matrix::from_vec(512, 512, rng.normal_vec(512 * 512));
+    let b = Matrix::from_vec(512, 512, rng.normal_vec(512 * 512));
+    println!("{}", time_it("matmul 512^3", 1, 5, || {
+        black_box(a.matmul(&b));
+    }).report());
+
+    // fused rank-1 update (the HBD inner loop), 576x64
+    let mut m = Matrix::from_vec(576, 64, rng.normal_vec(576 * 64));
+    let x: Vec<f32> = (0..576).map(|r| m.get(r, 0)).collect();
+    let h = house(&x);
+    println!("{}", time_it("apply_left 576x64", 10, 200, || {
+        apply_left(black_box(&mut m), 0, 1, &h.v, h.beta);
+    }).report());
+
+    // full HBD of the dominant working matrix
+    let a2 = Matrix::from_vec(576, 64, rng.normal_vec(576 * 64));
+    println!("{}", time_it("bidiagonalize 576x64", 1, 10, || {
+        black_box(bidiagonalize(&a2, &mut NullSink));
+    }).report());
+
+    // full-layer TTD (9,64,64)
+    let layer = tt_edge::model::conv_layers().pop().unwrap();
+    let mut r2 = Rng::new(2);
+    let w: Tensor = tt_edge::sim::workload::synthetic_trained_conv(&mut r2, &layer, 3.5, 0.03);
+    println!("{}", time_it("ttd decompose 9x64x64", 1, 10, || {
+        black_box(decompose(&w, 0.12, None, &mut NullSink));
+    }).report());
+
+    // simulator replay throughput
+    let mut trace = VecSink::default();
+    let _ = decompose(&w, 0.12, None, &mut trace);
+    let n_ops = trace.ops.len();
+    let res = time_it("sim replay (per layer trace)", 2, 50, || {
+        let mut tl = HwTimeline::new(SocConfig::tt_edge());
+        for op in &trace.ops {
+            tl.op(*op);
+        }
+        black_box(tl.cycles.total());
+    });
+    println!("{}  ({} ops, {:.1} Mops/s)", res.report(), n_ops,
+        n_ops as f64 / (res.mean_ms / 1e3) / 1e6);
+}

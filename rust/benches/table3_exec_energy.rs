@@ -1,0 +1,61 @@
+//! TABLE III — the headline experiment: execution time and energy of
+//! TTD-based ResNet-32 compression on the baseline vs TT-Edge SoCs,
+//! with the paper's numbers side by side.
+
+use tt_edge::metrics::{f1, f2, Table};
+use tt_edge::sim::report::paper;
+use tt_edge::sim::{compress_resnet32, SocConfig};
+use tt_edge::trace::Phase;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let (out, reports) =
+        compress_resnet32(42, 0.12, &[SocConfig::baseline(), SocConfig::tt_edge()]);
+    let wall = t0.elapsed().as_secs_f64();
+    let (base, tte) = (&reports[0], &reports[1]);
+
+    println!(
+        "workload: full ResNet-32 TTD compression ({:.2}x, {} -> {} params); sim wall time {wall:.2}s\n",
+        out.compression_ratio, out.model_dense_params, out.final_params
+    );
+
+    let mut t = Table::new(
+        "TABLE III: T_exec (ms) and E (mJ), simulated vs paper",
+        &["TTD procedure", "Base T", "(paper)", "Base E", "(paper)", "TTE T", "(paper)", "TTE E", "(paper)"],
+    );
+    for (i, phase) in Phase::ALL.iter().enumerate() {
+        let b = base.phase(*phase);
+        let e = tte.phase(*phase);
+        let (pb, pbt, pbe) = (paper::BASE[i].0, paper::BASE[i].1, paper::BASE[i].2);
+        assert_eq!(pb, *phase);
+        let (ptt, pte) = (paper::TTE[i].1, paper::TTE[i].2);
+        t.row(&[
+            phase.label().into(),
+            f2(b.time_ms), f2(pbt), f2(b.energy_mj), f2(pbe),
+            f2(e.time_ms), f2(ptt), f2(e.energy_mj), f2(pte),
+        ]);
+    }
+    t.row(&[
+        "Total".into(),
+        f2(base.total_ms), f2(paper::BASE_TOTAL.0),
+        f2(base.total_mj), f2(paper::BASE_TOTAL.1),
+        f2(tte.total_ms), f2(paper::TTE_TOTAL.0),
+        f2(tte.total_mj), f2(paper::TTE_TOTAL.1),
+    ]);
+    println!("{}", t.render());
+
+    let speedup = base.total_ms / tte.total_ms;
+    let saving = (1.0 - tte.total_mj / base.total_mj) * 100.0;
+    println!(
+        "headline: speedup {:.2}x (paper {:.2}x) | energy reduction {}% (paper {}%)",
+        speedup, paper::SPEEDUP, f1(saving), f1(paper::ENERGY_REDUCTION_PCT)
+    );
+    println!(
+        "HBD speedup {:.2}x (paper 2.05x) | Sort&Trunc speedup {:.2}x (paper 9.96x)",
+        base.phase(Phase::Hbd).time_ms / tte.phase(Phase::Hbd).time_ms,
+        base.phase(Phase::SortTrunc).time_ms / tte.phase(Phase::SortTrunc).time_ms,
+    );
+    assert!((speedup - paper::SPEEDUP).abs() / paper::SPEEDUP < 0.05);
+    assert!((saving - paper::ENERGY_REDUCTION_PCT).abs() < 2.0);
+    println!("table3 OK");
+}

@@ -1,0 +1,30 @@
+//! TABLE IV — comparison with Qu et al. [21] (TCAD'21). Their column
+//! is published data; ours is derived from the Table-II model.
+
+use tt_edge::hw_model::related::{qu_tcad21, tt_edge};
+use tt_edge::metrics::Table;
+
+fn main() {
+    let q = qu_tcad21();
+    let e = tt_edge();
+    let mut t = Table::new(
+        "TABLE IV: proposed TT-Edge vs related technique",
+        &["Resource Metrics", q.name, e.name],
+    );
+    t.row(&["Process technology".into(), format!("{} nm", q.process_nm), format!("{} nm", e.process_nm)]);
+    t.row(&["Number of PEs".into(), format!("{} + {}", q.pes.0, q.pes.1), format!("{} + {}", e.pes.0, e.pes.1)]);
+    t.row(&["On-chip memory".into(), format!("{} KB", q.on_chip_memory_kb), format!("128 KB + 320 KB")]);
+    t.row(&["Arithmetic precision".into(), q.precision.into(), e.precision.into()]);
+    t.row(&["Clock frequency".into(), format!("{} MHz", q.clock_mhz), format!("{} MHz", e.clock_mhz)]);
+    t.row(&[
+        "Power consumption".into(),
+        format!("{:.2} W", q.power_mw / 1000.0),
+        format!("{:.0} mW ({:.0} mW*)", e.power_mw, e.total_power_mw.unwrap()),
+    ]);
+    println!("{}", t.render());
+    println!("(*total processor power)\n");
+
+    assert!(q.power_mw / e.power_mw > 50.0, "power contrast lost");
+    assert_eq!(e.pes, (64, 3));
+    println!("table4 OK");
+}

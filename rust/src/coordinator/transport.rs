@@ -1,0 +1,70 @@
+//! Edge-to-leader transport model: the communication channel whose
+//! overhead motivates on-device compression (paper section I).
+//!
+//! A simple latency + bandwidth model; what matters for the Fig.-1
+//! experiment is the *ratio* between shipping dense parameters and
+//! shipping TT cores, which is bandwidth-independent.
+
+/// Uplink characteristics of an edge node.
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    /// Sustained uplink bandwidth, kilobytes per second.
+    pub bandwidth_kbps: f64,
+    /// Per-message latency, milliseconds.
+    pub latency_ms: f64,
+}
+
+impl Default for Link {
+    fn default() -> Self {
+        // A constrained IoT uplink (LTE Cat-M1-class).
+        Link { bandwidth_kbps: 128.0, latency_ms: 50.0 }
+    }
+}
+
+impl Link {
+    /// Transfer time for `bytes`, in milliseconds.
+    pub fn transfer_ms(&self, bytes: usize) -> f64 {
+        self.latency_ms + bytes as f64 / self.bandwidth_kbps
+    }
+}
+
+/// Tally of bytes moved through the channel.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransportStats {
+    pub messages: usize,
+    pub bytes: usize,
+    pub total_ms: f64,
+}
+
+impl TransportStats {
+    pub fn send(&mut self, link: &Link, bytes: usize) -> f64 {
+        let ms = link.transfer_ms(bytes);
+        self.messages += 1;
+        self.bytes += bytes;
+        self.total_ms += ms;
+        ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_is_latency_plus_payload() {
+        let l = Link { bandwidth_kbps: 100.0, latency_ms: 10.0 };
+        assert!((l.transfer_ms(1000) - 20.0).abs() < 1e-9);
+        assert!((l.transfer_ms(0) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let l = Link { bandwidth_kbps: 100.0, latency_ms: 0.0 };
+        let mut s = TransportStats::default();
+        s.send(&l, 500);
+        s.send(&l, 1500);
+        assert_eq!(s.messages, 2);
+        assert_eq!(s.bytes, 2000);
+        assert!((s.total_ms - 20.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,148 @@
+//! Hardware resource & power models — the structured description that
+//! regenerates Table II (FPGA LUT/FF + 45 nm post-synthesis power) and
+//! Table IV (comparison with Qu et al. [21]).
+//!
+//! The per-IP numbers are the paper's measurements (Genesys2
+//! Kintex7-325T prototype; Design Compiler + PrimeTime PX at Nangate
+//! 45 nm); everything *derived* — totals, shares, baseline vs TT-Edge
+//! deltas, gated power — is computed here and cross-checked by tests
+//! against the prose claims (+4% power, 5.6%/7.7% LUT/FF overhead,
+//! 169.96 mW gated).
+
+pub mod related;
+
+/// One IP block row of Table II.
+#[derive(Clone, Debug)]
+pub struct IpBlock {
+    pub name: &'static str,
+    pub luts: u64,
+    pub ffs: u64,
+    /// Active power at 45 nm, mW (PrimeTime PX).
+    pub power_mw: f64,
+    /// Clock-gated power, mW (only the Rocket core gates).
+    pub gated_power_mw: Option<f64>,
+    /// Part of the TTD-Engine's specialized logic (not the reused GEMM)?
+    pub ttd_engine_specialized: bool,
+}
+
+/// The TT-Edge processor's IP inventory (Table II).
+pub fn tt_edge_blocks() -> Vec<IpBlock> {
+    vec![
+        IpBlock { name: "Rocket RISC-V Core", luts: 15_041, ffs: 9_890, power_mw: 10.90, gated_power_mw: Some(2.63), ttd_engine_specialized: false },
+        IpBlock { name: "SRAM", luts: 166, ffs: 323, power_mw: 1.87, gated_power_mw: None, ttd_engine_specialized: false },
+        IpBlock { name: "DDR Controller", luts: 7_961, ffs: 7_581, power_mw: 89.12, gated_power_mw: None, ttd_engine_specialized: false },
+        IpBlock { name: "Peripherals incl. DMA", luts: 5_047, ffs: 10_373, power_mw: 10.60, gated_power_mw: None, ttd_engine_specialized: false },
+        // Table II's interconnect LUT cell is garbled in the camera
+        // copy; 10,186 is back-derived from the prose share claims
+        // ("TTD-Engine contributes 5.6% of LUTs").
+        IpBlock { name: "System Interconnect", luts: 10_186, ffs: 17_376, power_mw: 17.78, gated_power_mw: None, ttd_engine_specialized: false },
+        IpBlock { name: "GEMM Accelerator", luts: 84_150, ffs: 32_939, power_mw: 40.77, gated_power_mw: None, ttd_engine_specialized: false },
+        IpBlock { name: "HBD-ACC", luts: 1_346, ffs: 1_411, power_mw: 1.42, gated_power_mw: None, ttd_engine_specialized: true },
+        IpBlock { name: "TRUNCATION", luts: 413, ffs: 884, power_mw: 0.78, gated_power_mw: None, ttd_engine_specialized: true },
+        IpBlock { name: "SORTING", luts: 756, ffs: 476, power_mw: 0.49, gated_power_mw: None, ttd_engine_specialized: true },
+        IpBlock { name: "FP-ALU", luts: 3_314, ffs: 2_287, power_mw: 2.23, gated_power_mw: None, ttd_engine_specialized: true },
+        IpBlock { name: "DMA/SPM/GEMM IF + interconnect", luts: 1_412, ffs: 1_167, power_mw: 1.43, gated_power_mw: None, ttd_engine_specialized: true },
+        // Table II's specialized-modules header row (6,517 FFs,
+        // 7.19 mW) exceeds the sum of its itemized sub-rows; the
+        // remainder is control/FSM glue the paper does not itemize.
+        IpBlock { name: "TTD-Engine glue (unitemized)", luts: 29, ffs: 292, power_mw: 0.84, gated_power_mw: None, ttd_engine_specialized: true },
+    ]
+}
+
+/// Summary of Table II with derived quantities.
+#[derive(Clone, Debug)]
+pub struct ResourceSummary {
+    pub total_luts: u64,
+    pub total_ffs: u64,
+    /// Active total power (mW) — TT-Edge, no clock gating.
+    pub total_power_mw: f64,
+    /// Power with the Rocket core clock-gated (TTD-offloaded phases).
+    pub gated_power_mw: f64,
+    /// Baseline = TT-Edge minus the specialized TTD-Engine modules.
+    pub baseline_power_mw: f64,
+    /// Specialized-logic totals.
+    pub ttd_engine_luts: u64,
+    pub ttd_engine_ffs: u64,
+}
+
+pub fn summarize() -> ResourceSummary {
+    let blocks = tt_edge_blocks();
+    let total_luts = blocks.iter().map(|b| b.luts).sum();
+    let total_ffs = blocks.iter().map(|b| b.ffs).sum();
+    let total_power_mw: f64 = blocks.iter().map(|b| b.power_mw).sum();
+    let gate_delta: f64 = blocks
+        .iter()
+        .filter_map(|b| b.gated_power_mw.map(|g| b.power_mw - g))
+        .sum();
+    let ttd_power: f64 = blocks
+        .iter()
+        .filter(|b| b.ttd_engine_specialized)
+        .map(|b| b.power_mw)
+        .sum();
+    ResourceSummary {
+        total_luts,
+        total_ffs,
+        total_power_mw,
+        gated_power_mw: total_power_mw - gate_delta,
+        baseline_power_mw: total_power_mw - ttd_power,
+        ttd_engine_luts: blocks.iter().filter(|b| b.ttd_engine_specialized).map(|b| b.luts).sum(),
+        ttd_engine_ffs: blocks.iter().filter(|b| b.ttd_engine_specialized).map(|b| b.ffs).sum(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_match_paper_prose() {
+        let s = summarize();
+        // "TT-Edge consumes a total of 178.23 mW"
+        assert!((s.total_power_mw - 178.23).abs() < 0.2, "{}", s.total_power_mw);
+        // "baseline processor's 171.04 mW"
+        assert!((s.baseline_power_mw - 171.04).abs() < 0.4, "{}", s.baseline_power_mw);
+        // "TT-Edge operates at 169.96 mW" (core gated)
+        assert!((s.gated_power_mw - 169.96).abs() < 0.2, "{}", s.gated_power_mw);
+        // "+4% relative to the baseline"
+        let pct = (s.total_power_mw / s.baseline_power_mw - 1.0) * 100.0;
+        assert!((pct - 4.2).abs() < 0.6, "{pct}");
+    }
+
+    #[test]
+    fn ttd_engine_area_share_matches_prose() {
+        let s = summarize();
+        // "5.6% of LUTs and 7.7% of FFs across the entire processor"
+        let lut_pct = s.ttd_engine_luts as f64 / s.total_luts as f64 * 100.0;
+        let ff_pct = s.ttd_engine_ffs as f64 / s.total_ffs as f64 * 100.0;
+        assert!((lut_pct - 5.6).abs() < 0.3, "{lut_pct}");
+        assert!((ff_pct - 7.7).abs() < 0.8, "{ff_pct}");
+    }
+
+    #[test]
+    fn module_shares_within_specialized_logic() {
+        let blocks = tt_edge_blocks();
+        let spec: Vec<_> = blocks.iter().filter(|b| b.ttd_engine_specialized).collect();
+        let luts: u64 = spec.iter().map(|b| b.luts).sum();
+        let hbd = spec.iter().find(|b| b.name == "HBD-ACC").unwrap();
+        // "the HBD-ACC ... consumes 18.5% of LUTs"
+        assert!((hbd.luts as f64 / luts as f64 * 100.0 - 18.5).abs() < 0.5);
+        let fpalu = spec.iter().find(|b| b.name == "FP-ALU").unwrap();
+        // "the Shared FP-ALU takes up 45.6% of LUTs"
+        assert!((fpalu.luts as f64 / luts as f64 * 100.0 - 45.6).abs() < 0.5);
+    }
+
+    #[test]
+    fn specialized_power_breakdown_matches_prose() {
+        let blocks = tt_edge_blocks();
+        let spec_power: f64 = blocks
+            .iter()
+            .filter(|b| b.ttd_engine_specialized)
+            .map(|b| b.power_mw)
+            .sum();
+        // TTD-Engine specialized modules: ~7.19-7.35 mW (Table II sums)
+        assert!((spec_power - 7.19).abs() < 0.4, "{spec_power}");
+        let hbd = blocks.iter().find(|b| b.name == "HBD-ACC").unwrap();
+        // "HBD-ACC contributes 1.42 mW (19.7%)"
+        assert!((hbd.power_mw / spec_power * 100.0 - 19.7).abs() < 1.5);
+    }
+}

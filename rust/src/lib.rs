@@ -1,0 +1,28 @@
+//! # TT-Edge
+//!
+//! Reproduction of *TT-Edge: A Hardware–Software Co-Design for
+//! Energy-Efficient Tensor-Train Decomposition on Edge AI* (DATE 2026)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: the edge
+//!   SoC simulator with the TTD-Engine ([`sim`]), the full TTD numeric
+//!   substrate ([`ttd`]), the hardware resource/power models
+//!   ([`hw_model`]), and the Fig.-1 federated-learning coordinator
+//!   ([`coordinator`]).
+//! * **L2/L1 (python/, build-time only)** — the JAX compute graph and
+//!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt` and executed
+//!   from the [`runtime`] PJRT wrapper. Python never runs at runtime.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment
+//! index mapping every paper table/figure to a module and bench.
+
+pub mod coordinator;
+pub mod hw_model;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod testutil;
+pub mod trace;
+pub mod ttd;
+pub mod util;

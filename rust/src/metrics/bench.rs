@@ -1,0 +1,73 @@
+//! Minimal benchmarking harness for the `harness = false` bench
+//! binaries (criterion is unavailable offline). Warmup + repeated
+//! timed runs with mean / stddev / min reporting.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub stddev_ms: f64,
+    pub min_ms: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.3} ms/iter (+/- {:>8.3}, min {:>10.3}, n={})",
+            self.name, self.mean_ms, self.stddev_ms, self.min_ms, self.iters
+        )
+    }
+}
+
+/// Time `f` over `iters` iterations after `warmup` runs.
+pub fn time_it<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: mean,
+        stddev_ms: var.sqrt(),
+        min_ms: min,
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_produces_sane_stats() {
+        let r = time_it("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.min_ms <= r.mean_ms + 1e-9);
+        assert!(r.report().contains("spin"));
+    }
+}

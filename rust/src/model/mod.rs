@@ -1,0 +1,7 @@
+//! The compression workload: ResNet-32 parameter inventory and store.
+
+pub mod params;
+pub mod resnet32;
+
+pub use params::ParamStore;
+pub use resnet32::{conv_layers, param_count, param_specs, ConvLayer};

@@ -1,0 +1,194 @@
+//! Parameter store: holds a full model's parameter arrays in the
+//! canonical flat order, with He initialization (mirroring
+//! `python/compile/resnet.py::init_params`) and simple binary
+//! save/load for experiment reproducibility.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::resnet32::{param_specs, ParamSpec};
+use crate::ttd::Tensor;
+use crate::util::Rng;
+
+/// A model's parameters in canonical order.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub specs: Vec<ParamSpec>,
+    pub values: Vec<Tensor>,
+}
+
+impl ParamStore {
+    /// He-normal initialized ResNet-32 parameters (bn2 scales zeroed —
+    /// identical policy to the python init, see resnet.py).
+    pub fn init_resnet32(seed: u64) -> Self {
+        let specs = param_specs();
+        let mut rng = Rng::new(seed);
+        let values = specs
+            .iter()
+            .map(|s| {
+                let n = s.numel();
+                let data: Vec<f32> = if s.shape.len() == 4 {
+                    let fan_in = (s.shape[0] * s.shape[1] * s.shape[2]) as f64;
+                    let std = (2.0 / fan_in).sqrt();
+                    (0..n).map(|_| (rng.normal() * std) as f32).collect()
+                } else if s.name == "fc/w" {
+                    let std = (1.0 / s.shape[0] as f64).sqrt();
+                    (0..n).map(|_| (rng.normal() * std) as f32).collect()
+                } else if s.name.ends_with("bn2/scale") {
+                    vec![0.0; n]
+                } else if s.name.ends_with("/scale") {
+                    vec![1.0; n]
+                } else {
+                    vec![0.0; n]
+                };
+                Tensor::from_vec(&s.shape, data)
+            })
+            .collect();
+        Self { specs, values }
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.values.iter().map(|t| t.numel()).sum()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Tensor> {
+        self.specs
+            .iter()
+            .position(|s| s.name == name)
+            .map(|i| &self.values[i])
+    }
+
+    /// Flat f32 view in canonical order (for aggregation / diffing).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.total_params());
+        for t in &self.values {
+            out.extend_from_slice(&t.data);
+        }
+        out
+    }
+
+    /// Inverse of [`ParamStore::flatten`].
+    pub fn unflatten_into(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), self.total_params());
+        let mut off = 0;
+        for t in &mut self.values {
+            let n = t.numel();
+            t.data.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+    }
+
+    /// Binary format: magic, count, then per-tensor rank/dims/data.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(b"TTEP")?;
+        f.write_all(&(self.values.len() as u32).to_le_bytes())?;
+        for t in &self.values {
+            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for d in &t.shape {
+                f.write_all(&(*d as u32).to_le_bytes())?;
+            }
+            let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+            f.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        let mut off = 0usize;
+        let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+            if *off + n > buf.len() {
+                bail!("truncated param file");
+            }
+            let s = &buf[*off..*off + n];
+            *off += n;
+            Ok(s)
+        };
+        if take(&mut off, 4)? != b"TTEP" {
+            bail!("bad magic");
+        }
+        let count = u32::from_le_bytes(take(&mut off, 4)?.try_into()?) as usize;
+        let mut values = Vec::with_capacity(count);
+        for _ in 0..count {
+            let rank = u32::from_le_bytes(take(&mut off, 4)?.try_into()?) as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(u32::from_le_bytes(take(&mut off, 4)?.try_into()?) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let raw = take(&mut off, 4 * n)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            values.push(Tensor::from_vec(&shape, data));
+        }
+        let specs = param_specs();
+        if specs.len() != values.len() {
+            bail!("param count mismatch: {} vs {}", specs.len(), values.len());
+        }
+        Ok(Self { specs, values })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_has_canonical_count() {
+        let p = ParamStore::init_resnet32(1);
+        assert_eq!(p.total_params(), 464_154);
+        assert_eq!(p.values.len(), p.specs.len());
+    }
+
+    #[test]
+    fn init_statistics_follow_he() {
+        let p = ParamStore::init_resnet32(2);
+        let w = p.by_name("stage2/block2/conv1/w").unwrap();
+        let fan_in = (3 * 3 * 64) as f64;
+        let var: f64 =
+            w.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / w.numel() as f64;
+        assert!((var - 2.0 / fan_in).abs() < 0.5 * 2.0 / fan_in, "var {var}");
+        // bn2 scales start at zero (identity residual blocks)
+        let s = p.by_name("stage0/block0/bn2/scale").unwrap();
+        assert!(s.data.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = ParamStore::init_resnet32(7);
+        let b = ParamStore::init_resnet32(7);
+        assert_eq!(a.flatten(), b.flatten());
+        let c = ParamStore::init_resnet32(8);
+        assert_ne!(a.flatten(), c.flatten());
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let mut p = ParamStore::init_resnet32(3);
+        let mut flat = p.flatten();
+        for v in flat.iter_mut() {
+            *v *= 2.0;
+        }
+        p.unflatten_into(&flat);
+        assert_eq!(p.flatten(), flat);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let p = ParamStore::init_resnet32(4);
+        let dir = std::env::temp_dir().join("tt_edge_test_params.bin");
+        p.save(&dir).unwrap();
+        let q = ParamStore::load(&dir).unwrap();
+        assert_eq!(p.flatten(), q.flatten());
+        let _ = std::fs::remove_file(dir);
+    }
+}

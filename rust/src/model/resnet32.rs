@@ -1,0 +1,143 @@
+//! ResNet-32 (CIFAR-10) parameter inventory — the paper's benchmark
+//! model (Table I: 0.47 M parameters uncompressed).
+//!
+//! The layout mirrors `python/compile/resnet.py::param_specs()` *exactly*
+//! (same names, same order): the rust side must marshal parameters to
+//! the AOT-exported `resnet32_fwd_b4` / `resnet32_sgd_b8` artifacts in
+//! this order.
+
+/// One parameter array in the canonical flat order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A conv layer eligible for TTD compression.
+#[derive(Clone, Debug)]
+pub struct ConvLayer {
+    /// Index into the flat parameter list.
+    pub param_index: usize,
+    pub name: String,
+    /// (kh, kw, cin, cout) — HWIO, as the JAX side.
+    pub shape: [usize; 4],
+}
+
+impl ConvLayer {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// The TT factorization dims used throughout: (kh*kw, cin, cout)
+    /// — the TIE/ETTE conv layout (DESIGN.md section 3).
+    pub fn tt_dims(&self) -> [usize; 3] {
+        [self.shape[0] * self.shape[1], self.shape[2], self.shape[3]]
+    }
+}
+
+pub const BLOCKS_PER_STAGE: usize = 5;
+pub const STAGE_CHANNELS: [usize; 3] = [16, 32, 64];
+pub const NUM_CLASSES: usize = 10;
+
+/// Ordered parameter list — must match python `param_specs()`.
+pub fn param_specs() -> Vec<ParamSpec> {
+    let mut specs = vec![
+        ParamSpec { name: "conv_init/w".into(), shape: vec![3, 3, 3, 16] },
+        ParamSpec { name: "bn_init/scale".into(), shape: vec![16] },
+        ParamSpec { name: "bn_init/bias".into(), shape: vec![16] },
+    ];
+    let mut in_ch = 16;
+    for (s, &ch) in STAGE_CHANNELS.iter().enumerate() {
+        for b in 0..BLOCKS_PER_STAGE {
+            let c_in = if b == 0 { in_ch } else { ch };
+            let p = format!("stage{s}/block{b}");
+            specs.push(ParamSpec { name: format!("{p}/conv1/w"), shape: vec![3, 3, c_in, ch] });
+            specs.push(ParamSpec { name: format!("{p}/bn1/scale"), shape: vec![ch] });
+            specs.push(ParamSpec { name: format!("{p}/bn1/bias"), shape: vec![ch] });
+            specs.push(ParamSpec { name: format!("{p}/conv2/w"), shape: vec![3, 3, ch, ch] });
+            specs.push(ParamSpec { name: format!("{p}/bn2/scale"), shape: vec![ch] });
+            specs.push(ParamSpec { name: format!("{p}/bn2/bias"), shape: vec![ch] });
+        }
+        in_ch = ch;
+    }
+    specs.push(ParamSpec {
+        name: "fc/w".into(),
+        shape: vec![STAGE_CHANNELS[2], NUM_CLASSES],
+    });
+    specs.push(ParamSpec { name: "fc/b".into(), shape: vec![NUM_CLASSES] });
+    specs
+}
+
+/// Total parameter count (Table I "Uncompressed": ~0.47 M).
+pub fn param_count() -> usize {
+    param_specs().iter().map(|s| s.numel()).sum()
+}
+
+/// The 31 conv kernels — the TTD compression targets.
+pub fn conv_layers() -> Vec<ConvLayer> {
+    param_specs()
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.shape.len() == 4)
+        .map(|(i, s)| ConvLayer {
+            param_index: i,
+            name: s.name.clone(),
+            shape: [s.shape[0], s.shape[1], s.shape[2], s.shape[3]],
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_matches_table1_uncompressed() {
+        let n = param_count();
+        assert!((440_000..480_000).contains(&n), "{n}");
+        // exact value pinned against the python side (test_resnet.py)
+        assert_eq!(n, 464_154);
+    }
+
+    #[test]
+    fn thirty_one_conv_layers() {
+        let convs = conv_layers();
+        assert_eq!(convs.len(), 31);
+        assert_eq!(convs[0].shape, [3, 3, 3, 16]);
+        assert_eq!(convs.last().unwrap().shape, [3, 3, 64, 64]);
+    }
+
+    #[test]
+    fn spec_order_matches_python_layout() {
+        let specs = param_specs();
+        assert_eq!(specs[0].name, "conv_init/w");
+        assert_eq!(specs[3].name, "stage0/block0/conv1/w");
+        assert_eq!(specs.last().unwrap().name, "fc/b");
+        // 3 stem + 15 blocks * 6 + 2 fc
+        assert_eq!(specs.len(), 3 + 15 * 6 + 2);
+    }
+
+    #[test]
+    fn tt_dims_factorization() {
+        let convs = conv_layers();
+        let l = convs.last().unwrap();
+        assert_eq!(l.tt_dims(), [9, 64, 64]);
+        assert_eq!(l.tt_dims().iter().product::<usize>(), l.numel());
+    }
+
+    #[test]
+    fn stage_transition_shapes() {
+        let convs = conv_layers();
+        // stage1/block0/conv1 takes 16 -> 32
+        let t = convs.iter().find(|c| c.name == "stage1/block0/conv1/w").unwrap();
+        assert_eq!(t.shape, [3, 3, 16, 32]);
+        let t = convs.iter().find(|c| c.name == "stage2/block0/conv1/w").unwrap();
+        assert_eq!(t.shape, [3, 3, 32, 64]);
+    }
+}

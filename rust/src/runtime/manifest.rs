@@ -1,0 +1,156 @@
+//! `artifacts/manifest.json` — the AOT contract between `python/compile/aot.py`
+//! and the PJRT runtime: one entry per exported HLO module with the
+//! flattened argument order, shapes and dtypes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub file: String,
+    pub note: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, Entry>,
+}
+
+fn parse_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("specs not an array"))?
+        .iter()
+        .map(|s| {
+            let shape = s
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = Dtype::from_str(
+                s.get("dtype").and_then(Json::as_str).unwrap_or("float32"),
+            )?;
+            Ok(TensorSpec { shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`?)", path.display()))?;
+        let j = parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let mut entries = BTreeMap::new();
+        for e in j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest has no entries"))?
+        {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry without name"))?
+                .to_string();
+            let entry = Entry {
+                name: name.clone(),
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry without file"))?
+                    .to_string(),
+                note: e.get("note").and_then(Json::as_str).unwrap_or("").to_string(),
+                inputs: parse_specs(e.get("inputs").ok_or_else(|| anyhow!("no inputs"))?)?,
+                outputs: parse_specs(e.get("outputs").ok_or_else(|| anyhow!("no outputs"))?)?,
+            };
+            entries.insert(name, entry);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact entry '{name}'"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.entry(name)?.file))
+    }
+}
+
+/// Default artifacts directory: `$TT_EDGE_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("TT_EDGE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_inline_manifest() {
+        let dir = std::env::temp_dir().join("tt_edge_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"entries": [{"name": "gemm", "file": "gemm.hlo.txt", "note": "x",
+                "inputs": [{"shape": [2,3], "dtype": "float32"}],
+                "outputs": [{"shape": [], "dtype": "int32"}]}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.entry("gemm").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![2, 3]);
+        assert_eq!(e.inputs[0].numel(), 6);
+        assert_eq!(e.outputs[0].dtype, Dtype::I32);
+        assert!(m.entry("nope").is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        assert!(Dtype::from_str("float64").is_err());
+        assert_eq!(Dtype::from_str("int32").unwrap(), Dtype::I32);
+    }
+}

@@ -1,0 +1,191 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`), compile
+//! once per entry, execute from the L3 hot path. Python never runs
+//! here — the interchange is HLO *text* (see `python/compile/aot.py`
+//! and /opt/xla-example/README.md for why text, not serialized proto).
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{default_dir, Dtype, Entry, Manifest, TensorSpec};
+
+/// A host-side tensor value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Self {
+        Value::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Value::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_tensor(t: &crate::ttd::Tensor) -> Self {
+        Value::F32 { shape: t.shape.clone(), data: t.data.clone() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32 { shape, .. } | Value::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            _ => bail!("value is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32 { data, .. } => Ok(data),
+            _ => bail!("value is not i32"),
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Value::F32 { .. } => Dtype::F32,
+            Value::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::F32 { data, .. } => xla::Literal::vec1(data),
+            Value::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Value> {
+        match spec.dtype {
+            Dtype::F32 => Ok(Value::F32 { shape: spec.shape.clone(), data: lit.to_vec::<f32>()? }),
+            Dtype::I32 => Ok(Value::I32 { shape: spec.shape.clone(), data: lit.to_vec::<i32>()? }),
+        }
+    }
+}
+
+/// The artifact engine: one PJRT CPU client + lazily compiled
+/// executables keyed by manifest entry name.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, exes: HashMap::new() })
+    }
+
+    /// Load from `$TT_EDGE_ARTIFACTS` / `./artifacts`.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and cache the executable for `name`.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute entry `name` with `inputs` (validated against the
+    /// manifest), returning the outputs in manifest order.
+    pub fn run(&mut self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let entry = self.manifest.entry(name)?.clone();
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "entry '{name}' expects {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (v, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            if v.shape() != spec.shape.as_slice() || v.dtype() != spec.dtype {
+                bail!(
+                    "entry '{name}' input {i}: got {:?}/{:?}, want {:?}/{:?}",
+                    v.shape(),
+                    v.dtype(),
+                    spec.shape,
+                    spec.dtype
+                );
+            }
+        }
+        self.compile(name)?;
+        let exe = self.exes.get(name).ok_or_else(|| anyhow!("compile failed"))?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "entry '{name}' returned {} outputs, manifest says {}",
+                parts.len(),
+                entry.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&entry.outputs)
+            .map(|(lit, spec)| Value::from_literal(lit, spec))
+            .collect()
+    }
+
+    /// Names of all available entries.
+    pub fn entry_names(&self) -> Vec<String> {
+        self.manifest.entries.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_roundtrip_literal() {
+        let v = Value::F32 { shape: vec![2, 2], data: vec![1.0, 2.0, 3.0, 4.0] };
+        let lit = v.to_literal().unwrap();
+        let spec = TensorSpec { shape: vec![2, 2], dtype: Dtype::F32 };
+        let back = Value::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back.as_f32().unwrap(), v.as_f32().unwrap());
+    }
+
+    #[test]
+    fn scalar_values() {
+        let v = Value::scalar_i32(7);
+        assert_eq!(v.numel(), 1);
+        assert!(v.as_f32().is_err());
+        assert_eq!(v.as_i32().unwrap(), &[7]);
+    }
+}

@@ -1,0 +1,75 @@
+//! Rocket-core cost functions — the baseline datapath for every
+//! operation the GEMM accelerator cannot execute (paper bottleneck #1).
+
+use crate::sim::config::CostModel;
+
+/// HOUSE on the core: streamed norm (MAC loop) + SQRT + sign/pivot
+/// update + writing v back (the vector lives in DRAM/cache).
+pub fn house_gen(c: &CostModel, len: u64) -> u64 {
+    len * c.core_fp_mac        // sum of squares
+        + c.core_fp_sqrt       // ||x||
+        + 4 * c.core_scalar_op // sign, q, v1 update
+        + len * c.core_vec_elem // materialize v
+}
+
+/// v / beta on the core: one FP divide per element plus loop.
+pub fn vec_div(c: &CostModel, len: u64) -> u64 {
+    len * (c.core_fp_div + c.core_vec_elem)
+}
+
+/// One bubble-sort pass set over n values (n(n-1)/2 compares).
+pub fn sort(c: &CostModel, n: u64) -> u64 {
+    n * n.saturating_sub(1) / 2 * c.core_sort_compare
+}
+
+pub fn reorder(c: &CostModel, elems: u64) -> u64 {
+    elems * c.core_reorder_elem
+}
+
+pub fn trunc(c: &CostModel, probes: u64) -> u64 {
+    probes * c.core_trunc_probe
+}
+
+pub fn givens(c: &CostModel, len: u64) -> u64 {
+    len * c.core_givens_elem
+}
+
+pub fn reshape(c: &CostModel, elems: u64) -> u64 {
+    elems * c.core_reshape_elem
+}
+
+pub fn scalar(c: &CostModel, ops: u64) -> u64 {
+    ops * c.core_scalar_op
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn house_gen_scales_linearly() {
+        let c = CostModel::default();
+        let a = house_gen(&c, 100);
+        let b = house_gen(&c, 200);
+        let fixed = c.core_fp_sqrt + 4 * c.core_scalar_op;
+        assert_eq!(b - a, 100 * (c.core_fp_mac + c.core_vec_elem));
+        assert_eq!(a, 100 * (c.core_fp_mac + c.core_vec_elem) + fixed);
+    }
+
+    #[test]
+    fn sort_is_quadratic() {
+        let c = CostModel::default();
+        assert_eq!(sort(&c, 2), c.core_sort_compare);
+        assert_eq!(sort(&c, 10), 45 * c.core_sort_compare);
+        assert_eq!(sort(&c, 0), 0);
+        assert_eq!(sort(&c, 1), 0);
+    }
+
+    #[test]
+    fn unit_costs() {
+        let c = CostModel::default();
+        assert_eq!(trunc(&c, 3), 3 * c.core_trunc_probe);
+        assert_eq!(reshape(&c, 7), 7 * c.core_reshape_elem);
+        assert_eq!(givens(&c, 5), 5 * c.core_givens_elem);
+    }
+}

@@ -1,0 +1,103 @@
+//! GEMM accelerator model: 16x16 PE tile, 320 KB SPM, APB control +
+//! AXI/DMA data movement (paper section II-B).
+//!
+//! A matmul (m x k)@(k x n) is executed as `ceil(m/16) ceil(n/16)
+//! ceil(k/16)` tile operations. Per tile the *baseline* pays:
+//! descriptor computation on the core + APB programming + DMA of the
+//! operand tiles; *TT-Edge* generates descriptors on the HBD-ACC
+//! address calculator and ships them over the direct link (paper idea
+//! #2), and keeps Householder vectors SPM-resident (idea #3).
+
+use crate::sim::config::{CostModel, Features};
+
+pub const PE_TILE: u64 = 16;
+
+/// Tile-op count for an (m x k)@(k x n) blockwise multiplication.
+pub fn tiles(m: u64, n: u64, k: u64) -> u64 {
+    let c = |a: u64| a.div_ceil(PE_TILE);
+    c(m) * c(n) * c(k)
+}
+
+/// True when one operand is a (Householder) vector — the operand the
+/// SPM-retention feature keeps on-chip.
+pub fn is_vector_op(m: u64, n: u64, k: u64) -> bool {
+    m == 1 || n == 1 || k == 1
+}
+
+/// Cycles for one blockwise GEMM under the given feature set.
+pub fn gemm_cycles(c: &CostModel, f: &Features, m: u64, n: u64, k: u64) -> u64 {
+    let t = tiles(m, n, k);
+    // Control path: descriptor per tile.
+    let ctrl = if f.direct_gemm_link {
+        t * (c.desc_hw + c.link_per_tile)
+    } else {
+        t * (c.desc_core + c.apb_per_tile)
+    };
+    // Data path: operand + result traffic.
+    //  - matrix operand: streamed from DRAM tile by tile (A and the
+    //    result; B-tiles assumed SPM-cached across the k-loop).
+    //  - vector operand: DRAM round trip unless SPM-retained.
+    let tile_bytes = PE_TILE * PE_TILE * 4;
+    let matrix_bytes = 2 * t * tile_bytes; // in + out per tile op
+    let mut dram_bytes = matrix_bytes;
+    if is_vector_op(m, n, k) && !f.spm_retention {
+        // vector fetched + intermediate written back per GEMM
+        let vlen = m.max(n).max(k) * 4;
+        dram_bytes += 2 * vlen;
+    }
+    let data = dram_bytes / c.dram_bytes_per_cycle + t * c.axi_per_tile + c.dma_setup;
+    // Compute: tiles through the 64-PE array.
+    let compute = t * c.tile_compute;
+    ctrl + data + compute
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::CostModel;
+
+    #[test]
+    fn tile_counts() {
+        assert_eq!(tiles(16, 16, 16), 1);
+        assert_eq!(tiles(17, 16, 16), 2);
+        assert_eq!(tiles(64, 64, 64), 64);
+        assert_eq!(tiles(1, 64, 576), 4 * 36);
+    }
+
+    #[test]
+    fn direct_link_removes_core_descriptor_cost() {
+        let c = CostModel::default();
+        let base = gemm_cycles(&c, &Features::ALL_OFF, 64, 64, 64);
+        let tte = gemm_cycles(&c, &Features::ALL_ON, 64, 64, 64);
+        assert!(tte < base);
+        let t = tiles(64, 64, 64);
+        assert_eq!(
+            base - tte,
+            t * (c.desc_core + c.apb_per_tile) - t * (c.desc_hw + c.link_per_tile)
+        );
+    }
+
+    #[test]
+    fn spm_retention_only_affects_vector_ops() {
+        let c = CostModel::default();
+        let mut f_no_spm = Features::ALL_ON;
+        f_no_spm.spm_retention = false;
+        // square op: no difference
+        assert_eq!(
+            gemm_cycles(&c, &Features::ALL_ON, 64, 64, 64),
+            gemm_cycles(&c, &f_no_spm, 64, 64, 64)
+        );
+        // rank-1 op: retention saves DRAM traffic
+        assert!(
+            gemm_cycles(&c, &Features::ALL_ON, 576, 64, 1)
+                < gemm_cycles(&c, &f_no_spm, 576, 64, 1)
+        );
+    }
+
+    #[test]
+    fn compute_floor_is_tiles_times_64() {
+        let c = CostModel::default();
+        let cycles = gemm_cycles(&c, &Features::ALL_ON, 16, 16, 16);
+        assert!(cycles >= c.tile_compute);
+    }
+}

@@ -1,0 +1,25 @@
+//! The edge-SoC simulator: the paper's hardware contribution as an
+//! executable model.
+//!
+//! The real TTD numerics ([`crate::ttd`]) emit a hardware-op trace;
+//! [`timeline::HwTimeline`] costs it under a [`config::SocConfig`]
+//! (Baseline or TT-Edge), and [`power`] integrates the Table-II power
+//! states over the phase timeline. [`report`] renders Table III.
+//!
+//! See DESIGN.md section 6 for the modelling approach and section 2 for
+//! why a cycle-approximate simulator is the faithful substitute for
+//! the paper's FPGA prototype in this environment.
+
+pub mod config;
+pub mod core_model;
+pub mod gemm;
+pub mod power;
+pub mod report;
+pub mod timeline;
+pub mod ttd_engine;
+pub mod workload;
+
+pub use config::{CostModel, Features, SocConfig, Variant};
+pub use report::{format_table3, SimReport};
+pub use timeline::HwTimeline;
+pub use workload::{compress_resnet32, CompressionOutcome};

@@ -1,0 +1,103 @@
+//! Power & energy integration over the simulated timeline.
+//!
+//! The per-mode processor power comes from the Table-II model
+//! ([`crate::hw_model`]):
+//!
+//! * Baseline: 171.04 mW in every phase (core always active).
+//! * TT-Edge, core active: 178.23 mW (QR, Update-SVD, Reshape).
+//! * TT-Edge, core clock-gated: 169.96 mW (HBD, Sort & Trunc — the
+//!   phases the TTD-Engine fully owns).
+//!
+//! Energy per phase = time x mode power; the paper's own Table III is
+//! consistent with exactly this model to <0.5% in every cell.
+
+use crate::hw_model;
+use crate::sim::config::{SocConfig, Variant};
+use crate::trace::Phase;
+
+/// Per-phase power modes for a configuration.
+#[derive(Clone, Debug)]
+pub struct PowerModel {
+    pub active_mw: f64,
+    pub gated_mw: f64,
+    pub gating_enabled: bool,
+    pub variant: Variant,
+}
+
+impl PowerModel {
+    pub fn for_config(cfg: &SocConfig) -> Self {
+        let s = hw_model::summarize();
+        match cfg.variant {
+            Variant::Baseline => PowerModel {
+                active_mw: s.baseline_power_mw,
+                gated_mw: s.baseline_power_mw,
+                gating_enabled: false,
+                variant: cfg.variant,
+            },
+            Variant::TtEdge => PowerModel {
+                active_mw: s.total_power_mw,
+                gated_mw: s.gated_power_mw,
+                gating_enabled: cfg.features.clock_gating,
+                variant: cfg.variant,
+            },
+        }
+    }
+
+    /// Is the core clock-gated during this phase?
+    pub fn gated(&self, phase: Phase) -> bool {
+        self.gating_enabled
+            && matches!(phase, Phase::Hbd | Phase::SortTrunc)
+    }
+
+    /// Processor power during `phase`, mW.
+    pub fn power_mw(&self, phase: Phase) -> f64 {
+        if self.gated(phase) {
+            self.gated_mw
+        } else {
+            self.active_mw
+        }
+    }
+
+    /// Energy for `ms` milliseconds spent in `phase`, in mJ.
+    pub fn energy_mj(&self, phase: Phase, ms: f64) -> f64 {
+        self.power_mw(phase) * ms / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::{Features, SocConfig};
+
+    #[test]
+    fn baseline_power_is_constant() {
+        let p = PowerModel::for_config(&SocConfig::baseline());
+        for ph in Phase::ALL {
+            assert!((p.power_mw(ph) - 171.04).abs() < 0.4);
+        }
+    }
+
+    #[test]
+    fn tt_edge_gates_hbd_and_sort_trunc() {
+        let p = PowerModel::for_config(&SocConfig::tt_edge());
+        assert!((p.power_mw(Phase::Hbd) - 169.96).abs() < 0.2);
+        assert!((p.power_mw(Phase::SortTrunc) - 169.96).abs() < 0.2);
+        assert!((p.power_mw(Phase::QrDiag) - 178.23).abs() < 0.2);
+        assert!((p.power_mw(Phase::ReshapeEtc) - 178.23).abs() < 0.2);
+    }
+
+    #[test]
+    fn gating_can_be_ablated() {
+        let mut f = Features::ALL_ON;
+        f.clock_gating = false;
+        let p = PowerModel::for_config(&SocConfig::tt_edge_with(f));
+        assert!((p.power_mw(Phase::Hbd) - 178.23).abs() < 0.2);
+    }
+
+    #[test]
+    fn energy_is_power_times_time() {
+        let p = PowerModel::for_config(&SocConfig::baseline());
+        let e = p.energy_mj(Phase::Hbd, 1000.0); // 1 s
+        assert!((e - 171.04).abs() < 0.4);
+    }
+}

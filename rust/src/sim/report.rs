@@ -1,0 +1,173 @@
+//! Per-phase simulation reports — the Table III generator.
+
+use crate::sim::config::SocConfig;
+use crate::sim::power::PowerModel;
+use crate::sim::timeline::HwTimeline;
+use crate::trace::Phase;
+
+/// One row of Table III (a TTD phase on one configuration).
+#[derive(Clone, Debug)]
+pub struct PhaseReport {
+    pub phase: Phase,
+    pub cycles: u64,
+    pub time_ms: f64,
+    pub energy_mj: f64,
+    pub core_gated: bool,
+}
+
+/// A full Table-III column: all five phases + totals.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub config_name: String,
+    pub phases: Vec<PhaseReport>,
+    pub total_ms: f64,
+    pub total_mj: f64,
+}
+
+impl SimReport {
+    pub fn from_timeline(t: &HwTimeline) -> Self {
+        let power = PowerModel::for_config(&t.config);
+        let phases: Vec<PhaseReport> = Phase::ALL
+            .iter()
+            .map(|&p| {
+                let cycles = t.cycles.get(p);
+                let ms = t.config.cycles_to_ms(cycles);
+                PhaseReport {
+                    phase: p,
+                    cycles,
+                    time_ms: ms,
+                    energy_mj: power.energy_mj(p, ms),
+                    core_gated: power.gated(p),
+                }
+            })
+            .collect();
+        let total_ms = phases.iter().map(|p| p.time_ms).sum();
+        let total_mj = phases.iter().map(|p| p.energy_mj).sum();
+        SimReport { config_name: t.config.name().to_string(), phases, total_ms, total_mj }
+    }
+
+    pub fn phase(&self, p: Phase) -> &PhaseReport {
+        self.phases.iter().find(|r| r.phase == p).unwrap()
+    }
+}
+
+/// Table III: the baseline/TT-Edge side-by-side, same layout as the
+/// paper (T_exec ms and E mJ per phase; `*` = core clock-gated).
+pub fn format_table3(base: &SimReport, tte: &SimReport) -> String {
+    let mut s = String::new();
+    s.push_str("TABLE III: Execution time and energy breakdown, TTD-based ResNet-32 compression\n");
+    s.push_str(&format!(
+        "{:<16} | {:>12} {:>10} | {:>12} {:>10}\n",
+        "TTD procedure", "Base T(ms)", "E(mJ)", "TTE T(ms)", "E(mJ)"
+    ));
+    s.push_str(&"-".repeat(70));
+    s.push('\n');
+    for p in Phase::ALL {
+        let b = base.phase(p);
+        let t = tte.phase(p);
+        s.push_str(&format!(
+            "{:<16} | {:>12.2} {:>10.2} | {:>12.2} {:>9.2}{}\n",
+            p.label(),
+            b.time_ms,
+            b.energy_mj,
+            t.time_ms,
+            t.energy_mj,
+            if t.core_gated { "*" } else { " " }
+        ));
+    }
+    s.push_str(&"-".repeat(70));
+    s.push('\n');
+    s.push_str(&format!(
+        "{:<16} | {:>12.2} {:>10.2} | {:>12.2} {:>10.2}\n",
+        "Total", base.total_ms, base.total_mj, tte.total_ms, tte.total_mj
+    ));
+    s.push_str(&format!(
+        "Speedup: {:.2}x   Energy reduction: {:.1}%   (*core clock-gated)\n",
+        base.total_ms / tte.total_ms,
+        (1.0 - tte.total_mj / base.total_mj) * 100.0
+    ));
+    s
+}
+
+/// Paper targets for Table III (ms, mJ) used by calibration tests and
+/// EXPERIMENTS.md comparisons.
+pub mod paper {
+    use crate::trace::Phase;
+
+    pub const BASE: [(Phase, f64, f64); 5] = [
+        (Phase::Hbd, 5626.42, 962.17),
+        (Phase::QrDiag, 1554.66, 265.91),
+        (Phase::SortTrunc, 312.56, 53.46),
+        (Phase::UpdateSvdInput, 46.65, 8.15),
+        (Phase::ReshapeEtc, 189.24, 32.37),
+    ];
+    pub const TTE: [(Phase, f64, f64); 5] = [
+        (Phase::Hbd, 2743.80, 466.34),
+        (Phase::QrDiag, 1554.66, 277.09),
+        (Phase::SortTrunc, 31.37, 5.33),
+        (Phase::UpdateSvdInput, 46.65, 8.49),
+        (Phase::ReshapeEtc, 189.24, 33.73),
+    ];
+    pub const BASE_TOTAL: (f64, f64) = (7729.52, 1322.06);
+    pub const TTE_TOTAL: (f64, f64) = (4566.71, 790.97);
+    pub const SPEEDUP: f64 = 1.69;
+    pub const ENERGY_REDUCTION_PCT: f64 = 40.2;
+}
+
+/// Create a [`SocConfig`]-driven timeline, used by benches/examples.
+pub fn new_timeline(cfg: SocConfig) -> HwTimeline {
+    HwTimeline::new(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::SocConfig;
+    use crate::trace::{HwOp, TraceSink};
+
+    fn tiny_report(cfg: SocConfig) -> SimReport {
+        let mut t = HwTimeline::new(cfg);
+        t.op(HwOp::SetPhase(Phase::Hbd));
+        t.op(HwOp::HouseGen { len: 64 });
+        t.op(HwOp::Gemm { m: 64, n: 64, k: 1 });
+        t.op(HwOp::SetPhase(Phase::QrDiag));
+        t.op(HwOp::GivensRot { len: 64 });
+        t.op(HwOp::SetPhase(Phase::SortTrunc));
+        t.op(HwOp::Sort { n: 16, swaps: 4 });
+        SimReport::from_timeline(&t)
+    }
+
+    #[test]
+    fn report_totals_are_sums() {
+        let r = tiny_report(SocConfig::baseline());
+        let ms: f64 = r.phases.iter().map(|p| p.time_ms).sum();
+        assert!((r.total_ms - ms).abs() < 1e-12);
+        assert!(r.total_mj > 0.0);
+    }
+
+    #[test]
+    fn gating_flags_in_report() {
+        let r = tiny_report(SocConfig::tt_edge());
+        assert!(r.phase(Phase::Hbd).core_gated);
+        assert!(!r.phase(Phase::QrDiag).core_gated);
+    }
+
+    #[test]
+    fn table3_formatting_contains_rows() {
+        let b = tiny_report(SocConfig::baseline());
+        let t = tiny_report(SocConfig::tt_edge());
+        let s = format_table3(&b, &t);
+        assert!(s.contains("HBD"));
+        assert!(s.contains("Sort. & Trunc."));
+        assert!(s.contains("Speedup"));
+    }
+
+    #[test]
+    fn paper_targets_self_consistent() {
+        let sum: f64 = paper::BASE.iter().map(|(_, t, _)| t).sum();
+        assert!((sum - paper::BASE_TOTAL.0).abs() < 0.1);
+        let sum_e: f64 = paper::TTE.iter().map(|(_, _, e)| e).sum();
+        assert!((sum_e - paper::TTE_TOTAL.1).abs() < 0.1);
+        assert!((paper::BASE_TOTAL.0 / paper::TTE_TOTAL.0 - paper::SPEEDUP).abs() < 0.01);
+    }
+}

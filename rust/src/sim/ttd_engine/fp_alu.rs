@@ -1,0 +1,48 @@
+//! Shared FP-ALU (Fig. 5): a Vector Streamer feeding one FP core
+//! (MAC / DIV / SQRT) from the SPM. All three TTD-Engine modules issue
+//! their floating-point work here, so its busy time is a serializing
+//! resource — the timeline adds these cycles sequentially, which is
+//! exactly the paper's single-FPU sharing discipline.
+
+use crate::sim::config::CostModel;
+
+/// Dedicated `norm` opcode: stream `len` elements (1/cycle MAC
+/// accumulate) + final SQRT + issue overhead.
+pub fn norm(c: &CostModel, len: u64) -> u64 {
+    c.fpalu_setup + len * c.fpalu_stream_per_elem + c.fpalu_sqrt
+}
+
+/// Elementwise vector divide v/beta, streamed through the DIV unit.
+pub fn vec_div(c: &CostModel, len: u64) -> u64 {
+    c.fpalu_setup + len * c.fpalu_div_per_elem
+}
+
+/// Single scalar ops (ADD/MUL/MAC/DIV/SQRT issued directly).
+pub fn scalar(c: &CostModel, ops: u64) -> u64 {
+    ops * c.fpalu_setup
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_streams_one_elem_per_cycle() {
+        let c = CostModel::default();
+        assert_eq!(norm(&c, 100) - norm(&c, 0), 100 * c.fpalu_stream_per_elem);
+    }
+
+    #[test]
+    fn hw_norm_beats_core_norm() {
+        let c = CostModel::default();
+        let hw = norm(&c, 1000);
+        let core = crate::sim::core_model::house_gen(&c, 1000);
+        assert!(hw * 4 < core, "hw {hw} vs core {core}");
+    }
+
+    #[test]
+    fn div_not_fully_pipelined() {
+        let c = CostModel::default();
+        assert!(vec_div(&c, 10) > norm(&c, 10) - c.fpalu_sqrt);
+    }
+}

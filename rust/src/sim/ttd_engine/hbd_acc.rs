@@ -1,0 +1,59 @@
+//! HBD-ACC (Fig. 3): the four-stage Householder pipeline —
+//! PREPARE (address calc + DMA request), HOUSE (norm + q on the shared
+//! FP-ALU), VEC DIVISION (v/beta), REQUEST GEMM (two chained GEMMs on
+//! the reused accelerator; costed in `sim::gemm`).
+
+use crate::sim::config::CostModel;
+use crate::sim::ttd_engine::fp_alu;
+
+/// PREPARE: `a.addr = A.addr + i*(A.width+1) + order` — one MAC-class
+/// address computation plus the DMA request for the vector (vector
+/// lands in SPM; bandwidth-limited by DRAM).
+pub fn prepare(c: &CostModel, len: u64) -> u64 {
+    c.desc_hw + c.dma_setup + (len * 4) / c.dram_bytes_per_cycle
+}
+
+/// HOUSE stage: norm of v on the FP-ALU + q/v1 update (2 scalar ops).
+pub fn house_stage(c: &CostModel, len: u64) -> u64 {
+    fp_alu::norm(c, len) + fp_alu::scalar(c, 2)
+}
+
+/// Full HOUSE generation as the engine executes it.
+pub fn house_gen(c: &CostModel, len: u64) -> u64 {
+    prepare(c, len) + house_stage(c, len)
+}
+
+/// VEC DIVISION stage: beta = v1*q (1 scalar) + streamed divide.
+pub fn vec_division(c: &CostModel, len: u64) -> u64 {
+    fp_alu::scalar(c, 1) + fp_alu::vec_div(c, len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::core_model;
+
+    #[test]
+    fn engine_house_beats_core_house() {
+        let c = CostModel::default();
+        for len in [16u64, 64, 576, 4096] {
+            assert!(
+                house_gen(&c, len) < core_model::house_gen(&c, len),
+                "len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn engine_vecdiv_beats_core_vecdiv() {
+        let c = CostModel::default();
+        assert!(vec_division(&c, 512) < core_model::vec_div(&c, 512));
+    }
+
+    #[test]
+    fn prepare_is_dma_bound_for_long_vectors() {
+        let c = CostModel::default();
+        let p = prepare(&c, 4096);
+        assert!(p >= 4096 * 4 / c.dram_bytes_per_cycle);
+    }
+}

@@ -1,0 +1,9 @@
+//! The TTD-Engine (Fig. 2): HBD-ACC, SORTING, TRUNCATION, and the
+//! Shared FP-ALU they all serialize on. Each module exposes cycle
+//! functions used by the timeline when the corresponding feature is
+//! enabled; the module structure mirrors Figs. 3-5.
+
+pub mod fp_alu;
+pub mod hbd_acc;
+pub mod sorting;
+pub mod truncation;

@@ -1,0 +1,34 @@
+//! TRUNCATION module (Fig. 4b): a lightweight FSM that forms the
+//! error vector from the tail of the sorted singular values and checks
+//! `||e||_2` against delta (SQRT/MUL/DIV on the shared FP-ALU),
+//! decrementing the retained rank until the accuracy target holds.
+
+use crate::sim::config::CostModel;
+
+/// `probes` tail-norm tests of the FSM.
+pub fn trunc(c: &CostModel, probes: u64) -> u64 {
+    probes * c.trunc_probe_hw
+}
+
+/// One-time delta computation at TTD start: SQRT + MUL + DIV.
+pub fn delta_setup(c: &CostModel) -> u64 {
+    c.fpalu_sqrt + 2 * c.fpalu_setup
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::core_model;
+
+    #[test]
+    fn fsm_probe_beats_core_probe() {
+        let c = CostModel::default();
+        assert!(trunc(&c, 50) < core_model::trunc(&c, 50));
+    }
+
+    #[test]
+    fn delta_setup_is_constant() {
+        let c = CostModel::default();
+        assert_eq!(delta_setup(&c), c.fpalu_sqrt + 2 * c.fpalu_setup);
+    }
+}

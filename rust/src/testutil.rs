@@ -1,0 +1,88 @@
+//! In-repo property-test harness (no `proptest` in the offline build).
+//!
+//! `check(n, seed, f)` runs `f` over `n` deterministic pseudo-random
+//! cases and reports the failing case index + seed on panic, which is
+//! what we actually use proptest for: randomized invariants with a
+//! reproducible counterexample.
+
+use crate::util::Rng;
+
+/// Run `cases` randomized checks. On failure the panic message names
+/// the case seed so the exact input can be replayed.
+pub fn check<F: FnMut(&mut Rng)>(cases: usize, seed: u64, mut f: F) {
+    for i in 0..cases {
+        let case_seed = seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = r {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {i} (case_seed={case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Max |a-b| over two slices (test helper).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Relative Frobenius error ||a-b|| / ||b||.
+pub fn rel_err(a: &[f32], b: &[f32]) -> f32 {
+    let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    let den: f32 = b.iter().map(|y| y * y).sum();
+    (num / den.max(1e-30)).sqrt()
+}
+
+/// Assert near-equality with a labelled tolerance.
+#[macro_export]
+macro_rules! assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b, tol) = ($a as f64, $b as f64, $tol as f64);
+        assert!(
+            (a - b).abs() <= tol,
+            "assert_close failed: {} vs {} (tol {})",
+            a,
+            b,
+            tol
+        );
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check(17, 1, |_| n += 1);
+        assert_eq!(n, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn check_reports_case() {
+        check(5, 2, |rng| {
+            let x = rng.uniform();
+            assert!(x < 2.0); // always true...
+            if rng.below(2) == 0 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
+        assert!(rel_err(&[1.0, 0.0], &[1.0, 0.0]) == 0.0);
+        assert_close!(1.0, 1.0000001, 1e-5);
+    }
+}

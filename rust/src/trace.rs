@@ -1,0 +1,132 @@
+//! Hardware-operation trace: the interface between the TTD numerics
+//! ([`crate::ttd`]) and the SoC timing/energy simulator ([`crate::sim`]).
+//!
+//! The numeric code *is* the workload: as Algorithm 1/2 executes, it
+//! emits one [`HwOp`] per hardware-visible primitive (Householder
+//! generation, vector division, blockwise GEMM, bubble-sort pass,
+//! truncation probe, DMA movement, ...). The simulator replays the
+//! trace under a [`crate::sim::SocConfig`] to produce the paper's
+//! per-phase cycle and energy breakdown (Table III) — the same
+//! operation stream costed under two microarchitectures.
+
+/// TTD phases exactly as Table III rows report them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Phase {
+    /// Householder bidiagonalization (left/right transforms + accumulation).
+    Hbd,
+    /// Diagonalization of the bidiagonal matrix (QR iteration).
+    QrDiag,
+    /// Singular-value sorting + delta-truncation.
+    SortTrunc,
+    /// `W_temp <- Sigma_t V_t^T` (Update SVD Input row).
+    UpdateSvdInput,
+    /// Reshape & everything else (address arithmetic, copies).
+    ReshapeEtc,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 5] = [
+        Phase::Hbd,
+        Phase::QrDiag,
+        Phase::SortTrunc,
+        Phase::UpdateSvdInput,
+        Phase::ReshapeEtc,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::Hbd => "HBD",
+            Phase::QrDiag => "QR Decomp.",
+            Phase::SortTrunc => "Sort. & Trunc.",
+            Phase::UpdateSvdInput => "Update SVD In.",
+            Phase::ReshapeEtc => "Reshape & etc",
+        }
+    }
+}
+
+/// One hardware-visible primitive with its problem size.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum HwOp {
+    /// Enter a Table-III phase; all following ops are attributed to it.
+    SetPhase(Phase),
+    /// Generate a Householder vector of `len` elements: norm (MAC
+    /// stream + SQRT) plus the pivot update. (Alg. 2 HOUSE)
+    HouseGen { len: usize },
+    /// Scale a Householder vector by 1/beta (`len` divisions).
+    /// (Alg. 2 HOUSE_MM_UPDATE, VEC DIVISION stage)
+    VecDiv { len: usize },
+    /// Blockwise matrix multiply (m x k) @ (k x n) on the GEMM unit.
+    Gemm { m: usize, n: usize, k: usize },
+    /// Read `bytes` from DRAM into the SPM (or back).
+    DataMove { bytes: usize },
+    /// One bubble-sort pass structure over `n` singular values
+    /// (`swaps` actual exchanges, which also reorder U/V columns).
+    Sort { n: usize, swaps: usize },
+    /// Reorder the basis matrices after sorting: `rows x cols` moved.
+    ReorderBasis { rows: usize, cols: usize },
+    /// delta-truncation FSM: `probes` tail-norm tests over vectors of
+    /// mean length `veclen`.
+    Trunc { probes: usize, veclen: usize },
+    /// One Givens rotation of the QR diagonalization applied across
+    /// `len` elements (bidiagonal chase + U/V accumulation).
+    GivensRot { len: usize },
+    /// Scalar FP ops executed on the core (bookkeeping, shifts).
+    CoreScalar { ops: usize },
+    /// Reshape/copy of `elems` elements (address arithmetic + moves).
+    Reshape { elems: usize },
+}
+
+/// Sink for hardware ops. The numerics call this; implementations
+/// range from [`NullSink`] (pure math) to the simulator's timeline.
+pub trait TraceSink {
+    fn op(&mut self, op: HwOp);
+}
+
+/// Discards everything — used when only the numbers matter.
+#[derive(Default, Clone, Copy, Debug)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    #[inline]
+    fn op(&mut self, _op: HwOp) {}
+}
+
+/// Records the full trace (benches and tests introspect it).
+#[derive(Default, Clone, Debug)]
+pub struct VecSink {
+    pub ops: Vec<HwOp>,
+}
+
+impl TraceSink for VecSink {
+    #[inline]
+    fn op(&mut self, op: HwOp) {
+        self.ops.push(op);
+    }
+}
+
+impl VecSink {
+    pub fn count(&self, pred: impl Fn(&HwOp) -> bool) -> usize {
+        self.ops.iter().filter(|o| pred(o)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_sink_records_in_order() {
+        let mut s = VecSink::default();
+        s.op(HwOp::SetPhase(Phase::Hbd));
+        s.op(HwOp::HouseGen { len: 8 });
+        assert_eq!(s.ops.len(), 2);
+        assert_eq!(s.ops[1], HwOp::HouseGen { len: 8 });
+    }
+
+    #[test]
+    fn phase_labels_match_table3_rows() {
+        assert_eq!(Phase::Hbd.label(), "HBD");
+        assert_eq!(Phase::SortTrunc.label(), "Sort. & Trunc.");
+        assert_eq!(Phase::ALL.len(), 5);
+    }
+}

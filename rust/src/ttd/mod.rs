@@ -1,0 +1,15 @@
+//! The TTD numeric substrate: tensors, the paper's two-phase SVD,
+//! Algorithm 1 (TTD), reconstruction (Eq. 1/2), and the Table-I
+//! baselines (Tucker, TRD).
+
+pub mod reconstruct;
+pub mod svd;
+pub mod tensor;
+pub mod trd;
+pub mod tucker;
+#[allow(clippy::module_inception)]
+pub mod ttd;
+
+pub use reconstruct::{reconstruct, relative_error};
+pub use tensor::{Matrix, Tensor};
+pub use ttd::{decompose, TtCore, TtDecomp};

@@ -1,0 +1,103 @@
+//! TTD decoding — Eq. (1)/(2): chained `reshape . matmul . reshape`
+//! contractions, exactly the receiving node's reconstruction in Fig. 1.
+
+use crate::ttd::tensor::{Matrix, Tensor};
+use crate::ttd::ttd::TtDecomp;
+
+/// `W_R = G_1 x1 G_2 x1 ... x1 G_N` (Eq. 1).
+pub fn reconstruct(d: &TtDecomp) -> Tensor {
+    assert!(!d.cores.is_empty());
+    assert_eq!(d.cores[0].r_in, 1, "r_0 must be 1");
+    assert_eq!(d.cores.last().unwrap().r_out, 1, "r_N must be 1");
+
+    // acc: ([n_1 .. n_k], r_k) kept flat, row-major (Eq. 2).
+    let first = &d.cores[0];
+    let mut acc = Matrix::from_vec(first.n, first.r_out, first.data.clone());
+    for core in &d.cores[1..] {
+        let right = core.as_matrix_right(); // (r_{k-1}, n_k * r_k)
+        let prod = acc.matmul(&right); // ([n_1..n_{k-1}], n_k * r_k)
+        acc = Matrix::from_vec(prod.rows * core.n, core.r_out, prod.data);
+    }
+    Tensor::from_vec(&d.dims, acc.data)
+}
+
+/// Reconstruction error `||W - W_R||_F / ||W||_F`.
+pub fn relative_error(original: &Tensor, d: &TtDecomp) -> f32 {
+    let wr = reconstruct(d);
+    assert_eq!(wr.shape, original.shape);
+    let num: f64 = original
+        .data
+        .iter()
+        .zip(&wr.data)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum();
+    let den: f64 = original.data.iter().map(|a| (*a as f64).powi(2)).sum();
+    (num / den.max(1e-30)).sqrt() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+    use crate::ttd::ttd::{decompose, TtCore};
+    use crate::util::Rng;
+
+    #[test]
+    fn reconstruct_matches_explicit_einsum() {
+        let mut rng = Rng::new(90);
+        let (n1, r1, n2, r2, n3) = (3usize, 2usize, 4usize, 3usize, 5usize);
+        let g1 = TtCore { r_in: 1, n: n1, r_out: r1, data: rng.normal_vec(n1 * r1) };
+        let g2 = TtCore { r_in: r1, n: n2, r_out: r2, data: rng.normal_vec(r1 * n2 * r2) };
+        let g3 = TtCore { r_in: r2, n: n3, r_out: 1, data: rng.normal_vec(r2 * n3) };
+        let d = TtDecomp {
+            dims: vec![n1, n2, n3],
+            ranks: vec![1, r1, r2, 1],
+            cores: vec![g1.clone(), g2.clone(), g3.clone()],
+            eps: 0.0,
+        };
+        let got = reconstruct(&d);
+        // manual einsum aib,bjc,ck -> ijk
+        for i in 0..n1 {
+            for j in 0..n2 {
+                for k in 0..n3 {
+                    let mut want = 0.0f32;
+                    for b in 0..r1 {
+                        for c in 0..r2 {
+                            want += g1.data[i * r1 + b]
+                                * g2.data[b * n2 * r2 + j * r2 + c]
+                                * g3.data[c * n3 + k];
+                        }
+                    }
+                    let got_v = got.data[(i * n2 + j) * n3 + k];
+                    assert!((got_v - want).abs() < 1e-4, "({i},{j},{k})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_metric() {
+        let mut rng = Rng::new(91);
+        let w = Tensor::from_vec(&[4, 5, 6], rng.normal_vec(120));
+        let d = decompose(&w, 0.0, None, &mut NullSink);
+        assert!(relative_error(&w, &d) < 1e-4);
+    }
+
+    #[test]
+    fn two_core_decomposition_is_matrix_factorization() {
+        let mut rng = Rng::new(92);
+        let w = Tensor::from_vec(&[6, 9], rng.normal_vec(54));
+        let d = decompose(&w, 0.0, None, &mut NullSink);
+        assert_eq!(d.cores.len(), 2);
+        assert!(relative_error(&w, &d) < 1e-4);
+    }
+
+    #[test]
+    fn four_core_roundtrip() {
+        let mut rng = Rng::new(93);
+        let w = Tensor::from_vec(&[3, 4, 4, 5], rng.normal_vec(240));
+        let d = decompose(&w, 0.0, None, &mut NullSink);
+        assert_eq!(d.cores.len(), 4);
+        assert!(relative_error(&w, &d) < 2e-4);
+    }
+}

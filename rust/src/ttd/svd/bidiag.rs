@@ -1,0 +1,216 @@
+//! Householder bidiagonalization — Algorithm 2 verbatim, with the
+//! HW-op trace the simulator replays.
+//!
+//! Phase 1 (*Householder Reduction*) stores each Householder vector in
+//! place of the entries it annihilated (Alg. 2 keeps `v` in `A` / the
+//! SPM — the on-chip-retention idea); phase 2 (*Householder
+//! Accumulation*) replays them backwards to form `U_B` and `V_B^T`.
+
+use crate::trace::{HwOp, TraceSink};
+use crate::ttd::svd::house::{apply_left, apply_right, house};
+use crate::ttd::tensor::Matrix;
+
+/// `A = U_B B V_B^T` for tall `A` (m >= n): `u` (m, n) orthonormal
+/// columns, `b` (n, n) upper bidiagonal, `vt` (n, n) orthogonal.
+pub struct Bidiag {
+    pub u: Matrix,
+    pub b: Matrix,
+    pub vt: Matrix,
+}
+
+/// Householder bidiagonalization of a tall matrix (Algorithm 2).
+///
+/// Every hardware-visible primitive is reported to `sink`: HOUSE
+/// generations (norm streams), VEC-DIVISIONs, and the two chained
+/// GEMMs per HOUSE_MM_UPDATE with their true block sizes.
+pub fn bidiagonalize<S: TraceSink>(a: &Matrix, sink: &mut S) -> Bidiag {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "bidiagonalize expects tall input, got {m}x{n}");
+    let mut a = a.clone();
+    let mut b = Matrix::zeros(n, n);
+
+    // Householder vector store — the SPM-retained vectors.
+    let mut vl: Vec<(Vec<f32>, f32)> = Vec::with_capacity(n);
+    let mut vr: Vec<(Vec<f32>, f32)> = Vec::with_capacity(n);
+
+    // ---- Householder Reduction (Alg. 2, lines 4-13) ----
+    for i in 0..n {
+        // Left transform: annihilate sub-diagonal of column i.
+        let x: Vec<f32> = (i..m).map(|r| a.get(r, i)).collect();
+        sink.op(HwOp::HouseGen { len: x.len() });
+        let h = house(&x);
+        b.set(i, i, if h.q != 0.0 { h.q } else { x[0] });
+        if !h.v.is_empty() {
+            sink.op(HwOp::VecDiv { len: h.v.len() });
+            // Two chained GEMMs over A[i.., i+1..]: (1 x w) = v^T A,
+            // then the (h x w) rank-1 update.
+            let (hh, ww) = (m - i, n - i - 1);
+            if ww > 0 {
+                sink.op(HwOp::Gemm { m: 1, n: ww, k: hh });
+                sink.op(HwOp::Gemm { m: hh, n: ww, k: 1 });
+                apply_left(&mut a, i, i + 1, &h.v, h.beta);
+            }
+            // exact cleanup of the pivot column
+            for r in i + 1..m {
+                a.set(r, i, 0.0);
+            }
+            a.set(i, i, b.get(i, i));
+        }
+        vl.push((h.v, h.beta));
+
+        // Right transform: annihilate row i beyond the superdiagonal.
+        if i + 2 < n {
+            let y: Vec<f32> = (i + 1..n).map(|c| a.get(i, c)).collect();
+            sink.op(HwOp::HouseGen { len: y.len() });
+            let h = house(&y);
+            b.set(i, i + 1, if h.q != 0.0 { h.q } else { y[0] });
+            if !h.v.is_empty() {
+                sink.op(HwOp::VecDiv { len: h.v.len() });
+                let (hh, ww) = (m - i - 1, n - i - 1);
+                sink.op(HwOp::Gemm { m: hh, n: 1, k: ww });
+                sink.op(HwOp::Gemm { m: hh, n: ww, k: 1 });
+                apply_right(&mut a, i + 1, i + 1, &h.v, h.beta);
+                for c in i + 2..n {
+                    a.set(i, c, 0.0);
+                }
+                a.set(i, i + 1, b.get(i, i + 1));
+            }
+            vr.push((h.v, h.beta));
+        } else {
+            if i + 1 < n {
+                b.set(i, i + 1, a.get(i, i + 1));
+            }
+            vr.push((Vec::new(), 1.0));
+        }
+    }
+
+    // ---- Householder Accumulation (Alg. 2, lines 14-18) ----
+    // U_B = H^L_1 .. H^L_n I  (apply backwards, left-multiplying);
+    // V_B^T = I H^R_n .. H^R_1 (apply backwards, right-multiplying).
+    let mut u = Matrix::eye(m, n);
+    let mut vt = Matrix::eye(n, n);
+    for i in (0..n).rev() {
+        let (v, beta) = &vl[i];
+        if !v.is_empty() {
+            sink.op(HwOp::VecDiv { len: v.len() });
+            sink.op(HwOp::Gemm { m: 1, n: n - i, k: m - i });
+            sink.op(HwOp::Gemm { m: m - i, n: n - i, k: 1 });
+            apply_left(&mut u, i, i, v, *beta);
+        }
+        let (v, beta) = &vr[i];
+        if !v.is_empty() {
+            sink.op(HwOp::VecDiv { len: v.len() });
+            sink.op(HwOp::Gemm { m: n - i, n: 1, k: n - i - 1 });
+            sink.op(HwOp::Gemm { m: n - i, n: n - i - 1, k: 1 });
+            apply_right(&mut vt, i, i + 1, v, *beta);
+        }
+    }
+
+    Bidiag { u, b, vt }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+    use crate::trace::{NullSink, VecSink};
+    use crate::util::Rng;
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        Matrix::from_vec(r, c, rng.normal_vec(r * c))
+    }
+
+    fn is_upper_bidiagonal(b: &Matrix) -> bool {
+        for r in 0..b.rows {
+            for c in 0..b.cols {
+                if c != r && c != r + 1 && b.get(r, c) != 0.0 {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    #[test]
+    fn factorization_reconstructs_input() {
+        check(15, 300, |rng| {
+            let n = 2 + rng.below(16);
+            let m = n + rng.below(24);
+            let a = rand_mat(rng, m, n);
+            let f = bidiagonalize(&a, &mut NullSink);
+            let recon = f.u.matmul(&f.b).matmul(&f.vt);
+            let scale = a.frobenius().max(1.0);
+            assert!(
+                recon.max_abs_diff(&a) / scale < 1e-4,
+                "err {}",
+                recon.max_abs_diff(&a) / scale
+            );
+            assert!(is_upper_bidiagonal(&f.b));
+        });
+    }
+
+    #[test]
+    fn factors_are_orthogonal() {
+        check(10, 301, |rng| {
+            let n = 2 + rng.below(12);
+            let m = n + rng.below(12);
+            let a = rand_mat(rng, m, n);
+            let f = bidiagonalize(&a, &mut NullSink);
+            let utu = f.u.transpose().matmul(&f.u);
+            assert!(utu.max_abs_diff(&Matrix::eye(n, n)) < 1e-4);
+            let vvt = f.vt.matmul(&f.vt.transpose());
+            assert!(vvt.max_abs_diff(&Matrix::eye(n, n)) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn handles_rank_deficient_input() {
+        let mut rng = Rng::new(44);
+        let left = rand_mat(&mut rng, 12, 2);
+        let right = rand_mat(&mut rng, 2, 6);
+        let a = left.matmul(&right);
+        let f = bidiagonalize(&a, &mut NullSink);
+        let recon = f.u.matmul(&f.b).matmul(&f.vt);
+        assert!(recon.max_abs_diff(&a) < 1e-3);
+        assert!(f.b.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn square_input_works() {
+        let mut rng = Rng::new(45);
+        let a = rand_mat(&mut rng, 8, 8);
+        let f = bidiagonalize(&a, &mut NullSink);
+        assert!(f.u.matmul(&f.b).matmul(&f.vt).max_abs_diff(&a) < 1e-4);
+    }
+
+    #[test]
+    fn trace_contains_expected_op_mix() {
+        let mut rng = Rng::new(46);
+        let a = rand_mat(&mut rng, 20, 8);
+        let mut sink = VecSink::default();
+        let _ = bidiagonalize(&a, &mut sink);
+        use crate::trace::HwOp::*;
+        // n left + (n-2) right HOUSE generations
+        let gens = sink.count(|o| matches!(o, HouseGen { .. }));
+        assert_eq!(gens, 8 + 6);
+        // every non-degenerate transform issues exactly two GEMMs
+        let gemms = sink.count(|o| matches!(o, Gemm { .. }));
+        assert!(gemms > 0 && gemms % 2 == 0);
+        // first HOUSE spans the full column
+        assert!(sink.ops.iter().any(|o| matches!(o, HouseGen { len: 20 })));
+    }
+
+    #[test]
+    fn bidiagonal_preserves_singular_values_vs_gram_trace() {
+        // ||A||_F^2 == ||B||_F^2 (orthogonal invariance).
+        check(10, 302, |rng| {
+            let n = 2 + rng.below(10);
+            let m = n + rng.below(10);
+            let a = rand_mat(rng, m, n);
+            let f = bidiagonalize(&a, &mut NullSink);
+            let fa = a.frobenius();
+            let fb = f.b.frobenius();
+            assert!((fa - fb).abs() / fa.max(1.0) < 1e-4, "{fa} vs {fb}");
+        });
+    }
+}

@@ -1,0 +1,332 @@
+//! Diagonalization of the upper-bidiagonal matrix: implicit-shift
+//! Golub–Kahan QR iteration ("a standard QR-based procedure", paper
+//! section II-A-2c). Runs on the core in both SoC configurations —
+//! Table III's "QR Decomp." row.
+//!
+//! The bidiagonal matrices in this workload are small (n = min-dim of
+//! the working matrix, <= 64 for ResNet-32), so the bulge chase is
+//! applied to an explicit dense `B` via plane rotations; every rotation
+//! is reported to the trace sink with the number of elements it touches
+//! (the simulator's Givens cost unit).
+
+use crate::trace::{HwOp, TraceSink};
+use crate::ttd::tensor::Matrix;
+
+/// SVD of a bidiagonal matrix: `B = U_q diag(sigma) V_q^T`.
+pub struct BidiagSvd {
+    pub u: Matrix,
+    pub sigma: Vec<f32>,
+    pub vt: Matrix,
+    /// Total implicit-shift QR steps taken (convergence metric).
+    pub iterations: usize,
+}
+
+/// Plane rotation `(c, s)` with `c*a + s*b = r`, `-s*a + c*b = 0`.
+#[inline]
+fn rot(a: f32, b: f32) -> (f32, f32, f32) {
+    if b == 0.0 {
+        (1.0, 0.0, a)
+    } else {
+        let r = (a * a + b * b).sqrt();
+        (a / r, b / r, r)
+    }
+}
+
+/// Columns p,q: `col_p' = c col_p + s col_q; col_q' = -s col_p + c col_q`.
+fn rot_cols(m: &mut Matrix, p: usize, q: usize, c: f32, s: f32) {
+    let cols = m.cols;
+    for r in 0..m.rows {
+        let xp = m.data[r * cols + p];
+        let xq = m.data[r * cols + q];
+        m.data[r * cols + p] = c * xp + s * xq;
+        m.data[r * cols + q] = -s * xp + c * xq;
+    }
+}
+
+/// Rows p,q: `row_p' = c row_p + s row_q; row_q' = -s row_p + c row_q`.
+fn rot_rows(m: &mut Matrix, p: usize, q: usize, c: f32, s: f32) {
+    let cols = m.cols;
+    debug_assert!(p < q);
+    let (head, tail) = m.data.split_at_mut(q * cols);
+    let rp = &mut head[p * cols..(p + 1) * cols];
+    let rq = &mut tail[..cols];
+    for (xp, xq) in rp.iter_mut().zip(rq.iter_mut()) {
+        let (a, b) = (*xp, *xq);
+        *xp = c * a + s * b;
+        *xq = -s * a + c * b;
+    }
+}
+
+/// Wilkinson shift from the trailing 2x2 of `T = B^T B` on block
+/// `[lo, hi]`.
+fn wilkinson_shift(b: &Matrix, lo: usize, hi: usize) -> f32 {
+    let d_hm1 = b.get(hi - 1, hi - 1);
+    let d_h = b.get(hi, hi);
+    let e_hm1 = b.get(hi - 1, hi);
+    let e_hm2 = if hi >= 2 && hi - 1 > lo { b.get(hi - 2, hi - 1) } else { 0.0 };
+    let t11 = d_hm1 * d_hm1 + e_hm2 * e_hm2;
+    let t12 = d_hm1 * e_hm1;
+    let t22 = d_h * d_h + e_hm1 * e_hm1;
+    let d = (t11 - t22) * 0.5;
+    if d == 0.0 && t12 == 0.0 {
+        return t22;
+    }
+    let denom = d + d.signum() * (d * d + t12 * t12).sqrt();
+    if denom == 0.0 {
+        t22
+    } else {
+        t22 - t12 * t12 / denom
+    }
+}
+
+/// Implicit-shift QR SVD of an upper-bidiagonal `b` (n x n).
+///
+/// `u_acc` (m x n) and `vt_acc` (n x n) are updated in place with the
+/// accumulated rotations (pass `U_B` / `V_B^T` from the HBD phase to
+/// get the full SVD of the original matrix).
+pub fn diagonalize<S: TraceSink>(
+    b: &Matrix,
+    u_acc: &mut Matrix,
+    vt_acc: &mut Matrix,
+    sink: &mut S,
+) -> BidiagSvd {
+    let n = b.rows;
+    assert_eq!(b.cols, n);
+    let mut b = b.clone();
+    let eps = f32::EPSILON;
+    let anorm = b.frobenius().max(1e-30);
+    let max_iter = 40 * n.max(1) * n.max(1) + 100;
+    let mut iterations = 0usize;
+
+    if n > 0 {
+        let mut hi = n - 1;
+        'outer: loop {
+            // Zero ALL negligible superdiagonals (splitting interior
+            // blocks too — only checking e[hi-1] lets interior
+            // rounding-level e's trap the shift strategy). The absolute
+            // `eps * anorm` floor matters in f32: after the cubic
+            // Wilkinson phase, e plateaus at rounding level relative to
+            // ||B||, not relative to its (possibly tiny) neighbours.
+            for i in 0..hi {
+                let e = b.get(i, i + 1);
+                if e != 0.0
+                    && e.abs()
+                        <= eps * (b.get(i, i).abs() + b.get(i + 1, i + 1).abs())
+                            + eps * anorm
+                {
+                    b.set(i, i + 1, 0.0);
+                }
+            }
+            // Deflate converged trailing values.
+            while hi > 0 && b.get(hi - 1, hi) == 0.0 {
+                hi -= 1;
+            }
+            if hi == 0 {
+                break 'outer;
+            }
+            // Active block [lo, hi]: all superdiagonals nonzero.
+            let mut lo = hi;
+            while lo > 0 && b.get(lo - 1, lo) != 0.0 {
+                lo -= 1;
+            }
+
+            // Zero diagonal inside the block: chase the offending
+            // superdiagonal e[i] along row i with left rotations
+            // (Demmel-Kahan splitting), guaranteeing progress.
+            let mut handled_zero = false;
+            for i in lo..hi {
+                if b.get(i, i).abs() <= eps * anorm {
+                    b.set(i, i, 0.0);
+                    for j in i + 1..=hi {
+                        let eij = b.get(i, j);
+                        if eij == 0.0 {
+                            break;
+                        }
+                        let djj = b.get(j, j);
+                        let r = (eij * eij + djj * djj).sqrt();
+                        if r <= eps * anorm {
+                            b.set(i, j, 0.0);
+                            break;
+                        }
+                        // rows (i, j): zero B[i,j] against pivot B[j,j]
+                        let (c, s) = (djj / r, -eij / r);
+                        rot_rows(&mut b, i, j, c, s);
+                        rot_cols(u_acc, i, j, c, s);
+                        sink.op(HwOp::GivensRot { len: 4 + u_acc.rows });
+                        b.set(i, j, 0.0); // exact by construction
+                    }
+                    handled_zero = true;
+                    break;
+                }
+            }
+            if handled_zero {
+                iterations += 1;
+                if iterations > max_iter {
+                    break 'outer;
+                }
+                continue 'outer;
+            }
+
+            // One implicit-shift QR step on [lo, hi].
+            iterations += 1;
+            if iterations > max_iter {
+                break 'outer;
+            }
+            let mu = wilkinson_shift(&b, lo, hi);
+            let mut y = b.get(lo, lo) * b.get(lo, lo) - mu;
+            let mut z = b.get(lo, lo) * b.get(lo, lo + 1);
+            for k in lo..hi {
+                // Right rotation in plane (k, k+1) annihilating z.
+                let (c, s, _) = rot(y, z);
+                rot_cols(&mut b, k, k + 1, c, s);
+                rot_rows(vt_acc, k, k + 1, c, s);
+                sink.op(HwOp::GivensRot { len: 4 + vt_acc.cols });
+                // Left rotation zeroing the bulge at (k+1, k).
+                let (c2, s2, _) = rot(b.get(k, k), b.get(k + 1, k));
+                rot_rows(&mut b, k, k + 1, c2, s2);
+                rot_cols(u_acc, k, k + 1, c2, s2);
+                sink.op(HwOp::GivensRot { len: 4 + u_acc.rows });
+                b.set(k + 1, k, 0.0); // exact by construction
+                if k + 1 < hi {
+                    y = b.get(k, k + 1);
+                    z = b.get(k, k + 2);
+                }
+            }
+        }
+    }
+
+    // Extract singular values; make them non-negative.
+    let mut sigma: Vec<f32> = (0..n).map(|i| b.get(i, i)).collect();
+    for (i, s) in sigma.iter_mut().enumerate() {
+        if *s < 0.0 {
+            *s = -*s;
+            for c in 0..vt_acc.cols {
+                let v = vt_acc.get(i, c);
+                vt_acc.set(i, c, -v);
+            }
+        }
+    }
+
+    BidiagSvd { u: u_acc.clone(), sigma, vt: vt_acc.clone(), iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+    use crate::trace::NullSink;
+    use crate::ttd::svd::bidiag::bidiagonalize;
+    use crate::util::Rng;
+
+    fn rand_bidiag(rng: &mut Rng, n: usize) -> Matrix {
+        let mut b = Matrix::zeros(n, n);
+        for i in 0..n {
+            b.set(i, i, rng.normal() as f32);
+            if i + 1 < n {
+                b.set(i, i + 1, rng.normal() as f32);
+            }
+        }
+        b
+    }
+
+    fn reconstruct(u: &Matrix, s: &[f32], vt: &Matrix) -> Matrix {
+        let mut us = u.clone();
+        for r in 0..us.rows {
+            for c in 0..us.cols {
+                let v = us.get(r, c) * s[c];
+                us.set(r, c, v);
+            }
+        }
+        us.matmul(vt)
+    }
+
+    #[test]
+    fn diagonalizes_random_bidiagonal() {
+        check(20, 400, |rng| {
+            let n = 2 + rng.below(24);
+            let b = rand_bidiag(rng, n);
+            let mut u = Matrix::eye(n, n);
+            let mut vt = Matrix::eye(n, n);
+            let svd = diagonalize(&b, &mut u, &mut vt, &mut NullSink);
+            let recon = reconstruct(&svd.u, &svd.sigma, &svd.vt);
+            let scale = b.frobenius().max(1.0);
+            assert!(
+                recon.max_abs_diff(&b) / scale < 2e-4,
+                "n={n} err={}",
+                recon.max_abs_diff(&b) / scale
+            );
+            assert!(svd.sigma.iter().all(|s| *s >= 0.0));
+        });
+    }
+
+    #[test]
+    fn orthogonality_of_accumulated_factors() {
+        check(10, 401, |rng| {
+            let n = 2 + rng.below(16);
+            let b = rand_bidiag(rng, n);
+            let mut u = Matrix::eye(n, n);
+            let mut vt = Matrix::eye(n, n);
+            let _ = diagonalize(&b, &mut u, &mut vt, &mut NullSink);
+            assert!(u.transpose().matmul(&u).max_abs_diff(&Matrix::eye(n, n)) < 3e-4);
+            assert!(vt.matmul(&vt.transpose()).max_abs_diff(&Matrix::eye(n, n)) < 3e-4);
+        });
+    }
+
+    #[test]
+    fn convergence_is_qr_fast() {
+        // Implicit shift should need only a few iterations per value.
+        let mut rng = Rng::new(50);
+        let n = 32;
+        let b = rand_bidiag(&mut rng, n);
+        let mut u = Matrix::eye(n, n);
+        let mut vt = Matrix::eye(n, n);
+        let svd = diagonalize(&b, &mut u, &mut vt, &mut NullSink);
+        assert!(svd.iterations < 8 * n, "iterations {}", svd.iterations);
+    }
+
+    #[test]
+    fn full_svd_through_hbd_matches_frobenius() {
+        // ||sigma||_2 == ||A||_F
+        check(10, 402, |rng| {
+            let n = 2 + rng.below(10);
+            let m = n + rng.below(16);
+            let a = Matrix::from_vec(m, n, rng.normal_vec(m * n));
+            let f = bidiagonalize(&a, &mut NullSink);
+            let mut u = f.u.clone();
+            let mut vt = f.vt.clone();
+            let svd = diagonalize(&f.b, &mut u, &mut vt, &mut NullSink);
+            let s_norm: f32 =
+                svd.sigma.iter().map(|s| (*s as f64) * (*s as f64)).sum::<f64>().sqrt() as f32;
+            let fa = a.frobenius();
+            assert!((s_norm - fa).abs() / fa.max(1.0) < 1e-4, "{s_norm} vs {fa}");
+        });
+    }
+
+    #[test]
+    fn handles_exact_zero_diagonal() {
+        let mut b = Matrix::zeros(4, 4);
+        b.set(0, 0, 1.0);
+        b.set(0, 1, 2.0);
+        b.set(1, 1, 0.0); // exact zero diagonal inside the block
+        b.set(1, 2, 1.5);
+        b.set(2, 2, 3.0);
+        b.set(2, 3, 0.5);
+        b.set(3, 3, 2.0);
+        let mut u = Matrix::eye(4, 4);
+        let mut vt = Matrix::eye(4, 4);
+        let svd = diagonalize(&b, &mut u, &mut vt, &mut NullSink);
+        let recon = reconstruct(&svd.u, &svd.sigma, &svd.vt);
+        assert!(recon.max_abs_diff(&b) < 1e-4, "err {}", recon.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn identity_input_yields_unit_singular_values() {
+        let b = Matrix::eye(5, 5);
+        let mut u = Matrix::eye(5, 5);
+        let mut vt = Matrix::eye(5, 5);
+        let svd = diagonalize(&b, &mut u, &mut vt, &mut NullSink);
+        for s in &svd.sigma {
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! HOUSE + HOUSE_MM_UPDATE (Algorithm 2, lines 22-32) — the L3 mirror
+//! of the L1 Pallas kernel `python/compile/kernels/house_update.py`.
+//!
+//! This is the HBD hot path: `apply_left`/`apply_right` are the fused
+//! rank-1 updates (`A += (v/beta)(v^T A)` / `A += (A v)(v/beta)`) that
+//! the HBD-ACC issues as two chained GEMMs on the reused accelerator.
+
+use crate::ttd::tensor::Matrix;
+
+/// Result of HOUSE(x): `q = -sign(x1)||x||`, `v = x + sign(x1)||x|| e1`,
+/// `beta = v1 * q`. `v` is empty when `x` is numerically zero (the
+/// degenerate transform is the identity).
+#[derive(Clone, Debug)]
+pub struct House {
+    pub q: f32,
+    pub v: Vec<f32>,
+    pub beta: f32,
+}
+
+const TINY: f32 = 1e-30;
+
+/// Algorithm 2, HOUSE. `sign(0) = +1` (IEEE sign bit, as the FP-ALU).
+pub fn house(x: &[f32]) -> House {
+    let nrm = norm(x);
+    if nrm <= TINY {
+        return House { q: 0.0, v: Vec::new(), beta: 1.0 };
+    }
+    let s = if x[0].is_sign_negative() { -1.0 } else { 1.0 };
+    let q = -s * nrm;
+    let mut v = x.to_vec();
+    v[0] += s * nrm;
+    let beta = v[0] * q;
+    House { q, v, beta }
+}
+
+/// Streaming norm (the Shared FP-ALU opcode): MAC accumulate + SQRT.
+/// f64 accumulator — the FPU's wide internal accumulate path.
+pub fn norm(x: &[f32]) -> f32 {
+    x.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// Left transform on the subblock `A[r0.., c0..]`:
+/// `A <- A + (v/beta)(v^T A)`; `v.len() == rows - r0`.
+pub fn apply_left(a: &mut Matrix, r0: usize, c0: usize, v: &[f32], beta: f32) {
+    if v.is_empty() {
+        return;
+    }
+    debug_assert_eq!(v.len(), a.rows - r0);
+    let cols = a.cols;
+    let width = cols - c0;
+    // w = v^T A  (first chained GEMM)
+    let mut w = vec![0.0f32; width];
+    for (i, &vi) in v.iter().enumerate() {
+        if vi == 0.0 {
+            continue;
+        }
+        let row = &a.data[(r0 + i) * cols + c0..(r0 + i) * cols + cols];
+        for (wj, &ar) in w.iter_mut().zip(row) {
+            *wj += vi * ar;
+        }
+    }
+    // A += (v/beta) w  (second chained GEMM, rank-1)
+    let inv_beta = 1.0 / beta;
+    for (i, &vi) in v.iter().enumerate() {
+        let scale = vi * inv_beta;
+        if scale == 0.0 {
+            continue;
+        }
+        let row = &mut a.data[(r0 + i) * cols + c0..(r0 + i) * cols + cols];
+        for (ar, &wj) in row.iter_mut().zip(&w) {
+            *ar += scale * wj;
+        }
+    }
+}
+
+/// Right transform on the subblock `A[r0.., c0..]`:
+/// `A <- A + (A v)(v/beta)`; `v.len() == cols - c0`.
+pub fn apply_right(a: &mut Matrix, r0: usize, c0: usize, v: &[f32], beta: f32) {
+    if v.is_empty() {
+        return;
+    }
+    debug_assert_eq!(v.len(), a.cols - c0);
+    let cols = a.cols;
+    let inv_beta = 1.0 / beta;
+    for r in r0..a.rows {
+        let row = &mut a.data[r * cols + c0..(r + 1) * cols];
+        // u_r = A[r, c0..] . v   (first chained GEMM)
+        let mut u = 0.0f32;
+        for (ar, &vj) in row.iter().zip(v) {
+            u += *ar * vj;
+        }
+        // A[r, c0..] += u * (v/beta)  (second chained GEMM)
+        let scale = u * inv_beta;
+        if scale != 0.0 {
+            for (ar, &vj) in row.iter_mut().zip(v) {
+                *ar += scale * vj;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+    use crate::util::Rng;
+
+    fn dense_reflector(v: &[f32]) -> Matrix {
+        // H = I - 2 v v^T / (v^T v)
+        let n = v.len();
+        let vtv: f32 = v.iter().map(|x| x * x).sum();
+        let mut h = Matrix::eye(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let cur = h.get(i, j);
+                h.set(i, j, cur - 2.0 * v[i] * v[j] / vtv);
+            }
+        }
+        h
+    }
+
+    #[test]
+    fn house_annihilates_tail() {
+        check(30, 200, |rng| {
+            let n = 2 + rng.below(40);
+            let x = rng.normal_vec(n);
+            let h = house(&x);
+            // H x = q e1
+            let hm = dense_reflector(&h.v);
+            let mut hx = vec![0.0f32; n];
+            for i in 0..n {
+                hx[i] = (0..n).map(|j| hm.get(i, j) * x[j]).sum();
+            }
+            assert!((hx[0] - h.q).abs() < 1e-3 * (1.0 + h.q.abs()), "{} vs {}", hx[0], h.q);
+            for v in &hx[1..] {
+                assert!(v.abs() < 1e-3, "tail {v}");
+            }
+        });
+    }
+
+    #[test]
+    fn house_beta_identity() {
+        // v^T v == -2 beta for HOUSE-generated vectors.
+        check(30, 201, |rng| {
+            let n = 2 + rng.below(30);
+            let x = rng.normal_vec(n);
+            let h = house(&x);
+            let vtv: f32 = h.v.iter().map(|v| v * v).sum();
+            assert!(
+                (vtv + 2.0 * h.beta).abs() < 1e-2 * vtv.max(1.0),
+                "vtv={vtv} beta={}",
+                h.beta
+            );
+        });
+    }
+
+    #[test]
+    fn house_zero_vector_is_identity() {
+        let h = house(&[0.0, 0.0, 0.0]);
+        assert_eq!(h.q, 0.0);
+        assert!(h.v.is_empty());
+        let mut a = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let before = a.clone();
+        apply_left(&mut a, 0, 0, &h.v, h.beta);
+        assert_eq!(a, before);
+    }
+
+    #[test]
+    fn apply_left_equals_dense_reflection() {
+        check(20, 202, |rng| {
+            let (m, n) = (2 + rng.below(20), 1 + rng.below(20));
+            let mut a = Matrix::from_vec(m, n, rng.normal_vec(m * n));
+            let x: Vec<f32> = (0..m).map(|r| a.get(r, 0)).collect();
+            let h = house(&x);
+            let want = dense_reflector(&h.v).matmul(&a);
+            apply_left(&mut a, 0, 0, &h.v, h.beta);
+            assert!(a.max_abs_diff(&want) < 1e-3, "diff {}", a.max_abs_diff(&want));
+        });
+    }
+
+    #[test]
+    fn apply_right_equals_dense_reflection() {
+        check(20, 203, |rng| {
+            let (m, n) = (1 + rng.below(20), 2 + rng.below(20));
+            let mut a = Matrix::from_vec(m, n, rng.normal_vec(m * n));
+            let y: Vec<f32> = a.row(0).to_vec();
+            let h = house(&y);
+            let want = a.matmul(&dense_reflector(&h.v));
+            apply_right(&mut a, 0, 0, &h.v, h.beta);
+            assert!(a.max_abs_diff(&want) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn subblock_application_leaves_rest_untouched() {
+        let mut rng = Rng::new(7);
+        let mut a = Matrix::from_vec(6, 5, rng.normal_vec(30));
+        let before = a.clone();
+        let x: Vec<f32> = (2..6).map(|r| a.get(r, 1)).collect();
+        let h = house(&x);
+        apply_left(&mut a, 2, 1, &h.v, h.beta);
+        // rows 0..2 and column 0 untouched
+        for c in 0..5 {
+            assert_eq!(a.get(0, c), before.get(0, c));
+            assert_eq!(a.get(1, c), before.get(1, c));
+        }
+        for r in 0..6 {
+            assert_eq!(a.get(r, 0), before.get(r, 0));
+        }
+        // pivot column annihilated below the pivot
+        for r in 3..6 {
+            assert!(a.get(r, 1).abs() < 1e-4);
+        }
+    }
+}

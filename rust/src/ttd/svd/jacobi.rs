@@ -1,0 +1,165 @@
+//! One-sided Jacobi SVD — the independent cross-check for the
+//! Golub–Kahan QR path (two self-implemented algorithms agreeing is
+//! the offline substitute for a LAPACK oracle), and the rust mirror of
+//! the exportable L2 `jacobi_svd` in `python/compile/svd.py`.
+
+use crate::ttd::tensor::Matrix;
+
+pub struct JacobiSvd {
+    pub u: Matrix,
+    pub sigma: Vec<f32>,
+    pub vt: Matrix,
+    pub sweeps_used: usize,
+}
+
+/// One-sided Jacobi on a square matrix: orthogonalize the columns of
+/// `G = B` with Givens rotations until convergence, then
+/// `sigma_k = ||G[:,k]||`, `U = G Sigma^{-1}`, `B = U Sigma V^T`.
+pub fn jacobi_svd(b: &Matrix, max_sweeps: usize) -> JacobiSvd {
+    let n = b.rows;
+    assert_eq!(b.cols, n);
+    let mut g = b.clone();
+    let mut v = Matrix::eye(n, n);
+    let tol = 1e-12f64;
+    let mut sweeps_used = max_sweeps;
+
+    for sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n.saturating_sub(1) {
+            for q in p + 1..n {
+                let mut app = 0.0f64;
+                let mut aqq = 0.0f64;
+                let mut apq = 0.0f64;
+                for r in 0..n {
+                    let gp = g.get(r, p) as f64;
+                    let gq = g.get(r, q) as f64;
+                    app += gp * gp;
+                    aqq += gq * gq;
+                    apq += gp * gq;
+                }
+                if apq.abs() <= tol * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                off += apq.abs();
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                let (cf, sf) = (c as f32, s as f32);
+                for r in 0..n {
+                    let gp = g.get(r, p);
+                    let gq = g.get(r, q);
+                    g.set(r, p, cf * gp - sf * gq);
+                    g.set(r, q, sf * gp + cf * gq);
+                    let vp = v.get(r, p);
+                    let vq = v.get(r, q);
+                    v.set(r, p, cf * vp - sf * vq);
+                    v.set(r, q, sf * vp + cf * vq);
+                }
+            }
+        }
+        if off < 1e-10 {
+            sweeps_used = sweep + 1;
+            break;
+        }
+    }
+
+    // Column norms -> singular values, sorted descending.
+    let mut sig: Vec<(f32, usize)> = (0..n)
+        .map(|c| {
+            let s: f64 = (0..n).map(|r| (g.get(r, c) as f64).powi(2)).sum();
+            (s.sqrt() as f32, c)
+        })
+        .collect();
+    sig.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut u = Matrix::zeros(n, n);
+    let mut vt = Matrix::zeros(n, n);
+    let mut sigma = Vec::with_capacity(n);
+    for (k, (s, c)) in sig.iter().enumerate() {
+        sigma.push(*s);
+        let inv = if *s > 1e-30 { 1.0 / *s } else { 0.0 };
+        for r in 0..n {
+            u.set(r, k, g.get(r, *c) * inv);
+            vt.set(k, r, v.get(r, *c));
+        }
+    }
+    JacobiSvd { u, sigma, vt, sweeps_used }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+    use crate::util::Rng;
+
+    #[test]
+    fn factorization_and_ordering() {
+        check(15, 500, |rng| {
+            let n = 2 + rng.below(20);
+            let b = Matrix::from_vec(n, n, rng.normal_vec(n * n));
+            let svd = jacobi_svd(&b, 30);
+            // descending
+            for w in svd.sigma.windows(2) {
+                assert!(w[0] >= w[1] - 1e-5);
+            }
+            // reconstruction
+            let mut us = svd.u.clone();
+            for r in 0..n {
+                for c in 0..n {
+                    let v = us.get(r, c) * svd.sigma[c];
+                    us.set(r, c, v);
+                }
+            }
+            let recon = us.matmul(&svd.vt);
+            let scale = b.frobenius().max(1.0);
+            assert!(recon.max_abs_diff(&b) / scale < 1e-4);
+        });
+    }
+
+    #[test]
+    fn orthogonal_factors() {
+        let mut rng = Rng::new(60);
+        let n = 12;
+        let b = Matrix::from_vec(n, n, rng.normal_vec(n * n));
+        let svd = jacobi_svd(&b, 30);
+        assert!(svd.u.transpose().matmul(&svd.u).max_abs_diff(&Matrix::eye(n, n)) < 1e-4);
+        assert!(svd.vt.matmul(&svd.vt.transpose()).max_abs_diff(&Matrix::eye(n, n)) < 1e-4);
+    }
+
+    #[test]
+    fn agrees_with_golub_kahan() {
+        use crate::trace::NullSink;
+        use crate::ttd::svd::{bidiag::bidiagonalize, golub_kahan::diagonalize};
+        check(10, 501, |rng| {
+            let n = 2 + rng.below(12);
+            let m = n + rng.below(12);
+            let a = Matrix::from_vec(m, n, rng.normal_vec(m * n));
+            let f = bidiagonalize(&a, &mut NullSink);
+            let mut u = f.u.clone();
+            let mut vt = f.vt.clone();
+            let gk = diagonalize(&f.b, &mut u, &mut vt, &mut NullSink);
+            let jc = jacobi_svd(&f.b, 40);
+            let mut gk_sorted = gk.sigma.clone();
+            gk_sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            for (a, b) in gk_sorted.iter().zip(&jc.sigma) {
+                assert!(
+                    (a - b).abs() < 1e-3 * (1.0 + a.abs()),
+                    "gk {a} vs jacobi {b}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn rank_deficient_matrix_has_zero_tail() {
+        let mut rng = Rng::new(61);
+        let left = Matrix::from_vec(8, 2, rng.normal_vec(16));
+        let right = Matrix::from_vec(2, 8, rng.normal_vec(16));
+        let b = left.matmul(&right);
+        let svd = jacobi_svd(&b, 30);
+        for s in &svd.sigma[2..] {
+            assert!(*s < 1e-3, "tail sv {s}");
+        }
+    }
+}

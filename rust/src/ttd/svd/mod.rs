@@ -1,0 +1,130 @@
+//! SVD via the paper's two-phase split: Householder bidiagonalization
+//! ([`bidiag`], offloadable to the HBD-ACC) + QR diagonalization
+//! ([`golub_kahan`], core-resident). [`jacobi`] is the independent
+//! numerical cross-check.
+
+pub mod bidiag;
+pub mod golub_kahan;
+pub mod house;
+pub mod jacobi;
+
+use crate::trace::{HwOp, Phase, TraceSink};
+use crate::ttd::tensor::Matrix;
+
+/// Economy SVD: `a = u diag(sigma) vt` with `u` (m, k), `vt` (k, n),
+/// `k = min(m, n)`. **Not sorted** — Algorithm 1 runs its explicit
+/// Sorting_Basis phase afterwards (see [`crate::ttd::decompose`]).
+pub struct Svd {
+    pub u: Matrix,
+    pub sigma: Vec<f32>,
+    pub vt: Matrix,
+    pub qr_iterations: usize,
+}
+
+/// Full SVD of an arbitrary matrix through HBD + implicit-shift QR,
+/// emitting the phase-bracketed hardware trace.
+///
+/// Wide inputs go through the transpose (costed as a Reshape — the
+/// hardware reads the same buffer with swapped strides).
+pub fn svd<S: TraceSink>(a: &Matrix, sink: &mut S) -> Svd {
+    if a.rows >= a.cols {
+        svd_tall(a, sink)
+    } else {
+        sink.op(HwOp::SetPhase(Phase::ReshapeEtc));
+        sink.op(HwOp::Reshape { elems: a.rows * a.cols });
+        let at = a.transpose();
+        let s = svd_tall(&at, sink);
+        sink.op(HwOp::SetPhase(Phase::ReshapeEtc));
+        sink.op(HwOp::Reshape { elems: 2 * a.rows * a.cols });
+        Svd {
+            u: s.vt.transpose(),
+            sigma: s.sigma,
+            vt: s.u.transpose(),
+            qr_iterations: s.qr_iterations,
+        }
+    }
+}
+
+fn svd_tall<S: TraceSink>(a: &Matrix, sink: &mut S) -> Svd {
+    sink.op(HwOp::SetPhase(Phase::Hbd));
+    let f = bidiag::bidiagonalize(a, sink);
+    sink.op(HwOp::SetPhase(Phase::QrDiag));
+    let mut u = f.u;
+    let mut vt = f.vt;
+    let d = golub_kahan::diagonalize(&f.b, &mut u, &mut vt, sink);
+    Svd { u: d.u, sigma: d.sigma, vt: d.vt, qr_iterations: d.iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+    use crate::trace::{NullSink, VecSink};
+    use crate::util::Rng;
+
+    fn reconstruct(s: &Svd) -> Matrix {
+        let mut us = s.u.clone();
+        for r in 0..us.rows {
+            for c in 0..us.cols {
+                let v = us.get(r, c) * s.sigma[c];
+                us.set(r, c, v);
+            }
+        }
+        us.matmul(&s.vt)
+    }
+
+    #[test]
+    fn economy_svd_any_aspect_ratio() {
+        check(20, 600, |rng| {
+            let m = 2 + rng.below(30);
+            let n = 2 + rng.below(30);
+            let a = Matrix::from_vec(m, n, rng.normal_vec(m * n));
+            let s = svd(&a, &mut NullSink);
+            let k = m.min(n);
+            assert_eq!((s.u.rows, s.u.cols), (m, k));
+            assert_eq!(s.sigma.len(), k);
+            assert_eq!((s.vt.rows, s.vt.cols), (k, n));
+            let recon = reconstruct(&s);
+            let scale = a.frobenius().max(1.0);
+            assert!(
+                recon.max_abs_diff(&a) / scale < 3e-4,
+                "m={m} n={n} err {}",
+                recon.max_abs_diff(&a) / scale
+            );
+        });
+    }
+
+    #[test]
+    fn singular_values_match_between_orientations() {
+        let mut rng = Rng::new(70);
+        let a = Matrix::from_vec(9, 21, rng.normal_vec(9 * 21));
+        let s1 = svd(&a, &mut NullSink);
+        let s2 = svd(&a.transpose(), &mut NullSink);
+        let mut v1 = s1.sigma.clone();
+        let mut v2 = s2.sigma.clone();
+        v1.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        v2.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        for (a, b) in v1.iter().zip(&v2) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn trace_is_phase_bracketed() {
+        use crate::trace::HwOp::*;
+        let mut rng = Rng::new(71);
+        let a = Matrix::from_vec(16, 8, rng.normal_vec(128));
+        let mut sink = VecSink::default();
+        let _ = svd(&a, &mut sink);
+        assert!(matches!(sink.ops[0], SetPhase(Phase::Hbd)));
+        assert!(sink.ops.iter().any(|o| matches!(o, SetPhase(Phase::QrDiag))));
+        // HBD ops come before QR ops
+        let hbd_end = sink
+            .ops
+            .iter()
+            .position(|o| matches!(o, SetPhase(Phase::QrDiag)))
+            .unwrap();
+        assert!(sink.ops[..hbd_end].iter().any(|o| matches!(o, HouseGen { .. })));
+        assert!(sink.ops[hbd_end..].iter().any(|o| matches!(o, GivensRot { .. })));
+    }
+}

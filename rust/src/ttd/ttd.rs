@@ -1,0 +1,381 @@
+//! Algorithm 1: Tensor-Train Decomposition with Sorting_Basis and
+//! delta-Truncation, emitting the hardware trace the simulator costs.
+
+use crate::trace::{HwOp, Phase, TraceSink};
+use crate::ttd::svd::{svd, Svd};
+use crate::ttd::tensor::{Matrix, Tensor};
+
+/// One TT core `G_k` of shape `(r_{k-1}, n_k, r_k)`, row-major.
+#[derive(Clone, Debug)]
+pub struct TtCore {
+    pub r_in: usize,
+    pub n: usize,
+    pub r_out: usize,
+    pub data: Vec<f32>,
+}
+
+impl TtCore {
+    pub fn numel(&self) -> usize {
+        self.r_in * self.n * self.r_out
+    }
+
+    pub fn as_matrix_left(&self) -> Matrix {
+        // (r_in * n, r_out)
+        Matrix::from_vec(self.r_in * self.n, self.r_out, self.data.clone())
+    }
+
+    pub fn as_matrix_right(&self) -> Matrix {
+        // (r_in, n * r_out)
+        Matrix::from_vec(self.r_in, self.n * self.r_out, self.data.clone())
+    }
+}
+
+/// A complete TT decomposition of a tensor with dims `dims` and
+/// boundary ranks `ranks[0] = ranks[N] = 1`.
+#[derive(Clone, Debug)]
+pub struct TtDecomp {
+    pub dims: Vec<usize>,
+    pub ranks: Vec<usize>,
+    pub cores: Vec<TtCore>,
+    pub eps: f32,
+}
+
+impl TtDecomp {
+    /// Total TT parameters: sum of core sizes.
+    pub fn param_count(&self) -> usize {
+        self.cores.iter().map(|c| c.numel()).sum()
+    }
+
+    pub fn dense_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        self.dense_count() as f64 / self.param_count() as f64
+    }
+
+    /// Bytes on the wire for the Fig.-1 transmission: f32 cores plus a
+    /// small header (dims + ranks as u32).
+    pub fn wire_bytes(&self) -> usize {
+        4 * self.param_count() + 4 * (self.dims.len() + self.ranks.len()) + 8
+    }
+}
+
+/// Sorting_Basis (Alg. 1, lines 18-25): bubble-sort the singular
+/// values descending, tracking the index vector, then reorder the
+/// columns of U and rows of V^T. Swap count is reported in the trace
+/// (the SORTING module does exactly this data movement).
+pub fn sorting_basis<S: TraceSink>(s: &mut Svd, sink: &mut S) {
+    let k = s.sigma.len();
+    let mut ind: Vec<usize> = (0..k).collect();
+    let mut swaps = 0usize;
+    // bubble sort, descending
+    for i in 0..k.saturating_sub(1) {
+        for j in 0..k - 1 - i {
+            if s.sigma[j] < s.sigma[j + 1] {
+                s.sigma.swap(j, j + 1);
+                ind.swap(j, j + 1);
+                swaps += 1;
+            }
+        }
+    }
+    sink.op(HwOp::Sort { n: k, swaps });
+    if swaps > 0 {
+        // Reorder U columns and V^T rows by the index vector.
+        let u_old = s.u.clone();
+        let vt_old = s.vt.clone();
+        for (new_c, &old_c) in ind.iter().enumerate() {
+            for r in 0..s.u.rows {
+                s.u.set(r, new_c, u_old.get(r, old_c));
+            }
+            s.vt.row_mut(new_c).copy_from_slice(vt_old.row(old_c));
+        }
+    }
+    sink.op(HwOp::ReorderBasis { rows: s.u.rows + s.vt.cols, cols: k });
+}
+
+/// delta-Truncation (Alg. 1, lines 27-31) as the paper's FSM: walk the
+/// tail of the sorted singular values, accumulating the error vector
+/// norm, and decrement the retained rank while `||e||_2 < delta`.
+/// Returns the retained rank; probe count goes to the trace.
+pub fn delta_truncation<S: TraceSink>(
+    sigma: &[f32],
+    delta: f32,
+    max_rank: usize,
+    sink: &mut S,
+) -> usize {
+    let k = sigma.len();
+    let mut tail = 0.0f64;
+    let mut r = k;
+    let mut probes = 0usize;
+    while r > 1 {
+        let cand = tail + (sigma[r - 1] as f64) * (sigma[r - 1] as f64);
+        probes += 1;
+        if (cand.sqrt() as f32) < delta {
+            tail = cand;
+            r -= 1;
+        } else {
+            break;
+        }
+    }
+    sink.op(HwOp::Trunc { probes: probes.max(1), veclen: k });
+    r.min(max_rank).max(1)
+}
+
+/// Algorithm 1: decompose `w` into TT cores with prescribed accuracy
+/// `eps` (and optional per-bond rank caps).
+pub fn decompose<S: TraceSink>(
+    w: &Tensor,
+    eps: f32,
+    max_ranks: Option<&[usize]>,
+    sink: &mut S,
+) -> TtDecomp {
+    let dims = w.shape.clone();
+    let nd = dims.len();
+    assert!(nd >= 2, "TTD needs at least 2 dims");
+
+    // delta = eps / sqrt(d-1) * ||W||_F  (TRUNCATION module: SQRT,MUL,DIV)
+    sink.op(HwOp::SetPhase(Phase::SortTrunc));
+    sink.op(HwOp::CoreScalar { ops: 3 });
+    let delta = eps / ((nd - 1) as f32).sqrt() * w.frobenius();
+
+    let mut ranks = vec![1usize; nd + 1];
+    let mut cores: Vec<TtCore> = Vec::with_capacity(nd);
+    let mut w_temp = w.data.clone(); // current working buffer
+    let mut w_rows; // r_{k-1} * n_k
+    let mut w_cols;
+
+    for k in 0..nd - 1 {
+        // Reshape (Alg. 1, line 7)
+        sink.op(HwOp::SetPhase(Phase::ReshapeEtc));
+        w_rows = ranks[k] * dims[k];
+        w_cols = w_temp.len() / w_rows;
+        sink.op(HwOp::Reshape { elems: w_temp.len() });
+        let mat = Matrix::from_vec(w_rows, w_cols, w_temp.clone());
+
+        // SVD (line 8) — phases traced inside
+        let mut s = svd(&mat, sink);
+
+        // Sorting (line 9) + Truncation (line 10)
+        sink.op(HwOp::SetPhase(Phase::SortTrunc));
+        sorting_basis(&mut s, sink);
+        let cap = max_ranks.map(|m| m[k]).unwrap_or(usize::MAX);
+        let r = delta_truncation(&s.sigma, delta, cap, sink);
+        ranks[k + 1] = r;
+
+        // New core G_k = reshape(U_t) (line 13)
+        sink.op(HwOp::SetPhase(Phase::ReshapeEtc));
+        let mut core = vec![0.0f32; ranks[k] * dims[k] * r];
+        for row in 0..w_rows {
+            for c in 0..r {
+                core[row * r + c] = s.u.get(row, c);
+            }
+        }
+        sink.op(HwOp::Reshape { elems: core.len() });
+        cores.push(TtCore { r_in: ranks[k], n: dims[k], r_out: r, data: core });
+
+        // W_temp <- Sigma_t V_t^T (lines 11-12)
+        sink.op(HwOp::SetPhase(Phase::UpdateSvdInput));
+        sink.op(HwOp::Gemm { m: r, n: w_cols, k: 1 });
+        let mut next = vec![0.0f32; r * w_cols];
+        for row in 0..r {
+            let sv = s.sigma[row];
+            let src = s.vt.row(row);
+            let dst = &mut next[row * w_cols..(row + 1) * w_cols];
+            for (d, v) in dst.iter_mut().zip(src) {
+                *d = sv * v;
+            }
+        }
+        w_temp = next;
+    }
+
+    // Last core (line 14): G_N = reshape(W_temp, [r_{N-1}, n_N, 1])
+    sink.op(HwOp::SetPhase(Phase::ReshapeEtc));
+    sink.op(HwOp::Reshape { elems: w_temp.len() });
+    cores.push(TtCore {
+        r_in: ranks[nd - 1],
+        n: dims[nd - 1],
+        r_out: 1,
+        data: w_temp,
+    });
+    ranks[nd] = 1;
+
+    TtDecomp { dims, ranks, cores, eps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+    use crate::trace::{NullSink, VecSink};
+    use crate::ttd::reconstruct::reconstruct;
+    use crate::util::Rng;
+
+    fn rel_err(a: &Tensor, b: &Tensor) -> f32 {
+        let num: f64 = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum();
+        let den: f64 = b.data.iter().map(|y| (*y as f64).powi(2)).sum();
+        (num / den.max(1e-30)).sqrt() as f32
+    }
+
+    #[test]
+    fn oseledets_error_bound_holds() {
+        // ||W - W_R||_F <= eps ||W||_F for the prescribed-accuracy TTD.
+        check(10, 700, |rng| {
+            let shape = [2 + rng.below(6), 2 + rng.below(8), 2 + rng.below(8)];
+            let w = Tensor::from_vec(&shape, rng.normal_vec(shape.iter().product()));
+            let eps = 0.3;
+            let d = decompose(&w, eps, None, &mut NullSink);
+            let wr = reconstruct(&d);
+            assert!(rel_err(&wr, &w) <= eps + 1e-3, "err {}", rel_err(&wr, &w));
+        });
+    }
+
+    #[test]
+    fn exact_recovery_of_low_rank_tensor() {
+        let mut rng = Rng::new(80);
+        // build a TT-rank-(3,2) tensor explicitly
+        let g1 = Matrix::from_vec(5, 3, rng.normal_vec(15));
+        let g2 = Matrix::from_vec(3, 6 * 2, rng.normal_vec(36));
+        let g3 = Matrix::from_vec(2, 7, rng.normal_vec(14));
+        let w12 = g1.matmul(&Matrix::from_vec(3, 12, g2.data.clone())); // (5, 6*2)
+        let w12 = Matrix::from_vec(30, 2, w12.data);
+        let w = w12.matmul(&g3); // (5*6, 7)
+        let w = Tensor::from_vec(&[5, 6, 7], w.data);
+        let d = decompose(&w, 1e-3, None, &mut NullSink);
+        assert_eq!(d.ranks, vec![1, 3, 2, 1]);
+        let wr = reconstruct(&d);
+        assert!(rel_err(&wr, &w) < 1e-3);
+    }
+
+    #[test]
+    fn boundary_ranks_are_one() {
+        let mut rng = Rng::new(81);
+        let w = Tensor::from_vec(&[4, 5, 6], rng.normal_vec(120));
+        let d = decompose(&w, 0.1, None, &mut NullSink);
+        assert_eq!(d.ranks[0], 1);
+        assert_eq!(*d.ranks.last().unwrap(), 1);
+        assert_eq!(d.cores.len(), 3);
+        for (k, c) in d.cores.iter().enumerate() {
+            assert_eq!(c.r_in, d.ranks[k]);
+            assert_eq!(c.r_out, d.ranks[k + 1]);
+            assert_eq!(c.n, d.dims[k]);
+        }
+    }
+
+    #[test]
+    fn rank_caps_are_respected() {
+        let mut rng = Rng::new(82);
+        let w = Tensor::from_vec(&[6, 6, 6], rng.normal_vec(216));
+        let d = decompose(&w, 0.0, Some(&[2, 3]), &mut NullSink);
+        assert!(d.ranks[1] <= 2);
+        assert!(d.ranks[2] <= 3);
+    }
+
+    #[test]
+    fn eps_zero_keeps_full_rank() {
+        let mut rng = Rng::new(83);
+        let w = Tensor::from_vec(&[4, 4, 4], rng.normal_vec(64));
+        let d = decompose(&w, 0.0, None, &mut NullSink);
+        assert_eq!(d.ranks, vec![1, 4, 4, 1]);
+        let wr = reconstruct(&d);
+        assert!(rel_err(&wr, &w) < 1e-4);
+    }
+
+    #[test]
+    fn larger_eps_never_increases_params() {
+        let mut rng = Rng::new(84);
+        let w = Tensor::from_vec(&[6, 8, 8], rng.normal_vec(384));
+        let mut last = usize::MAX;
+        for eps in [0.01f32, 0.1, 0.3, 0.6] {
+            let d = decompose(&w, eps, None, &mut NullSink);
+            assert!(d.param_count() <= last, "eps={eps}");
+            last = d.param_count();
+        }
+    }
+
+    #[test]
+    fn compression_accounting() {
+        let mut rng = Rng::new(85);
+        let w = Tensor::from_vec(&[4, 8, 8], rng.normal_vec(256));
+        let d = decompose(&w, 0.5, None, &mut NullSink);
+        let manual: usize = d
+            .ranks
+            .windows(2)
+            .zip(&d.dims)
+            .map(|(r, n)| r[0] * n * r[1])
+            .sum();
+        assert_eq!(d.param_count(), manual);
+        assert!(d.compression_ratio() >= 1.0 || d.param_count() > d.dense_count());
+        assert_eq!(d.wire_bytes(), 4 * manual + 4 * (3 + 4) + 8);
+    }
+
+    #[test]
+    fn sorting_basis_sorts_and_reorders_consistently() {
+        let mut rng = Rng::new(86);
+        let a = Matrix::from_vec(12, 6, rng.normal_vec(72));
+        let mut s = svd(&a, &mut NullSink);
+        // scramble
+        s.sigma.reverse();
+        let k = s.sigma.len();
+        let u_rev: Vec<f32> = (0..s.u.rows)
+            .flat_map(|r| (0..k).rev().map(move |c| (r, c)))
+            .map(|(r, c)| s.u.get(r, c))
+            .collect();
+        s.u = Matrix::from_vec(s.u.rows, k, u_rev);
+        let vt_rev: Vec<f32> = (0..k).rev().flat_map(|r| s.vt.row(r).to_vec()).collect();
+        s.vt = Matrix::from_vec(k, s.vt.cols, vt_rev);
+
+        let mut sink = VecSink::default();
+        sorting_basis(&mut s, &mut sink);
+        for w in s.sigma.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        // reconstruction still valid after the reorder
+        let mut us = s.u.clone();
+        for r in 0..us.rows {
+            for c in 0..k {
+                let v = us.get(r, c) * s.sigma[c];
+                us.set(r, c, v);
+            }
+        }
+        let recon = us.matmul(&s.vt);
+        assert!(recon.max_abs_diff(&a) < 1e-3);
+        assert!(sink.count(|o| matches!(o, HwOp::Sort { .. })) == 1);
+    }
+
+    #[test]
+    fn delta_truncation_fsm_semantics() {
+        let mut sink = NullSink;
+        // sigma = [5, 3, 1, 0.1]; delta = 1.2 -> drop 0.1 and 1? tail
+        // norms: ||{0.1}||=0.1<1.2 drop; ||{1,0.1}||=1.005<1.2 drop;
+        // ||{3,1,0.1}||=3.17>1.2 keep => r=2
+        let r = delta_truncation(&[5.0, 3.0, 1.0, 0.1], 1.2, usize::MAX, &mut sink);
+        assert_eq!(r, 2);
+        // delta = 0 keeps everything
+        assert_eq!(delta_truncation(&[5.0, 3.0], 0.0, usize::MAX, &mut sink), 2);
+        // cap applies after the accuracy rule
+        assert_eq!(delta_truncation(&[5.0, 3.0, 1.0], 0.0, 2, &mut sink), 2);
+        // never below 1
+        assert_eq!(delta_truncation(&[1e-9], 1.0, usize::MAX, &mut sink), 1);
+    }
+
+    #[test]
+    fn trace_covers_all_phases() {
+        use crate::trace::Phase;
+        let mut rng = Rng::new(87);
+        let w = Tensor::from_vec(&[4, 6, 6], rng.normal_vec(144));
+        let mut sink = VecSink::default();
+        let _ = decompose(&w, 0.2, None, &mut sink);
+        for ph in Phase::ALL {
+            assert!(
+                sink.ops.iter().any(|o| matches!(o, HwOp::SetPhase(p) if *p == ph)),
+                "missing phase {ph:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Tucker decomposition (truncated HOSVD) — the Table-I baseline [12].
+//!
+//! `W ~= C x1 U_1 x2 U_2 ... xN U_N` with per-mode factor matrices and
+//! a dense core. Mode ranks are selected by the same prescribed-accuracy
+//! rule as TTD (per-mode budget `eps/sqrt(N) * ||W||_F`), so the
+//! Table-I comparison varies only the decomposition, not the policy.
+
+use crate::trace::{NullSink, TraceSink};
+use crate::ttd::svd::svd;
+use crate::ttd::tensor::{Matrix, Tensor};
+
+#[derive(Clone, Debug)]
+pub struct TuckerDecomp {
+    pub dims: Vec<usize>,
+    pub ranks: Vec<usize>,
+    /// Core tensor, shape `ranks`.
+    pub core: Tensor,
+    /// Factor matrices `U_k` of shape `(n_k, r_k)`.
+    pub factors: Vec<Matrix>,
+    pub eps: f32,
+}
+
+impl TuckerDecomp {
+    pub fn param_count(&self) -> usize {
+        self.core.numel()
+            + self
+                .factors
+                .iter()
+                .map(|u| u.rows * u.cols)
+                .sum::<usize>()
+    }
+
+    pub fn dense_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        self.dense_count() as f64 / self.param_count() as f64
+    }
+}
+
+/// Truncated HOSVD with prescribed accuracy `eps`.
+pub fn decompose(w: &Tensor, eps: f32) -> TuckerDecomp {
+    decompose_traced(w, eps, &mut NullSink)
+}
+
+pub fn decompose_traced<S: TraceSink>(w: &Tensor, eps: f32, sink: &mut S) -> TuckerDecomp {
+    let nd = w.shape.len();
+    let budget = eps / (nd as f32).sqrt() * w.frobenius();
+
+    let mut factors = Vec::with_capacity(nd);
+    let mut ranks = Vec::with_capacity(nd);
+    for mode in 0..nd {
+        let unf = w.unfold(mode);
+        let s = svd(&unf, sink);
+        // sort descending (svd() output is unsorted by contract)
+        let mut order: Vec<usize> = (0..s.sigma.len()).collect();
+        order.sort_by(|&a, &b| s.sigma[b].partial_cmp(&s.sigma[a]).unwrap());
+        let sorted: Vec<f32> = order.iter().map(|&i| s.sigma[i]).collect();
+        // keep smallest r with tail norm < budget
+        let mut tail = 0.0f64;
+        let mut r = sorted.len();
+        while r > 1 {
+            let cand = tail + (sorted[r - 1] as f64).powi(2);
+            if (cand.sqrt() as f32) < budget {
+                tail = cand;
+                r -= 1;
+            } else {
+                break;
+            }
+        }
+        let mut u = Matrix::zeros(unf.rows, r);
+        for (new_c, &old_c) in order[..r].iter().enumerate() {
+            for row in 0..unf.rows {
+                u.set(row, new_c, s.u.get(row, old_c));
+            }
+        }
+        ranks.push(r);
+        factors.push(u);
+    }
+
+    // Core: C = W x1 U_1^T x2 U_2^T ... (project every mode).
+    let mut core = w.clone();
+    for (mode, u) in factors.iter().enumerate() {
+        core = core.mode_product(mode, &u.transpose());
+    }
+
+    TuckerDecomp { dims: w.shape.clone(), ranks, core, factors, eps }
+}
+
+/// `C x1 U_1 ... xN U_N` — Tucker reconstruction.
+pub fn reconstruct(d: &TuckerDecomp) -> Tensor {
+    let mut t = d.core.clone();
+    for (mode, u) in d.factors.iter().enumerate() {
+        t = t.mode_product(mode, u);
+    }
+    t
+}
+
+pub fn relative_error(original: &Tensor, d: &TuckerDecomp) -> f32 {
+    let wr = reconstruct(d);
+    let num: f64 = original
+        .data
+        .iter()
+        .zip(&wr.data)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum();
+    let den: f64 = original.data.iter().map(|a| (*a as f64).powi(2)).sum();
+    (num / den.max(1e-30)).sqrt() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+    use crate::util::Rng;
+
+    #[test]
+    fn exact_at_full_rank() {
+        check(8, 800, |rng| {
+            let shape = [2 + rng.below(4), 2 + rng.below(4), 2 + rng.below(4)];
+            let w = Tensor::from_vec(&shape, rng.normal_vec(shape.iter().product()));
+            let d = decompose(&w, 0.0);
+            assert_eq!(d.ranks, shape.to_vec());
+            assert!(relative_error(&w, &d) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn error_bound_holds() {
+        // HOSVD: ||W - W_R|| <= sqrt(sum of discarded sv^2) <= eps||W||.
+        check(8, 801, |rng| {
+            let shape = [4, 6, 6];
+            let w = Tensor::from_vec(&shape, rng.normal_vec(shape.iter().product()));
+            let eps = 0.35;
+            let d = decompose(&w, eps);
+            assert!(relative_error(&w, &d) <= eps + 1e-3);
+        });
+    }
+
+    #[test]
+    fn low_mode_rank_recovered() {
+        let mut rng = Rng::new(95);
+        // mode-0 rank 2 tensor: W = U G with U (6,2)
+        let u = Matrix::from_vec(6, 2, rng.normal_vec(12));
+        let g = Matrix::from_vec(2, 30, rng.normal_vec(60));
+        let w_mat = u.matmul(&g);
+        let w = Tensor::from_vec(&[6, 5, 6], w_mat.data);
+        let d = decompose(&w, 0.01);
+        assert_eq!(d.ranks[0], 2);
+        assert!(relative_error(&w, &d) < 0.02);
+    }
+
+    #[test]
+    fn param_accounting() {
+        let mut rng = Rng::new(96);
+        let w = Tensor::from_vec(&[4, 5, 6], rng.normal_vec(120));
+        let d = decompose(&w, 0.4);
+        let manual = d.ranks.iter().product::<usize>()
+            + d.dims.iter().zip(&d.ranks).map(|(n, r)| n * r).sum::<usize>();
+        assert_eq!(d.param_count(), manual);
+    }
+}

@@ -1,0 +1,94 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Supports `--key value`, `--key=value`, `--flag`, and positional
+//! arguments — all the launcher needs.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_opt<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.opt(key).and_then(|s| s.parse().ok())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        // Policy: `--key token` binds token as the value unless token
+        // itself starts with `--`; bare flags therefore go last or are
+        // followed by another option.
+        let a = args("simulate extra --config tt-edge --eps=0.12 --verbose");
+        assert_eq!(a.positional, vec!["simulate", "extra"]);
+        assert_eq!(a.opt("config"), Some("tt-edge"));
+        assert_eq!(a.parse_opt::<f64>("eps"), Some(0.12));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn flag_followed_by_option_stays_flag() {
+        let a = args("cmd --gate --fast");
+        assert!(a.flag("gate") && a.flag("fast"));
+        assert_eq!(a.positional, vec!["cmd"]);
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // a value starting with '-' (not '--') still binds to the key
+        let a = args("--delta -0.5");
+        assert_eq!(a.parse_opt::<f64>("delta"), Some(-0.5));
+    }
+}

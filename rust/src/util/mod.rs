@@ -1,0 +1,7 @@
+//! Small self-contained utilities (offline build: no external crates).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+pub use rng::Rng;

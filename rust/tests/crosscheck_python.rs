@@ -1,0 +1,74 @@
+//! Cross-language contract tests: the rust model inventory must match
+//! the manifest the python exporter wrote (shapes, order, arity) —
+//! this is the contract that lets the coordinator marshal parameters
+//! into the AOT artifacts blindly. Skips if artifacts are absent.
+
+use tt_edge::model::resnet32::param_specs;
+use tt_edge::runtime::{default_dir, Dtype, Manifest};
+
+fn manifest() -> Option<Manifest> {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(&dir).expect("manifest"))
+}
+
+#[test]
+fn resnet_forward_inputs_match_rust_param_specs() {
+    let Some(m) = manifest() else { return };
+    let e = m.entry("resnet32_fwd_b4").expect("entry");
+    let specs = param_specs();
+    // params... then the image batch
+    assert_eq!(e.inputs.len(), specs.len() + 1);
+    for (i, (spec, input)) in specs.iter().zip(&e.inputs).enumerate() {
+        assert_eq!(
+            input.shape, spec.shape,
+            "input {i} ({}) shape mismatch",
+            spec.name
+        );
+        assert_eq!(input.dtype, Dtype::F32);
+    }
+    assert_eq!(e.inputs.last().unwrap().shape, vec![4, 32, 32, 3]);
+    assert_eq!(e.outputs[0].shape, vec![4, 10]);
+}
+
+#[test]
+fn sgd_entry_returns_params_in_same_order() {
+    let Some(m) = manifest() else { return };
+    let e = m.entry("resnet32_sgd_b8").expect("entry");
+    let specs = param_specs();
+    // inputs: params + x + labels + lr ; outputs: params' + loss
+    assert_eq!(e.inputs.len(), specs.len() + 3);
+    assert_eq!(e.outputs.len(), specs.len() + 1);
+    for (spec, (inp, outp)) in specs.iter().zip(e.inputs.iter().zip(&e.outputs)) {
+        assert_eq!(inp.shape, spec.shape, "{}", spec.name);
+        assert_eq!(outp.shape, spec.shape, "{}", spec.name);
+    }
+    // trailing entries: x (8,32,32,3), labels (8) i32, lr scalar
+    let n = specs.len();
+    assert_eq!(e.inputs[n].shape, vec![8, 32, 32, 3]);
+    assert_eq!(e.inputs[n + 1].dtype, Dtype::I32);
+    assert_eq!(e.inputs[n + 2].shape, Vec::<usize>::new());
+    // loss scalar
+    assert_eq!(e.outputs[n].shape, Vec::<usize>::new());
+}
+
+#[test]
+fn ttd3_entry_shapes_match_conv_layout() {
+    let Some(m) = manifest() else { return };
+    let e = m.entry("ttd3_conv64").expect("entry");
+    assert_eq!(e.inputs[0].shape, vec![3, 3, 64, 64]);
+    // cores: (1,9,9), (9,64,64), (64,64,1) + two i32 ranks
+    assert_eq!(e.outputs[0].shape, vec![1, 9, 9]);
+    assert_eq!(e.outputs[1].shape, vec![9, 64, 64]);
+    assert_eq!(e.outputs[2].shape, vec![64, 64, 1]);
+    assert_eq!(e.outputs[3].dtype, Dtype::I32);
+    assert_eq!(e.outputs[4].dtype, Dtype::I32);
+    // chain consistency, as the rust TtDecomp enforces
+    assert_eq!(e.outputs[0].shape[0], 1);
+    assert_eq!(e.outputs[0].shape[2], e.outputs[1].shape[0]);
+    assert_eq!(e.outputs[1].shape[2], e.outputs[2].shape[0]);
+    assert_eq!(e.outputs[2].shape[2], 1);
+}

@@ -1,0 +1,184 @@
+//! Integration: the PJRT runtime executes every AOT artifact and the
+//! numerics agree with the in-process rust substrate (L1/L2 vs L3
+//! cross-validation). Skips (with a message) when `make artifacts`
+//! has not produced the artifacts directory.
+
+use tt_edge::runtime::{Engine, Value};
+use tt_edge::trace::NullSink;
+use tt_edge::ttd::svd::house::house;
+use tt_edge::ttd::{Matrix, Tensor};
+use tt_edge::util::Rng;
+
+fn engine() -> Option<Engine> {
+    let dir = tt_edge::runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Engine::load(&dir).expect("engine"))
+}
+
+#[test]
+fn manifest_lists_all_entries() {
+    let Some(eng) = engine() else { return };
+    let names = eng.entry_names();
+    for required in [
+        "house_left_128",
+        "house_right_128",
+        "gemm_256",
+        "norm_4096",
+        "svd_144x64",
+        "ttd3_conv64",
+        "tt_rec3_conv64",
+        "resnet32_fwd_b4",
+        "resnet32_sgd_b8",
+    ] {
+        assert!(names.iter().any(|n| n == required), "missing {required}");
+    }
+}
+
+#[test]
+fn gemm_artifact_matches_rust_matmul() {
+    let Some(mut eng) = engine() else { return };
+    let mut rng = Rng::new(1);
+    let a = Matrix::from_vec(256, 256, rng.normal_vec(256 * 256));
+    let b = Matrix::from_vec(256, 256, rng.normal_vec(256 * 256));
+    let out = eng
+        .run(
+            "gemm_256",
+            &[
+                Value::F32 { shape: vec![256, 256], data: a.data.clone() },
+                Value::F32 { shape: vec![256, 256], data: b.data.clone() },
+            ],
+        )
+        .expect("run");
+    let want = a.matmul(&b);
+    let got = out[0].as_f32().unwrap();
+    let max = got
+        .iter()
+        .zip(&want.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max < 1e-2, "max diff {max}");
+}
+
+#[test]
+fn norm_artifact_matches_rust_norm() {
+    let Some(mut eng) = engine() else { return };
+    let mut rng = Rng::new(2);
+    let x = rng.normal_vec(4096);
+    let out = eng
+        .run("norm_4096", &[Value::F32 { shape: vec![4096], data: x.clone() }])
+        .expect("run");
+    let want = tt_edge::ttd::svd::house::norm(&x);
+    let got = out[0].as_f32().unwrap()[0];
+    assert!((got - want).abs() < 1e-3 * want, "{got} vs {want}");
+}
+
+#[test]
+fn house_update_artifact_matches_rust_apply_left() {
+    let Some(mut eng) = engine() else { return };
+    let mut rng = Rng::new(3);
+    let mut a = Matrix::from_vec(128, 128, rng.normal_vec(128 * 128));
+    let x: Vec<f32> = (0..128).map(|r| a.get(r, 0)).collect();
+    let h = house(&x);
+    let out = eng
+        .run(
+            "house_left_128",
+            &[
+                Value::F32 { shape: vec![128], data: h.v.clone() },
+                Value::F32 { shape: vec![128, 128], data: a.data.clone() },
+                Value::scalar_f32(h.beta),
+            ],
+        )
+        .expect("run");
+    tt_edge::ttd::svd::house::apply_left(&mut a, 0, 0, &h.v, h.beta);
+    let got = out[0].as_f32().unwrap();
+    let max = got
+        .iter()
+        .zip(&a.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max < 2e-2, "max diff {max}");
+}
+
+#[test]
+fn svd_artifact_matches_rust_singular_values() {
+    let Some(mut eng) = engine() else { return };
+    let mut rng = Rng::new(4);
+    let a = Matrix::from_vec(144, 64, rng.normal_vec(144 * 64));
+    let out = eng
+        .run("svd_144x64", &[Value::F32 { shape: vec![144, 64], data: a.data.clone() }])
+        .expect("run");
+    // python svd returns (U (144,64), sigma (64), Vt (64,64)), sorted.
+    let sigma_py = out[1].as_f32().unwrap();
+    let s = tt_edge::ttd::svd::svd(&a, &mut NullSink);
+    let mut sigma_rs = s.sigma.clone();
+    sigma_rs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    for (i, (p, r)) in sigma_py.iter().zip(&sigma_rs).enumerate() {
+        assert!(
+            (p - r).abs() < 2e-3 * (1.0 + r.abs()),
+            "sigma[{i}]: python {p} vs rust {r}"
+        );
+    }
+}
+
+#[test]
+fn ttd3_artifact_roundtrips_through_reconstruction() {
+    let Some(mut eng) = engine() else { return };
+    let mut rng = Rng::new(5);
+    // compressible synthetic conv kernel (3,3,64,64)
+    let layer = tt_edge::model::conv_layers().pop().unwrap();
+    let w3 = tt_edge::sim::workload::synthetic_trained_conv(&mut rng, &layer, 3.5, 0.02);
+    let w = Tensor::from_vec(&[3, 3, 64, 64], w3.data.clone());
+    let eps = 0.1f32;
+    let out = eng
+        .run("ttd3_conv64", &[Value::from_tensor(&w), Value::scalar_f32(eps)])
+        .expect("run ttd3");
+    let (g1, g2, g3) = (&out[0], &out[1], &out[2]);
+    let r1 = out[3].as_i32().unwrap()[0];
+    let r2 = out[4].as_i32().unwrap()[0];
+    assert!(r1 >= 1 && r2 >= 1, "ranks {r1} {r2}");
+    // reconstruct through the dedicated artifact
+    let rec = eng
+        .run("tt_rec3_conv64", &[g1.clone(), g2.clone(), g3.clone()])
+        .expect("run rec");
+    let got = rec[0].as_f32().unwrap();
+    // relative error within the prescribed budget
+    let num: f64 = got
+        .iter()
+        .zip(&w3.data)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum();
+    let den: f64 = w3.data.iter().map(|b| (*b as f64).powi(2)).sum();
+    let rel = (num / den).sqrt();
+    assert!(rel <= eps as f64 + 0.02, "rel err {rel}");
+    // and the rust-side TTD agrees on the retained ranks (+-small)
+    let d = tt_edge::ttd::decompose(&w3, eps, None, &mut NullSink);
+    assert!((d.ranks[1] as i32 - r1).abs() <= 2, "r1 {} vs {}", d.ranks[1], r1);
+    assert!((d.ranks[2] as i32 - r2).abs() <= 4, "r2 {} vs {}", d.ranks[2], r2);
+}
+
+#[test]
+fn resnet_forward_artifact_runs() {
+    let Some(mut eng) = engine() else { return };
+    let params = tt_edge::model::ParamStore::init_resnet32(6);
+    let mut rng = Rng::new(7);
+    let mut inputs: Vec<Value> = params.values.iter().map(Value::from_tensor).collect();
+    inputs.push(Value::F32 { shape: vec![4, 32, 32, 3], data: rng.normal_vec(4 * 32 * 32 * 3) });
+    let out = eng.run("resnet32_fwd_b4", &inputs).expect("fwd");
+    let logits = out[0].as_f32().unwrap();
+    assert_eq!(logits.len(), 40);
+    assert!(logits.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let Some(mut eng) = engine() else { return };
+    let err = eng
+        .run("norm_4096", &[Value::F32 { shape: vec![7], data: vec![0.0; 7] }])
+        .unwrap_err();
+    assert!(format!("{err}").contains("input 0"), "{err}");
+    let err = eng.run("nope", &[]).unwrap_err();
+    assert!(format!("{err}").contains("no artifact entry"), "{err}");
+}
