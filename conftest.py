@@ -4,3 +4,11 @@ import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent / "python"))
+
+# Offline fallback: the CI image has no `hypothesis` wheel. If the real
+# library is importable we never touch sys.path; otherwise expose the
+# API-compatible deterministic shim in python/_offline_shims/.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(Path(__file__).parent / "python" / "_offline_shims"))

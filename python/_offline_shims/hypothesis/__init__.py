@@ -1,0 +1,140 @@
+"""Offline stand-in for the ``hypothesis`` property-testing library.
+
+The CI image has no network access and no ``hypothesis`` wheel, so
+``conftest.py`` puts this package on ``sys.path`` *only when the real
+library is missing*. It implements the narrow API surface the test
+suite uses — ``given``, ``settings`` (profiles), ``assume`` and the
+``strategies`` module — with deterministic example generation: each
+test draws ``max_examples`` cases from a PRNG seeded by the test's
+qualified name (the moral equivalent of hypothesis' ``derandomize``
+profile the suite already requests).
+
+Failures re-raise the original assertion augmented with the drawn
+arguments, which is the part of hypothesis we actually rely on:
+reproducible counterexamples. Shrinking is out of scope.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect as _inspect
+import random
+import types as _types
+import zlib
+
+from . import strategies  # noqa: F401  (re-export: hypothesis.strategies)
+
+__version__ = "0.0-offline-shim"
+
+__all__ = ["given", "settings", "assume", "example", "HealthCheck", "strategies"]
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by :func:`assume` to skip one drawn example."""
+
+
+def assume(condition):
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class HealthCheck:
+    """Placeholder namespace (profiles sometimes reference it)."""
+
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+
+
+class settings:
+    """Profile registry + per-test settings decorator."""
+
+    _profiles: dict = {"default": {"max_examples": 20, "deadline": None, "derandomize": True}}
+    _current: dict = dict(_profiles["default"])
+
+    def __init__(self, parent=None, **kwargs):
+        self.kwargs = dict(kwargs)
+
+    def __call__(self, fn):
+        merged = {**getattr(fn, "_shim_settings", {}), **self.kwargs}
+        fn._shim_settings = merged
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, parent=None, **kwargs):
+        base = dict(cls._profiles.get("default", {}))
+        base.update(kwargs)
+        cls._profiles[name] = base
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._current = dict(cls._profiles.get(name, cls._profiles["default"]))
+
+    @classmethod
+    def get_profile(cls, name):
+        return cls._profiles[name]
+
+
+def example(*args, **kwargs):
+    """Record an explicit example (prepended to the generated ones)."""
+
+    def deco(fn):
+        fn._shim_examples = getattr(fn, "_shim_examples", []) + [(args, kwargs)]
+        return fn
+
+    return deco
+
+
+def given(*given_args, **given_kwargs):
+    if given_args:
+        raise TypeError("the offline hypothesis shim supports keyword strategies only")
+    # Settings are bound at decoration time, matching hypothesis'
+    # behaviour of picking up the profile the module just loaded.
+    bound_settings = dict(settings._current)
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings / @example compose in either stacking order:
+            # below @given they decorate fn (functools.wraps copies the
+            # attrs onto this wrapper); above @given, in the canonical
+            # hypothesis order, they land on the wrapper directly and
+            # extend the wraps-copied values. Either way the wrapper
+            # carries the complete, deduplicated set.
+            opts = {**bound_settings, **getattr(wrapper, "_shim_settings", {})}
+            max_examples = int(opts.get("max_examples", 20))
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rnd = random.Random(seed)
+            ran = 0
+            attempts = 0
+            for explicit_args, explicit_kwargs in getattr(wrapper, "_shim_examples", []):
+                fn(*args, *explicit_args, **kwargs, **explicit_kwargs)
+            while ran < max_examples and attempts < max_examples * 50:
+                attempts += 1
+                drawn = {k: strat.example(rnd) for k, strat in given_kwargs.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except UnsatisfiedAssumption:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"property failed on example {ran} "
+                        f"(seed={seed}, drawn={drawn!r}): {e}"
+                    ) from e
+                ran += 1
+            return None
+
+        # pytest's fixture introspection reads `obj.hypothesis.inner_test`
+        # for hypothesis-wrapped tests; mirror that shape. The exposed
+        # signature must also drop the strategy-supplied parameters, or
+        # pytest hunts for fixtures named like them (`__wrapped__`, set
+        # by functools.wraps, would otherwise resurface the originals).
+        wrapper.hypothesis = _types.SimpleNamespace(inner_test=fn)
+        del wrapper.__wrapped__
+        sig = _inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items() if name not in given_kwargs]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+
+    return deco

@@ -1,0 +1,110 @@
+"""Strategies for the offline hypothesis shim.
+
+Each strategy is a tiny object with ``example(rnd)`` drawing one value
+from a ``random.Random``. Only the strategies the test suite uses are
+implemented; ``map``/``filter``/``flatmap`` are provided because they
+are cheap and keep future tests working.
+"""
+
+from __future__ import annotations
+
+import math
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd):
+        return self._draw(rnd)
+
+    def map(self, f):
+        return SearchStrategy(lambda rnd: f(self._draw(rnd)))
+
+    def filter(self, pred, _max_tries=1000):
+        def draw(rnd):
+            for _ in range(_max_tries):
+                v = self._draw(rnd)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+
+        return SearchStrategy(draw)
+
+    def flatmap(self, f):
+        return SearchStrategy(lambda rnd: f(self._draw(rnd)).example(rnd))
+
+
+def integers(min_value=None, max_value=None):
+    lo = -(2**31) if min_value is None else int(min_value)
+    hi = 2**31 if max_value is None else int(max_value)
+
+    def draw(rnd):
+        # Bias toward the boundaries now and then: that is where the
+        # real library finds most of its counterexamples.
+        r = rnd.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return rnd.randint(lo, hi)
+
+    return SearchStrategy(draw)
+
+
+def floats(min_value=None, max_value=None, allow_nan=False, allow_infinity=False, width=64):
+    lo = -1e9 if min_value is None else float(min_value)
+    hi = 1e9 if max_value is None else float(max_value)
+
+    def draw(rnd):
+        v = rnd.uniform(lo, hi)
+        return v if math.isfinite(v) else 0.0
+
+    return SearchStrategy(draw)
+
+
+def booleans():
+    return SearchStrategy(lambda rnd: rnd.random() < 0.5)
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    if not seq:
+        raise ValueError("sampled_from needs a non-empty collection")
+    return SearchStrategy(lambda rnd: seq[rnd.randrange(len(seq))])
+
+
+def lists(elements, min_size=0, max_size=10):
+    def draw(rnd):
+        n = rnd.randint(min_size, max_size)
+        return [elements.example(rnd) for _ in range(n)]
+
+    return SearchStrategy(draw)
+
+
+def tuples(*strats):
+    return SearchStrategy(lambda rnd: tuple(s.example(rnd) for s in strats))
+
+
+def just(value):
+    return SearchStrategy(lambda rnd: value)
+
+
+def one_of(*strats):
+    flat = []
+    for s in strats:
+        flat.extend(s if isinstance(s, (list, tuple)) else [s])
+    return SearchStrategy(lambda rnd: flat[rnd.randrange(len(flat))].example(rnd))
+
+
+def composite(f):
+    def builder(*args, **kwargs):
+        def draw_value(rnd):
+            def draw(strategy):
+                return strategy.example(rnd)
+
+            return f(draw, *args, **kwargs)
+
+        return SearchStrategy(draw_value)
+
+    return builder

@@ -1,8 +1,15 @@
 //! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
-//! L3 numerics (rank-1 updates, HBD, GK, full-layer TTD) and the
-//! simulator replay loop.
+//! L3 numerics (rank-1 updates, HBD, GK, full-layer TTD), the blocked
+//! vs naive GEMM kernel, the serial vs parallel multi-layer pipeline
+//! (the ISSUE-1 acceptance numbers), and the simulator replay loop.
+//!
+//! Run: `cargo bench --bench hotpath` (or `cargo run --release` on the
+//! compiled bench binary). The "ALL-LAYER PIPELINE" section prints the
+//! parallel-over-serial speedup recorded in the PR description.
 
 use tt_edge::metrics::bench::{black_box, time_it};
+use tt_edge::pipeline;
+use tt_edge::sim::workload::{compress_model, synthetic_model};
 use tt_edge::sim::{HwTimeline, SocConfig};
 use tt_edge::trace::{NullSink, TraceSink, VecSink};
 use tt_edge::ttd::svd::bidiag::bidiagonalize;
@@ -13,12 +20,21 @@ use tt_edge::util::Rng;
 fn main() {
     let mut rng = Rng::new(1);
 
-    // matmul kernel (512x512)
+    // ---- kernel: blocked vs naive matmul --------------------------
     let a = Matrix::from_vec(512, 512, rng.normal_vec(512 * 512));
     let b = Matrix::from_vec(512, 512, rng.normal_vec(512 * 512));
-    println!("{}", time_it("matmul 512^3", 1, 5, || {
+    let blocked = time_it("matmul 512^3 (blocked ikj)", 1, 5, || {
         black_box(a.matmul(&b));
-    }).report());
+    });
+    println!("{}", blocked.report());
+    let naive = time_it("matmul 512^3 (naive ijk)", 1, 3, || {
+        black_box(a.matmul_naive(&b));
+    });
+    println!("{}", naive.report());
+    println!(
+        "  -> blocked kernel speedup over naive: {:.2}x\n",
+        naive.mean_ms / blocked.mean_ms
+    );
 
     // fused rank-1 update (the HBD inner loop), 576x64
     let mut m = Matrix::from_vec(576, 64, rng.normal_vec(576 * 64));
@@ -41,6 +57,46 @@ fn main() {
     println!("{}", time_it("ttd decompose 9x64x64", 1, 10, || {
         black_box(decompose(&w, 0.12, None, &mut NullSink));
     }).report());
+
+    // ---- ALL-LAYER PIPELINE: serial vs parallel -------------------
+    // The ISSUE-1 acceptance metric: wall-clock to compress every
+    // ResNet-32 conv layer, seed serial path vs the work-stealing
+    // pipeline (identical decompositions + merged trace; see
+    // tests/golden_trace.rs for the equivalence assertions).
+    let layers = synthetic_model(42, 3.55, 0.035);
+    let host_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let serial = time_it("resnet32 all-layer TTD (serial)", 1, 5, || {
+        black_box(compress_model(&layers, 0.12, &mut NullSink));
+    });
+    println!("{}", serial.report());
+    let mut par_results = Vec::new();
+    for threads in [2, 4, host_threads] {
+        if threads < 2 || par_results.iter().any(|(t, _)| *t == threads) {
+            continue;
+        }
+        let res = time_it(
+            &format!("resnet32 all-layer TTD (parallel x{threads})"),
+            1,
+            5,
+            || {
+                black_box(pipeline::compress_model_parallel(
+                    &layers,
+                    0.12,
+                    threads,
+                    &mut NullSink,
+                ));
+            },
+        );
+        println!("{}", res.report());
+        par_results.push((threads, res));
+    }
+    for (threads, res) in &par_results {
+        println!(
+            "  -> pipeline x{threads} speedup over serial: {:.2}x",
+            serial.mean_ms / res.mean_ms
+        );
+    }
+    println!();
 
     // simulator replay throughput
     let mut trace = VecSink::default();

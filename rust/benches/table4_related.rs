@@ -13,7 +13,7 @@ fn main() {
     );
     t.row(&["Process technology".into(), format!("{} nm", q.process_nm), format!("{} nm", e.process_nm)]);
     t.row(&["Number of PEs".into(), format!("{} + {}", q.pes.0, q.pes.1), format!("{} + {}", e.pes.0, e.pes.1)]);
-    t.row(&["On-chip memory".into(), format!("{} KB", q.on_chip_memory_kb), format!("128 KB + 320 KB")]);
+    t.row(&["On-chip memory".into(), format!("{} KB", q.on_chip_memory_kb), "128 KB + 320 KB".into()]);
     t.row(&["Arithmetic precision".into(), q.precision.into(), e.precision.into()]);
     t.row(&["Clock frequency".into(), format!("{} MHz", q.clock_mhz), format!("{} MHz", e.clock_mhz)]);
     t.row(&[

@@ -21,10 +21,11 @@ pub mod transport;
 use std::sync::mpsc;
 
 use crate::model::resnet32::ConvLayer;
+use crate::pipeline::{self, TtBatch};
 use crate::sim::report::SimReport;
 use crate::sim::timeline::HwTimeline;
 use crate::sim::SocConfig;
-use crate::ttd::{decompose, reconstruct, Tensor, TtDecomp};
+use crate::ttd::{reconstruct, Tensor};
 use crate::util::Rng;
 
 pub use transport::{Link, TransportStats};
@@ -39,6 +40,9 @@ pub struct FederatedConfig {
     pub link: Link,
     /// SoC each edge node runs (Baseline vs TT-Edge).
     pub soc: SocConfig,
+    /// Host worker threads each node uses for its layer batch (the
+    /// pipeline work-stealing width; simulated SoC cost is invariant).
+    pub threads_per_node: usize,
     /// Magnitude of the synthetic local drift per round.
     pub drift: f32,
     pub seed: u64,
@@ -52,17 +56,20 @@ impl Default for FederatedConfig {
             eps: 0.12,
             link: Link::default(),
             soc: SocConfig::tt_edge(),
+            threads_per_node: 1,
             drift: 0.02,
             seed: 7,
         }
     }
 }
 
-/// One node's contribution to a round.
+/// One node's contribution to a round: the batched TT decompositions
+/// plus the SoC-simulated cost of producing them.
 #[derive(Debug)]
 pub struct NodeUpdate {
     pub node: usize,
-    pub decomps: Vec<TtDecomp>,
+    /// All layers' decompositions, shipped as one wire unit.
+    pub batch: TtBatch,
     pub wire_bytes: usize,
     pub dense_bytes: usize,
     /// SoC simulation of this node's compression work.
@@ -110,30 +117,29 @@ fn drifted(global: &[(ConvLayer, Tensor)], rng: &mut Rng, drift: f32) -> Vec<Ten
         .collect()
 }
 
-/// Compress one node's layers, tracing into a fresh SoC timeline.
+/// Compress one node's layer batch through the pipeline, replaying
+/// the merged per-layer traces into a fresh SoC timeline. The
+/// simulated cycles/energy are identical to the old serial loop —
+/// the merge is deterministic in layer order.
 fn compress_node(
     node: usize,
     layers: &[(ConvLayer, Tensor)],
     locals: &[Tensor],
     eps: f32,
     soc: SocConfig,
+    threads: usize,
 ) -> NodeUpdate {
+    let jobs: Vec<(&ConvLayer, &Tensor)> =
+        layers.iter().map(|(l, _)| l).zip(locals).collect();
+    let results = pipeline::compress_layers_ref(&jobs, eps, threads);
     let mut tl = HwTimeline::new(soc);
-    let mut decomps = Vec::with_capacity(locals.len());
-    let mut dense_bytes = 0usize;
-    for ((layer, _), w) in layers.iter().zip(locals) {
-        let t = w.reshape(&layer.tt_dims());
-        decomps.push(decompose(&t, eps, None, &mut tl));
-        dense_bytes += 4 * layer.numel();
-    }
-    let wire_bytes: usize = decomps.iter().map(|d| d.wire_bytes()).sum();
-    NodeUpdate {
-        node,
-        decomps,
-        wire_bytes,
-        dense_bytes,
-        sim: SimReport::from_timeline(&tl),
-    }
+    pipeline::replay_traces(&results, &mut tl);
+    let sim = SimReport::from_timeline(&tl);
+    let batch =
+        TtBatch::from_decomps(results.into_iter().map(|r| r.decomp).collect());
+    let dense_bytes: usize = layers.iter().map(|(l, _)| 4 * l.numel()).sum();
+    let wire_bytes = batch.wire_bytes();
+    NodeUpdate { node, batch, wire_bytes, dense_bytes, sim }
 }
 
 impl Coordinator {
@@ -184,8 +190,9 @@ impl Coordinator {
                 let tx = tx.clone();
                 let soc = cfg.soc.clone();
                 let eps = cfg.eps;
+                let threads = cfg.threads_per_node;
                 scope.spawn(move || {
-                    let upd = compress_node(i, global, local, eps, soc);
+                    let upd = compress_node(i, global, local, eps, soc, threads);
                     let _ = tx.send(upd);
                 });
             }
@@ -214,7 +221,7 @@ impl Coordinator {
             .map(|(l, _)| Tensor::zeros(&l.tt_dims()))
             .collect();
         for u in &updates {
-            for (l, d) in u.decomps.iter().enumerate() {
+            for (l, d) in u.batch.decomps.iter().enumerate() {
                 let w = reconstruct(d);
                 for (a, b) in new_global[l].data.iter_mut().zip(&w.data) {
                     *a += b / n as f32;

@@ -3,9 +3,10 @@
 //! Subcommands (hand-rolled CLI; clap is unavailable offline):
 //!
 //! * `simulate`  — Table III: TTD ResNet-32 compression on Baseline vs
-//!   TT-Edge SoCs (`--eps`, `--seed`).
+//!   TT-Edge SoCs (`--eps`, `--seed`, `--parallel N` host workers; the
+//!   simulated cycles are identical at any width).
 //! * `compress`  — Table I: compare TTD / Tucker / TRD on the model
-//!   (`--method all|ttd|tucker|trd`).
+//!   (`--method all|ttd|tucker|trd`, `--parallel N`).
 //! * `federate`  — Fig. 1: federated rounds over simulated edge nodes
 //!   (`--nodes`, `--rounds`, `--soc baseline|tt-edge`).
 //! * `resources` — Table II: FPGA/45 nm resource + power breakdown.
@@ -45,9 +46,9 @@ fn print_help() {
     println!(
         "ttedge — TT-Edge (DATE 2026) reproduction\n\n\
          USAGE: ttedge <simulate|compress|federate|resources|related|artifacts> [--opts]\n\n\
-         simulate   Table III (exec time + energy, baseline vs TT-Edge)\n\
-         compress   Table I  (TTD vs Tucker vs TRD on ResNet-32)\n\
-         federate   Fig. 1   (federated rounds over edge nodes)\n\
+         simulate   Table III (exec time + energy, baseline vs TT-Edge; --parallel N)\n\
+         compress   Table I  (TTD vs Tucker vs TRD on ResNet-32; --parallel N)\n\
+         federate   Fig. 1   (federated rounds over edge nodes; --threads N per node)\n\
          resources  Table II (resource + power breakdown)\n\
          related    Table IV (vs Qu et al. [21])\n\
          artifacts  list / smoke-run the AOT artifacts"
@@ -57,11 +58,22 @@ fn print_help() {
 fn cmd_simulate(args: &Args) -> Result<()> {
     let eps: f32 = args.parse_opt("eps").unwrap_or(0.12);
     let seed: u64 = args.parse_opt("seed").unwrap_or(42);
-    let (out, reports) =
-        compress_resnet32(seed, eps, &[SocConfig::baseline(), SocConfig::tt_edge()]);
+    let parallel: usize = args.parse_opt("parallel").unwrap_or(1);
+    let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
+    let t0 = std::time::Instant::now();
+    let (out, reports) = if parallel > 1 {
+        tt_edge::pipeline::compress_resnet32_parallel(seed, eps, parallel, &configs)
+    } else {
+        compress_resnet32(seed, eps, &configs)
+    };
     println!(
-        "workload: ResNet-32, eps={eps}, compression {:.2}x, final params {}\n",
-        out.compression_ratio, out.final_params
+        "workload: ResNet-32, eps={eps}, compression {:.2}x, final params {} \
+         ({} host thread{}, {:.0} ms wall)\n",
+        out.compression_ratio,
+        out.final_params,
+        parallel.max(1),
+        if parallel > 1 { "s" } else { "" },
+        t0.elapsed().as_secs_f64() * 1e3
     );
     println!("{}", format_table3(&reports[0], &reports[1]));
     Ok(())
@@ -74,6 +86,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let method = args.opt_or("method", "all");
     let eps: f32 = args.parse_opt("eps").unwrap_or(0.12);
     let seed: u64 = args.parse_opt("seed").unwrap_or(42);
+    let parallel: usize = args.parse_opt("parallel").unwrap_or(1);
     let layers = synthetic_model(seed, 3.55, 0.035);
     let dense = tt_edge::model::param_count();
     let conv_dense: usize = layers.iter().map(|(l, _)| l.numel()).sum();
@@ -105,13 +118,25 @@ fn cmd_compress(args: &Args) -> Result<()> {
         ]);
     }
     if method == "all" || method == "ttd" {
-        let out = compress_model(&layers, eps, &mut NullSink);
+        let t0 = std::time::Instant::now();
+        let out = if parallel > 1 {
+            tt_edge::pipeline::compress_model_parallel(&layers, eps, parallel, &mut NullSink)
+        } else {
+            compress_model(&layers, eps, &mut NullSink)
+        };
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
         t.row(&[
             "TTD (this work)".into(),
             format!("{:.3}", out.max_rel_err),
             format!("{:.1}x", out.compression_ratio),
             out.final_params.to_string(),
         ]);
+        println!(
+            "TTD: {} layers on {} host thread{} in {wall_ms:.0} ms",
+            layers.len(),
+            parallel.max(1),
+            if parallel > 1 { "s" } else { "" },
+        );
     }
     println!("{}", t.render());
     Ok(())
@@ -158,6 +183,7 @@ fn cmd_federate(args: &Args) -> Result<()> {
         nodes: args.parse_opt("nodes").unwrap_or(4),
         rounds: args.parse_opt("rounds").unwrap_or(3),
         eps: args.parse_opt("eps").unwrap_or(0.12),
+        threads_per_node: args.parse_opt("threads").unwrap_or(1),
         soc,
         ..Default::default()
     };

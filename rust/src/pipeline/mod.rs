@@ -1,0 +1,299 @@
+//! Batched, parallel multi-layer TTD compression.
+//!
+//! Per-layer TT compression is embarrassingly parallel (each conv
+//! kernel is an independent Algorithm-1 run), so the pipeline fans the
+//! layer queue out to `std::thread::scope` workers that *steal* work
+//! from a shared atomic cursor: a worker that finishes a small
+//! stage-0 layer immediately grabs the next job instead of waiting on
+//! the big stage-2 kernels. Traces are captured per layer in private
+//! [`VecSink`]s and merged back **deterministically in layer order**,
+//! so the merged stream is op-for-op identical to the serial
+//! `compress_model` trace — the SoC simulator costs the same cycles
+//! and energy no matter how many host threads ran the numerics.
+//!
+//! This is the scaling substrate for everything downstream: the CLI
+//! (`ttedge compress/simulate --parallel N`), the federated
+//! coordinator (nodes compress their layer batch through this module
+//! and ship one [`TtBatch`]), and `benches/hotpath.rs` (serial vs
+//! parallel wall-clock).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use crate::model::resnet32::ConvLayer;
+use crate::sim::config::SocConfig;
+use crate::sim::report::SimReport;
+use crate::sim::timeline::HwTimeline;
+use crate::sim::workload::{aggregate_outcome, synthetic_model, CompressionOutcome};
+use crate::trace::{TraceSink, VecSink};
+use crate::ttd::ttd::TtDecomp;
+use crate::ttd::{decompose, relative_error, Tensor};
+
+/// One compressed layer: the decomposition plus the hardware-op trace
+/// its Algorithm-1 run emitted (replayed later in deterministic order).
+#[derive(Clone, Debug)]
+pub struct LayerResult {
+    /// Position in the input layer list (merge key).
+    pub index: usize,
+    pub decomp: TtDecomp,
+    pub trace: VecSink,
+    pub rel_err: f32,
+}
+
+/// A batch of TT decompositions shipped as one unit (the Fig.-1 wire
+/// payload of a federated node: every layer's cores + a batch header).
+#[derive(Clone, Debug, Default)]
+pub struct TtBatch {
+    pub decomps: Vec<TtDecomp>,
+}
+
+impl TtBatch {
+    pub fn from_results(results: &[LayerResult]) -> Self {
+        TtBatch { decomps: results.iter().map(|r| r.decomp.clone()).collect() }
+    }
+
+    /// Take ownership of already-extracted decompositions (no clone).
+    pub fn from_decomps(decomps: Vec<TtDecomp>) -> Self {
+        TtBatch { decomps }
+    }
+
+    pub fn len(&self) -> usize {
+        self.decomps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.decomps.is_empty()
+    }
+
+    /// Total TT parameters across the batch.
+    pub fn param_count(&self) -> usize {
+        self.decomps.iter().map(|d| d.param_count()).sum()
+    }
+
+    /// Bytes on the wire: every decomposition's payload plus an
+    /// 8-byte batch header (count + flags).
+    pub fn wire_bytes(&self) -> usize {
+        8 + self.decomps.iter().map(|d| d.wire_bytes()).sum::<usize>()
+    }
+}
+
+/// Clamp a requested worker count to something sensible for `jobs`.
+fn worker_count(requested: usize, jobs: usize) -> usize {
+    requested.max(1).min(jobs.max(1))
+}
+
+/// Compress every `(layer, tensor)` pair with `threads` workers
+/// stealing from a shared queue. Results come back sorted by layer
+/// index; each carries its own trace. `threads == 1` runs inline
+/// (no thread spawn) and is byte-identical to the serial path.
+pub fn compress_layers(
+    layers: &[(ConvLayer, Tensor)],
+    eps: f32,
+    threads: usize,
+) -> Vec<LayerResult> {
+    let jobs: Vec<(&ConvLayer, &Tensor)> = layers.iter().map(|(l, w)| (l, w)).collect();
+    compress_layers_ref(&jobs, eps, threads)
+}
+
+/// Borrowed-pair variant of [`compress_layers`] — callers that hold
+/// layers and tensors in separate collections (the coordinator's
+/// per-node locals) fan out without cloning any weight data.
+pub fn compress_layers_ref(
+    jobs: &[(&ConvLayer, &Tensor)],
+    eps: f32,
+    threads: usize,
+) -> Vec<LayerResult> {
+    let threads = worker_count(threads, jobs.len());
+    let compress_one = |index: usize| -> LayerResult {
+        let (layer, w) = jobs[index];
+        let dims = layer.tt_dims();
+        // reshape only when the caller's tensor is not already in the
+        // TT layout (reshape clones the data; decompose only reads it)
+        let reshaped;
+        let t: &Tensor = if w.shape == dims {
+            w
+        } else {
+            reshaped = w.reshape(&dims);
+            &reshaped
+        };
+        let mut trace = VecSink::default();
+        let decomp = decompose(t, eps, None, &mut trace);
+        let rel_err = relative_error(t, &decomp);
+        LayerResult { index, decomp, trace, rel_err }
+    };
+
+    if threads <= 1 {
+        return (0..jobs.len()).map(compress_one).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<LayerResult>();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let cursor = &cursor;
+            let compress_one = &compress_one;
+            scope.spawn(move || loop {
+                // Work stealing: the shared cursor is the queue head;
+                // whichever worker is free claims the next layer.
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                if tx.send(compress_one(i)).is_err() {
+                    break;
+                }
+            });
+        }
+    });
+    drop(tx);
+    let mut results: Vec<LayerResult> = rx.into_iter().collect();
+    results.sort_by_key(|r| r.index);
+    results
+}
+
+/// Replay the per-layer traces into `sink` in layer order — the
+/// deterministic merge. Because Algorithm 1 is deterministic per
+/// layer, the merged stream equals the serial single-sink trace
+/// op for op (asserted by `tests/golden_trace.rs`).
+pub fn replay_traces<S: TraceSink>(results: &[LayerResult], sink: &mut S) {
+    for r in results {
+        for op in &r.trace.ops {
+            sink.op(*op);
+        }
+    }
+}
+
+/// Parallel drop-in for `sim::workload::compress_model`: same
+/// [`CompressionOutcome`], same merged trace into `sink`, computed on
+/// `threads` workers.
+pub fn compress_model_parallel<S: TraceSink>(
+    layers: &[(ConvLayer, Tensor)],
+    eps: f32,
+    threads: usize,
+    sink: &mut S,
+) -> CompressionOutcome {
+    let results = compress_layers(layers, eps, threads);
+    replay_traces(&results, sink);
+    let max_rel = results.iter().map(|r| r.rel_err).fold(0.0f32, f32::max);
+    let decomps = results.into_iter().map(|r| r.decomp).collect();
+    aggregate_outcome(layers, decomps, max_rel)
+}
+
+/// Parallel drop-in for `sim::workload::compress_resnet32`: compress
+/// the synthetic-trained model on `threads` workers, then replay the
+/// merged trace under each SoC configuration.
+pub fn compress_resnet32_parallel(
+    seed: u64,
+    eps: f32,
+    threads: usize,
+    configs: &[SocConfig],
+) -> (CompressionOutcome, Vec<SimReport>) {
+    let layers = synthetic_model(seed, 3.55, 0.035);
+    let mut trace = VecSink::default();
+    let outcome = compress_model_parallel(&layers, eps, threads, &mut trace);
+    let reports = configs
+        .iter()
+        .map(|cfg| {
+            let mut tl = HwTimeline::new(cfg.clone());
+            for op in &trace.ops {
+                tl.op(*op);
+            }
+            SimReport::from_timeline(&tl)
+        })
+        .collect();
+    (outcome, reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::workload::compress_model;
+    use crate::trace::HwOp;
+
+    fn small_model() -> Vec<(ConvLayer, Tensor)> {
+        let mut layers = synthetic_model(11, 3.55, 0.035);
+        layers.truncate(6);
+        layers
+    }
+
+    #[test]
+    fn parallel_outcome_matches_serial_exactly() {
+        let layers = small_model();
+        let mut serial_trace = VecSink::default();
+        let serial = compress_model(&layers, 0.12, &mut serial_trace);
+        for threads in [1, 2, 4] {
+            let mut par_trace = VecSink::default();
+            let par = compress_model_parallel(&layers, 0.12, threads, &mut par_trace);
+            assert_eq!(par.final_params, serial.final_params, "threads={threads}");
+            assert_eq!(par.conv_tt_params, serial.conv_tt_params);
+            assert_eq!(par.max_rel_err, serial.max_rel_err);
+            // merged trace is op-for-op the serial trace
+            assert_eq!(par_trace.ops.len(), serial_trace.ops.len());
+            assert_eq!(par_trace.ops, serial_trace.ops);
+            // and the decompositions are bit-identical
+            for (a, b) in par.decomps.iter().zip(&serial.decomps) {
+                assert_eq!(a.ranks, b.ranks);
+                for (ca, cb) in a.cores.iter().zip(&b.cores) {
+                    assert_eq!(ca.data, cb.data);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn results_come_back_in_layer_order() {
+        let layers = small_model();
+        let results = compress_layers(&layers, 0.2, 3);
+        assert_eq!(results.len(), layers.len());
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.index, i);
+            assert_eq!(r.decomp.dims, layers[i].0.tt_dims().to_vec());
+        }
+    }
+
+    #[test]
+    fn batch_wire_accounting() {
+        let layers = small_model();
+        let results = compress_layers(&layers, 0.12, 2);
+        let batch = TtBatch::from_results(&results);
+        assert_eq!(batch.len(), layers.len());
+        assert!(!batch.is_empty());
+        let per_layer: usize = results.iter().map(|r| r.decomp.wire_bytes()).sum();
+        assert_eq!(batch.wire_bytes(), 8 + per_layer);
+        assert_eq!(
+            batch.param_count(),
+            results.iter().map(|r| r.decomp.param_count()).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn simulated_cost_is_thread_count_invariant() {
+        let (out1, rep1) =
+            compress_resnet32_parallel(42, 0.12, 1, &[SocConfig::tt_edge()]);
+        let (out4, rep4) =
+            compress_resnet32_parallel(42, 0.12, 4, &[SocConfig::tt_edge()]);
+        assert_eq!(out1.final_params, out4.final_params);
+        assert_eq!(rep1[0].total_ms, rep4[0].total_ms);
+        assert_eq!(rep1[0].total_mj, rep4[0].total_mj);
+    }
+
+    #[test]
+    fn worker_count_clamps() {
+        assert_eq!(worker_count(0, 5), 1);
+        assert_eq!(worker_count(8, 3), 3);
+        assert_eq!(worker_count(2, 0), 1);
+    }
+
+    #[test]
+    fn trace_replay_preserves_op_multiset() {
+        let layers = small_model();
+        let results = compress_layers(&layers, 0.12, 2);
+        let mut merged = VecSink::default();
+        replay_traces(&results, &mut merged);
+        let per_layer_total: usize = results.iter().map(|r| r.trace.ops.len()).sum();
+        assert_eq!(merged.ops.len(), per_layer_total);
+        let gemms = merged.count(|o| matches!(o, HwOp::Gemm { .. }));
+        assert!(gemms > 0);
+    }
+}

@@ -2,13 +2,23 @@
 //! once per entry, execute from the L3 hot path. Python never runs
 //! here — the interchange is HLO *text* (see `python/compile/aot.py`
 //! and /opt/xla-example/README.md for why text, not serialized proto).
+//!
+//! The XLA/PJRT client lives behind the `pjrt` cargo feature: the
+//! offline CI image has no `xla` crate, so the default build ships a
+//! manifest-only stub [`Engine`] with the same API that fails with a
+//! clear message on `compile`/`run`. Everything manifest-shaped
+//! (shapes, dtypes, entry inventory — the cross-language contract
+//! tests) works in both builds.
 
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, Context};
+use anyhow::{bail, Result};
 
 pub use manifest::{default_dir, Dtype, Entry, Manifest, TensorSpec};
 
@@ -63,6 +73,7 @@ impl Value {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -72,6 +83,7 @@ impl Value {
         Ok(lit.reshape(&dims)?)
     }
 
+    #[cfg(feature = "pjrt")]
     fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Value> {
         match spec.dtype {
             Dtype::F32 => Ok(Value::F32 { shape: spec.shape.clone(), data: lit.to_vec::<f32>()? }),
@@ -82,12 +94,62 @@ impl Value {
 
 /// The artifact engine: one PJRT CPU client + lazily compiled
 /// executables keyed by manifest entry name.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+/// Manifest-only stub engine for offline builds (no `pjrt` feature):
+/// entry inventory and shape/dtype validation work, execution bails.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    pub manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Load the manifest (no PJRT client in this build).
+    pub fn load(dir: &Path) -> Result<Self> {
+        Ok(Engine { manifest: Manifest::load(dir)? })
+    }
+
+    /// Load from `$TT_EDGE_ARTIFACTS` / `./artifacts`.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (rebuild with --features pjrt for PJRT execution)".to_string()
+    }
+
+    /// Validates the entry exists, then bails: no compiler in this build.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        let _ = self.manifest.entry(name)?;
+        bail!("cannot compile '{name}': PJRT runtime disabled (enable the `pjrt` feature)")
+    }
+
+    /// Validates inputs against the manifest, then bails.
+    pub fn run(&mut self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let entry = self.manifest.entry(name)?;
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "entry '{name}' expects {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        bail!("cannot run '{name}': PJRT runtime disabled (enable the `pjrt` feature)")
+    }
+
+    /// Names of all available entries.
+    pub fn entry_names(&self) -> Vec<String> {
+        self.manifest.entries.keys().cloned().collect()
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Load the manifest and create the PJRT CPU client.
     pub fn load(dir: &Path) -> Result<Self> {
@@ -172,6 +234,7 @@ impl Engine {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn value_roundtrip_literal() {
         let v = Value::F32 { shape: vec![2, 2], data: vec![1.0, 2.0, 3.0, 4.0] };

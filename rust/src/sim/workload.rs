@@ -93,27 +93,16 @@ pub fn synthetic_model(seed: u64, target_ratio: f64, noise: f32) -> Vec<(ConvLay
         .collect()
 }
 
-/// Run Algorithm 1 over every conv layer, emitting one combined trace.
-pub fn compress_model<S: TraceSink>(
+/// Fold per-layer decompositions into the whole-model accounting
+/// (shared by the serial path here and `crate::pipeline`'s parallel
+/// path, so both report byte-identical outcomes).
+pub fn aggregate_outcome(
     layers: &[(ConvLayer, Tensor)],
-    eps: f32,
-    sink: &mut S,
+    decomps: Vec<TtDecomp>,
+    max_rel_err: f32,
 ) -> CompressionOutcome {
-    let mut decomps = Vec::with_capacity(layers.len());
-    let mut conv_dense = 0usize;
-    let mut conv_tt = 0usize;
-    let mut max_rel = 0.0f32;
-    for (layer, w) in layers {
-        let t = w.reshape(&layer.tt_dims());
-        let d = decompose(&t, eps, None, sink);
-        conv_dense += layer.numel();
-        conv_tt += d.param_count();
-        let err = crate::ttd::relative_error(&t, &d);
-        if err > max_rel {
-            max_rel = err;
-        }
-        decomps.push(d);
-    }
+    let conv_dense: usize = layers.iter().map(|(l, _)| l.numel()).sum();
+    let conv_tt: usize = decomps.iter().map(|d| d.param_count()).sum();
     let model_dense = param_count();
     let non_conv = model_dense - conv_dense;
     let final_params = non_conv + conv_tt;
@@ -124,8 +113,28 @@ pub fn compress_model<S: TraceSink>(
         conv_tt_params: conv_tt,
         final_params,
         compression_ratio: model_dense as f64 / final_params as f64,
-        max_rel_err: max_rel,
+        max_rel_err,
     }
+}
+
+/// Run Algorithm 1 over every conv layer, emitting one combined trace.
+pub fn compress_model<S: TraceSink>(
+    layers: &[(ConvLayer, Tensor)],
+    eps: f32,
+    sink: &mut S,
+) -> CompressionOutcome {
+    let mut decomps = Vec::with_capacity(layers.len());
+    let mut max_rel = 0.0f32;
+    for (layer, w) in layers {
+        let t = w.reshape(&layer.tt_dims());
+        let d = decompose(&t, eps, None, sink);
+        let err = crate::ttd::relative_error(&t, &d);
+        if err > max_rel {
+            max_rel = err;
+        }
+        decomps.push(d);
+    }
+    aggregate_outcome(layers, decomps, max_rel)
 }
 
 /// Full Table-III experiment: compress synthetic-trained ResNet-32

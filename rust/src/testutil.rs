@@ -5,7 +5,57 @@
 //! what we actually use proptest for: randomized invariants with a
 //! reproducible counterexample.
 
+use crate::ttd::tensor::{Matrix, Tensor};
 use crate::util::Rng;
+
+/// Random standard-normal matrix (the workhorse of every numeric
+/// property test).
+pub fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+    Matrix::from_vec(rows, cols, rng.normal_vec(rows * cols))
+}
+
+/// Random standard-normal tensor of the given shape.
+pub fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    Tensor::from_vec(shape, rng.normal_vec(shape.iter().product()))
+}
+
+/// Random tensor shape: `nd` dims, each uniform in `[lo, hi]`.
+pub fn rand_shape(rng: &mut Rng, nd: usize, lo: usize, hi: usize) -> Vec<usize> {
+    (0..nd).map(|_| lo + rng.below(hi - lo + 1)).collect()
+}
+
+/// A random tensor with *planted* TT ranks: the product of `nd` cores
+/// with bond ranks drawn in `[1, rmax]`. Exact-recovery property tests
+/// decompose these and must find ranks `<=` the planted ones.
+pub fn rand_tt_tensor(rng: &mut Rng, shape: &[usize], rmax: usize) -> Tensor {
+    use crate::ttd::ttd::{TtCore, TtDecomp};
+    let nd = shape.len();
+    let mut ranks = vec![1usize];
+    for _ in 1..nd {
+        ranks.push(1 + rng.below(rmax));
+    }
+    ranks.push(1);
+    let cores: Vec<TtCore> = (0..nd)
+        .map(|k| {
+            let (r_in, n, r_out) = (ranks[k], shape[k], ranks[k + 1]);
+            let scale = 1.0 / (r_in as f32).sqrt();
+            let data = rng
+                .normal_vec(r_in * n * r_out)
+                .into_iter()
+                .map(|v| v * scale)
+                .collect();
+            TtCore { r_in, n, r_out, data }
+        })
+        .collect();
+    let d = TtDecomp { dims: shape.to_vec(), ranks, cores, eps: 0.0 };
+    crate::ttd::reconstruct(&d)
+}
+
+/// Relative Frobenius distance `||a - b||_F / ||b||_F` over tensors.
+pub fn rel_frobenius(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.shape, b.shape, "shape mismatch");
+    rel_err(&a.data, &b.data)
+}
 
 /// Run `cases` randomized checks. On failure the panic message names
 /// the case seed so the exact input can be replayed.
@@ -84,5 +134,29 @@ mod tests {
         assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
         assert!(rel_err(&[1.0, 0.0], &[1.0, 0.0]) == 0.0);
         assert_close!(1.0, 1.0000001, 1e-5);
+    }
+
+    #[test]
+    fn random_generators_have_declared_shapes() {
+        let mut rng = Rng::new(3);
+        let m = rand_matrix(&mut rng, 4, 6);
+        assert_eq!((m.rows, m.cols), (4, 6));
+        let shape = rand_shape(&mut rng, 3, 2, 5);
+        assert_eq!(shape.len(), 3);
+        assert!(shape.iter().all(|&d| (2..=5).contains(&d)));
+        let t = rand_tensor(&mut rng, &shape);
+        assert_eq!(t.shape, shape);
+        assert_eq!(rel_frobenius(&t, &t), 0.0);
+    }
+
+    #[test]
+    fn planted_tt_tensor_is_low_rank() {
+        use crate::trace::NullSink;
+        let mut rng = Rng::new(4);
+        let t = rand_tt_tensor(&mut rng, &[5, 6, 7], 2);
+        // near-exact TTD recovery at tiny eps with ranks <= planted
+        let d = crate::ttd::decompose(&t, 1e-3, None, &mut NullSink);
+        assert!(d.ranks[1] <= 5 && d.ranks[2] <= 7);
+        assert!(rel_frobenius(&crate::ttd::reconstruct(&d), &t) < 1e-3);
     }
 }

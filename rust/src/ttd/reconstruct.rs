@@ -14,8 +14,9 @@ pub fn reconstruct(d: &TtDecomp) -> Tensor {
     let first = &d.cores[0];
     let mut acc = Matrix::from_vec(first.n, first.r_out, first.data.clone());
     for core in &d.cores[1..] {
-        let right = core.as_matrix_right(); // (r_{k-1}, n_k * r_k)
-        let prod = acc.matmul(&right); // ([n_1..n_{k-1}], n_k * r_k)
+        // (r_{k-1}, n_k * r_k) — borrowed view, no clone of the core
+        let right = core.as_matrix_right();
+        let prod = acc.matmul_view(&right); // ([n_1..n_{k-1}], n_k * r_k)
         acc = Matrix::from_vec(prod.rows * core.n, core.r_out, prod.data);
     }
     Tensor::from_vec(&d.dims, acc.data)

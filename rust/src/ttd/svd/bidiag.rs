@@ -7,7 +7,7 @@
 //! Accumulation*) replays them backwards to form `U_B` and `V_B^T`.
 
 use crate::trace::{HwOp, TraceSink};
-use crate::ttd::svd::house::{apply_left, apply_right, house};
+use crate::ttd::svd::house::house;
 use crate::ttd::tensor::Matrix;
 
 /// `A = U_B B V_B^T` for tall `A` (m >= n): `u` (m, n) orthonormal
@@ -32,6 +32,9 @@ pub fn bidiagonalize<S: TraceSink>(a: &Matrix, sink: &mut S) -> Bidiag {
     // Householder vector store — the SPM-retained vectors.
     let mut vl: Vec<(Vec<f32>, f32)> = Vec::with_capacity(n);
     let mut vr: Vec<(Vec<f32>, f32)> = Vec::with_capacity(n);
+    // One scratch buffer reused by every left rank-1 update (all
+    // widths are <= n): the hot loop allocates nothing per reflector.
+    let mut scratch = vec![0.0f32; n];
 
     // ---- Householder Reduction (Alg. 2, lines 4-13) ----
     for i in 0..n {
@@ -48,7 +51,7 @@ pub fn bidiagonalize<S: TraceSink>(a: &Matrix, sink: &mut S) -> Bidiag {
             if ww > 0 {
                 sink.op(HwOp::Gemm { m: 1, n: ww, k: hh });
                 sink.op(HwOp::Gemm { m: hh, n: ww, k: 1 });
-                apply_left(&mut a, i, i + 1, &h.v, h.beta);
+                a.apply_house_left(i, i + 1, &h.v, h.beta, &mut scratch);
             }
             // exact cleanup of the pivot column
             for r in i + 1..m {
@@ -69,7 +72,7 @@ pub fn bidiagonalize<S: TraceSink>(a: &Matrix, sink: &mut S) -> Bidiag {
                 let (hh, ww) = (m - i - 1, n - i - 1);
                 sink.op(HwOp::Gemm { m: hh, n: 1, k: ww });
                 sink.op(HwOp::Gemm { m: hh, n: ww, k: 1 });
-                apply_right(&mut a, i + 1, i + 1, &h.v, h.beta);
+                a.apply_house_right(i + 1, i + 1, &h.v, h.beta);
                 for c in i + 2..n {
                     a.set(i, c, 0.0);
                 }
@@ -95,14 +98,14 @@ pub fn bidiagonalize<S: TraceSink>(a: &Matrix, sink: &mut S) -> Bidiag {
             sink.op(HwOp::VecDiv { len: v.len() });
             sink.op(HwOp::Gemm { m: 1, n: n - i, k: m - i });
             sink.op(HwOp::Gemm { m: m - i, n: n - i, k: 1 });
-            apply_left(&mut u, i, i, v, *beta);
+            u.apply_house_left(i, i, v, *beta, &mut scratch);
         }
         let (v, beta) = &vr[i];
         if !v.is_empty() {
             sink.op(HwOp::VecDiv { len: v.len() });
             sink.op(HwOp::Gemm { m: n - i, n: 1, k: n - i - 1 });
             sink.op(HwOp::Gemm { m: n - i, n: n - i - 1, k: 1 });
-            apply_right(&mut vt, i, i + 1, v, *beta);
+            vt.apply_house_right(i, i + 1, v, *beta);
         }
     }
 

@@ -41,62 +41,22 @@ pub fn norm(x: &[f32]) -> f32 {
 
 /// Left transform on the subblock `A[r0.., c0..]`:
 /// `A <- A + (v/beta)(v^T A)`; `v.len() == rows - r0`.
+///
+/// Thin wrapper over [`Matrix::apply_house_left`] that allocates its
+/// own scratch; the HBD loop calls the method directly with a reused
+/// buffer (zero allocations per reflector).
 pub fn apply_left(a: &mut Matrix, r0: usize, c0: usize, v: &[f32], beta: f32) {
     if v.is_empty() {
         return;
     }
-    debug_assert_eq!(v.len(), a.rows - r0);
-    let cols = a.cols;
-    let width = cols - c0;
-    // w = v^T A  (first chained GEMM)
-    let mut w = vec![0.0f32; width];
-    for (i, &vi) in v.iter().enumerate() {
-        if vi == 0.0 {
-            continue;
-        }
-        let row = &a.data[(r0 + i) * cols + c0..(r0 + i) * cols + cols];
-        for (wj, &ar) in w.iter_mut().zip(row) {
-            *wj += vi * ar;
-        }
-    }
-    // A += (v/beta) w  (second chained GEMM, rank-1)
-    let inv_beta = 1.0 / beta;
-    for (i, &vi) in v.iter().enumerate() {
-        let scale = vi * inv_beta;
-        if scale == 0.0 {
-            continue;
-        }
-        let row = &mut a.data[(r0 + i) * cols + c0..(r0 + i) * cols + cols];
-        for (ar, &wj) in row.iter_mut().zip(&w) {
-            *ar += scale * wj;
-        }
-    }
+    let mut scratch = vec![0.0f32; a.cols - c0];
+    a.apply_house_left(r0, c0, v, beta, &mut scratch);
 }
 
 /// Right transform on the subblock `A[r0.., c0..]`:
 /// `A <- A + (A v)(v/beta)`; `v.len() == cols - c0`.
 pub fn apply_right(a: &mut Matrix, r0: usize, c0: usize, v: &[f32], beta: f32) {
-    if v.is_empty() {
-        return;
-    }
-    debug_assert_eq!(v.len(), a.cols - c0);
-    let cols = a.cols;
-    let inv_beta = 1.0 / beta;
-    for r in r0..a.rows {
-        let row = &mut a.data[r * cols + c0..(r + 1) * cols];
-        // u_r = A[r, c0..] . v   (first chained GEMM)
-        let mut u = 0.0f32;
-        for (ar, &vj) in row.iter().zip(v) {
-            u += *ar * vj;
-        }
-        // A[r, c0..] += u * (v/beta)  (second chained GEMM)
-        let scale = u * inv_beta;
-        if scale != 0.0 {
-            for (ar, &vj) in row.iter_mut().zip(v) {
-                *ar += scale * vj;
-            }
-        }
-    }
+    a.apply_house_right(r0, c0, v, beta);
 }
 
 #[cfg(test)]

@@ -1,6 +1,11 @@
 //! Dense row-major tensors and matrices — the numeric substrate under
 //! Algorithm 1/2. No BLAS in this environment: `matmul` is a
-//! cache-blocked ikj kernel (see `benches/hotpath.rs` for its tuning).
+//! cache-blocked ikj kernel (see `benches/hotpath.rs` for its tuning
+//! and `matmul_naive` for the unblocked reference it is measured
+//! against). The Householder rank-1 updates (`apply_house_left` /
+//! `apply_house_right`) live here as in-place `Matrix` methods — the
+//! HBD hot loop never materializes a reflector matrix or clones the
+//! working buffer.
 
 use std::fmt;
 
@@ -82,36 +87,102 @@ impl Matrix {
         assert_eq!(self.cols, other.rows, "matmul dim mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
-        const BK: usize = 128;
-        for k0 in (0..k).step_by(BK) {
-            let k1 = (k0 + BK).min(k);
-            for i in 0..m {
-                let arow = &self.data[i * k..(i + 1) * k];
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                // k-unrolled by 2: the compiler keeps two FMA chains in
-                // flight, hiding the accumulator dependency (measured
-                // +25% over the single-chain loop; see EXPERIMENTS §Perf).
-                let mut kk = k0;
-                while kk + 1 < k1 {
-                    let a0 = arow[kk];
-                    let a1 = arow[kk + 1];
-                    let b0 = &other.data[kk * n..kk * n + n];
-                    let b1 = &other.data[(kk + 1) * n..(kk + 1) * n + n];
-                    for ((o, x), y) in orow.iter_mut().zip(b0).zip(b1) {
-                        *o += a0 * x + a1 * y;
-                    }
-                    kk += 2;
+        matmul_kernel(m, k, n, &self.data, &other.data, &mut out.data);
+        out
+    }
+
+    /// `self @ view` for a borrowed right-hand side (e.g. a TT core
+    /// viewed as a matrix) — same blocked kernel, no operand clone.
+    pub fn matmul_view(&self, other: &MatrixView<'_>) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul_view dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        matmul_kernel(m, k, n, &self.data, other.data, &mut out.data);
+        out
+    }
+
+    /// Textbook ijk triple loop — the unblocked reference the blocked
+    /// kernel is benchmarked against (`benches/hotpath.rs`). Kept out
+    /// of every hot path.
+    pub fn matmul_naive(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += self.data[i * k + kk] * other.data[kk * n + j];
                 }
-                if kk < k1 {
-                    let a = arow[kk];
-                    let brow = &other.data[kk * n..kk * n + n];
-                    for (o, b) in orow.iter_mut().zip(brow) {
-                        *o += a * b;
-                    }
-                }
+                out.data[i * n + j] = acc;
             }
         }
         out
+    }
+
+    /// In-place left Householder rank-1 update on the subblock
+    /// `self[r0.., c0..]`: `A <- A + (v/beta)(v^T A)` with
+    /// `v.len() == rows - r0`. `scratch` must hold `cols - c0` slots;
+    /// callers in the HBD loop reuse one buffer across all columns so
+    /// the hot path performs zero allocations.
+    pub fn apply_house_left(&mut self, r0: usize, c0: usize, v: &[f32], beta: f32, scratch: &mut [f32]) {
+        if v.is_empty() {
+            return;
+        }
+        debug_assert_eq!(v.len(), self.rows - r0);
+        let cols = self.cols;
+        let width = cols - c0;
+        let w = &mut scratch[..width];
+        w.fill(0.0);
+        // w = v^T A  (first chained GEMM)
+        for (i, &vi) in v.iter().enumerate() {
+            if vi == 0.0 {
+                continue;
+            }
+            let row = &self.data[(r0 + i) * cols + c0..(r0 + i) * cols + cols];
+            for (wj, &ar) in w.iter_mut().zip(row) {
+                *wj += vi * ar;
+            }
+        }
+        // A += (v/beta) w  (second chained GEMM, rank-1)
+        let inv_beta = 1.0 / beta;
+        for (i, &vi) in v.iter().enumerate() {
+            let scale = vi * inv_beta;
+            if scale == 0.0 {
+                continue;
+            }
+            let row = &mut self.data[(r0 + i) * cols + c0..(r0 + i) * cols + cols];
+            for (ar, &wj) in row.iter_mut().zip(w.iter()) {
+                *ar += scale * wj;
+            }
+        }
+    }
+
+    /// In-place right Householder rank-1 update on the subblock
+    /// `self[r0.., c0..]`: `A <- A + (A v)(v/beta)` with
+    /// `v.len() == cols - c0`. Row-at-a-time, no scratch needed.
+    pub fn apply_house_right(&mut self, r0: usize, c0: usize, v: &[f32], beta: f32) {
+        if v.is_empty() {
+            return;
+        }
+        debug_assert_eq!(v.len(), self.cols - c0);
+        let cols = self.cols;
+        let inv_beta = 1.0 / beta;
+        for r in r0..self.rows {
+            let row = &mut self.data[r * cols + c0..(r + 1) * cols];
+            // u_r = A[r, c0..] . v   (first chained GEMM)
+            let mut u = 0.0f32;
+            for (ar, &vj) in row.iter().zip(v) {
+                u += *ar * vj;
+            }
+            // A[r, c0..] += u * (v/beta)  (second chained GEMM)
+            let scale = u * inv_beta;
+            if scale != 0.0 {
+                for (ar, &vj) in row.iter_mut().zip(v) {
+                    *ar += scale * vj;
+                }
+            }
+        }
     }
 
     /// `self @ other^T` (row-times-row dot products, cache-friendly).
@@ -151,6 +222,79 @@ impl Matrix {
             .zip(&other.data)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
+    }
+}
+
+/// Borrowed row-major matrix view over someone else's storage (e.g. a
+/// TT core reinterpreted as its left/right unfolding) — reshapes are
+/// free and carry no clone.
+#[derive(Clone, Copy)]
+pub struct MatrixView<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a [f32],
+}
+
+impl fmt::Debug for MatrixView<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "MatrixView({}x{})", self.rows, self.cols)
+    }
+}
+
+impl<'a> MatrixView<'a> {
+    pub fn new(rows: usize, cols: usize, data: &'a [f32]) -> Self {
+        assert_eq!(data.len(), rows * cols, "view length mismatch");
+        Self { rows, cols, data }
+    }
+
+    #[inline(always)]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline(always)]
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Materialize an owned copy (only when ownership is truly needed).
+    pub fn to_matrix(&self) -> Matrix {
+        Matrix::from_vec(self.rows, self.cols, self.data.to_vec())
+    }
+}
+
+/// Shared cache-blocked ikj kernel over raw row-major slices:
+/// `out += a @ b` with `a` (m x k), `b` (k x n), `out` (m x n).
+fn matmul_kernel(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    const BK: usize = 128;
+    for k0 in (0..k).step_by(BK) {
+        let k1 = (k0 + BK).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            // k-unrolled by 2: the compiler keeps two FMA chains in
+            // flight, hiding the accumulator dependency (measured
+            // +25% over the single-chain loop; see EXPERIMENTS §Perf).
+            let mut kk = k0;
+            while kk + 1 < k1 {
+                let a0 = arow[kk];
+                let a1 = arow[kk + 1];
+                let b0 = &b[kk * n..kk * n + n];
+                let b1 = &b[(kk + 1) * n..(kk + 1) * n + n];
+                for ((o, x), y) in orow.iter_mut().zip(b0).zip(b1) {
+                    *o += a0 * x + a1 * y;
+                }
+                kk += 2;
+            }
+            if kk < k1 {
+                let a0 = arow[kk];
+                let brow = &b[kk * n..kk * n + n];
+                for (o, bv) in orow.iter_mut().zip(brow) {
+                    *o += a0 * bv;
+                }
+            }
+        }
     }
 }
 
@@ -318,6 +462,60 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn matmul_naive_and_view_match_blocked() {
+        check(10, 104, |rng| {
+            let (m, k, n) = (1 + rng.below(30), 1 + rng.below(300), 1 + rng.below(30));
+            let a = rand_mat(rng, m, k);
+            let b = rand_mat(rng, k, n);
+            let blocked = a.matmul(&b);
+            let naive = a.matmul_naive(&b);
+            // summation orders differ; bound scales with sqrt(k)
+            let tol = 1e-4 * (k as f32).sqrt().max(1.0) * 10.0;
+            assert!(blocked.max_abs_diff(&naive) < tol);
+            let view = MatrixView::new(k, n, &b.data);
+            let viewed = a.matmul_view(&view);
+            assert_eq!(viewed, blocked);
+        });
+    }
+
+    #[test]
+    fn house_updates_match_svd_house_wrappers() {
+        use crate::ttd::svd::house::{apply_left, apply_right, house};
+        check(10, 105, |rng| {
+            let (m, n) = (2 + rng.below(16), 2 + rng.below(16));
+            let a0 = rand_mat(rng, m, n);
+            let x: Vec<f32> = (0..m).map(|r| a0.get(r, 0)).collect();
+            let h = house(&x);
+            let mut a = a0.clone();
+            let mut b = a0.clone();
+            let mut scratch = vec![0.0f32; n];
+            a.apply_house_left(0, 0, &h.v, h.beta, &mut scratch);
+            apply_left(&mut b, 0, 0, &h.v, h.beta);
+            assert_eq!(a, b);
+
+            let y: Vec<f32> = a0.row(0).to_vec();
+            let h = house(&y);
+            let mut a = a0.clone();
+            let mut b = a0;
+            a.apply_house_right(0, 0, &h.v, h.beta);
+            apply_right(&mut b, 0, 0, &h.v, h.beta);
+            assert_eq!(a, b);
+        });
+    }
+
+    #[test]
+    fn matrix_view_accessors() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let v = MatrixView::new(2, 3, &m.data);
+        assert_eq!(v.get(1, 2), 6.0);
+        assert_eq!(v.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(v.to_matrix(), m);
+        // reinterpret the same storage with another shape — free reshape
+        let v2 = MatrixView::new(3, 2, &m.data);
+        assert_eq!(v2.get(2, 1), 6.0);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 
 use crate::trace::{HwOp, Phase, TraceSink};
 use crate::ttd::svd::{svd, Svd};
-use crate::ttd::tensor::{Matrix, Tensor};
+use crate::ttd::tensor::{Matrix, MatrixView, Tensor};
 
 /// One TT core `G_k` of shape `(r_{k-1}, n_k, r_k)`, row-major.
 #[derive(Clone, Debug)]
@@ -19,14 +19,15 @@ impl TtCore {
         self.r_in * self.n * self.r_out
     }
 
-    pub fn as_matrix_left(&self) -> Matrix {
-        // (r_in * n, r_out)
-        Matrix::from_vec(self.r_in * self.n, self.r_out, self.data.clone())
+    /// Left unfolding `(r_in * n, r_out)` — a borrowed view: the
+    /// reshape is free, no clone of the core data.
+    pub fn as_matrix_left(&self) -> MatrixView<'_> {
+        MatrixView::new(self.r_in * self.n, self.r_out, &self.data)
     }
 
-    pub fn as_matrix_right(&self) -> Matrix {
-        // (r_in, n * r_out)
-        Matrix::from_vec(self.r_in, self.n * self.r_out, self.data.clone())
+    /// Right unfolding `(r_in, n * r_out)` — borrowed, clone-free.
+    pub fn as_matrix_right(&self) -> MatrixView<'_> {
+        MatrixView::new(self.r_in, self.n * self.r_out, &self.data)
     }
 }
 
@@ -61,37 +62,132 @@ impl TtDecomp {
     }
 }
 
-/// Sorting_Basis (Alg. 1, lines 18-25): bubble-sort the singular
-/// values descending, tracking the index vector, then reorder the
-/// columns of U and rows of V^T. Swap count is reported in the trace
-/// (the SORTING module does exactly this data movement).
+/// Sorting_Basis (Alg. 1, lines 18-25): sort the singular values
+/// descending and reorder the columns of U and rows of V^T to match.
+///
+/// The hardware SORTING module is a bubble sorter, and the trace
+/// reports its exact swap count; in software we compute the same
+/// number as the strict inversion count of the sequence (bubble-sort
+/// swaps == inversions) in O(k log k), then apply the permutation
+/// in place by cycle-following — no O(k^2) compare loop and no clone
+/// of the basis matrices.
 pub fn sorting_basis<S: TraceSink>(s: &mut Svd, sink: &mut S) {
     let k = s.sigma.len();
+    // Swap count the SORTING module would report (strict inversions).
+    let swaps = count_inversions_ascending_pairs(&s.sigma);
+    // Stable descending argsort: ind[new] = old. Ties keep their
+    // original order, matching the strict-compare bubble sorter.
     let mut ind: Vec<usize> = (0..k).collect();
-    let mut swaps = 0usize;
-    // bubble sort, descending
-    for i in 0..k.saturating_sub(1) {
-        for j in 0..k - 1 - i {
-            if s.sigma[j] < s.sigma[j + 1] {
-                s.sigma.swap(j, j + 1);
-                ind.swap(j, j + 1);
-                swaps += 1;
-            }
-        }
-    }
+    ind.sort_by(|&a, &b| {
+        s.sigma[b].partial_cmp(&s.sigma[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
     sink.op(HwOp::Sort { n: k, swaps });
     if swaps > 0 {
-        // Reorder U columns and V^T rows by the index vector.
-        let u_old = s.u.clone();
-        let vt_old = s.vt.clone();
-        for (new_c, &old_c) in ind.iter().enumerate() {
-            for r in 0..s.u.rows {
-                s.u.set(r, new_c, u_old.get(r, old_c));
-            }
-            s.vt.row_mut(new_c).copy_from_slice(vt_old.row(old_c));
-        }
+        // sigma: O(k) gather.
+        let sorted: Vec<f32> = ind.iter().map(|&o| s.sigma[o]).collect();
+        s.sigma = sorted;
+        // U columns / V^T rows: cycle-following permutation, one
+        // column/row temp buffer instead of full-matrix clones.
+        permute_columns(&mut s.u, &ind);
+        permute_rows(&mut s.vt, &ind);
     }
     sink.op(HwOp::ReorderBasis { rows: s.u.rows + s.vt.cols, cols: k });
+}
+
+/// Number of pairs `i < j` with `v[i] < v[j]` (strict) — exactly the
+/// swap count of a strict-compare descending bubble sort. Merge-count,
+/// O(k log k).
+fn count_inversions_ascending_pairs(v: &[f32]) -> usize {
+    fn go(v: &mut [f32], buf: &mut [f32]) -> usize {
+        let n = v.len();
+        if n < 2 {
+            return 0;
+        }
+        let mid = n / 2;
+        let mut count = go(&mut v[..mid], buf) + go(&mut v[mid..], buf);
+        // Merge descending; when the right element strictly beats the
+        // left one it jumps ahead of every remaining left element.
+        let (mut i, mut j, mut o) = (0, mid, 0);
+        while i < mid && j < n {
+            if v[j] > v[i] {
+                count += mid - i;
+                buf[o] = v[j];
+                j += 1;
+            } else {
+                buf[o] = v[i];
+                i += 1;
+            }
+            o += 1;
+        }
+        while i < mid {
+            buf[o] = v[i];
+            i += 1;
+            o += 1;
+        }
+        while j < n {
+            buf[o] = v[j];
+            j += 1;
+            o += 1;
+        }
+        v.copy_from_slice(&buf[..n]);
+        count
+    }
+    let mut work = v.to_vec();
+    let mut buf = vec![0.0f32; v.len()];
+    go(&mut work, &mut buf)
+}
+
+/// In-place `new_col[j] = old_col[perm[j]]` by cycle decomposition.
+fn permute_columns(m: &mut Matrix, perm: &[usize]) {
+    let rows = m.rows;
+    let mut visited = vec![false; perm.len()];
+    let mut tmp = vec![0.0f32; rows];
+    for start in 0..perm.len() {
+        if visited[start] || perm[start] == start {
+            visited[start] = true;
+            continue;
+        }
+        for (r, t) in tmp.iter_mut().enumerate() {
+            *t = m.get(r, start);
+        }
+        let mut j = start;
+        while perm[j] != start {
+            let src = perm[j];
+            for r in 0..rows {
+                let v = m.get(r, src);
+                m.set(r, j, v);
+            }
+            visited[j] = true;
+            j = src;
+        }
+        for (r, t) in tmp.iter().enumerate() {
+            m.set(r, j, *t);
+        }
+        visited[j] = true;
+    }
+}
+
+/// In-place `new_row[j] = old_row[perm[j]]` by cycle decomposition.
+fn permute_rows(m: &mut Matrix, perm: &[usize]) {
+    let cols = m.cols;
+    let mut visited = vec![false; perm.len()];
+    let mut tmp = vec![0.0f32; cols];
+    for start in 0..perm.len() {
+        if visited[start] || perm[start] == start {
+            visited[start] = true;
+            continue;
+        }
+        tmp.copy_from_slice(m.row(start));
+        let mut j = start;
+        while perm[j] != start {
+            let src = perm[j];
+            m.data.copy_within(src * cols..(src + 1) * cols, j * cols);
+            visited[j] = true;
+            j = src;
+        }
+        m.row_mut(j).copy_from_slice(&tmp);
+        visited[j] = true;
+    }
 }
 
 /// delta-Truncation (Alg. 1, lines 27-31) as the paper's FSM: walk the
@@ -346,6 +442,71 @@ mod tests {
         let recon = us.matmul(&s.vt);
         assert!(recon.max_abs_diff(&a) < 1e-3);
         assert!(sink.count(|o| matches!(o, HwOp::Sort { .. })) == 1);
+    }
+
+    #[test]
+    fn sorting_swap_count_matches_bubble_sort() {
+        // The trace's swap count must keep bubble-sort semantics even
+        // though the implementation argsorts + counts inversions.
+        fn bubble_swaps(v: &[f32]) -> usize {
+            let mut v = v.to_vec();
+            let mut swaps = 0;
+            for i in 0..v.len().saturating_sub(1) {
+                for j in 0..v.len() - 1 - i {
+                    if v[j] < v[j + 1] {
+                        v.swap(j, j + 1);
+                        swaps += 1;
+                    }
+                }
+            }
+            swaps
+        }
+        check(30, 88, |rng| {
+            let k = 1 + rng.below(20);
+            // duplicates included: quantize to force ties
+            let sig: Vec<f32> =
+                (0..k).map(|_| (rng.uniform() * 4.0).floor() as f32).collect();
+            let mut s = Svd {
+                u: Matrix::eye(k, k),
+                sigma: sig.clone(),
+                vt: Matrix::eye(k, k),
+                qr_iterations: 0,
+            };
+            let mut sink = VecSink::default();
+            sorting_basis(&mut s, &mut sink);
+            let want = bubble_swaps(&sig);
+            assert!(
+                sink.ops.iter().any(
+                    |o| matches!(o, HwOp::Sort { n, swaps } if *n == k && *swaps == want)
+                ),
+                "swap count mismatch for {sig:?}: want {want}, ops {:?}",
+                sink.ops
+            );
+            for w in s.sigma.windows(2) {
+                assert!(w[0] >= w[1]);
+            }
+            // U columns carry the permutation: U (started as I) must
+            // now satisfy U[:, new] = e_{old}, i.e. recon still valid.
+            for (new_c, sv) in s.sigma.iter().enumerate() {
+                let old_c = (0..k)
+                    .find(|&r| s.u.get(r, new_c) == 1.0)
+                    .expect("permutation column");
+                assert_eq!(sig[old_c], *sv);
+            }
+        });
+    }
+
+    #[test]
+    fn core_views_borrow_without_cloning() {
+        let core = TtCore { r_in: 2, n: 3, r_out: 4, data: (0..24).map(|x| x as f32).collect() };
+        let left = core.as_matrix_left();
+        assert_eq!((left.rows, left.cols), (6, 4));
+        let right = core.as_matrix_right();
+        assert_eq!((right.rows, right.cols), (2, 12));
+        // same storage, both unfoldings
+        assert!(std::ptr::eq(left.data.as_ptr(), right.data.as_ptr()));
+        assert_eq!(left.get(1, 3), 7.0);
+        assert_eq!(right.get(1, 0), 12.0);
     }
 
     #[test]

@@ -10,6 +10,13 @@ use tt_edge::ttd::{Matrix, Tensor};
 use tt_edge::util::Rng;
 
 fn engine() -> Option<Engine> {
+    if cfg!(not(feature = "pjrt")) {
+        // The default build ships the manifest-only stub Engine whose
+        // `run` always bails — executing artifacts needs the real
+        // PJRT client.
+        eprintln!("skipping: PJRT runtime disabled (rebuild with --features pjrt)");
+        return None;
+    }
     let dir = tt_edge::runtime::default_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());

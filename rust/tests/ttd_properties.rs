@@ -1,0 +1,151 @@
+//! Property-test harness for the TTD numerics (ISSUE 1 satellite):
+//! randomized round-trip invariants over random dims/ranks/eps, the
+//! delta-truncation error contract, and the two-phase-SVD (HBD +
+//! implicit-shift QR) vs one-sided-Jacobi singular-value cross-check.
+//!
+//! Everything runs through `testutil::check`, so a failure prints the
+//! case index + seed needed to replay the exact counterexample.
+
+use tt_edge::testutil::{check, rand_matrix, rand_shape, rand_tensor, rand_tt_tensor, rel_frobenius};
+use tt_edge::trace::NullSink;
+use tt_edge::ttd::svd::bidiag::bidiagonalize;
+use tt_edge::ttd::svd::jacobi::jacobi_svd;
+use tt_edge::ttd::svd::svd;
+use tt_edge::ttd::{decompose, reconstruct};
+
+/// `||W - reconstruct(TTD(W))||_F <= eps ||W||_F` — the Oseledets
+/// prescribed-accuracy bound — across random dimension counts, sizes
+/// and eps values (the delta-truncation invariant).
+#[test]
+fn roundtrip_error_bounded_by_eps_random_dims() {
+    check(25, 9000, |rng| {
+        let nd = 2 + rng.below(3); // 2..=4 dims
+        let shape = rand_shape(rng, nd, 2, 6);
+        let w = rand_tensor(rng, &shape);
+        let eps = [0.05f32, 0.15, 0.3, 0.6][rng.below(4)];
+        let d = decompose(&w, eps, None, &mut NullSink);
+        let err = rel_frobenius(&reconstruct(&d), &w);
+        assert!(
+            err <= eps + 1e-3,
+            "shape {shape:?} eps {eps}: err {err}"
+        );
+        // boundary ranks stay 1 and core shapes stay consistent
+        assert_eq!(d.ranks[0], 1);
+        assert_eq!(*d.ranks.last().unwrap(), 1);
+        for (k, c) in d.cores.iter().enumerate() {
+            assert_eq!((c.r_in, c.n, c.r_out), (d.ranks[k], d.dims[k], d.ranks[k + 1]));
+        }
+    });
+}
+
+/// eps = 0 must reproduce the tensor to f32 round-off regardless of
+/// shape (full-rank TT is exact).
+#[test]
+fn zero_eps_roundtrip_is_exact() {
+    check(15, 9001, |rng| {
+        let nd = 2 + rng.below(3);
+        let shape = rand_shape(rng, nd, 2, 5);
+        let w = rand_tensor(rng, &shape);
+        let d = decompose(&w, 0.0, None, &mut NullSink);
+        let err = rel_frobenius(&reconstruct(&d), &w);
+        assert!(err < 5e-4, "shape {shape:?}: err {err}");
+    });
+}
+
+/// Planted low-TT-rank tensors are recovered with ranks no larger
+/// than planted and near-zero error at tiny eps.
+#[test]
+fn planted_ranks_are_recovered() {
+    check(15, 9002, |rng| {
+        let nd = 3 + rng.below(2); // 3..=4 dims
+        let shape = rand_shape(rng, nd, 3, 6);
+        let rmax = 1 + rng.below(3);
+        let w = rand_tt_tensor(rng, &shape, rmax);
+        let d = decompose(&w, 1e-3, None, &mut NullSink);
+        for r in &d.ranks[1..nd] {
+            // recovered bond rank can never exceed the planted cap
+            assert!(*r <= rmax, "rank {r} > planted cap {rmax} ({shape:?})");
+        }
+        let err = rel_frobenius(&reconstruct(&d), &w);
+        assert!(err <= 2e-3, "err {err}");
+    });
+}
+
+/// Larger eps can only shrink (never grow) the parameter count, and
+/// every rank respects an explicit cap.
+#[test]
+fn truncation_monotone_and_caps_respected() {
+    check(10, 9003, |rng| {
+        let shape = rand_shape(rng, 3, 3, 7);
+        let w = rand_tensor(rng, &shape);
+        let mut last = usize::MAX;
+        for eps in [0.02f32, 0.1, 0.35, 0.7] {
+            let d = decompose(&w, eps, None, &mut NullSink);
+            assert!(d.param_count() <= last, "eps {eps} grew params");
+            last = d.param_count();
+        }
+        let caps = [1 + rng.below(3), 1 + rng.below(3)];
+        let d = decompose(&w, 0.0, Some(&caps), &mut NullSink);
+        assert!(d.ranks[1] <= caps[0] && d.ranks[2] <= caps[1]);
+    });
+}
+
+/// Two-phase SVD (Householder bidiagonalization + implicit-shift QR)
+/// vs one-sided Jacobi: two independent algorithms must agree on the
+/// singular values of random square matrices.
+#[test]
+fn two_phase_svd_cross_checks_with_jacobi_square() {
+    check(20, 9004, |rng| {
+        let n = 2 + rng.below(16);
+        let a = rand_matrix(rng, n, n);
+        let mut two_phase = svd(&a, &mut NullSink).sigma;
+        two_phase.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        let jc = jacobi_svd(&a, 60);
+        let scale = jc.sigma.first().copied().unwrap_or(1.0).max(1.0);
+        for (i, (g, j)) in two_phase.iter().zip(&jc.sigma).enumerate() {
+            assert!(
+                (g - j).abs() < 2e-3 * scale,
+                "n={n} sigma[{i}]: two-phase {g} vs jacobi {j}"
+            );
+        }
+    });
+}
+
+/// Rectangular inputs: cross-check through the bidiagonal reduction
+/// (Jacobi runs on the square bidiagonal factor; orthogonal
+/// invariance means the singular values are those of A).
+#[test]
+fn two_phase_svd_cross_checks_with_jacobi_rectangular() {
+    check(15, 9005, |rng| {
+        let n = 2 + rng.below(10);
+        let m = n + rng.below(20);
+        let a = rand_matrix(rng, m, n);
+        let mut two_phase = svd(&a, &mut NullSink).sigma;
+        two_phase.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        let f = bidiagonalize(&a, &mut NullSink);
+        let jc = jacobi_svd(&f.b, 60);
+        let scale = jc.sigma.first().copied().unwrap_or(1.0).max(1.0);
+        for (g, j) in two_phase.iter().zip(&jc.sigma) {
+            assert!((g - j).abs() < 2e-3 * scale, "{g} vs {j} (m={m} n={n})");
+        }
+    });
+}
+
+/// The sum of squared singular values equals ||A||_F^2 (orthogonal
+/// invariance) — a global sanity anchor for both SVD paths.
+#[test]
+fn singular_values_preserve_frobenius_energy() {
+    check(15, 9006, |rng| {
+        let m = 2 + rng.below(20);
+        let n = 2 + rng.below(20);
+        let a = rand_matrix(rng, m, n);
+        let s = svd(&a, &mut NullSink);
+        let energy: f64 = s.sigma.iter().map(|v| (*v as f64) * (*v as f64)).sum();
+        let fa = a.frobenius() as f64;
+        assert!(
+            (energy.sqrt() - fa).abs() / fa.max(1.0) < 1e-3,
+            "m={m} n={n}: {} vs {fa}",
+            energy.sqrt()
+        );
+    });
+}
