@@ -1,0 +1,207 @@
+//! Seeded fault injection for federated rounds.
+//!
+//! A [`FaultPlan`] is a pure function from `(seed, round, node)` to
+//! fault decisions — node dropout, straggler latency multipliers, and
+//! the RNG stream the lossy transport draws from — so an entire chaos
+//! run replays byte-for-byte from its seed. The plan's RNG streams are
+//! completely separate from the coordinator's drift RNG: a benign plan
+//! (no dropout, unit multiplier, lossless link) leaves every numeric
+//! result of the round bit-identical to the fault-free path.
+
+use crate::util::Rng;
+
+/// Stream-separation constants: fault decisions and transport loss
+/// draws must never alias the coordinator's `seed ^ round * 0x9E37`
+/// drift streams.
+const FAULT_STREAM: u64 = 0xFA_0175_0000_0001;
+const TRANSPORT_STREAM: u64 = 0xFA_0175_0000_0002;
+
+/// Per-round fault decisions for one node.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeFaults {
+    /// The node crashes this round: its compression is cancelled and
+    /// it never uploads.
+    pub dropped: bool,
+    /// Multiplier on the node's *wall-clock* compression completion
+    /// time (`1.0` = nominal; `> 1.0` marks the node a straggler).
+    /// Models co-resident work preempting the device: the upload
+    /// starts `mult x` later, but the SoC cost of the compression
+    /// itself (`SimReport` ms/mJ, the `mean_compress_*` report
+    /// columns) is unchanged — a straggler is delayed, not burning
+    /// extra compression energy.
+    pub latency_mult: f64,
+}
+
+impl NodeFaults {
+    pub fn nominal() -> Self {
+        NodeFaults { dropped: false, latency_mult: 1.0 }
+    }
+
+    pub fn is_straggler(&self) -> bool {
+        !self.dropped && self.latency_mult > 1.0
+    }
+}
+
+/// Seeded chaos schedule threaded through `FederatedConfig`.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Per-round probability that a node drops out entirely.
+    pub dropout: f64,
+    /// Latency multiplier applied to straggler nodes.
+    pub straggler_mult: f64,
+    /// Probability a node straggles in a given round (only consulted
+    /// when `straggler_mult != 1.0`).
+    pub straggler_frac: f64,
+    /// Deterministic `(round, node)` dropouts, independent of the
+    /// probabilistic draws — the golden-trace harness pins exactly one
+    /// failure with these.
+    pub forced_dropouts: Vec<(usize, usize)>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0xFA17,
+            dropout: 0.0,
+            straggler_mult: 1.0,
+            straggler_frac: 0.25,
+            forced_dropouts: Vec::new(),
+        }
+    }
+}
+
+impl FaultPlan {
+    /// True when the plan cannot perturb a round — the scheduler's
+    /// fault-free path must then reproduce the legacy reports exactly.
+    pub fn is_benign(&self) -> bool {
+        self.dropout <= 0.0
+            && (self.straggler_mult == 1.0 || self.straggler_frac <= 0.0)
+            && self.forced_dropouts.is_empty()
+    }
+
+    /// Decide every node's faults for `round`. Decisions are drawn
+    /// from per-node forked streams, so they are stable under changes
+    /// to the node count of *other* rounds and under reordering.
+    pub fn for_round(&self, round: usize, nodes: usize) -> Vec<NodeFaults> {
+        let base = Rng::new(self.seed ^ FAULT_STREAM ^ (round as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        (0..nodes)
+            .map(|node| {
+                let mut rng = base.fork(node as u64 + 1);
+                // Both uniforms are drawn unconditionally so each
+                // fault kind owns a fixed draw slot: toggling dropout
+                // on/off at the same seed cannot reshuffle which nodes
+                // straggle (and vice versa).
+                let drop_draw = rng.uniform();
+                let straggle_draw = rng.uniform();
+                let forced = self.forced_dropouts.contains(&(round, node));
+                let dropped = forced || (self.dropout > 0.0 && drop_draw < self.dropout);
+                let latency_mult = if self.straggler_mult != 1.0
+                    && self.straggler_frac > 0.0
+                    && straggle_draw < self.straggler_frac
+                {
+                    self.straggler_mult
+                } else {
+                    1.0
+                };
+                NodeFaults { dropped, latency_mult }
+            })
+            .collect()
+    }
+
+    /// The RNG stream one node's transport attempts draw loss from in
+    /// `round` (lossless links never consume it).
+    pub fn transport_rng(&self, round: usize, node: usize) -> Rng {
+        Rng::new(self.seed ^ TRANSPORT_STREAM ^ (round as u64).wrapping_mul(0x9E3779B97F4A7C15))
+            .fork(node as u64 + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_benign_and_nominal() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_benign());
+        for f in plan.for_round(0, 8) {
+            assert_eq!(f, NodeFaults::nominal());
+            assert!(!f.is_straggler());
+        }
+    }
+
+    #[test]
+    fn decisions_replay_from_the_seed() {
+        let plan = FaultPlan {
+            dropout: 0.3,
+            straggler_mult: 4.0,
+            straggler_frac: 0.5,
+            ..FaultPlan::default()
+        };
+        assert!(!plan.is_benign());
+        for round in 0..4 {
+            assert_eq!(plan.for_round(round, 16), plan.for_round(round, 16));
+        }
+    }
+
+    #[test]
+    fn node_decisions_are_stable_under_fleet_growth() {
+        let plan = FaultPlan { dropout: 0.5, ..FaultPlan::default() };
+        let small = plan.for_round(2, 4);
+        let big = plan.for_round(2, 12);
+        assert_eq!(&big[..4], &small[..]);
+    }
+
+    #[test]
+    fn forced_dropouts_hit_exactly_their_round_and_node() {
+        let plan =
+            FaultPlan { forced_dropouts: vec![(1, 2)], ..FaultPlan::default() };
+        assert!(!plan.is_benign());
+        let r0 = plan.for_round(0, 4);
+        let r1 = plan.for_round(1, 4);
+        assert!(r0.iter().all(|f| !f.dropped));
+        assert!(r1[2].dropped);
+        assert_eq!(r1.iter().filter(|f| f.dropped).count(), 1);
+    }
+
+    #[test]
+    fn dropout_rate_roughly_matches_probability() {
+        let plan = FaultPlan { dropout: 0.25, ..FaultPlan::default() };
+        let mut dropped = 0usize;
+        let mut total = 0usize;
+        for round in 0..64 {
+            for f in plan.for_round(round, 32) {
+                total += 1;
+                if f.dropped {
+                    dropped += 1;
+                }
+            }
+        }
+        let rate = dropped as f64 / total as f64;
+        assert!((0.15..0.35).contains(&rate), "rate {rate}");
+    }
+
+    #[test]
+    fn fault_kinds_use_independent_draw_slots() {
+        // Toggling dropout must not reshuffle straggler assignment at
+        // the same seed (each fault kind owns a fixed draw slot).
+        let base = FaultPlan { straggler_mult: 3.0, straggler_frac: 0.5, ..FaultPlan::default() };
+        let with_dropout = FaultPlan { dropout: 0.4, ..base.clone() };
+        for round in 0..4 {
+            let a = base.for_round(round, 16);
+            let b = with_dropout.for_round(round, 16);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.latency_mult, y.latency_mult);
+            }
+        }
+    }
+
+    #[test]
+    fn stragglers_only_appear_when_mult_is_not_unity() {
+        let none = FaultPlan { straggler_mult: 1.0, straggler_frac: 1.0, ..FaultPlan::default() };
+        assert!(none.for_round(0, 8).iter().all(|f| f.latency_mult == 1.0));
+        let all = FaultPlan { straggler_mult: 3.0, straggler_frac: 1.0, ..FaultPlan::default() };
+        assert!(all.for_round(0, 8).iter().all(|f| f.latency_mult == 3.0));
+    }
+}

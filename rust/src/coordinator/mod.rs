@@ -1,4 +1,5 @@
-//! L3 coordinator: the Fig.-1 distributed-learning workflow.
+//! L3 coordinator: the Fig.-1 distributed-learning workflow, made
+//! fault-tolerant.
 //!
 //! A leader orchestrates `N` edge nodes over simulated constrained
 //! uplinks. Each round, every node
@@ -11,24 +12,46 @@
 //! 3. ships the TT cores (wire format: cores + rank header) through
 //!    the transport model.
 //!
-//! The leader reconstructs (Eq. 1/2), FedAvg-aggregates, and the next
-//! round starts from the new global model. Nodes run on worker threads
-//! (std::thread — no tokio in the offline build); the leader collects
-//! updates over mpsc channels exactly like a request/response router.
+//! Unlike the original all-or-nothing round, the leader now runs an
+//! event-driven [`scheduler::RoundScheduler`]: updates are admitted as
+//! they arrive in simulated time, a deadline derived from the slowest
+//! surviving node's nominal profile (compression latency + one clean
+//! transfer) bounds the round, and the round closes with whatever
+//! quorum arrived.
+//! Partial FedAvg renormalizes by the participating node count, so
+//! dropouts and stragglers degrade participation — never corrupt the
+//! aggregate. The whole failure surface ([`faults::FaultPlan`]:
+//! dropout, straggler multipliers, lossy links with retries) is a pure
+//! function of its seed and replays byte-for-byte; with a benign plan
+//! the scheduler reproduces the legacy reports exactly (pinned by
+//! `tests/golden_trace.rs` and `tests/federated_faults.rs`).
+//!
+//! Host-side, nodes still run on `std::thread::scope` workers (no
+//! tokio in the offline build) collecting over mpsc channels; a node
+//! the plan crashes spawns no worker and materializes no local model,
+//! and every surviving batch carries a [`pipeline::CancelToken`] so an
+//! admission policy can abort it mid-round without a partial result
+//! escaping.
 
+pub mod faults;
+pub mod scheduler;
 pub mod transport;
 
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 
 use crate::model::resnet32::ConvLayer;
-use crate::pipeline::{self, TtBatch};
+use crate::pipeline::{self, CancelToken, TtBatch};
 use crate::sim::report::SimReport;
 use crate::sim::timeline::HwTimeline;
 use crate::sim::SocConfig;
 use crate::ttd::{reconstruct, Tensor};
+use crate::util::json::Json;
 use crate::util::Rng;
 
-pub use transport::{Link, TransportStats};
+pub use faults::{FaultPlan, NodeFaults};
+pub use scheduler::{Arrival, ClosedRound, RoundScheduler};
+pub use transport::{Link, SendOutcome, TransportStats};
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
@@ -46,6 +69,26 @@ pub struct FederatedConfig {
     /// Magnitude of the synthetic local drift per round.
     pub drift: f32,
     pub seed: u64,
+    /// Updates the leader keeps waiting for past the deadline; `0`
+    /// means the full scheduled fleet. When too many nodes drop for
+    /// the quorum to ever arrive, the round still closes with what
+    /// delivered — degraded, flagged by `RoundReport::quorum_met =
+    /// false` — rather than stalling the fleet forever.
+    pub min_quorum: usize,
+    /// Round deadline as a multiple of the slowest *surviving* node's
+    /// nominal profile (compress + one clean transfer) — the leader
+    /// plans from the nodes that respond, so a crashed node's profile
+    /// does not stretch the deadline. `1.0` admits exactly the
+    /// fault-free fleet; stragglers running slower miss it.
+    pub deadline_slack: f64,
+    /// Materialize the exact-FedAvg oracle and report
+    /// `aggregate_rel_err` against it. Costs O(model) extra memory per
+    /// round — disable for big-model rounds (`federate --no-oracle`),
+    /// which reports NaN instead.
+    pub exact_oracle: bool,
+    /// Seeded chaos schedule (dropout / stragglers / forced drops).
+    /// Link loss lives on [`Link`]; its RNG stream comes from here.
+    pub faults: FaultPlan,
 }
 
 impl Default for FederatedConfig {
@@ -59,6 +102,10 @@ impl Default for FederatedConfig {
             threads_per_node: 1,
             drift: 0.02,
             seed: 7,
+            min_quorum: 0,
+            deadline_slack: 1.0,
+            exact_oracle: true,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -80,17 +127,75 @@ pub struct NodeUpdate {
 #[derive(Debug, Clone)]
 pub struct RoundReport {
     pub round: usize,
+    /// Payload bytes of the updates that made it into the aggregate.
     pub wire_bytes: usize,
     pub dense_bytes: usize,
     pub communication_reduction: f64,
-    /// Mean on-device compression latency (simulated ms).
+    /// Mean on-device compression latency of participants (simulated
+    /// ms). Deliberately *nominal*: a straggler's latency multiplier
+    /// models preemption delaying its upload start, so it shifts
+    /// `deadline_ms`/`round_close_ms` accounting but not the SoC cost
+    /// of the compression itself (see `NodeFaults::latency_mult`).
     pub mean_compress_ms: f64,
-    /// Mean on-device compression energy (simulated mJ).
+    /// Mean on-device compression energy of participants (simulated
+    /// mJ); nominal under stragglers, like `mean_compress_ms`.
     pub mean_compress_mj: f64,
-    /// Wall-clock transfer time of the slowest node (ms).
+    /// Transfer time of the slowest admitted upload, including retry
+    /// timeouts (ms).
     pub round_transfer_ms: f64,
-    /// Relative error of the aggregated global model vs exact FedAvg.
+    /// Relative error of the aggregated global model vs exact FedAvg
+    /// over the same participants (NaN when the oracle is disabled).
     pub aggregate_rel_err: f32,
+    /// Fleet size scheduled for this round.
+    pub scheduled: usize,
+    /// Updates admitted into the aggregate.
+    pub participants: usize,
+    /// Whether the requested quorum (`min_quorum`, or the full fleet
+    /// at 0) was actually reached; `false` marks a degraded round that
+    /// closed on whatever delivered.
+    pub quorum_met: bool,
+    /// Nodes lost this round: fault-plan crashes + transport-exhausted
+    /// uploads.
+    pub dropped: usize,
+    /// Scheduled nodes running at a latency multiplier > 1.
+    pub stragglers: usize,
+    /// Updates delivered but excluded (past deadline, quorum already met).
+    pub late: usize,
+    /// Lost transport attempts that were retransmitted this round.
+    pub retries: usize,
+    /// Payload bytes burned by those lost attempts.
+    pub retrans_bytes: usize,
+    /// The scheduler's admission deadline (simulated ms).
+    pub deadline_ms: f64,
+    /// Simulated time the leader closed the round.
+    pub round_close_ms: f64,
+}
+
+impl RoundReport {
+    /// Machine-readable round report (`federate --json`), including
+    /// every participation/straggler/retry field.
+    pub fn to_json(&self) -> Json {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("round".into(), Json::from(self.round));
+        m.insert("wire_bytes".into(), Json::from(self.wire_bytes));
+        m.insert("dense_bytes".into(), Json::from(self.dense_bytes));
+        m.insert("communication_reduction".into(), Json::from(self.communication_reduction));
+        m.insert("mean_compress_ms".into(), Json::from(self.mean_compress_ms));
+        m.insert("mean_compress_mj".into(), Json::from(self.mean_compress_mj));
+        m.insert("round_transfer_ms".into(), Json::from(self.round_transfer_ms));
+        m.insert("aggregate_rel_err".into(), Json::from(self.aggregate_rel_err as f64));
+        m.insert("scheduled".into(), Json::from(self.scheduled));
+        m.insert("participants".into(), Json::from(self.participants));
+        m.insert("quorum_met".into(), Json::Bool(self.quorum_met));
+        m.insert("dropped".into(), Json::from(self.dropped));
+        m.insert("stragglers".into(), Json::from(self.stragglers));
+        m.insert("late".into(), Json::from(self.late));
+        m.insert("retries".into(), Json::from(self.retries));
+        m.insert("retrans_bytes".into(), Json::from(self.retrans_bytes));
+        m.insert("deadline_ms".into(), Json::from(self.deadline_ms));
+        m.insert("round_close_ms".into(), Json::from(self.round_close_ms));
+        Json::Obj(m)
+    }
 }
 
 /// The federated leader + its edge fleet.
@@ -120,7 +225,9 @@ fn drifted(global: &[(ConvLayer, Tensor)], rng: &mut Rng, drift: f32) -> Vec<Ten
 /// Compress one node's layer batch through the pipeline, replaying
 /// the merged per-layer traces into a fresh SoC timeline. The
 /// simulated cycles/energy are identical to the old serial loop —
-/// the merge is deterministic in layer order.
+/// the merge is deterministic in layer order. Returns `None` when the
+/// node's cancel token trips mid-batch: no partial batch ever reaches
+/// the leader.
 fn compress_node(
     node: usize,
     layers: &[(ConvLayer, Tensor)],
@@ -128,10 +235,11 @@ fn compress_node(
     eps: f32,
     soc: SocConfig,
     threads: usize,
-) -> NodeUpdate {
+    cancel: &CancelToken,
+) -> Option<NodeUpdate> {
     let jobs: Vec<(&ConvLayer, &Tensor)> =
         layers.iter().map(|(l, _)| l).zip(locals).collect();
-    let results = pipeline::compress_layers_ref(&jobs, eps, threads);
+    let results = pipeline::compress_layers_cancellable(&jobs, eps, threads, cancel)?;
     let mut tl = HwTimeline::new(soc);
     pipeline::replay_traces(&results, &mut tl);
     let sim = SimReport::from_timeline(&tl);
@@ -139,7 +247,7 @@ fn compress_node(
         TtBatch::from_decomps(results.into_iter().map(|r| r.decomp).collect());
     let dense_bytes: usize = layers.iter().map(|(l, _)| 4 * l.numel()).sum();
     let wire_bytes = batch.wire_bytes();
-    NodeUpdate { node, batch, wire_bytes, dense_bytes, sim }
+    Some(NodeUpdate { node, batch, wire_bytes, dense_bytes, sim })
 }
 
 impl Coordinator {
@@ -155,45 +263,56 @@ impl Coordinator {
         Coordinator { cfg, global, transport: TransportStats::default() }
     }
 
-    /// Run one round: fan out to worker threads, collect updates,
-    /// reconstruct + FedAvg, advance the global model.
+    /// Run one round: fan out to worker threads, push every surviving
+    /// upload through the lossy transport, admit arrivals through the
+    /// event-driven scheduler, then partial-FedAvg whatever quorum
+    /// made it and advance the global model.
     pub fn round(&mut self, round: usize) -> RoundReport {
         let n = self.cfg.nodes;
-        // Per-node local models (deterministic fork per node+round).
-        let base_rng = Rng::new(self.cfg.seed ^ (round as u64).wrapping_mul(0x9E37));
-        let locals: Vec<Vec<Tensor>> = (0..n)
-            .map(|i| {
-                let mut rng = base_rng.fork(i as u64 + 1);
-                drifted(&self.global, &mut rng, self.cfg.drift)
-            })
-            .collect();
+        let faults = self.cfg.faults.for_round(round, n);
+        let stragglers = faults.iter().filter(|f| f.is_straggler()).count();
+        let plan_drops = faults.iter().filter(|f| f.dropped).count();
 
-        // Exact FedAvg (oracle for the aggregation-error metric).
-        let exact_avg: Vec<Tensor> = (0..self.global.len())
-            .map(|l| {
-                let mut acc = Tensor::zeros(&self.global[l].1.shape);
-                for node_layers in &locals {
-                    for (a, b) in acc.data.iter_mut().zip(&node_layers[l].data) {
-                        *a += b / n as f32;
-                    }
+        // Per-node local models (deterministic fork per node+round —
+        // this stream is untouched by the fault plan, so a benign plan
+        // reproduces the fault-free numerics bit-for-bit). A crashed
+        // node skips the O(model) drift materialization entirely; the
+        // forks are independent per node, so everyone else's local
+        // model is byte-identical either way.
+        let base_rng = Rng::new(self.cfg.seed ^ (round as u64).wrapping_mul(0x9E37));
+        let mut locals: Vec<Option<Vec<Tensor>>> = (0..n)
+            .map(|i| {
+                if faults[i].dropped {
+                    return None;
                 }
-                acc
+                let mut rng = base_rng.fork(i as u64 + 1);
+                Some(drifted(&self.global, &mut rng, self.cfg.drift))
             })
             .collect();
 
         // Fan out compression to worker threads (leader/worker shape).
+        // Crashed nodes spawn nothing; surviving nodes carry a cancel
+        // token so a future admission policy can abort their batch
+        // mid-round without a partial result escaping.
+        let tokens: Vec<CancelToken> =
+            (0..n).map(|_| CancelToken::default()).collect();
         let (tx, rx) = mpsc::channel::<NodeUpdate>();
         let cfg = self.cfg.clone();
         let global = &self.global;
         std::thread::scope(|scope| {
             for (i, local) in locals.iter().enumerate() {
+                let Some(local) = local else { continue };
                 let tx = tx.clone();
                 let soc = cfg.soc.clone();
                 let eps = cfg.eps;
                 let threads = cfg.threads_per_node;
+                let token = &tokens[i];
                 scope.spawn(move || {
-                    let upd = compress_node(i, global, local, eps, soc, threads);
-                    let _ = tx.send(upd);
+                    if let Some(upd) =
+                        compress_node(i, global, local, eps, soc, threads, token)
+                    {
+                        let _ = tx.send(upd);
+                    }
                 });
             }
         });
@@ -201,65 +320,159 @@ impl Coordinator {
         let mut updates: Vec<NodeUpdate> = rx.into_iter().collect();
         updates.sort_by_key(|u| u.node);
 
-        // Transport: every node ships its cores; round latency is the
-        // slowest node (they upload in parallel).
-        let mut round_transfer_ms = 0.0f64;
+        // Deliver on the --no-oracle promise: nothing reads the
+        // drifted local models past this point unless the oracle runs,
+        // so release the O(nodes x model) buffer up front.
+        if !self.cfg.exact_oracle {
+            locals.clear();
+            locals.shrink_to_fit();
+        }
+
+        // Round deadline: the leader's nominal expectation of its
+        // slowest *surviving* node — SimReport latency plus one clean
+        // transfer — scaled by the slack (crashed nodes have no
+        // profile to plan from). At slack 1.0 the fault-free fleet
+        // arrives exactly at (<=) the deadline.
+        let deadline_ms = self.cfg.deadline_slack
+            * updates
+                .iter()
+                .map(|u| u.sim.total_ms + self.cfg.link.transfer_ms(u.wire_bytes))
+                .fold(0.0, f64::max);
+        let min_quorum =
+            if self.cfg.min_quorum == 0 { updates.len() } else { self.cfg.min_quorum };
+
+        // Transport in node order: loss draws come from per-(round,
+        // node) forked streams and stats accumulate in a fixed order,
+        // so the tally is independent of worker-thread timing.
+        let retries_before = self.transport.retries;
+        let retrans_before = self.transport.retrans_bytes;
+        let mut sched: RoundScheduler<NodeUpdate> =
+            RoundScheduler::new(deadline_ms, min_quorum);
+        let mut transport_drops = 0usize;
+        for u in updates {
+            let mut rng = self.cfg.faults.transport_rng(round, u.node);
+            let out = self.transport.send_faulty(&self.cfg.link, u.wire_bytes, &mut rng);
+            if !out.delivered {
+                transport_drops += 1;
+                continue;
+            }
+            // The node starts uploading when its (possibly straggling)
+            // compression finishes; the leader receives it a transfer
+            // (incl. retry timeouts) later.
+            let arrival_ms = u.sim.total_ms * faults[u.node].latency_mult + out.ms;
+            sched.offer(
+                Arrival { node: u.node, arrival_ms, transfer_ms: out.ms, attempts: out.attempts },
+                u,
+            );
+        }
+        let closed = sched.close();
+        let late = closed.late.len();
+        let round_close_ms = closed.close_ms;
+
+        // Participants in node order: the partial-FedAvg summation
+        // order matches the legacy full-participation loop exactly.
+        let mut admitted = closed.admitted;
+        admitted.sort_by_key(|(a, _)| a.node);
+        let k = admitted.len();
+        let round_transfer_ms =
+            admitted.iter().map(|(a, _)| a.transfer_ms).fold(0.0, f64::max);
+        let retries = self.transport.retries - retries_before;
+        let retrans_bytes = self.transport.retrans_bytes - retrans_before;
+
         let mut wire = 0usize;
         let mut dense = 0usize;
-        for u in &updates {
-            let ms = self.transport.send(&self.cfg.link, u.wire_bytes);
-            round_transfer_ms = round_transfer_ms.max(ms);
+        for (_, u) in &admitted {
             wire += u.wire_bytes;
             dense += u.dense_bytes;
         }
 
-        // Leader: reconstruct every node's layers, FedAvg into the new
-        // global model (Eq. 1/2 decode — the receiving side of Fig. 1).
-        let mut new_global: Vec<Tensor> = self
-            .global
-            .iter()
-            .map(|(l, _)| Tensor::zeros(&l.tt_dims()))
-            .collect();
-        for u in &updates {
-            for (l, d) in u.batch.decomps.iter().enumerate() {
-                let w = reconstruct(d);
-                for (a, b) in new_global[l].data.iter_mut().zip(&w.data) {
-                    *a += b / n as f32;
+        // Leader: reconstruct every participant's layers, FedAvg into
+        // the new global model renormalized by the participant count
+        // (Eq. 1/2 decode — the receiving side of Fig. 1). An empty
+        // round leaves the global model untouched.
+        let mut agg_err = if self.cfg.exact_oracle { 0.0f32 } else { f32::NAN };
+        if k > 0 {
+            let mut new_global: Vec<Tensor> = self
+                .global
+                .iter()
+                .map(|(l, _)| Tensor::zeros(&l.tt_dims()))
+                .collect();
+            for (_, u) in &admitted {
+                for (l, d) in u.batch.decomps.iter().enumerate() {
+                    let w = reconstruct(d);
+                    for (a, b) in new_global[l].data.iter_mut().zip(&w.data) {
+                        *a += b / k as f32;
+                    }
                 }
             }
-        }
 
-        // Aggregation error vs the exact average.
-        let mut num = 0.0f64;
-        let mut den = 0.0f64;
-        for (got, want) in new_global.iter().zip(&exact_avg) {
-            let want_r = want.reshape(&got.shape);
-            for (a, b) in got.data.iter().zip(&want_r.data) {
-                num += ((a - b) as f64).powi(2);
-                den += (*b as f64).powi(2);
+            if self.cfg.exact_oracle {
+                // Exact FedAvg over the same participants (oracle for
+                // the aggregation-error metric). Gated: materializing
+                // it costs O(model) extra memory per round.
+                let exact_avg: Vec<Tensor> = (0..self.global.len())
+                    .map(|l| {
+                        let mut acc = Tensor::zeros(&self.global[l].1.shape);
+                        for (_, u) in &admitted {
+                            let node_locals = locals[u.node]
+                                .as_ref()
+                                .expect("admitted node has a local model");
+                            for (a, b) in acc.data.iter_mut().zip(&node_locals[l].data) {
+                                *a += b / k as f32;
+                            }
+                        }
+                        acc
+                    })
+                    .collect();
+                let mut num = 0.0f64;
+                let mut den = 0.0f64;
+                for (got, want) in new_global.iter().zip(&exact_avg) {
+                    let want_r = want.reshape(&got.shape);
+                    for (a, b) in got.data.iter().zip(&want_r.data) {
+                        num += ((a - b) as f64).powi(2);
+                        den += (*b as f64).powi(2);
+                    }
+                }
+                agg_err = (num / den.max(1e-30)).sqrt() as f32;
+            }
+
+            // Advance the global model (no shape clone: the borrow of
+            // the old tensor's shape ends before the slot is written).
+            for (slot, w) in self.global.iter_mut().zip(new_global) {
+                let advanced = w.reshape(&slot.1.shape);
+                slot.1 = advanced;
             }
         }
-        let agg_err = (num / den.max(1e-30)).sqrt() as f32;
 
-        // Advance the global model.
-        for (slot, w) in self.global.iter_mut().zip(new_global) {
-            slot.1 = w.reshape(&slot.1.shape.clone());
-        }
-
-        let mean_ms =
-            updates.iter().map(|u| u.sim.total_ms).sum::<f64>() / updates.len() as f64;
-        let mean_mj =
-            updates.iter().map(|u| u.sim.total_mj).sum::<f64>() / updates.len() as f64;
+        let (mean_ms, mean_mj) = if k > 0 {
+            (
+                admitted.iter().map(|(_, u)| u.sim.total_ms).sum::<f64>() / k as f64,
+                admitted.iter().map(|(_, u)| u.sim.total_mj).sum::<f64>() / k as f64,
+            )
+        } else {
+            (0.0, 0.0)
+        };
 
         RoundReport {
             round,
             wire_bytes: wire,
             dense_bytes: dense,
-            communication_reduction: dense as f64 / wire as f64,
+            communication_reduction: if wire > 0 { dense as f64 / wire as f64 } else { 0.0 },
             mean_compress_ms: mean_ms,
             mean_compress_mj: mean_mj,
             round_transfer_ms,
             aggregate_rel_err: agg_err,
+            scheduled: n,
+            participants: k,
+            quorum_met: k
+                >= if self.cfg.min_quorum == 0 { n } else { self.cfg.min_quorum },
+            dropped: plan_drops + transport_drops,
+            stragglers,
+            late,
+            retries,
+            retrans_bytes,
+            deadline_ms,
+            round_close_ms,
         }
     }
 
@@ -294,6 +507,12 @@ mod tests {
             assert!(r.aggregate_rel_err < 0.12, "{}", r.aggregate_rel_err);
             assert!(r.mean_compress_ms > 0.0);
             assert!(r.round_transfer_ms > 0.0);
+            // fault-free: everyone scheduled participates, on time
+            assert_eq!(r.participants, 3);
+            assert!(r.quorum_met);
+            assert_eq!((r.dropped, r.late, r.retries, r.stragglers), (0, 0, 0, 0));
+            assert!(r.deadline_ms >= r.round_transfer_ms);
+            assert!(r.round_close_ms <= r.deadline_ms);
         }
         // global model stays finite after aggregation
         for (_, w) in &c.global {
@@ -321,6 +540,8 @@ mod tests {
         let r2 = small_coordinator(SocConfig::tt_edge()).run();
         assert_eq!(r1[0].wire_bytes, r2[0].wire_bytes);
         assert_eq!(r1[1].aggregate_rel_err, r2[1].aggregate_rel_err);
+        // byte-identical reports, all fields
+        assert_eq!(format!("{r1:?}"), format!("{r2:?}"));
     }
 
     #[test]
@@ -329,5 +550,59 @@ mod tests {
         let _ = c.round(0);
         assert_eq!(c.transport.messages, 3);
         assert!(c.transport.bytes > 0);
+        assert_eq!(c.transport.retries, 0);
+        assert_eq!(c.transport.dropped, 0);
+    }
+
+    #[test]
+    fn forced_dropout_renormalizes_partial_fedavg() {
+        let mut cfg = small_cfg(SocConfig::tt_edge());
+        cfg.faults.forced_dropouts = vec![(0, 1)];
+        let mut c = Coordinator::new(cfg);
+        c.global.truncate(4);
+        let r = c.round(0);
+        assert_eq!(r.scheduled, 3);
+        assert_eq!(r.participants, 2);
+        assert_eq!(r.dropped, 1);
+        // quorum "all" (0) was not reached — degraded round, flagged
+        assert!(!r.quorum_met);
+        // renormalized aggregate still tracks the participants' exact
+        // average within the per-layer budget
+        assert!(r.aggregate_rel_err < 0.12, "{}", r.aggregate_rel_err);
+        for (_, w) in &c.global {
+            assert!(w.data.iter().all(|v| v.is_finite()));
+        }
+        // the crashed node never hit the wire
+        assert_eq!(c.transport.messages, 2);
+    }
+
+    #[test]
+    fn oracle_gating_skips_the_error_metric_only() {
+        let mut with = small_coordinator(SocConfig::tt_edge());
+        let mut without = small_coordinator(SocConfig::tt_edge());
+        without.cfg.exact_oracle = false;
+        let rw = with.round(0);
+        let ro = without.round(0);
+        assert!(rw.aggregate_rel_err.is_finite());
+        assert!(ro.aggregate_rel_err.is_nan());
+        // everything else — including the advanced global model — is
+        // bit-identical
+        assert_eq!(rw.wire_bytes, ro.wire_bytes);
+        assert_eq!(rw.mean_compress_ms, ro.mean_compress_ms);
+        for ((_, a), (_, b)) in with.global.iter().zip(&without.global) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn round_report_json_has_participation_fields() {
+        let mut c = small_coordinator(SocConfig::tt_edge());
+        let r = c.round(0);
+        let text = r.to_json().render();
+        let j = crate::util::json::parse(&text).unwrap();
+        assert_eq!(j.get("participants").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("dropped").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(j.get("wire_bytes").unwrap().as_usize().unwrap(), r.wire_bytes);
+        assert!(j.get("deadline_ms").unwrap().as_f64().unwrap() > 0.0);
     }
 }

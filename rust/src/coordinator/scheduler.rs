@@ -1,0 +1,206 @@
+//! Event-driven round admission: the substrate the fault-tolerant
+//! coordinator (and every later sharding/caching layer) schedules on.
+//!
+//! A [`RoundScheduler`] consumes *arrival events* — one per node
+//! update, stamped with the simulated time the leader would receive it
+//! (compression latency x straggler multiplier + transport time
+//! including retries) — and closes the round deterministically:
+//!
+//! * every arrival at or before the deadline is admitted;
+//! * past the deadline, arrivals are admitted **only** while the
+//!   admitted count is below `min_quorum` (the leader keeps waiting
+//!   for stragglers it cannot close without);
+//! * everything later is marked late and excluded.
+//!
+//! Events are processed in `(arrival_ms, node)` order, so the outcome
+//! is a pure function of the offered events — no wall-clock, no
+//! threads, byte-for-byte replayable.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One node update's arrival at the leader, in simulated time.
+#[derive(Clone, Copy, Debug)]
+pub struct Arrival {
+    pub node: usize,
+    /// Leader-side receive time: compress x mult + transfer.
+    pub arrival_ms: f64,
+    /// Transfer component alone (including retry timeouts).
+    pub transfer_ms: f64,
+    /// Transport attempts consumed (1 = clean first try).
+    pub attempts: u32,
+}
+
+/// Heap entry: min-order on `(arrival_ms, node)`. Node id breaks
+/// exact-time ties (every node arriving "at the deadline" in the
+/// fault-free case), keeping admission order total and deterministic.
+struct Pending<T> {
+    arrival: Arrival,
+    payload: T,
+}
+
+impl<T> PartialEq for Pending<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp_key(other) == Ordering::Equal
+    }
+}
+impl<T> Eq for Pending<T> {}
+impl<T> PartialOrd for Pending<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Pending<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: reverse for earliest-first pops.
+        self.cmp_key(other).reverse()
+    }
+}
+
+impl<T> Pending<T> {
+    fn cmp_key(&self, other: &Self) -> Ordering {
+        self.arrival
+            .arrival_ms
+            .total_cmp(&other.arrival.arrival_ms)
+            .then(self.arrival.node.cmp(&other.arrival.node))
+    }
+}
+
+/// The closed round: who made it, who was late, and when the leader
+/// stopped listening.
+#[derive(Debug)]
+pub struct ClosedRound<T> {
+    /// Admitted updates in arrival order.
+    pub admitted: Vec<(Arrival, T)>,
+    /// Delivered but excluded (arrived past the deadline with quorum
+    /// already satisfied).
+    pub late: Vec<Arrival>,
+    /// Simulated time the round closed: the last admitted arrival, or
+    /// the deadline itself when the leader closed on an empty/partial
+    /// fleet.
+    pub close_ms: f64,
+    pub deadline_ms: f64,
+}
+
+/// Deadline + quorum admission over a simulated-time event queue.
+pub struct RoundScheduler<T> {
+    deadline_ms: f64,
+    min_quorum: usize,
+    events: BinaryHeap<Pending<T>>,
+}
+
+impl<T> RoundScheduler<T> {
+    /// `min_quorum` is the number of updates the leader keeps waiting
+    /// for past the deadline; pass the scheduled node count for "all".
+    /// When deliveries run out below the quorum (too many dropouts),
+    /// the round still closes with what arrived — the caller reads the
+    /// admitted count (`RoundReport::quorum_met` downstream) to tell a
+    /// satisfied round from a degraded one.
+    pub fn new(deadline_ms: f64, min_quorum: usize) -> Self {
+        RoundScheduler { deadline_ms, min_quorum, events: BinaryHeap::new() }
+    }
+
+    /// Offer one delivered update to the round.
+    pub fn offer(&mut self, arrival: Arrival, payload: T) {
+        self.events.push(Pending { arrival, payload });
+    }
+
+    /// Drain the event queue in simulated-time order and close the
+    /// round under the deadline/quorum policy.
+    pub fn close(mut self) -> ClosedRound<T> {
+        let mut admitted: Vec<(Arrival, T)> = Vec::new();
+        let mut late: Vec<Arrival> = Vec::new();
+        while let Some(Pending { arrival, payload }) = self.events.pop() {
+            if arrival.arrival_ms <= self.deadline_ms || admitted.len() < self.min_quorum {
+                admitted.push((arrival, payload));
+            } else {
+                late.push(arrival);
+            }
+        }
+        let last_admitted =
+            admitted.last().map(|(a, _)| a.arrival_ms).unwrap_or(self.deadline_ms);
+        // The leader closes early only when nothing was excluded (it
+        // heard from the whole scheduled fleet); with late arrivals it
+        // listened until the deadline (or past it, for quorum).
+        let close_ms = if late.is_empty() {
+            last_admitted
+        } else {
+            last_admitted.max(self.deadline_ms)
+        };
+        ClosedRound { admitted, late, close_ms, deadline_ms: self.deadline_ms }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arr(node: usize, arrival_ms: f64) -> Arrival {
+        Arrival { node, arrival_ms, transfer_ms: arrival_ms / 2.0, attempts: 1 }
+    }
+
+    fn close_with(deadline: f64, quorum: usize, times: &[f64]) -> ClosedRound<usize> {
+        let mut s = RoundScheduler::new(deadline, quorum);
+        for (node, &t) in times.iter().enumerate() {
+            s.offer(arr(node, t), node);
+        }
+        s.close()
+    }
+
+    #[test]
+    fn everything_before_deadline_is_admitted_in_time_order() {
+        let c = close_with(100.0, 3, &[90.0, 10.0, 50.0]);
+        let order: Vec<usize> = c.admitted.iter().map(|(a, _)| a.node).collect();
+        assert_eq!(order, vec![1, 2, 0]);
+        assert!(c.late.is_empty());
+        assert_eq!(c.close_ms, 90.0);
+    }
+
+    #[test]
+    fn arrival_exactly_at_deadline_is_admitted() {
+        let c = close_with(100.0, 0, &[100.0]);
+        assert_eq!(c.admitted.len(), 1);
+        assert!(c.late.is_empty());
+    }
+
+    #[test]
+    fn late_arrivals_are_excluded_once_quorum_is_met() {
+        let c = close_with(100.0, 2, &[10.0, 20.0, 150.0, 160.0]);
+        assert_eq!(c.admitted.len(), 2);
+        assert_eq!(c.late.len(), 2);
+        // the leader listened until the deadline before giving up
+        assert_eq!(c.close_ms, 100.0);
+    }
+
+    #[test]
+    fn scheduler_waits_past_deadline_for_quorum() {
+        let c = close_with(100.0, 3, &[10.0, 150.0, 250.0, 300.0]);
+        let order: Vec<usize> = c.admitted.iter().map(|(a, _)| a.node).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+        assert_eq!(c.late.len(), 1);
+        assert_eq!(c.close_ms, 250.0);
+    }
+
+    #[test]
+    fn empty_round_closes_at_deadline() {
+        let c = close_with(42.0, 4, &[]);
+        assert!(c.admitted.is_empty() && c.late.is_empty());
+        assert_eq!(c.close_ms, 42.0);
+        assert_eq!(c.deadline_ms, 42.0);
+    }
+
+    #[test]
+    fn simultaneous_arrivals_break_ties_by_node_id() {
+        let c = close_with(50.0, 0, &[50.0, 50.0, 50.0]);
+        let order: Vec<usize> = c.admitted.iter().map(|(a, _)| a.node).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn quorum_larger_than_fleet_admits_everyone() {
+        let c = close_with(10.0, 8, &[500.0, 600.0]);
+        assert_eq!(c.admitted.len(), 2);
+        assert!(c.late.is_empty());
+        assert_eq!(c.close_ms, 600.0);
+    }
+}

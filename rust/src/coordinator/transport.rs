@@ -1,9 +1,17 @@
 //! Edge-to-leader transport model: the communication channel whose
 //! overhead motivates on-device compression (paper section I).
 //!
-//! A simple latency + bandwidth model; what matters for the Fig.-1
-//! experiment is the *ratio* between shipping dense parameters and
-//! shipping TT cores, which is bandwidth-independent.
+//! A latency + bandwidth model with an optional lossy-link mode: each
+//! attempt is dropped with probability [`Link::loss`] and retried up
+//! to [`Link::max_retries`] times (stop-and-wait — a lost attempt
+//! costs a full transfer timeout before the retransmit). What matters
+//! for the Fig.-1 experiment is the *ratio* between shipping dense
+//! parameters and shipping TT cores, which is bandwidth-independent;
+//! what matters for the fault-tolerant scheduler is that loss and
+//! retries are deterministic functions of the caller-supplied RNG, so
+//! a chaos run replays byte-for-byte from its seed.
+
+use crate::util::Rng;
 
 /// Uplink characteristics of an edge node.
 #[derive(Clone, Copy, Debug)]
@@ -12,31 +20,63 @@ pub struct Link {
     pub bandwidth_kbps: f64,
     /// Per-message latency, milliseconds.
     pub latency_ms: f64,
+    /// Per-attempt loss probability in `[0, 1)`. `0.0` is the exact
+    /// lossless model: one attempt, no RNG consumed.
+    pub loss: f64,
+    /// Retransmissions allowed after the first attempt before the
+    /// message is declared dropped.
+    pub max_retries: u32,
 }
 
 impl Default for Link {
     fn default() -> Self {
-        // A constrained IoT uplink (LTE Cat-M1-class).
-        Link { bandwidth_kbps: 128.0, latency_ms: 50.0 }
+        // A constrained IoT uplink (LTE Cat-M1-class), lossless by
+        // default so existing experiments reproduce exactly.
+        Link { bandwidth_kbps: 128.0, latency_ms: 50.0, loss: 0.0, max_retries: 3 }
     }
 }
 
 impl Link {
-    /// Transfer time for `bytes`, in milliseconds.
+    /// Transfer time for one attempt carrying `bytes`, in milliseconds.
     pub fn transfer_ms(&self, bytes: usize) -> f64 {
         self.latency_ms + bytes as f64 / self.bandwidth_kbps
     }
 }
 
+/// Result of pushing one message through a (possibly lossy) link.
+#[derive(Clone, Copy, Debug)]
+pub struct SendOutcome {
+    /// False when every attempt (1 + `max_retries`) was lost.
+    pub delivered: bool,
+    /// Attempts consumed, including the successful one.
+    pub attempts: u32,
+    /// Total channel time from first attempt to outcome: every lost
+    /// attempt burns a full transfer timeout before the retransmit.
+    pub ms: f64,
+}
+
 /// Tally of bytes moved through the channel.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TransportStats {
+    /// Messages delivered to the leader.
     pub messages: usize,
+    /// Payload bytes of delivered messages (counted once per message,
+    /// on the attempt that got through).
     pub bytes: usize,
+    /// Lost attempts (retransmitted or abandoned).
+    pub retries: usize,
+    /// Payload bytes burned by lost attempts. Conservation law (see
+    /// `tests/transport_properties.rs`): `bytes + retrans_bytes`
+    /// equals payload x total attempts.
+    pub retrans_bytes: usize,
+    /// Messages abandoned after exhausting `max_retries`.
+    pub dropped: usize,
     pub total_ms: f64,
 }
 
 impl TransportStats {
+    /// Lossless send — the original transport model, kept as the exact
+    /// baseline the property tests compare the lossy path against.
     pub fn send(&mut self, link: &Link, bytes: usize) -> f64 {
         let ms = link.transfer_ms(bytes);
         self.messages += 1;
@@ -44,27 +84,108 @@ impl TransportStats {
         self.total_ms += ms;
         ms
     }
+
+    /// Send through a lossy link. With `link.loss == 0.0` this is
+    /// bit-identical to [`TransportStats::send`] (one attempt, the
+    /// exact same `transfer_ms`, and `rng` untouched).
+    pub fn send_faulty(&mut self, link: &Link, bytes: usize, rng: &mut Rng) -> SendOutcome {
+        let per_attempt = link.transfer_ms(bytes);
+        // saturating: --retries u32::MAX means "retry forever", not an
+        // overflow panic (debug) or a zero-attempt wrap (release)
+        let max_attempts = link.max_retries.saturating_add(1);
+        let mut attempts = 0u32;
+        let mut ms = 0.0f64;
+        while attempts < max_attempts {
+            attempts += 1;
+            ms += per_attempt;
+            let lost = link.loss > 0.0 && rng.uniform() < link.loss;
+            if !lost {
+                self.messages += 1;
+                self.bytes += bytes;
+                self.total_ms += ms;
+                return SendOutcome { delivered: true, attempts, ms };
+            }
+            self.retries += 1;
+            self.retrans_bytes += bytes;
+        }
+        self.dropped += 1;
+        self.total_ms += ms;
+        SendOutcome { delivered: false, attempts, ms }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn link(bandwidth_kbps: f64, latency_ms: f64) -> Link {
+        Link { bandwidth_kbps, latency_ms, ..Link::default() }
+    }
+
     #[test]
     fn transfer_time_is_latency_plus_payload() {
-        let l = Link { bandwidth_kbps: 100.0, latency_ms: 10.0 };
+        let l = link(100.0, 10.0);
         assert!((l.transfer_ms(1000) - 20.0).abs() < 1e-9);
         assert!((l.transfer_ms(0) - 10.0).abs() < 1e-9);
     }
 
     #[test]
     fn stats_accumulate() {
-        let l = Link { bandwidth_kbps: 100.0, latency_ms: 0.0 };
+        let l = link(100.0, 0.0);
         let mut s = TransportStats::default();
         s.send(&l, 500);
         s.send(&l, 1500);
         assert_eq!(s.messages, 2);
         assert_eq!(s.bytes, 2000);
         assert!((s.total_ms - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lossless_faulty_send_equals_plain_send() {
+        let l = link(128.0, 50.0);
+        let mut plain = TransportStats::default();
+        let mut faulty = TransportStats::default();
+        let mut rng = Rng::new(1);
+        let before = rng.clone().next_u64();
+        let ms_plain = plain.send(&l, 4096);
+        let out = faulty.send_faulty(&l, 4096, &mut rng);
+        assert!(out.delivered);
+        assert_eq!(out.attempts, 1);
+        assert_eq!(out.ms, ms_plain);
+        assert_eq!(faulty.messages, plain.messages);
+        assert_eq!(faulty.bytes, plain.bytes);
+        assert_eq!(faulty.total_ms, plain.total_ms);
+        assert_eq!(faulty.retries, 0);
+        // zero-loss consumes no randomness
+        assert_eq!(rng.next_u64(), before);
+    }
+
+    #[test]
+    fn total_loss_exhausts_retries_and_reports_drop() {
+        let l = Link { loss: 1.0, max_retries: 2, ..link(100.0, 0.0) };
+        let mut s = TransportStats::default();
+        let mut rng = Rng::new(7);
+        let out = s.send_faulty(&l, 1000, &mut rng);
+        assert!(!out.delivered);
+        assert_eq!(out.attempts, 3);
+        assert!((out.ms - 30.0).abs() < 1e-9);
+        assert_eq!(s.messages, 0);
+        assert_eq!(s.bytes, 0);
+        assert_eq!(s.retries, 3);
+        assert_eq!(s.retrans_bytes, 3000);
+        assert_eq!(s.dropped, 1);
+    }
+
+    #[test]
+    fn lossy_send_is_deterministic_in_the_seed() {
+        let l = Link { loss: 0.4, max_retries: 5, ..link(64.0, 10.0) };
+        let run = || {
+            let mut s = TransportStats::default();
+            let mut rng = Rng::new(0xC0FFEE);
+            let outs: Vec<SendOutcome> =
+                (0..16).map(|_| s.send_faulty(&l, 777, &mut rng)).collect();
+            (format!("{outs:?}"), format!("{s:?}"))
+        };
+        assert_eq!(run(), run());
     }
 }

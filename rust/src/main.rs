@@ -4,11 +4,14 @@
 //!
 //! * `simulate`  — Table III: TTD ResNet-32 compression on Baseline vs
 //!   TT-Edge SoCs (`--eps`, `--seed`, `--parallel N` host workers; the
-//!   simulated cycles are identical at any width).
+//!   simulated cycles are identical at any width; `--json` emits one
+//!   `SimReport` JSON object per SoC).
 //! * `compress`  — Table I: compare TTD / Tucker / TRD on the model
 //!   (`--method all|ttd|tucker|trd`, `--parallel N`).
-//! * `federate`  — Fig. 1: federated rounds over simulated edge nodes
-//!   (`--nodes`, `--rounds`, `--soc baseline|tt-edge`).
+//! * `federate`  — Fig. 1: fault-tolerant federated rounds over
+//!   simulated edge nodes (`--nodes`, `--rounds`,
+//!   `--soc baseline|tt-edge`, chaos: `--dropout p --straggler-mult x
+//!   --quorum q --loss p`, `--json` for machine-readable reports).
 //! * `resources` — Table II: FPGA/45 nm resource + power breakdown.
 //! * `related`   — Table IV: comparison with Qu et al. [21].
 //! * `artifacts` — list AOT artifacts; `--smoke` runs a PJRT check.
@@ -46,9 +49,12 @@ fn print_help() {
     println!(
         "ttedge — TT-Edge (DATE 2026) reproduction\n\n\
          USAGE: ttedge <simulate|compress|federate|resources|related|artifacts> [--opts]\n\n\
-         simulate   Table III (exec time + energy, baseline vs TT-Edge; --parallel N)\n\
+         simulate   Table III (exec time + energy, baseline vs TT-Edge; --parallel N, --json)\n\
          compress   Table I  (TTD vs Tucker vs TRD on ResNet-32; --parallel N)\n\
-         federate   Fig. 1   (federated rounds over edge nodes; --threads N per node)\n\
+         federate   Fig. 1   (fault-tolerant federated rounds; --threads N per node,\n\
+                    --dropout p --straggler-mult x --straggler-frac f --quorum q\n\
+                    --loss p --retries n --deadline-slack s --fault-seed s\n\
+                    --no-oracle --json)\n\
          resources  Table II (resource + power breakdown)\n\
          related    Table IV (vs Qu et al. [21])\n\
          artifacts  list / smoke-run the AOT artifacts"
@@ -66,6 +72,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     } else {
         compress_resnet32(seed, eps, &configs)
     };
+    if args.flag("json") {
+        for r in &reports {
+            println!("{}", r.to_json().render());
+        }
+        return Ok(());
+    }
     println!(
         "workload: ResNet-32, eps={eps}, compression {:.2}x, final params {} \
          ({} host thread{}, {:.0} ms wall)\n",
@@ -175,39 +187,86 @@ fn run_trd(
 }
 
 fn cmd_federate(args: &Args) -> Result<()> {
+    use tt_edge::coordinator::{FaultPlan, Link};
+
     let soc = match args.opt_or("soc", "tt-edge").as_str() {
         "baseline" => SocConfig::baseline(),
         _ => SocConfig::tt_edge(),
+    };
+    let faults = FaultPlan {
+        dropout: args.parse_opt("dropout").unwrap_or(0.0),
+        straggler_mult: args.parse_opt("straggler-mult").unwrap_or(1.0),
+        straggler_frac: args.parse_opt("straggler-frac").unwrap_or(0.25),
+        seed: args.parse_opt("fault-seed").unwrap_or(0xFA17),
+        ..Default::default()
+    };
+    let link = Link {
+        loss: args.parse_opt("loss").unwrap_or(0.0),
+        max_retries: args.parse_opt("retries").unwrap_or(3),
+        ..Link::default()
     };
     let cfg = FederatedConfig {
         nodes: args.parse_opt("nodes").unwrap_or(4),
         rounds: args.parse_opt("rounds").unwrap_or(3),
         eps: args.parse_opt("eps").unwrap_or(0.12),
         threads_per_node: args.parse_opt("threads").unwrap_or(1),
+        min_quorum: args.parse_opt("quorum").unwrap_or(0),
+        deadline_slack: args.parse_opt("deadline-slack").unwrap_or(1.0),
+        exact_oracle: !args.flag("no-oracle"),
         soc,
+        link,
+        faults,
         ..Default::default()
     };
-    println!(
-        "federated run: {} nodes x {} rounds on {} SoCs\n",
-        cfg.nodes,
-        cfg.rounds,
-        cfg.soc.name()
-    );
+    let as_json = args.flag("json");
+    if !as_json {
+        println!(
+            "federated run: {} nodes x {} rounds on {} SoCs \
+             (dropout {:.2}, straggler x{:.1}, link loss {:.2}, quorum {})\n",
+            cfg.nodes,
+            cfg.rounds,
+            cfg.soc.name(),
+            cfg.faults.dropout,
+            cfg.faults.straggler_mult,
+            cfg.link.loss,
+            if cfg.min_quorum == 0 { "all".to_string() } else { cfg.min_quorum.to_string() },
+        );
+    }
     let mut c = Coordinator::new(cfg);
+    let reports = c.run();
+    if as_json {
+        // One JSON object per round — the machine-readable surface of
+        // the same table, with every participation/fault field.
+        for r in &reports {
+            println!("{}", r.to_json().render());
+        }
+        return Ok(());
+    }
     let mut t = Table::new(
         "Fig. 1 workflow: compressed parameter transmission",
-        &["round", "wire KB", "dense KB", "comm red.", "compress ms", "energy mJ", "xfer ms", "agg err"],
+        &[
+            "round", "part", "drop", "late", "retry", "wire KB", "comm red.",
+            "compress ms", "energy mJ", "xfer ms", "deadline ms", "agg err",
+        ],
     );
-    for r in c.run() {
+    for r in &reports {
         t.row(&[
             r.round.to_string(),
+            format!("{}/{}", r.participants, r.scheduled),
+            r.dropped.to_string(),
+            r.late.to_string(),
+            r.retries.to_string(),
             f1(r.wire_bytes as f64 / 1024.0),
-            f1(r.dense_bytes as f64 / 1024.0),
             format!("{:.2}x", r.communication_reduction),
             f1(r.mean_compress_ms),
             f1(r.mean_compress_mj),
             f1(r.round_transfer_ms),
-            format!("{:.4}", r.aggregate_rel_err),
+            f1(r.deadline_ms),
+            if r.aggregate_rel_err.is_nan() {
+                "-".to_string()
+            } else {
+                format!("{:.4}", r.aggregate_rel_err)
+            },
         ]);
     }
     println!("{}", t.render());

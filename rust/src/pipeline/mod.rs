@@ -17,7 +17,7 @@
 //! and ship one [`TtBatch`]), and `benches/hotpath.rs` (serial vs
 //! parallel wall-clock).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 
 use crate::model::resnet32::ConvLayer;
@@ -82,6 +82,32 @@ fn worker_count(requested: usize, jobs: usize) -> usize {
     requested.max(1).min(jobs.max(1))
 }
 
+/// Cooperative cancellation for a layer batch. The fault-tolerant
+/// coordinator hands every node's compression a token; a node the
+/// fault plan crashes gets a pre-cancelled one, and a batch whose
+/// token trips mid-flight is discarded whole — no partially-compressed
+/// batch can ever escape into aggregation.
+#[derive(Debug, Default)]
+pub struct CancelToken {
+    flag: AtomicBool,
+}
+
+impl CancelToken {
+    pub fn cancelled() -> Self {
+        let t = CancelToken::default();
+        t.cancel();
+        t
+    }
+
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+    }
+}
+
 /// Compress every `(layer, tensor)` pair with `threads` workers
 /// stealing from a shared queue. Results come back sorted by layer
 /// index; each carries its own trace. `threads == 1` runs inline
@@ -103,6 +129,24 @@ pub fn compress_layers_ref(
     eps: f32,
     threads: usize,
 ) -> Vec<LayerResult> {
+    compress_layers_cancellable(jobs, eps, threads, &CancelToken::default())
+        .expect("uncancellable batch cannot be cancelled")
+}
+
+/// [`compress_layers_ref`] with cooperative cancellation: workers
+/// check `cancel` before claiming each layer, and a cancelled batch
+/// returns `None` — never a partial result. A never-tripped token is
+/// byte-identical to the plain path (the check is one atomic load per
+/// layer).
+pub fn compress_layers_cancellable(
+    jobs: &[(&ConvLayer, &Tensor)],
+    eps: f32,
+    threads: usize,
+    cancel: &CancelToken,
+) -> Option<Vec<LayerResult>> {
+    if cancel.is_cancelled() {
+        return None;
+    }
     let threads = worker_count(threads, jobs.len());
     let compress_one = |index: usize| -> LayerResult {
         let (layer, w) = jobs[index];
@@ -123,7 +167,14 @@ pub fn compress_layers_ref(
     };
 
     if threads <= 1 {
-        return (0..jobs.len()).map(compress_one).collect();
+        let mut results = Vec::with_capacity(jobs.len());
+        for i in 0..jobs.len() {
+            if cancel.is_cancelled() {
+                return None;
+            }
+            results.push(compress_one(i));
+        }
+        return Some(results);
     }
 
     let cursor = AtomicUsize::new(0);
@@ -136,6 +187,9 @@ pub fn compress_layers_ref(
             scope.spawn(move || loop {
                 // Work stealing: the shared cursor is the queue head;
                 // whichever worker is free claims the next layer.
+                if cancel.is_cancelled() {
+                    break;
+                }
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
                 if i >= jobs.len() {
                     break;
@@ -147,9 +201,12 @@ pub fn compress_layers_ref(
         }
     });
     drop(tx);
+    if cancel.is_cancelled() {
+        return None;
+    }
     let mut results: Vec<LayerResult> = rx.into_iter().collect();
     results.sort_by_key(|r| r.index);
-    results
+    Some(results)
 }
 
 /// Replay the per-layer traces into `sink` in layer order — the
@@ -276,6 +333,45 @@ mod tests {
         assert_eq!(out1.final_params, out4.final_params);
         assert_eq!(rep1[0].total_ms, rep4[0].total_ms);
         assert_eq!(rep1[0].total_mj, rep4[0].total_mj);
+    }
+
+    #[test]
+    fn precancelled_batch_compresses_nothing() {
+        let layers = small_model();
+        let jobs: Vec<(&ConvLayer, &Tensor)> = layers.iter().map(|(l, w)| (l, w)).collect();
+        for threads in [1, 3] {
+            let got = compress_layers_cancellable(&jobs, 0.12, threads, &CancelToken::cancelled());
+            assert!(got.is_none(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn untripped_token_is_identical_to_plain_path() {
+        let layers = small_model();
+        let jobs: Vec<(&ConvLayer, &Tensor)> = layers.iter().map(|(l, w)| (l, w)).collect();
+        let plain = compress_layers_ref(&jobs, 0.12, 2);
+        let tok = CancelToken::default();
+        let cancellable = compress_layers_cancellable(&jobs, 0.12, 2, &tok).unwrap();
+        assert!(!tok.is_cancelled());
+        assert_eq!(plain.len(), cancellable.len());
+        for (a, b) in plain.iter().zip(&cancellable) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.trace.ops, b.trace.ops);
+            for (ca, cb) in a.decomp.cores.iter().zip(&b.decomp.cores) {
+                assert_eq!(ca.data, cb.data);
+            }
+        }
+    }
+
+    #[test]
+    fn mid_flight_cancellation_discards_the_batch() {
+        // Serial path: cancel after the first layer's check — the
+        // batch must come back None, not partially filled.
+        let layers = small_model();
+        let jobs: Vec<(&ConvLayer, &Tensor)> = layers.iter().map(|(l, w)| (l, w)).collect();
+        let tok = CancelToken::default();
+        tok.cancel();
+        assert!(compress_layers_cancellable(&jobs, 0.12, 1, &tok).is_none());
     }
 
     #[test]

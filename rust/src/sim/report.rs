@@ -1,9 +1,12 @@
 //! Per-phase simulation reports — the Table III generator.
 
+use std::collections::BTreeMap;
+
 use crate::sim::config::SocConfig;
 use crate::sim::power::PowerModel;
 use crate::sim::timeline::HwTimeline;
 use crate::trace::Phase;
+use crate::util::json::Json;
 
 /// One row of Table III (a TTD phase on one configuration).
 #[derive(Clone, Debug)]
@@ -48,6 +51,30 @@ impl SimReport {
 
     pub fn phase(&self, p: Phase) -> &PhaseReport {
         self.phases.iter().find(|r| r.phase == p).unwrap()
+    }
+
+    /// Machine-readable report (the `--json` CLI surface): per-phase
+    /// cycles/ms/mJ plus totals, mirroring the Table-III columns.
+    pub fn to_json(&self) -> Json {
+        let phases: Vec<Json> = self
+            .phases
+            .iter()
+            .map(|p| {
+                let mut m = BTreeMap::new();
+                m.insert("phase".into(), Json::from(p.phase.label()));
+                m.insert("cycles".into(), Json::from(p.cycles as f64));
+                m.insert("time_ms".into(), Json::from(p.time_ms));
+                m.insert("energy_mj".into(), Json::from(p.energy_mj));
+                m.insert("core_gated".into(), Json::Bool(p.core_gated));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("config".into(), Json::from(self.config_name.as_str()));
+        m.insert("phases".into(), Json::Arr(phases));
+        m.insert("total_ms".into(), Json::from(self.total_ms));
+        m.insert("total_mj".into(), Json::from(self.total_mj));
+        Json::Obj(m)
     }
 }
 
@@ -160,6 +187,18 @@ mod tests {
         assert!(s.contains("HBD"));
         assert!(s.contains("Sort. & Trunc."));
         assert!(s.contains("Speedup"));
+    }
+
+    #[test]
+    fn json_report_round_trips_and_names_all_phases() {
+        let r = tiny_report(SocConfig::tt_edge());
+        let text = r.to_json().render();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(parsed.get("config").unwrap().as_str().unwrap(), r.config_name);
+        let phases = parsed.get("phases").unwrap().as_arr().unwrap();
+        assert_eq!(phases.len(), Phase::ALL.len());
+        let total = parsed.get("total_ms").unwrap().as_f64().unwrap();
+        assert!((total - r.total_ms).abs() < 1e-12);
     }
 
     #[test]

@@ -50,6 +50,91 @@ impl Json {
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+
+    /// Serialize to compact JSON text. Numbers use Rust's shortest
+    /// round-trip `f64` formatting (deterministic across runs);
+    /// non-finite numbers — e.g. a disabled metric — render as `null`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    // Integral values print without a trailing ".0"
+                    // (usize counters round-trip as integers).
+                    if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                        out.push_str(&format!("{}", *n as i64));
+                    } else {
+                        out.push_str(&format!("{n}"));
+                    }
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32))
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).render_into(out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Convenience constructors for report emitters.
+impl From<f64> for Json {
+    fn from(n: f64) -> Self {
+        Json::Num(n)
+    }
+}
+impl From<usize> for Json {
+    fn from(n: usize) -> Self {
+        Json::Num(n as f64)
+    }
+}
+impl From<&str> for Json {
+    fn from(s: &str) -> Self {
+        Json::Str(s.to_string())
+    }
 }
 
 #[derive(Debug)]
@@ -295,5 +380,28 @@ mod tests {
     fn nested_structures() {
         let j = parse(r#"[[1,2],[3,[4]],{"k":[]}]"#).unwrap();
         assert_eq!(j.as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn render_round_trips_through_parse() {
+        let doc = r#"{"a": [1, 2.5, -3], "b": {"s": "x\n\"y"}, "c": true, "d": null}"#;
+        let j = parse(doc).unwrap();
+        let rendered = j.render();
+        assert_eq!(parse(&rendered).unwrap(), j);
+        // compact + deterministic key order (BTreeMap)
+        assert_eq!(rendered, r#"{"a":[1,2.5,-3],"b":{"s":"x\n\"y"},"c":true,"d":null}"#);
+    }
+
+    #[test]
+    fn render_integral_floats_without_fraction() {
+        assert_eq!(Json::Num(3.0).render(), "3");
+        assert_eq!(Json::Num(-0.125).render(), "-0.125");
+        assert_eq!(Json::from(42usize).render(), "42");
+    }
+
+    #[test]
+    fn render_nan_as_null() {
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
     }
 }

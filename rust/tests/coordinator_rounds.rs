@@ -56,10 +56,47 @@ fn fleet_level_energy_matches_table3_contrast() {
 #[test]
 fn slow_links_dominate_round_latency() {
     let mut cfg_slow = cfg(SocConfig::tt_edge(), 2, 1);
-    cfg_slow.link = Link { bandwidth_kbps: 16.0, latency_ms: 100.0 };
+    cfg_slow.link = Link { bandwidth_kbps: 16.0, latency_ms: 100.0, ..Link::default() };
     let mut cfg_fast = cfg(SocConfig::tt_edge(), 2, 1);
-    cfg_fast.link = Link { bandwidth_kbps: 10_000.0, latency_ms: 1.0 };
+    cfg_fast.link = Link { bandwidth_kbps: 10_000.0, latency_ms: 1.0, ..Link::default() };
     let r_slow = Coordinator::new(cfg_slow).round(0);
     let r_fast = Coordinator::new(cfg_fast).round(0);
     assert!(r_slow.round_transfer_ms > 20.0 * r_fast.round_transfer_ms);
+}
+
+#[test]
+fn full_model_fault_free_round_schedules_everyone_on_time() {
+    // Scheduler-era invariants on the full 31-layer model: with the
+    // default (benign) fault plan the event-driven round is exactly
+    // the legacy all-or-nothing round.
+    let mut c = Coordinator::new(cfg(SocConfig::tt_edge(), 3, 1));
+    let r = &c.run()[0];
+    assert_eq!(r.participants, 3);
+    assert_eq!(r.scheduled, 3);
+    assert_eq!((r.dropped, r.late, r.retries, r.stragglers), (0, 0, 0, 0));
+    // every node arrives at or before the profile-derived deadline,
+    // and the round closes no later than that
+    assert!(r.round_transfer_ms <= r.deadline_ms);
+    assert!(r.round_close_ms <= r.deadline_ms);
+    assert!(r.deadline_ms > 0.0);
+}
+
+#[test]
+fn quorum_round_survives_a_dropped_node_on_the_full_model() {
+    let mut c = Coordinator::new(FederatedConfig {
+        min_quorum: 2,
+        faults: tt_edge::coordinator::FaultPlan {
+            forced_dropouts: vec![(0, 0)],
+            ..Default::default()
+        },
+        ..cfg(SocConfig::tt_edge(), 3, 1)
+    });
+    let r = c.round(0);
+    assert_eq!(r.participants, 2);
+    assert_eq!(r.dropped, 1);
+    // partial FedAvg stays within the per-layer budget
+    assert!(r.aggregate_rel_err < 0.12, "{}", r.aggregate_rel_err);
+    for (_, w) in &c.global {
+        assert!(w.data.iter().all(|v| v.is_finite()));
+    }
 }

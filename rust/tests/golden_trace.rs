@@ -195,6 +195,102 @@ fn trace_summary_matches_golden_snapshot() {
     );
 }
 
+// ------------------------------- federated faulty-round snapshot
+
+/// One benign + one faulty federated round (TT-Edge SoC, node 2
+/// force-dropped) on a truncated model, serialized through the
+/// RoundReport JSON emitter. Pins the event-driven scheduler end to
+/// end: wire bytes, aggregate_rel_err, simulated ms/mJ, deadline and
+/// participation arithmetic — a scheduler refactor that shifts any
+/// simulated cost or admission decision trips this.
+fn federated_round_summary() -> String {
+    use tt_edge::coordinator::{Coordinator, FaultPlan, FederatedConfig};
+
+    let mut out = String::from(
+        "# golden federated rounds (TT_EDGE_BLESS=1 to re-bless)\n",
+    );
+    for (label, faults) in [
+        ("benign", FaultPlan::default()),
+        (
+            "node2-dropped",
+            FaultPlan { forced_dropouts: vec![(0, 2)], ..FaultPlan::default() },
+        ),
+    ] {
+        let cfg = FederatedConfig {
+            nodes: 4,
+            rounds: 1,
+            eps: 0.12,
+            soc: SocConfig::tt_edge(),
+            faults,
+            ..Default::default()
+        };
+        let mut c = Coordinator::new(cfg);
+        c.global.truncate(4);
+        let r = c.round(0);
+        out.push_str(&format!("[{label}]\n{}\n", r.to_json().render()));
+    }
+    out
+}
+
+#[test]
+fn federated_faulty_round_matches_golden_snapshot() {
+    let summary = federated_round_summary();
+    let path: PathBuf =
+        [env!("CARGO_MANIFEST_DIR"), "tests", "golden", "federated_round.golden"]
+            .iter()
+            .collect();
+    let bless = std::env::var("TT_EDGE_BLESS").is_ok();
+    if bless || !path.exists() {
+        // Same protocol as the trace snapshot: prove reproducibility
+        // before pinning, so a fresh checkout can't bless noise.
+        assert_eq!(
+            summary,
+            federated_round_summary(),
+            "federated round summary is not deterministic — cannot bless"
+        );
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &summary).unwrap();
+        eprintln!("blessed golden federated rounds at {}", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        summary, want,
+        "federated round drifted from {} — investigate, then TT_EDGE_BLESS=1 to re-bless",
+        path.display()
+    );
+}
+
+#[test]
+fn faulty_golden_round_has_exactly_one_dropped_node() {
+    // The snapshot's shape contract, asserted directly (the snapshot
+    // file pins the numbers; this pins the semantics).
+    let summary = federated_round_summary();
+    let faulty = summary.split("[node2-dropped]\n").nth(1).unwrap().trim();
+    let j = tt_edge::util::json::parse(faulty).unwrap();
+    assert_eq!(j.get("scheduled").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(j.get("participants").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(j.get("dropped").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(j.get("late").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(j.get("quorum_met").unwrap(), &tt_edge::util::json::Json::Bool(false));
+    let benign = summary
+        .split("[benign]\n")
+        .nth(1)
+        .unwrap()
+        .split("[node2-dropped]")
+        .next()
+        .unwrap()
+        .trim();
+    let jb = tt_edge::util::json::parse(benign).unwrap();
+    assert_eq!(jb.get("participants").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(jb.get("dropped").unwrap().as_usize().unwrap(), 0);
+    // dropping a node shrinks the round's wire traffic
+    assert!(
+        j.get("wire_bytes").unwrap().as_usize().unwrap()
+            < jb.get("wire_bytes").unwrap().as_usize().unwrap()
+    );
+}
+
 // ------------------------------------- serial/parallel equivalence
 
 #[test]

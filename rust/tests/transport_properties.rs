@@ -1,0 +1,139 @@
+//! Property harness for the transport model (ISSUE 2 satellite),
+//! offline-hypothesis style mirroring `ttd_properties.rs`: randomized
+//! invariants through `testutil::check`, so a failure prints the case
+//! index + seed needed to replay the exact counterexample.
+
+use tt_edge::coordinator::transport::{Link, SendOutcome, TransportStats};
+use tt_edge::testutil::check;
+use tt_edge::util::Rng;
+
+fn rand_link(rng: &mut Rng) -> Link {
+    Link {
+        bandwidth_kbps: 1.0 + rng.uniform() * 10_000.0,
+        latency_ms: rng.uniform() * 500.0,
+        loss: 0.0,
+        max_retries: rng.below(6) as u32,
+    }
+}
+
+/// Transfer time is strictly monotone in payload size (more bytes can
+/// never arrive sooner) and latency is an exact lower bound.
+#[test]
+fn transfer_time_monotone_in_payload_bytes() {
+    check(40, 0xBEA7, |rng| {
+        let link = rand_link(rng);
+        let a = rng.below(1 << 20);
+        let b = a + 1 + rng.below(1 << 20);
+        let ta = link.transfer_ms(a);
+        let tb = link.transfer_ms(b);
+        assert!(tb > ta, "bytes {a}->{b} but ms {ta}->{tb}");
+        assert!(ta >= link.latency_ms);
+        // and exactly linear: doubling the payload doubles the
+        // payload-time component
+        let t2 = link.transfer_ms(2 * a);
+        let payload = ta - link.latency_ms;
+        assert!(
+            ((t2 - link.latency_ms) - 2.0 * payload).abs() <= 1e-9 * payload.max(1.0),
+            "non-linear payload time"
+        );
+    });
+}
+
+/// Retry accounting conserves bytes: every attempt's payload lands in
+/// exactly one of `bytes` (the delivering attempt) or `retrans_bytes`
+/// (lost attempts), and `retries` counts the lost attempts.
+#[test]
+fn retry_accounting_conserves_bytes() {
+    check(30, 0xC0DE, |rng| {
+        let link = Link {
+            loss: rng.uniform() * 0.9,
+            max_retries: rng.below(5) as u32,
+            ..rand_link(rng)
+        };
+        let payload = 64 + rng.below(8192);
+        let sends = 1 + rng.below(24);
+        let mut stats = TransportStats::default();
+        let mut draw = rng.fork(1);
+        let outcomes: Vec<SendOutcome> =
+            (0..sends).map(|_| stats.send_faulty(&link, payload, &mut draw)).collect();
+
+        let total_attempts: u32 = outcomes.iter().map(|o| o.attempts).sum();
+        let delivered = outcomes.iter().filter(|o| o.delivered).count();
+        // conservation: every attempt's bytes are accounted exactly once
+        assert_eq!(stats.bytes + stats.retrans_bytes, payload * total_attempts as usize);
+        assert_eq!(stats.bytes, payload * delivered);
+        assert_eq!(stats.retries, (total_attempts as usize) - delivered);
+        assert_eq!(stats.messages, delivered);
+        assert_eq!(stats.dropped, sends - delivered);
+        // attempts are bounded by the retry budget
+        for o in &outcomes {
+            assert!(o.attempts >= 1 && o.attempts <= 1 + link.max_retries);
+            assert!(o.delivered || o.attempts == 1 + link.max_retries);
+            // time is exactly attempts x per-attempt transfer
+            let want = o.attempts as f64 * link.transfer_ms(payload);
+            assert!((o.ms - want).abs() < 1e-6 * want.max(1.0), "{} vs {want}", o.ms);
+        }
+    });
+}
+
+/// A zero-loss link reproduces today's exact latencies: `send_faulty`
+/// is bit-identical to the legacy `send` — same per-message ms, same
+/// stats, no RNG consumed, no retries.
+#[test]
+fn zero_loss_link_reproduces_legacy_latencies() {
+    check(30, 0x10E5, |rng| {
+        let link = rand_link(rng); // loss = 0.0
+        let sends = 1 + rng.below(16);
+        let payloads: Vec<usize> = (0..sends).map(|_| rng.below(1 << 16)).collect();
+
+        let mut legacy = TransportStats::default();
+        let legacy_ms: Vec<f64> = payloads.iter().map(|&b| legacy.send(&link, b)).collect();
+
+        let mut faulty = TransportStats::default();
+        let mut draw = rng.fork(2);
+        let probe = draw.clone().next_u64();
+        let faulty_ms: Vec<f64> = payloads
+            .iter()
+            .map(|&b| {
+                let o = faulty.send_faulty(&link, b, &mut draw);
+                assert!(o.delivered);
+                assert_eq!(o.attempts, 1);
+                o.ms
+            })
+            .collect();
+
+        // bit-identical per-message times and tallies
+        assert_eq!(legacy_ms, faulty_ms);
+        assert_eq!(legacy.messages, faulty.messages);
+        assert_eq!(legacy.bytes, faulty.bytes);
+        assert_eq!(legacy.total_ms, faulty.total_ms);
+        assert_eq!(faulty.retries, 0);
+        assert_eq!(faulty.retrans_bytes, 0);
+        assert_eq!(faulty.dropped, 0);
+        // the zero-loss path must not consume randomness
+        assert_eq!(draw.next_u64(), probe);
+    });
+}
+
+/// The lossy path is a pure function of the RNG stream: identical
+/// seeds give identical outcome sequences and identical stats.
+#[test]
+fn lossy_sends_replay_from_the_seed() {
+    check(20, 0x5EED, |rng| {
+        let link = Link {
+            loss: 0.1 + rng.uniform() * 0.8,
+            max_retries: 1 + rng.below(4) as u32,
+            ..rand_link(rng)
+        };
+        let payload = 1 + rng.below(4096);
+        let stream_seed = rng.next_u64();
+        let run = || {
+            let mut stats = TransportStats::default();
+            let mut draw = Rng::new(stream_seed);
+            let outs: Vec<SendOutcome> =
+                (0..12).map(|_| stats.send_faulty(&link, payload, &mut draw)).collect();
+            (format!("{outs:?}"), format!("{stats:?}"))
+        };
+        assert_eq!(run(), run());
+    });
+}
