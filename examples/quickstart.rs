@@ -1,12 +1,15 @@
-//! Quickstart: compress one conv kernel with Algorithm-1 TTD, check
-//! the reconstruction, and see what the TT-Edge SoC buys you.
+//! Quickstart: compress one conv kernel with Algorithm-1 TTD through
+//! the `CompressionJob` builder, check the reconstruction, and see
+//! what the TT-Edge SoC buys you — both SoCs costed in one streaming
+//! pass, with an op-counting observer stacked on top.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use tt_edge::sim::{HwTimeline, SimReport, SocConfig};
-use tt_edge::trace::{TraceSink, VecSink};
-use tt_edge::ttd::{decompose, reconstruct, relative_error, Tensor};
+use tt_edge::sim::SocConfig;
+use tt_edge::trace::CountingSink;
+use tt_edge::ttd::{reconstruct, Tensor};
 use tt_edge::util::Rng;
+use tt_edge::CompressionJob;
 
 fn main() {
     // A "trained-like" 3x3x64x64 conv kernel (planted TT structure +
@@ -17,35 +20,37 @@ fn main() {
         tt_edge::sim::workload::synthetic_trained_conv(&mut rng, &layer, 3.5, 0.03);
     println!("input tensor: {:?} ({} params)", w.shape, w.numel());
 
-    // --- Algorithm 1: TTD with prescribed accuracy eps ------------
+    // --- Algorithm 1 + SoC costing, one builder, one pass ----------
     let eps = 0.10;
-    let mut trace = VecSink::default();
-    let d = decompose(&w, eps, None, &mut trace);
+    let mut ops = CountingSink::default(); // observer: stacked, not forked
+    let out = CompressionJob::new(&w)
+        .eps(eps)
+        .soc(SocConfig::baseline())
+        .soc(SocConfig::tt_edge())
+        .sink(&mut ops)
+        .run()
+        .expect("no cancel token");
+    let d = out.decomp();
     println!(
-        "TT ranks {:?} -> {} params ({:.2}x compression)",
+        "TT ranks {:?} -> {} params ({:.2}x compression), {} hardware ops",
         d.ranks,
         d.param_count(),
-        d.compression_ratio()
+        d.compression_ratio(),
+        ops.ops
     );
 
     // --- Eq. (1)/(2): reconstruction -------------------------------
-    let err = relative_error(&w, &d);
+    let err = out.outcome.max_rel_err;
     println!("reconstruction error {err:.4} (budget eps = {eps})");
     assert!(err <= eps + 1e-3);
-    let wr = reconstruct(&d);
+    let wr = reconstruct(d);
     assert_eq!(wr.shape, w.shape);
 
     // --- The same operation stream on both SoCs --------------------
-    for cfg in [SocConfig::baseline(), SocConfig::tt_edge()] {
-        let name = cfg.name();
-        let mut tl = HwTimeline::new(cfg);
-        for op in &trace.ops {
-            tl.op(*op);
-        }
-        let r = SimReport::from_timeline(&tl);
+    for r in &out.reports {
         println!(
-            "{name:<9} compression of this layer: {:8.2} ms, {:7.2} mJ",
-            r.total_ms, r.total_mj
+            "{:<9} compression of this layer: {:8.2} ms, {:7.2} mJ",
+            r.config_name, r.total_ms, r.total_mj
         );
     }
     println!("quickstart OK");

@@ -1,13 +1,20 @@
 //! Print the modeled SoC pipeline + the simulated Table III.
-use tt_edge::sim::{compress_resnet32, format_table3, SocConfig};
-use tt_edge::sim::timeline::HwTimeline;
-use tt_edge::trace::{HwOp, Phase, TraceSink, VecSink};
+//!
+//! Demonstrates sink composition: one numerics pass streams through a
+//! `Tee` of (multi-config cost fold, recorded trace) — the costs need
+//! no buffer; the trace is kept only for the raw op aggregates below.
+use tt_edge::sim::{format_table3, CostSink, SocConfig};
+use tt_edge::trace::{HwOp, Phase, Tee, VecSink};
 use tt_edge::sim::workload::{synthetic_model, compress_model};
 
 fn main() {
     let layers = synthetic_model(42, 3.55, 0.035);
+    let mut cost = CostSink::new(&[SocConfig::baseline(), SocConfig::tt_edge()]);
     let mut trace = VecSink::default();
-    let _ = compress_model(&layers, 0.12, &mut trace);
+    {
+        let mut tee = Tee::new(&mut cost, &mut trace);
+        let _ = compress_model(&layers, 0.12, &mut tee);
+    }
     // raw per-phase op aggregates
     let mut phase = Phase::ReshapeEtc;
     let mut tiles_hbd = 0u64; let mut house_elems = 0u64; let mut vecdiv_elems = 0u64;
@@ -35,10 +42,6 @@ fn main() {
     println!("tiles_hbd={tiles_hbd} gemms_hbd={gemm_count_hbd} house_count={house_count} house_elems={house_elems} vecdiv_elems={vecdiv_elems}");
     println!("givens_elems={givens_elems} sort_cmps={sort_cmps} reorder_elems={reorder_elems} trunc_probes={trunc_probes} reshape_elems={reshape_elems} upd_elems={upd_elems}");
 
-    let reports: Vec<_> = [SocConfig::baseline(), SocConfig::tt_edge()].iter().map(|cfg| {
-        let mut tl = HwTimeline::new(cfg.clone());
-        for op in &trace.ops { tl.op(*op); }
-        tt_edge::sim::SimReport::from_timeline(&tl)
-    }).collect();
+    let reports = cost.reports();
     println!("{}", format_table3(&reports[0], &reports[1]));
 }

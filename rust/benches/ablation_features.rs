@@ -1,34 +1,37 @@
 //! Ablation: each TT-Edge mechanism toggled independently (DESIGN.md
 //! section 4). Shows where the 1.7x / 40% actually comes from.
+//!
+//! One numerics pass, seven SoC configurations: the op stream folds
+//! into a multi-config streaming `CostSink` as it is emitted — the
+//! sink-combinator replacement for the old record-the-trace-then-
+//! replay-per-config loop (no `Vec<HwOp>` is materialized).
 
 use tt_edge::metrics::{f1, f2, Table};
 use tt_edge::sim::workload::{compress_model, synthetic_model};
-use tt_edge::sim::{Features, HwTimeline, SimReport, SocConfig};
-use tt_edge::trace::{TraceSink, VecSink};
+use tt_edge::sim::{CostSink, Features, SimReport, SocConfig};
 
 fn main() {
-    // one shared trace: the numerics never change across features
-    let layers = synthetic_model(42, 3.55, 0.035);
-    let mut trace = VecSink::default();
-    let _ = compress_model(&layers, 0.12, &mut trace);
-    let replay = |cfg: SocConfig| -> SimReport {
-        let mut tl = HwTimeline::new(cfg);
-        for op in &trace.ops {
-            tl.op(*op);
-        }
-        SimReport::from_timeline(&tl)
-    };
-
-    let base = replay(SocConfig::baseline());
-    let full = replay(SocConfig::tt_edge());
-
-    let variants: [(&str, Box<dyn Fn(&mut Features)>); 5] = [
-        ("- hbd_acc", Box::new(|f| f.hbd_acc = false)),
-        ("- direct_gemm_link", Box::new(|f| f.direct_gemm_link = false)),
-        ("- spm_retention", Box::new(|f| f.spm_retention = false)),
-        ("- hw_sort_trunc", Box::new(|f| f.hw_sort_trunc = false)),
-        ("- clock_gating", Box::new(|f| f.clock_gating = false)),
+    let variants: [(&str, fn(&mut Features)); 5] = [
+        ("- hbd_acc", |f| f.hbd_acc = false),
+        ("- direct_gemm_link", |f| f.direct_gemm_link = false),
+        ("- spm_retention", |f| f.spm_retention = false),
+        ("- hw_sort_trunc", |f| f.hw_sort_trunc = false),
+        ("- clock_gating", |f| f.clock_gating = false),
     ];
+    let mut configs = vec![SocConfig::baseline(), SocConfig::tt_edge()];
+    for (_, tweak) in &variants {
+        let mut f = Features::ALL_ON;
+        tweak(&mut f);
+        configs.push(SocConfig::tt_edge_with(f));
+    }
+
+    // one numerics run, every configuration costed online
+    let layers = synthetic_model(42, 3.55, 0.035);
+    let mut cost = CostSink::new(&configs);
+    let _ = compress_model(&layers, 0.12, &mut cost);
+    let reports = cost.reports();
+    let base = &reports[0];
+    let full = &reports[1];
 
     let mut t = Table::new(
         "Feature ablation (full ResNet-32 TTD workload)",
@@ -43,21 +46,16 @@ fn main() {
             f1((1.0 - r.total_mj / base.total_mj) * 100.0),
         ]);
     };
-    row(&mut t, "Baseline", &base);
-    row(&mut t, "TT-Edge (full)", &full);
-    for (name, tweak) in &variants {
-        let mut f = Features::ALL_ON;
-        tweak(&mut f);
-        let r = replay(SocConfig::tt_edge_with(f));
-        row(&mut t, name, &r);
+    row(&mut t, "Baseline", base);
+    row(&mut t, "TT-Edge (full)", full);
+    for (i, (name, _)) in variants.iter().enumerate() {
+        row(&mut t, name, &reports[2 + i]);
     }
     println!("{}", t.render());
 
     // sanity: removing any feature must not make it faster than full
-    for (name, tweak) in &variants {
-        let mut f = Features::ALL_ON;
-        tweak(&mut f);
-        let r = replay(SocConfig::tt_edge_with(f));
+    for (i, (name, _)) in variants.iter().enumerate() {
+        let r = &reports[2 + i];
         assert!(
             r.total_ms >= full.total_ms - 1e-9 && r.total_mj >= full.total_mj - 1e-6,
             "{name} improved on full TT-Edge?"

@@ -9,27 +9,25 @@
 
 use tt_edge::metrics::{f2, Table};
 use tt_edge::sim::workload::{compress_model, synthetic_model};
-use tt_edge::sim::{HwTimeline, SimReport, SocConfig};
-use tt_edge::trace::{Phase, TraceSink, VecSink};
+use tt_edge::sim::{CostSink, SocConfig};
+use tt_edge::trace::Phase;
 use tt_edge::ttd::svd::svd;
 use tt_edge::ttd::Matrix;
 use tt_edge::util::Rng;
 
-fn phase_split(trace: &VecSink) -> (f64, f64) {
-    let mut tl = HwTimeline::new(SocConfig::baseline());
-    for op in &trace.ops {
-        tl.op(*op);
-    }
-    let r = SimReport::from_timeline(&tl);
+/// HBD/QR time split of whatever streamed into a baseline-SoC cost
+/// sink — no trace buffering, costs fold online.
+fn phase_split(cost: &CostSink) -> (f64, f64) {
+    let r = cost.reports().remove(0);
     (r.phase(Phase::Hbd).time_ms, r.phase(Phase::QrDiag).time_ms)
 }
 
 fn main() {
     // ---- the real workload: all 31 conv layers --------------------
     let layers = synthetic_model(42, 3.55, 0.035);
-    let mut trace = VecSink::default();
-    let _ = compress_model(&layers, 0.12, &mut trace);
-    let (hbd_w, qr_w) = phase_split(&trace);
+    let mut cost = CostSink::single(SocConfig::baseline());
+    let _ = compress_model(&layers, 0.12, &mut cost);
+    let (hbd_w, qr_w) = phase_split(&cost);
 
     // ---- per-shape view on representative matrices -----------------
     let mut rng = Rng::new(9);
@@ -46,9 +44,9 @@ fn main() {
     );
     for (m, n) in shapes {
         let a = Matrix::from_vec(m, n, rng.normal_vec(m * n));
-        let mut tr = VecSink::default();
-        let _ = svd(&a, &mut tr);
-        let (h, q) = phase_split(&tr);
+        let mut c = CostSink::single(SocConfig::baseline());
+        let _ = svd(&a, &mut c);
+        let (h, q) = phase_split(&c);
         t.row(&[format!("{m}x{n}"), f2(h), f2(q), f2(h / q)]);
     }
     t.row(&[

@@ -1,20 +1,27 @@
-//! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//! Hot-path microbenchmarks for the perf pass (EXPERIMENTS/README.md):
 //! L3 numerics (rank-1 updates, HBD, GK, full-layer TTD), the blocked
 //! vs naive GEMM kernel, the serial vs parallel multi-layer pipeline
-//! (the ISSUE-1 acceptance numbers), and the simulator replay loop.
+//! (the ISSUE-1 acceptance numbers), and the simulator costing loop
+//! (streaming CostSink vs recorded-trace replay).
 //!
 //! Run: `cargo bench --bench hotpath` (or `cargo run --release` on the
 //! compiled bench binary). The "ALL-LAYER PIPELINE" section prints the
-//! parallel-over-serial speedup recorded in the PR description.
+//! parallel-over-serial speedup, and the run writes the machine-
+//! readable numbers to `EXPERIMENTS/BENCH_pipeline.json` (schema in
+//! `EXPERIMENTS/README.md`).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 
 use tt_edge::metrics::bench::{black_box, time_it};
 use tt_edge::pipeline;
 use tt_edge::sim::workload::{compress_model, synthetic_model};
-use tt_edge::sim::{HwTimeline, SocConfig};
-use tt_edge::trace::{NullSink, TraceSink, VecSink};
+use tt_edge::sim::{CostSink, SocConfig};
+use tt_edge::trace::{NullSink, VecSink};
 use tt_edge::ttd::svd::bidiag::bidiagonalize;
 use tt_edge::ttd::svd::house::{apply_left, house};
-use tt_edge::ttd::{decompose, Matrix, Tensor};
+use tt_edge::ttd::{decompose, Matrix, Tensor, TtSpec};
+use tt_edge::util::json::Json;
 use tt_edge::util::Rng;
 
 fn main() {
@@ -54,8 +61,9 @@ fn main() {
     let layer = tt_edge::model::conv_layers().pop().unwrap();
     let mut r2 = Rng::new(2);
     let w: Tensor = tt_edge::sim::workload::synthetic_trained_conv(&mut r2, &layer, 3.5, 0.03);
+    let spec = TtSpec::eps(0.12);
     println!("{}", time_it("ttd decompose 9x64x64", 1, 10, || {
-        black_box(decompose(&w, 0.12, None, &mut NullSink));
+        black_box(decompose(&w, &spec, &mut NullSink));
     }).report());
 
     // ---- ALL-LAYER PIPELINE: serial vs parallel -------------------
@@ -98,17 +106,72 @@ fn main() {
     }
     println!();
 
-    // simulator replay throughput
+    // ---- simulator costing: record-then-replay vs streaming -------
+    // Two comparable end-to-end shapes (same numerics, same both-SoC
+    // costing): (a) decompose into a VecSink then replay the trace,
+    // (b) decompose straight into the streaming CostSink. Plus the
+    // isolated replay loop for raw costing throughput.
+    let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
     let mut trace = VecSink::default();
-    let _ = decompose(&w, 0.12, None, &mut trace);
+    let _ = decompose(&w, &spec, &mut trace);
     let n_ops = trace.ops.len();
-    let res = time_it("sim replay (per layer trace)", 2, 50, || {
-        let mut tl = HwTimeline::new(SocConfig::tt_edge());
-        for op in &trace.ops {
-            tl.op(*op);
-        }
-        black_box(tl.cycles.total());
+    let replay = time_it("sim replay only (per layer trace, both SoCs)", 2, 50, || {
+        let mut cost = CostSink::new(&configs);
+        trace.replay(&mut cost);
+        black_box(cost.timelines()[1].cycles.total());
     });
-    println!("{}  ({} ops, {:.1} Mops/s)", res.report(), n_ops,
-        n_ops as f64 / (res.mean_ms / 1e3) / 1e6);
+    println!("{}  ({} ops, {:.1} Mops/s)", replay.report(), n_ops,
+        n_ops as f64 / (replay.mean_ms / 1e3) / 1e6);
+    let record_replay = time_it("ttd + record trace + replay (both SoCs)", 1, 10, || {
+        let mut rec = VecSink::default();
+        let _ = decompose(&w, &spec, &mut rec);
+        let mut cost = CostSink::new(&configs);
+        rec.replay(&mut cost);
+        black_box(cost.timelines()[1].cycles.total());
+    });
+    println!("{}", record_replay.report());
+    let streaming = time_it("ttd + streaming cost (both SoCs, no buffer)", 1, 10, || {
+        let mut cost = CostSink::new(&configs);
+        let _ = decompose(&w, &spec, &mut cost);
+        black_box(cost.timelines()[1].cycles.total());
+    });
+    println!("{}", streaming.report());
+
+    // ---- machine-readable artifact (EXPERIMENTS/BENCH_pipeline.json)
+    let mut obj = BTreeMap::new();
+    obj.insert("bench".into(), Json::from("hotpath"));
+    obj.insert("workload".into(), Json::from("resnet32 all-layer TTD, eps=0.12, seed=42"));
+    obj.insert("host_threads".into(), Json::from(host_threads));
+    obj.insert("matmul_naive_ms".into(), Json::from(naive.mean_ms));
+    obj.insert("matmul_blocked_ms".into(), Json::from(blocked.mean_ms));
+    obj.insert(
+        "matmul_blocked_speedup".into(),
+        Json::from(naive.mean_ms / blocked.mean_ms),
+    );
+    obj.insert("pipeline_serial_ms".into(), Json::from(serial.mean_ms));
+    let par: Vec<Json> = par_results
+        .iter()
+        .map(|(threads, res)| {
+            let mut m = BTreeMap::new();
+            m.insert("threads".into(), Json::from(*threads));
+            m.insert("ms".into(), Json::from(res.mean_ms));
+            m.insert("speedup_vs_serial".into(), Json::from(serial.mean_ms / res.mean_ms));
+            Json::Obj(m)
+        })
+        .collect();
+    obj.insert("pipeline_parallel".into(), Json::Arr(par));
+    obj.insert("sim_replay_only_ms".into(), Json::from(replay.mean_ms));
+    obj.insert("ttd_record_then_replay_ms".into(), Json::from(record_replay.mean_ms));
+    obj.insert("ttd_streaming_cost_ms".into(), Json::from(streaming.mean_ms));
+    let path: PathBuf =
+        [env!("CARGO_MANIFEST_DIR"), "..", "EXPERIMENTS", "BENCH_pipeline.json"]
+            .iter()
+            .collect();
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    match std::fs::write(&path, Json::Obj(obj).render() + "\n") {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", path.display()),
+    }
 }

@@ -7,8 +7,9 @@
 //! 1. produces a local model update (synthetic drift, or real SGD via
 //!    the PJRT `resnet32_sgd_b8` artifact in the e2e example),
 //! 2. compresses its conv parameters with Algorithm-1 TTD — *timing
-//!    and energy come from the SoC simulator* replaying the node's
-//!    actual op trace under its configuration (Baseline or TT-Edge),
+//!    and energy come from the SoC simulator* folding the node's
+//!    actual op stream online under its configuration (Baseline or
+//!    TT-Edge; streaming cost sink, no trace materialized),
 //! 3. ships the TT cores (wire format: cores + rank header) through
 //!    the transport model.
 //!
@@ -29,7 +30,7 @@
 //! Host-side, nodes still run on `std::thread::scope` workers (no
 //! tokio in the offline build) collecting over mpsc channels; a node
 //! the plan crashes spawns no worker and materializes no local model,
-//! and every surviving batch carries a [`pipeline::CancelToken`] so an
+//! and every surviving batch carries a [`CancelToken`] so an
 //! admission policy can abort it mid-round without a partial result
 //! escaping.
 
@@ -40,10 +41,10 @@ pub mod transport;
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 
+use crate::job::CompressionJob;
 use crate::model::resnet32::ConvLayer;
-use crate::pipeline::{self, CancelToken, TtBatch};
+use crate::pipeline::{CancelToken, TtBatch};
 use crate::sim::report::SimReport;
-use crate::sim::timeline::HwTimeline;
 use crate::sim::SocConfig;
 use crate::ttd::{reconstruct, Tensor};
 use crate::util::json::Json;
@@ -222,12 +223,14 @@ fn drifted(global: &[(ConvLayer, Tensor)], rng: &mut Rng, drift: f32) -> Vec<Ten
         .collect()
 }
 
-/// Compress one node's layer batch through the pipeline, replaying
-/// the merged per-layer traces into a fresh SoC timeline. The
-/// simulated cycles/energy are identical to the old serial loop —
-/// the merge is deterministic in layer order. Returns `None` when the
-/// node's cancel token trips mid-batch: no partial batch ever reaches
-/// the leader.
+/// Compress one node's layer batch through the [`CompressionJob`]
+/// streaming path: every layer folds its hardware ops into a
+/// per-layer cost summary **online**, and the summaries merge
+/// deterministically in layer order — no `Vec<HwOp>` proportional to
+/// the trace is ever allocated, and the simulated cycles/energy are
+/// bit-identical to the old record-then-replay loop. Returns `None`
+/// when the node's cancel token trips mid-batch: no partial batch
+/// ever reaches the leader.
 fn compress_node(
     node: usize,
     layers: &[(ConvLayer, Tensor)],
@@ -239,12 +242,14 @@ fn compress_node(
 ) -> Option<NodeUpdate> {
     let jobs: Vec<(&ConvLayer, &Tensor)> =
         layers.iter().map(|(l, _)| l).zip(locals).collect();
-    let results = pipeline::compress_layers_cancellable(&jobs, eps, threads, cancel)?;
-    let mut tl = HwTimeline::new(soc);
-    pipeline::replay_traces(&results, &mut tl);
-    let sim = SimReport::from_timeline(&tl);
-    let batch =
-        TtBatch::from_decomps(results.into_iter().map(|r| r.decomp).collect());
+    let out = CompressionJob::layer_refs(jobs)
+        .eps(eps)
+        .parallel(threads)
+        .soc(soc)
+        .cancel(cancel)
+        .run()?;
+    let sim = out.reports.into_iter().next().expect("one .soc() config was set");
+    let batch = TtBatch::from_decomps(out.outcome.decomps);
     let dense_bytes: usize = layers.iter().map(|(l, _)| 4 * l.numel()).sum();
     let wire_bytes = batch.wire_bytes();
     Some(NodeUpdate { node, batch, wire_bytes, dense_bytes, sim })

@@ -1,0 +1,446 @@
+//! [`CompressionJob`]: the single user-facing entry point for TTD
+//! compression + SoC costing.
+//!
+//! Replaces the positional-argument sprawl (`delta`, rank caps,
+//! thread counts and `&mut S` sinks threaded through a dozen
+//! signatures) with one builder:
+//!
+//! ```
+//! use tt_edge::sim::SocConfig;
+//! use tt_edge::ttd::Tensor;
+//! use tt_edge::util::Rng;
+//! use tt_edge::CompressionJob;
+//!
+//! let mut rng = Rng::new(7);
+//! let w = Tensor::from_vec(&[4, 4, 4], rng.normal_vec(64));
+//! let out = CompressionJob::new(&w)
+//!     .eps(0.1)
+//!     .rank_cap(8)
+//!     .soc(SocConfig::tt_edge())
+//!     .run()
+//!     .unwrap();
+//! assert_eq!(out.outcome.decomps.len(), 1);
+//! assert_eq!(out.reports.len(), 1);
+//! ```
+//!
+//! The default path streams: every hardware op folds into a
+//! [`CostSink`] as it is emitted, so costing a model allocates no
+//! `Vec<HwOp>` proportional to the trace — summaries merge
+//! deterministically in layer order at any `parallel(n)` width and
+//! are bit-identical to a recorded-trace replay. Attaching an
+//! observer with [`CompressionJob::sink`] opts into per-layer trace
+//! buffering (the observer sees the exact serial-order op stream) —
+//! that is the only path that stores ops.
+
+use crate::model::resnet32::ConvLayer;
+use crate::pipeline::{self, CancelToken};
+use crate::sim::config::SocConfig;
+use crate::sim::cost::CostSink;
+use crate::sim::report::SimReport;
+use crate::sim::workload::{aggregate_outcome_conv, synthetic_model, CompressionOutcome};
+use crate::trace::{Tee, TraceSink, VecSink};
+use crate::ttd::ttd::TtSpec;
+use crate::ttd::{decompose, relative_error, Tensor};
+
+enum Input<'a> {
+    /// One bare tensor: a single Algorithm-1 run.
+    Tensor(&'a Tensor),
+    /// A model: owned `(layer, tensor)` pairs.
+    Layers(&'a [(ConvLayer, Tensor)]),
+    /// A model whose layers and tensors live in separate collections
+    /// (the coordinator's per-node locals) — no weight cloning.
+    Refs(Vec<(&'a ConvLayer, &'a Tensor)>),
+    /// The synthetic-trained ResNet-32 workload (Table I/III).
+    Synthetic { seed: u64, ratio: f64, noise: f32 },
+}
+
+/// Builder for one compression job; see the [module docs](self).
+pub struct CompressionJob<'a> {
+    input: Input<'a>,
+    spec: TtSpec,
+    threads: usize,
+    configs: Vec<SocConfig>,
+    cancel: Option<&'a CancelToken>,
+    observer: Option<&'a mut dyn TraceSink>,
+}
+
+/// What a [`CompressionJob`] produced.
+#[derive(Debug)]
+pub struct JobOutput {
+    /// Decompositions + parameter accounting. For single-tensor jobs
+    /// the "model" is just that tensor (`model_dense_params ==
+    /// numel`); for model jobs this is the whole-ResNet-32 accounting
+    /// every legacy path reported.
+    pub outcome: CompressionOutcome,
+    /// One simulation report per [`CompressionJob::soc`] config, in
+    /// the order they were added (empty when none were).
+    pub reports: Vec<SimReport>,
+}
+
+impl JobOutput {
+    /// The first (for single-tensor jobs: the only) decomposition.
+    pub fn decomp(&self) -> &crate::ttd::TtDecomp {
+        &self.outcome.decomps[0]
+    }
+
+    /// The first configured SoC's report; panics if no `.soc(..)` was
+    /// configured.
+    pub fn report(&self) -> &SimReport {
+        self.reports.first().expect("CompressionJob had no .soc(..) config")
+    }
+}
+
+impl<'a> CompressionJob<'a> {
+    fn with_input(input: Input<'a>) -> Self {
+        CompressionJob {
+            input,
+            spec: TtSpec::default(),
+            threads: 1,
+            configs: Vec::new(),
+            cancel: None,
+            observer: None,
+        }
+    }
+
+    /// Compress one tensor (a single Algorithm-1 run; `parallel` does
+    /// not apply).
+    pub fn new(tensor: &'a Tensor) -> Self {
+        Self::with_input(Input::Tensor(tensor))
+    }
+
+    /// Compress a model given as owned `(layer, tensor)` pairs.
+    ///
+    /// Parameter accounting in [`JobOutput::outcome`] is whole-
+    /// ResNet-32 (the repo's model inventory), matching every legacy
+    /// path — see `workload::aggregate_outcome_conv`.
+    pub fn model(layers: &'a [(ConvLayer, Tensor)]) -> Self {
+        Self::with_input(Input::Layers(layers))
+    }
+
+    /// Compress a model whose layers and tensors live in separate
+    /// collections — borrows everything, clones nothing.
+    pub fn layer_refs(jobs: Vec<(&'a ConvLayer, &'a Tensor)>) -> Self {
+        Self::with_input(Input::Refs(jobs))
+    }
+
+    /// Compress the synthetic-trained ResNet-32 (the Table-I/III
+    /// workload at the repo's calibrated ratio/noise).
+    pub fn synthetic(seed: u64) -> Self {
+        Self::with_input(Input::Synthetic { seed, ratio: 3.55, noise: 0.035 })
+    }
+
+    /// Prescribed relative accuracy (Oseledets `eps`; the per-split
+    /// truncation threshold `delta` derives from it).
+    pub fn eps(mut self, eps: f32) -> Self {
+        self.spec.eps = eps;
+        self
+    }
+
+    /// Alias for [`CompressionJob::eps`] under the paper's
+    /// delta-truncation name.
+    pub fn delta(self, eps: f32) -> Self {
+        self.eps(eps)
+    }
+
+    /// Cap every TT bond rank (see [`TtSpec::rank_cap`]).
+    pub fn rank_cap(mut self, cap: usize) -> Self {
+        self.spec = self.spec.rank_cap(cap);
+        self
+    }
+
+    /// Per-bond rank caps (see [`TtSpec::rank_caps`]).
+    pub fn rank_caps(mut self, caps: &[usize]) -> Self {
+        self.spec = self.spec.rank_caps(caps);
+        self
+    }
+
+    /// Replace the whole numeric spec at once.
+    pub fn spec(mut self, spec: TtSpec) -> Self {
+        self.spec = spec;
+        self
+    }
+
+    /// Host worker threads for the layer fan-out (work-stealing; the
+    /// simulated SoC cost is invariant to this).
+    pub fn parallel(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
+    /// Add one SoC configuration to cost the op stream under
+    /// (streaming, all configs in a single pass). Chain to compare
+    /// microarchitectures.
+    pub fn soc(mut self, config: SocConfig) -> Self {
+        self.configs.push(config);
+        self
+    }
+
+    /// Add several SoC configurations at once.
+    pub fn socs(mut self, configs: &[SocConfig]) -> Self {
+        self.configs.extend(configs.iter().cloned());
+        self
+    }
+
+    /// Cooperative cancellation: a tripped token makes [`run`]
+    /// return `None` — never a partial result.
+    ///
+    /// [`run`]: CompressionJob::run
+    pub fn cancel(mut self, token: &'a CancelToken) -> Self {
+        self.cancel = Some(token);
+        self
+    }
+
+    /// Attach an observer sink that receives the full op stream in
+    /// serial layer order (on top of — not instead of — the streaming
+    /// cost fold). Opts this job into per-layer trace buffering.
+    pub fn sink(mut self, observer: &'a mut dyn TraceSink) -> Self {
+        self.observer = Some(observer);
+        self
+    }
+
+    /// Run the job. Returns `None` iff the cancel token tripped.
+    pub fn run(self) -> Option<JobOutput> {
+        let CompressionJob { input, spec, threads, configs, cancel, observer } = self;
+        let default_token = CancelToken::default();
+        let cancel = cancel.unwrap_or(&default_token);
+
+        // Single tensor: one Algorithm-1 run, streamed straight into
+        // the cost sink (and the observer, when attached).
+        if let Input::Tensor(w) = &input {
+            if cancel.is_cancelled() {
+                return None;
+            }
+            let mut cost = CostSink::new(&configs);
+            let d = match observer {
+                Some(obs) => {
+                    let mut tee = Tee::new(&mut cost, obs);
+                    decompose(w, &spec, &mut tee)
+                }
+                None => decompose(w, &spec, &mut cost),
+            };
+            // Same contract as the model path: a token tripped while
+            // the numerics ran means no result escapes.
+            if cancel.is_cancelled() {
+                return None;
+            }
+            let rel_err = relative_error(w, &d);
+            let numel = w.numel();
+            let tt = d.param_count();
+            let outcome = CompressionOutcome {
+                decomps: vec![d],
+                model_dense_params: numel,
+                conv_dense_params: numel,
+                conv_tt_params: tt,
+                final_params: tt,
+                compression_ratio: numel as f64 / tt as f64,
+                max_rel_err: rel_err,
+            };
+            return Some(JobOutput { outcome, reports: cost.reports() });
+        }
+
+        // Model inputs: resolve to borrowed (layer, tensor) jobs.
+        let owned;
+        let jobs: Vec<(&ConvLayer, &Tensor)> = match input {
+            Input::Tensor(_) => unreachable!("handled above"),
+            Input::Layers(layers) => layers.iter().map(|(l, w)| (l, w)).collect(),
+            Input::Refs(jobs) => jobs,
+            Input::Synthetic { seed, ratio, noise } => {
+                owned = synthetic_model(seed, ratio, noise);
+                owned.iter().map(|(l, w)| (l, w)).collect()
+            }
+        };
+        let conv_dense: usize = jobs.iter().map(|(l, _)| l.numel()).sum();
+
+        if let Some(obs) = observer {
+            // Observer path: record per-layer traces, then stream them
+            // in layer order through a tee of (cost fold, observer) —
+            // the observer sees exactly the serial trace.
+            let results =
+                pipeline::compress_layers_sinked(&jobs, &spec, threads, cancel, VecSink::default)?;
+            let mut cost = CostSink::new(&configs);
+            {
+                let mut tee = Tee::new(&mut cost, obs);
+                for r in &results {
+                    r.sink.replay(&mut tee);
+                }
+            }
+            let max_rel = results.iter().map(|r| r.rel_err).fold(0.0f32, f32::max);
+            let decomps = results.into_iter().map(|r| r.decomp).collect();
+            let outcome = aggregate_outcome_conv(conv_dense, decomps, max_rel);
+            return Some(JobOutput { outcome, reports: cost.reports() });
+        }
+
+        // Default: the streaming path — per-layer cost folds merged in
+        // layer order, no per-op storage anywhere.
+        let batch = pipeline::compress_layers_costed(&jobs, &spec, threads, cancel, &configs)?;
+        let reports = batch.reports();
+        let outcome = aggregate_outcome_conv(conv_dense, batch.decomps, batch.max_rel_err);
+        Some(JobOutput { outcome, reports })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::workload::compress_model;
+    use crate::sim::SocConfig;
+    use crate::trace::NullSink;
+    use crate::util::Rng;
+
+    fn small_model() -> Vec<(ConvLayer, Tensor)> {
+        let mut layers = synthetic_model(5, 3.55, 0.035);
+        layers.truncate(4);
+        layers
+    }
+
+    #[test]
+    fn single_tensor_job_matches_direct_decompose() {
+        let mut rng = Rng::new(31);
+        let w = Tensor::from_vec(&[4, 6, 6], rng.normal_vec(144));
+        let direct = decompose(&w, &TtSpec::eps(0.2), &mut NullSink);
+        let out = CompressionJob::new(&w).eps(0.2).run().unwrap();
+        assert_eq!(out.decomp().ranks, direct.ranks);
+        for (a, b) in out.decomp().cores.iter().zip(&direct.cores) {
+            assert_eq!(a.data, b.data);
+        }
+        assert!(out.reports.is_empty());
+        assert_eq!(out.outcome.model_dense_params, 144);
+        assert_eq!(out.outcome.final_params, direct.param_count());
+    }
+
+    #[test]
+    fn delta_is_an_alias_for_eps() {
+        let mut rng = Rng::new(32);
+        let w = Tensor::from_vec(&[4, 5, 5], rng.normal_vec(100));
+        let a = CompressionJob::new(&w).eps(0.3).run().unwrap();
+        let b = CompressionJob::new(&w).delta(0.3).run().unwrap();
+        assert_eq!(a.decomp().ranks, b.decomp().ranks);
+    }
+
+    #[test]
+    fn rank_cap_binds_every_bond() {
+        let mut rng = Rng::new(33);
+        let w = Tensor::from_vec(&[6, 6, 6], rng.normal_vec(216));
+        let out = CompressionJob::new(&w).eps(0.0).rank_cap(2).run().unwrap();
+        assert!(out.decomp().ranks.iter().all(|&r| r <= 2));
+    }
+
+    #[test]
+    fn model_job_matches_legacy_compress_model() {
+        let layers = small_model();
+        let want = compress_model(&layers, 0.12, &mut NullSink);
+        for threads in [1, 3] {
+            let out = CompressionJob::model(&layers)
+                .eps(0.12)
+                .parallel(threads)
+                .run()
+                .unwrap();
+            assert_eq!(out.outcome.final_params, want.final_params, "threads={threads}");
+            assert_eq!(out.outcome.max_rel_err, want.max_rel_err);
+            assert_eq!(out.outcome.compression_ratio, want.compression_ratio);
+        }
+    }
+
+    #[test]
+    fn streaming_reports_match_recorded_replay() {
+        let layers = small_model();
+        let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
+        // recorded replay oracle
+        let mut trace = crate::trace::VecSink::default();
+        let _ = compress_model(&layers, 0.12, &mut trace);
+        let mut replayed = CostSink::new(&configs);
+        trace.replay(&mut replayed);
+        let want = replayed.reports();
+        for threads in [1, 2] {
+            let out = CompressionJob::model(&layers)
+                .eps(0.12)
+                .parallel(threads)
+                .socs(&configs)
+                .run()
+                .unwrap();
+            assert_eq!(out.reports.len(), 2);
+            for (a, b) in out.reports.iter().zip(&want) {
+                assert_eq!(a.total_ms, b.total_ms, "threads={threads}");
+                assert_eq!(a.total_mj, b.total_mj);
+                for (pa, pb) in a.phases.iter().zip(&b.phases) {
+                    assert_eq!(pa.cycles, pb.cycles, "{:?}", pa.phase);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn observer_sees_the_serial_trace_and_costs_stay_identical() {
+        let layers = small_model();
+        let mut serial = crate::trace::VecSink::default();
+        let _ = compress_model(&layers, 0.12, &mut serial);
+        for threads in [1, 3] {
+            let mut observed = crate::trace::VecSink::default();
+            let out = CompressionJob::model(&layers)
+                .eps(0.12)
+                .parallel(threads)
+                .soc(SocConfig::tt_edge())
+                .sink(&mut observed)
+                .run()
+                .unwrap();
+            assert_eq!(observed.ops, serial.ops, "threads={threads}");
+            // and the report equals the no-observer streaming run
+            let plain = CompressionJob::model(&layers)
+                .eps(0.12)
+                .parallel(threads)
+                .soc(SocConfig::tt_edge())
+                .run()
+                .unwrap();
+            assert_eq!(out.reports[0].total_ms, plain.reports[0].total_ms);
+            assert_eq!(out.reports[0].total_mj, plain.reports[0].total_mj);
+        }
+    }
+
+    #[test]
+    fn cancelled_job_returns_none() {
+        let layers = small_model();
+        let token = CancelToken::cancelled();
+        let out = CompressionJob::model(&layers).cancel(&token).run();
+        assert!(out.is_none());
+        let mut rng = Rng::new(34);
+        let w = Tensor::from_vec(&[4, 4, 4], rng.normal_vec(64));
+        assert!(CompressionJob::new(&w).cancel(&token).run().is_none());
+    }
+
+    #[test]
+    fn layer_refs_borrow_without_cloning() {
+        let layers = small_model();
+        let tensors: Vec<Tensor> = layers.iter().map(|(_, w)| w.clone()).collect();
+        let jobs: Vec<(&ConvLayer, &Tensor)> =
+            layers.iter().map(|(l, _)| l).zip(&tensors).collect();
+        let out = CompressionJob::layer_refs(jobs)
+            .eps(0.12)
+            .soc(SocConfig::tt_edge())
+            .run()
+            .unwrap();
+        let want = CompressionJob::model(&layers).eps(0.12).run().unwrap();
+        assert_eq!(out.outcome.final_params, want.outcome.final_params);
+        assert_eq!(out.reports.len(), 1);
+        assert!(out.reports[0].total_ms > 0.0);
+    }
+
+    #[test]
+    fn synthetic_job_matches_compress_resnet32() {
+        let (want_out, want_reports) = crate::sim::workload::compress_resnet32(
+            9,
+            0.12,
+            &[SocConfig::baseline(), SocConfig::tt_edge()],
+        );
+        let got = CompressionJob::synthetic(9)
+            .eps(0.12)
+            .parallel(2)
+            .socs(&[SocConfig::baseline(), SocConfig::tt_edge()])
+            .run()
+            .unwrap();
+        assert_eq!(got.outcome.final_params, want_out.final_params);
+        for (a, b) in got.reports.iter().zip(&want_reports) {
+            assert_eq!(a.total_ms, b.total_ms);
+            assert_eq!(a.total_mj, b.total_mj);
+        }
+    }
+}

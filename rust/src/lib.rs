@@ -23,6 +23,7 @@
 
 pub mod coordinator;
 pub mod hw_model;
+pub mod job;
 pub mod metrics;
 pub mod model;
 pub mod pipeline;
@@ -32,3 +33,5 @@ pub mod testutil;
 pub mod trace;
 pub mod ttd;
 pub mod util;
+
+pub use job::{CompressionJob, JobOutput};

@@ -1,6 +1,10 @@
 //! `ttedge` — the TT-Edge launcher.
 //!
-//! Subcommands (hand-rolled CLI; clap is unavailable offline):
+//! Subcommands (hand-rolled CLI; clap is unavailable offline). Every
+//! subcommand declares its option/flag surface in [`COMMANDS`];
+//! unknown subcommands, options or flags are a usage error (exit 2)
+//! rather than being silently ignored. All compression paths go
+//! through the [`CompressionJob`] builder's streaming cost sink.
 //!
 //! * `simulate`  — Table III: TTD ResNet-32 compression on Baseline vs
 //!   TT-Edge SoCs (`--eps`, `--seed`, `--parallel N` host workers; the
@@ -21,12 +25,63 @@ use anyhow::Result;
 use tt_edge::coordinator::{Coordinator, FederatedConfig};
 use tt_edge::hw_model::{self, related};
 use tt_edge::metrics::{f1, f2, Table};
-use tt_edge::sim::{compress_resnet32, format_table3, SocConfig};
+use tt_edge::sim::{format_table3, SocConfig};
 use tt_edge::util::cli::Args;
+use tt_edge::CompressionJob;
+
+/// Declared CLI surface of one subcommand — the validation source of
+/// truth. Anything not listed here is a usage error (exit 2), never
+/// silently ignored.
+struct CmdSpec {
+    name: &'static str,
+    opts: &'static [&'static str],
+    flags: &'static [&'static str],
+}
+
+const COMMANDS: &[CmdSpec] = &[
+    CmdSpec { name: "simulate", opts: &["eps", "seed", "parallel"], flags: &["json"] },
+    CmdSpec { name: "compress", opts: &["method", "eps", "seed", "parallel"], flags: &[] },
+    CmdSpec {
+        name: "federate",
+        opts: &[
+            "nodes",
+            "rounds",
+            "eps",
+            "threads",
+            "soc",
+            "quorum",
+            "deadline-slack",
+            "dropout",
+            "straggler-mult",
+            "straggler-frac",
+            "fault-seed",
+            "loss",
+            "retries",
+        ],
+        flags: &["json", "no-oracle"],
+    },
+    CmdSpec { name: "resources", opts: &[], flags: &[] },
+    CmdSpec { name: "related", opts: &[], flags: &[] },
+    CmdSpec { name: "artifacts", opts: &[], flags: &["smoke"] },
+];
 
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    if cmd == "help" || args.flag("help") {
+        print_help();
+        return;
+    }
+    let Some(spec) = COMMANDS.iter().find(|c| c.name == cmd) else {
+        eprintln!("error: unknown command `{cmd}`");
+        eprintln!("run `ttedge help` for usage");
+        std::process::exit(2);
+    };
+    if let Err(msg) = args.validate(spec.opts, spec.flags) {
+        eprintln!("error: {msg}");
+        eprintln!("run `ttedge help` for usage");
+        std::process::exit(2);
+    }
     let result = match cmd {
         "simulate" => cmd_simulate(&args),
         "compress" => cmd_compress(&args),
@@ -34,14 +89,25 @@ fn main() {
         "resources" => cmd_resources(),
         "related" => cmd_related(),
         "artifacts" => cmd_artifacts(&args),
-        _ => {
-            print_help();
-            Ok(())
-        }
+        _ => unreachable!("command table covers every spec"),
     };
     if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
+    }
+}
+
+/// `--key` value with a default — but a *present, unparseable* value
+/// is a usage error (exit 2), never a silent fall-back to the default.
+fn opt_or<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> T {
+    match args.parse_opt_strict(key) {
+        Ok(Some(v)) => v,
+        Ok(None) => default,
+        Err(msg) => {
+            eprintln!("error: {msg}");
+            eprintln!("run `ttedge help` for usage");
+            std::process::exit(2);
+        }
     }
 }
 
@@ -62,16 +128,20 @@ fn print_help() {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let eps: f32 = args.parse_opt("eps").unwrap_or(0.12);
-    let seed: u64 = args.parse_opt("seed").unwrap_or(42);
-    let parallel: usize = args.parse_opt("parallel").unwrap_or(1);
+    let eps: f32 = opt_or(args, "eps", 0.12);
+    let seed: u64 = opt_or(args, "seed", 42);
+    let parallel: usize = opt_or(args, "parallel", 1);
     let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
     let t0 = std::time::Instant::now();
-    let (out, reports) = if parallel > 1 {
-        tt_edge::pipeline::compress_resnet32_parallel(seed, eps, parallel, &configs)
-    } else {
-        compress_resnet32(seed, eps, &configs)
-    };
+    // Streaming job: ops fold into both SoC cost models online — no
+    // trace is materialized at any --parallel width.
+    let job_out = CompressionJob::synthetic(seed)
+        .eps(eps)
+        .parallel(parallel)
+        .socs(&configs)
+        .run()
+        .expect("no cancel token on the CLI path");
+    let (out, reports) = (job_out.outcome, job_out.reports);
     if args.flag("json") {
         for r in &reports {
             println!("{}", r.to_json().render());
@@ -92,13 +162,17 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_compress(args: &Args) -> Result<()> {
-    use tt_edge::sim::workload::{compress_model, synthetic_model};
-    use tt_edge::trace::NullSink;
+    use tt_edge::sim::workload::synthetic_model;
 
     let method = args.opt_or("method", "all");
-    let eps: f32 = args.parse_opt("eps").unwrap_or(0.12);
-    let seed: u64 = args.parse_opt("seed").unwrap_or(42);
-    let parallel: usize = args.parse_opt("parallel").unwrap_or(1);
+    if !matches!(method.as_str(), "all" | "ttd" | "tucker" | "trd") {
+        eprintln!("error: invalid value for --method: `{method}` (expected all|ttd|tucker|trd)");
+        eprintln!("run `ttedge help` for usage");
+        std::process::exit(2);
+    }
+    let eps: f32 = opt_or(args, "eps", 0.12);
+    let seed: u64 = opt_or(args, "seed", 42);
+    let parallel: usize = opt_or(args, "parallel", 1);
     let layers = synthetic_model(seed, 3.55, 0.035);
     let dense = tt_edge::model::param_count();
     let conv_dense: usize = layers.iter().map(|(l, _)| l.numel()).sum();
@@ -131,11 +205,12 @@ fn cmd_compress(args: &Args) -> Result<()> {
     }
     if method == "all" || method == "ttd" {
         let t0 = std::time::Instant::now();
-        let out = if parallel > 1 {
-            tt_edge::pipeline::compress_model_parallel(&layers, eps, parallel, &mut NullSink)
-        } else {
-            compress_model(&layers, eps, &mut NullSink)
-        };
+        let out = CompressionJob::model(&layers)
+            .eps(eps)
+            .parallel(parallel)
+            .run()
+            .expect("no cancel token on the CLI path")
+            .outcome;
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
         t.row(&[
             "TTD (this work)".into(),
@@ -191,27 +266,32 @@ fn cmd_federate(args: &Args) -> Result<()> {
 
     let soc = match args.opt_or("soc", "tt-edge").as_str() {
         "baseline" => SocConfig::baseline(),
-        _ => SocConfig::tt_edge(),
+        "tt-edge" => SocConfig::tt_edge(),
+        other => {
+            eprintln!("error: invalid value for --soc: `{other}` (expected baseline|tt-edge)");
+            eprintln!("run `ttedge help` for usage");
+            std::process::exit(2);
+        }
     };
     let faults = FaultPlan {
-        dropout: args.parse_opt("dropout").unwrap_or(0.0),
-        straggler_mult: args.parse_opt("straggler-mult").unwrap_or(1.0),
-        straggler_frac: args.parse_opt("straggler-frac").unwrap_or(0.25),
-        seed: args.parse_opt("fault-seed").unwrap_or(0xFA17),
+        dropout: opt_or(args, "dropout", 0.0),
+        straggler_mult: opt_or(args, "straggler-mult", 1.0),
+        straggler_frac: opt_or(args, "straggler-frac", 0.25),
+        seed: opt_or(args, "fault-seed", 0xFA17),
         ..Default::default()
     };
     let link = Link {
-        loss: args.parse_opt("loss").unwrap_or(0.0),
-        max_retries: args.parse_opt("retries").unwrap_or(3),
+        loss: opt_or(args, "loss", 0.0),
+        max_retries: opt_or(args, "retries", 3),
         ..Link::default()
     };
     let cfg = FederatedConfig {
-        nodes: args.parse_opt("nodes").unwrap_or(4),
-        rounds: args.parse_opt("rounds").unwrap_or(3),
-        eps: args.parse_opt("eps").unwrap_or(0.12),
-        threads_per_node: args.parse_opt("threads").unwrap_or(1),
-        min_quorum: args.parse_opt("quorum").unwrap_or(0),
-        deadline_slack: args.parse_opt("deadline-slack").unwrap_or(1.0),
+        nodes: opt_or(args, "nodes", 4),
+        rounds: opt_or(args, "rounds", 3),
+        eps: opt_or(args, "eps", 0.12),
+        threads_per_node: opt_or(args, "threads", 1),
+        min_quorum: opt_or(args, "quorum", 0),
+        deadline_slack: opt_or(args, "deadline-slack", 1.0),
         exact_oracle: !args.flag("no-oracle"),
         soc,
         link,

@@ -5,38 +5,54 @@
 //! layer queue out to `std::thread::scope` workers that *steal* work
 //! from a shared atomic cursor: a worker that finishes a small
 //! stage-0 layer immediately grabs the next job instead of waiting on
-//! the big stage-2 kernels. Traces are captured per layer in private
-//! [`VecSink`]s and merged back **deterministically in layer order**,
-//! so the merged stream is op-for-op identical to the serial
-//! `compress_model` trace — the SoC simulator costs the same cycles
-//! and energy no matter how many host threads ran the numerics.
+//! the big stage-2 kernels.
 //!
-//! This is the scaling substrate for everything downstream: the CLI
-//! (`ttedge compress/simulate --parallel N`), the federated
-//! coordinator (nodes compress their layer batch through this module
-//! and ship one [`TtBatch`]), and `benches/hotpath.rs` (serial vs
-//! parallel wall-clock).
+//! Every worker emits its layer's hardware ops into a **private sink**
+//! built by a caller-supplied factory ([`compress_layers_sinked`]),
+//! and the per-layer sinks merge back **deterministically in layer
+//! order**. Two concrete shapes matter:
+//!
+//! * **Streaming (default)** — [`compress_layers_costed`]: each layer
+//!   folds its ops into a [`CostSink`] (per-phase u64 cycle counters,
+//!   O(1) memory in trace length) and the summaries are absorbed in
+//!   layer order. Because all accumulators are u64, the merged totals
+//!   are bit-identical to the serial single-sink stream at any worker
+//!   count. Nothing proportional to the trace is ever allocated.
+//! * **Recording (observers)** — [`compress_layers`] and friends keep
+//!   a [`VecSink`] per layer; [`replay_traces`] replays them in layer
+//!   order, op-for-op identical to the serial trace (golden-pinned by
+//!   `tests/golden_trace.rs`). This is the opt-in path for tests,
+//!   benches and [`crate::job::CompressionJob::sink`] observers.
+//!
+//! This is the scaling substrate for everything downstream: the
+//! [`crate::job::CompressionJob`] builder (the single user-facing
+//! entry point), the CLI (`ttedge compress/simulate --parallel N`),
+//! the federated coordinator (nodes compress their layer batch through
+//! this module and ship one [`TtBatch`]), and `benches/hotpath.rs`
+//! (serial vs parallel wall-clock).
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 
 use crate::model::resnet32::ConvLayer;
 use crate::sim::config::SocConfig;
+use crate::sim::cost::CostSink;
 use crate::sim::report::SimReport;
-use crate::sim::timeline::HwTimeline;
 use crate::sim::workload::{aggregate_outcome, synthetic_model, CompressionOutcome};
 use crate::trace::{TraceSink, VecSink};
-use crate::ttd::ttd::TtDecomp;
+use crate::ttd::ttd::{TtDecomp, TtSpec};
 use crate::ttd::{decompose, relative_error, Tensor};
 
-/// One compressed layer: the decomposition plus the hardware-op trace
-/// its Algorithm-1 run emitted (replayed later in deterministic order).
+/// One compressed layer: the decomposition plus the sink its
+/// Algorithm-1 ops were emitted into — a full [`VecSink`] trace on the
+/// recording path, a folded [`CostSink`] summary on the streaming
+/// path.
 #[derive(Clone, Debug)]
-pub struct LayerResult {
+pub struct LayerResult<S = VecSink> {
     /// Position in the input layer list (merge key).
     pub index: usize,
     pub decomp: TtDecomp,
-    pub trace: VecSink,
+    pub sink: S,
     pub rel_err: f32,
 }
 
@@ -48,7 +64,7 @@ pub struct TtBatch {
 }
 
 impl TtBatch {
-    pub fn from_results(results: &[LayerResult]) -> Self {
+    pub fn from_results<S>(results: &[LayerResult<S>]) -> Self {
         TtBatch { decomps: results.iter().map(|r| r.decomp.clone()).collect() }
     }
 
@@ -108,47 +124,29 @@ impl CancelToken {
     }
 }
 
-/// Compress every `(layer, tensor)` pair with `threads` workers
-/// stealing from a shared queue. Results come back sorted by layer
-/// index; each carries its own trace. `threads == 1` runs inline
-/// (no thread spawn) and is byte-identical to the serial path.
-pub fn compress_layers(
-    layers: &[(ConvLayer, Tensor)],
-    eps: f32,
-    threads: usize,
-) -> Vec<LayerResult> {
-    let jobs: Vec<(&ConvLayer, &Tensor)> = layers.iter().map(|(l, w)| (l, w)).collect();
-    compress_layers_ref(&jobs, eps, threads)
-}
-
-/// Borrowed-pair variant of [`compress_layers`] — callers that hold
-/// layers and tensors in separate collections (the coordinator's
-/// per-node locals) fan out without cloning any weight data.
-pub fn compress_layers_ref(
+/// The generic work-stealing engine. Compress every `(layer, tensor)`
+/// pair with `threads` workers stealing from a shared queue, each
+/// layer emitting into a private sink from `make_sink`. Results come
+/// back sorted by layer index. `threads == 1` runs inline (no thread
+/// spawn) and is byte-identical to the serial path. Workers check
+/// `cancel` before claiming each layer; a cancelled batch returns
+/// `None` — never a partial result.
+pub fn compress_layers_sinked<S, F>(
     jobs: &[(&ConvLayer, &Tensor)],
-    eps: f32,
-    threads: usize,
-) -> Vec<LayerResult> {
-    compress_layers_cancellable(jobs, eps, threads, &CancelToken::default())
-        .expect("uncancellable batch cannot be cancelled")
-}
-
-/// [`compress_layers_ref`] with cooperative cancellation: workers
-/// check `cancel` before claiming each layer, and a cancelled batch
-/// returns `None` — never a partial result. A never-tripped token is
-/// byte-identical to the plain path (the check is one atomic load per
-/// layer).
-pub fn compress_layers_cancellable(
-    jobs: &[(&ConvLayer, &Tensor)],
-    eps: f32,
+    spec: &TtSpec,
     threads: usize,
     cancel: &CancelToken,
-) -> Option<Vec<LayerResult>> {
+    make_sink: F,
+) -> Option<Vec<LayerResult<S>>>
+where
+    S: TraceSink + Send,
+    F: Fn() -> S + Sync,
+{
     if cancel.is_cancelled() {
         return None;
     }
     let threads = worker_count(threads, jobs.len());
-    let compress_one = |index: usize| -> LayerResult {
+    let compress_one = |index: usize| -> LayerResult<S> {
         let (layer, w) = jobs[index];
         let dims = layer.tt_dims();
         // reshape only when the caller's tensor is not already in the
@@ -160,10 +158,10 @@ pub fn compress_layers_cancellable(
             reshaped = w.reshape(&dims);
             &reshaped
         };
-        let mut trace = VecSink::default();
-        let decomp = decompose(t, eps, None, &mut trace);
+        let mut sink = make_sink();
+        let decomp = decompose(t, spec, &mut sink);
         let rel_err = relative_error(t, &decomp);
-        LayerResult { index, decomp, trace, rel_err }
+        LayerResult { index, decomp, sink, rel_err }
     };
 
     if threads <= 1 {
@@ -178,7 +176,7 @@ pub fn compress_layers_cancellable(
     }
 
     let cursor = AtomicUsize::new(0);
-    let (tx, rx) = mpsc::channel::<LayerResult>();
+    let (tx, rx) = mpsc::channel::<LayerResult<S>>();
     std::thread::scope(|scope| {
         for _ in 0..threads {
             let tx = tx.clone();
@@ -204,26 +202,110 @@ pub fn compress_layers_cancellable(
     if cancel.is_cancelled() {
         return None;
     }
-    let mut results: Vec<LayerResult> = rx.into_iter().collect();
+    let mut results: Vec<LayerResult<S>> = rx.into_iter().collect();
     results.sort_by_key(|r| r.index);
     Some(results)
 }
 
+/// Recording path: compress every `(layer, tensor)` pair, each layer
+/// carrying its own full [`VecSink`] trace.
+pub fn compress_layers(
+    layers: &[(ConvLayer, Tensor)],
+    eps: f32,
+    threads: usize,
+) -> Vec<LayerResult> {
+    let jobs: Vec<(&ConvLayer, &Tensor)> = layers.iter().map(|(l, w)| (l, w)).collect();
+    compress_layers_ref(&jobs, eps, threads)
+}
+
+/// Borrowed-pair variant of [`compress_layers`] — callers that hold
+/// layers and tensors in separate collections (the coordinator's
+/// per-node locals) fan out without cloning any weight data.
+pub fn compress_layers_ref(
+    jobs: &[(&ConvLayer, &Tensor)],
+    eps: f32,
+    threads: usize,
+) -> Vec<LayerResult> {
+    compress_layers_cancellable(jobs, eps, threads, &CancelToken::default())
+        .expect("uncancellable batch cannot be cancelled")
+}
+
+/// [`compress_layers_ref`] with cooperative cancellation (see
+/// [`compress_layers_sinked`] for the cancellation contract). A
+/// never-tripped token is byte-identical to the plain path (the check
+/// is one atomic load per layer).
+pub fn compress_layers_cancellable(
+    jobs: &[(&ConvLayer, &Tensor)],
+    eps: f32,
+    threads: usize,
+    cancel: &CancelToken,
+) -> Option<Vec<LayerResult>> {
+    compress_layers_sinked(jobs, &TtSpec::eps(eps), threads, cancel, VecSink::default)
+}
+
+/// A streaming-compressed layer batch: decompositions plus the merged
+/// per-config cost summaries — no per-op storage anywhere.
+#[derive(Debug)]
+pub struct CostedBatch {
+    pub decomps: Vec<TtDecomp>,
+    /// Per-layer relative reconstruction errors, in layer order.
+    pub rel_errs: Vec<f32>,
+    pub max_rel_err: f32,
+    /// The layer-order merge of every layer's streaming cost summary.
+    pub cost: CostSink,
+}
+
+impl CostedBatch {
+    pub fn reports(&self) -> Vec<SimReport> {
+        self.cost.reports()
+    }
+}
+
+/// Streaming default path: compress the batch with each layer folding
+/// its ops into a private [`CostSink`] over `configs`, then merge the
+/// summaries in layer order. Memory is O(layers x configs), constant
+/// in trace length; the merged cycle/energy totals are bit-identical
+/// to a `VecSink`-then-replay run at any thread count (pinned by
+/// `tests/sink_composition.rs` and the golden-trace harness).
+pub fn compress_layers_costed(
+    jobs: &[(&ConvLayer, &Tensor)],
+    spec: &TtSpec,
+    threads: usize,
+    cancel: &CancelToken,
+    configs: &[SocConfig],
+) -> Option<CostedBatch> {
+    let results =
+        compress_layers_sinked(jobs, spec, threads, cancel, || CostSink::new(configs))?;
+    let mut cost = CostSink::new(configs);
+    let mut decomps = Vec::with_capacity(results.len());
+    let mut rel_errs = Vec::with_capacity(results.len());
+    let mut max_rel = 0.0f32;
+    for r in results {
+        cost.absorb(&r.sink);
+        if r.rel_err > max_rel {
+            max_rel = r.rel_err;
+        }
+        rel_errs.push(r.rel_err);
+        decomps.push(r.decomp);
+    }
+    Some(CostedBatch { decomps, rel_errs, max_rel_err: max_rel, cost })
+}
+
 /// Replay the per-layer traces into `sink` in layer order — the
-/// deterministic merge. Because Algorithm 1 is deterministic per
-/// layer, the merged stream equals the serial single-sink trace
-/// op for op (asserted by `tests/golden_trace.rs`).
+/// deterministic merge of the recording path. Because Algorithm 1 is
+/// deterministic per layer, the merged stream equals the serial
+/// single-sink trace op for op (asserted by `tests/golden_trace.rs`).
 pub fn replay_traces<S: TraceSink>(results: &[LayerResult], sink: &mut S) {
     for r in results {
-        for op in &r.trace.ops {
-            sink.op(*op);
-        }
+        r.sink.replay(sink);
     }
 }
 
 /// Parallel drop-in for `sim::workload::compress_model`: same
 /// [`CompressionOutcome`], same merged trace into `sink`, computed on
-/// `threads` workers.
+/// `threads` workers. Records per-layer traces (O(trace) memory) —
+/// use [`compress_layers_costed`] / [`crate::job::CompressionJob`]
+/// when only costs are needed.
 pub fn compress_model_parallel<S: TraceSink>(
     layers: &[(ConvLayer, Tensor)],
     eps: f32,
@@ -238,8 +320,9 @@ pub fn compress_model_parallel<S: TraceSink>(
 }
 
 /// Parallel drop-in for `sim::workload::compress_resnet32`: compress
-/// the synthetic-trained model on `threads` workers, then replay the
-/// merged trace under each SoC configuration.
+/// the synthetic-trained model on `threads` workers, costing the op
+/// stream **online** under each SoC configuration — no trace is
+/// materialized at any thread count.
 pub fn compress_resnet32_parallel(
     seed: u64,
     eps: f32,
@@ -247,18 +330,17 @@ pub fn compress_resnet32_parallel(
     configs: &[SocConfig],
 ) -> (CompressionOutcome, Vec<SimReport>) {
     let layers = synthetic_model(seed, 3.55, 0.035);
-    let mut trace = VecSink::default();
-    let outcome = compress_model_parallel(&layers, eps, threads, &mut trace);
-    let reports = configs
-        .iter()
-        .map(|cfg| {
-            let mut tl = HwTimeline::new(cfg.clone());
-            for op in &trace.ops {
-                tl.op(*op);
-            }
-            SimReport::from_timeline(&tl)
-        })
-        .collect();
+    let jobs: Vec<(&ConvLayer, &Tensor)> = layers.iter().map(|(l, w)| (l, w)).collect();
+    let batch = compress_layers_costed(
+        &jobs,
+        &TtSpec::eps(eps),
+        threads,
+        &CancelToken::default(),
+        configs,
+    )
+    .expect("uncancellable batch cannot be cancelled");
+    let reports = batch.reports();
+    let outcome = aggregate_outcome(&layers, batch.decomps, batch.max_rel_err);
     (outcome, reports)
 }
 
@@ -336,6 +418,48 @@ mod tests {
     }
 
     #[test]
+    fn streaming_costed_batch_matches_recorded_replay() {
+        // The acceptance invariant at the pipeline level: the O(1)-
+        // memory streaming merge costs bit-identically to recording
+        // every op and replaying.
+        let layers = small_model();
+        let jobs: Vec<(&ConvLayer, &Tensor)> = layers.iter().map(|(l, w)| (l, w)).collect();
+        let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
+        for threads in [1, 3] {
+            let batch = compress_layers_costed(
+                &jobs,
+                &TtSpec::eps(0.12),
+                threads,
+                &CancelToken::default(),
+                &configs,
+            )
+            .unwrap();
+            let recorded = compress_layers_ref(&jobs, 0.12, threads);
+            let mut replayed = CostSink::new(&configs);
+            replay_traces(&recorded, &mut replayed);
+            for (a, b) in batch.cost.timelines().iter().zip(replayed.timelines()) {
+                assert_eq!(a.cycles.total(), b.cycles.total(), "threads={threads}");
+                for p in crate::trace::Phase::ALL {
+                    assert_eq!(a.cycles.get(p), b.cycles.get(p), "{p:?}");
+                }
+            }
+            let ra = batch.reports();
+            let rb = replayed.reports();
+            for (a, b) in ra.iter().zip(&rb) {
+                assert_eq!(a.total_ms, b.total_ms);
+                assert_eq!(a.total_mj, b.total_mj);
+            }
+            // identical numerics on both paths
+            for (a, b) in batch.decomps.iter().zip(&recorded) {
+                for (ca, cb) in a.cores.iter().zip(&b.decomp.cores) {
+                    assert_eq!(ca.data, cb.data);
+                }
+            }
+            assert_eq!(batch.rel_errs.len(), layers.len());
+        }
+    }
+
+    #[test]
     fn precancelled_batch_compresses_nothing() {
         let layers = small_model();
         let jobs: Vec<(&ConvLayer, &Tensor)> = layers.iter().map(|(l, w)| (l, w)).collect();
@@ -356,7 +480,7 @@ mod tests {
         assert_eq!(plain.len(), cancellable.len());
         for (a, b) in plain.iter().zip(&cancellable) {
             assert_eq!(a.index, b.index);
-            assert_eq!(a.trace.ops, b.trace.ops);
+            assert_eq!(a.sink.ops, b.sink.ops);
             for (ca, cb) in a.decomp.cores.iter().zip(&b.decomp.cores) {
                 assert_eq!(ca.data, cb.data);
             }
@@ -387,7 +511,7 @@ mod tests {
         let results = compress_layers(&layers, 0.12, 2);
         let mut merged = VecSink::default();
         replay_traces(&results, &mut merged);
-        let per_layer_total: usize = results.iter().map(|r| r.trace.ops.len()).sum();
+        let per_layer_total: usize = results.iter().map(|r| r.sink.ops.len()).sum();
         assert_eq!(merged.ops.len(), per_layer_total);
         let gemms = merged.count(|o| matches!(o, HwOp::Gemm { .. }));
         assert!(gemms > 0);

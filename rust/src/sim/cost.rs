@@ -1,0 +1,174 @@
+//! Streaming cost sink: fold the hardware-op stream into per-phase
+//! cycles/energy **online**, under any number of [`SocConfig`]s at
+//! once, without ever materializing a `Vec<HwOp>`.
+//!
+//! This is the default consumer of the numerics' trace. Memory is
+//! O(#configs x #phases) — constant in trace length — so simulate /
+//! federate scale to arbitrarily large models. Per-layer sinks merge
+//! deterministically in layer order via [`CostSink::absorb`]: all
+//! accumulators are u64 cycle counts, so the merged totals are
+//! bit-identical to streaming one concatenated trace (and therefore to
+//! the legacy `VecSink`-then-replay path, pinned by the golden-trace
+//! harness and `tests/sink_composition.rs`).
+
+use crate::sim::config::SocConfig;
+use crate::sim::report::SimReport;
+use crate::sim::timeline::HwTimeline;
+use crate::trace::{HwOp, TraceSink};
+
+/// A bank of [`HwTimeline`]s, one per SoC configuration, fed by a
+/// single op stream.
+#[derive(Clone, Debug)]
+pub struct CostSink {
+    timelines: Vec<HwTimeline>,
+}
+
+impl CostSink {
+    /// Cost the stream under every configuration in `configs`
+    /// simultaneously (one pass over the numerics instead of one
+    /// replay per config).
+    pub fn new(configs: &[SocConfig]) -> Self {
+        CostSink { timelines: configs.iter().map(|c| HwTimeline::new(c.clone())).collect() }
+    }
+
+    /// Single-configuration convenience.
+    pub fn single(config: SocConfig) -> Self {
+        CostSink { timelines: vec![HwTimeline::new(config)] }
+    }
+
+    /// Fold another sink (same config bank, e.g. one layer's private
+    /// sink) into this one. Call in layer order for the deterministic
+    /// merge; see [`HwTimeline::absorb`] for why the result is
+    /// bit-identical to one long stream.
+    pub fn absorb(&mut self, other: &CostSink) {
+        assert_eq!(
+            self.timelines.len(),
+            other.timelines.len(),
+            "CostSink::absorb: config banks differ"
+        );
+        for (mine, theirs) in self.timelines.iter_mut().zip(&other.timelines) {
+            // hard assert: silently merging cycles costed under a
+            // different SoC would corrupt every report downstream
+            assert_eq!(
+                mine.config.name(),
+                theirs.config.name(),
+                "CostSink::absorb: config banks differ"
+            );
+            mine.absorb(theirs);
+        }
+    }
+
+    /// One [`SimReport`] per configuration, in constructor order.
+    pub fn reports(&self) -> Vec<SimReport> {
+        self.timelines.iter().map(SimReport::from_timeline).collect()
+    }
+
+    /// The underlying timelines (cycle/stat introspection).
+    pub fn timelines(&self) -> &[HwTimeline] {
+        &self.timelines
+    }
+}
+
+impl TraceSink for CostSink {
+    #[inline]
+    fn op(&mut self, op: HwOp) {
+        for tl in &mut self.timelines {
+            tl.op(op);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Phase, VecSink};
+
+    fn stream() -> Vec<HwOp> {
+        vec![
+            HwOp::SetPhase(Phase::Hbd),
+            HwOp::HouseGen { len: 64 },
+            HwOp::Gemm { m: 16, n: 16, k: 16 },
+            HwOp::SetPhase(Phase::SortTrunc),
+            HwOp::Sort { n: 16, swaps: 5 },
+            HwOp::Trunc { probes: 4, veclen: 16 },
+        ]
+    }
+
+    #[test]
+    fn streaming_equals_replay_per_phase() {
+        let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
+        let mut cost = CostSink::new(&configs);
+        let mut vec = VecSink::default();
+        for op in stream() {
+            cost.op(op);
+            vec.op(op);
+        }
+        for (i, cfg) in configs.iter().enumerate() {
+            let mut tl = HwTimeline::new(cfg.clone());
+            vec.replay(&mut tl);
+            for p in Phase::ALL {
+                assert_eq!(cost.timelines()[i].cycles.get(p), tl.cycles.get(p), "{p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn absorb_in_order_equals_one_stream() {
+        let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
+        // one long stream...
+        let mut whole = CostSink::new(&configs);
+        for op in stream() {
+            whole.op(op);
+        }
+        for op in stream() {
+            whole.op(op);
+        }
+        // ...vs two per-"layer" sinks merged in order
+        let mut merged = CostSink::new(&configs);
+        for _ in 0..2 {
+            let mut part = CostSink::new(&configs);
+            for op in stream() {
+                part.op(op);
+            }
+            merged.absorb(&part);
+        }
+        for (a, b) in whole.timelines().iter().zip(merged.timelines()) {
+            assert_eq!(a.cycles.total(), b.cycles.total());
+            for p in Phase::ALL {
+                assert_eq!(a.cycles.get(p), b.cycles.get(p));
+            }
+            assert_eq!(a.stats.gemms, b.stats.gemms);
+            assert_eq!(a.stats.sort_compares, b.stats.sort_compares);
+        }
+        // and the f64 report layer is computed from identical u64s
+        let ra = whole.reports();
+        let rb = merged.reports();
+        for (a, b) in ra.iter().zip(&rb) {
+            assert_eq!(a.total_ms, b.total_ms);
+            assert_eq!(a.total_mj, b.total_mj);
+        }
+    }
+
+    #[test]
+    fn reports_follow_constructor_order() {
+        let mut cost = CostSink::new(&[SocConfig::baseline(), SocConfig::tt_edge()]);
+        for op in stream() {
+            cost.op(op);
+        }
+        let r = cost.reports();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0].config_name, SocConfig::baseline().name());
+        assert_eq!(r[1].config_name, SocConfig::tt_edge().name());
+        // offloaded phases cost less on TT-Edge
+        assert!(r[1].total_ms < r[0].total_ms);
+    }
+
+    #[test]
+    fn empty_bank_is_a_null_sink() {
+        let mut cost = CostSink::new(&[]);
+        for op in stream() {
+            cost.op(op);
+        }
+        assert!(cost.reports().is_empty());
+    }
+}

@@ -1,10 +1,13 @@
 //! The edge-SoC simulator: the paper's hardware contribution as an
 //! executable model.
 //!
-//! The real TTD numerics ([`crate::ttd`]) emit a hardware-op trace;
-//! [`timeline::HwTimeline`] costs it under a [`config::SocConfig`]
-//! (Baseline or TT-Edge), and [`power`] integrates the Table-II power
-//! states over the phase timeline. [`report`] renders Table III.
+//! The real TTD numerics ([`crate::ttd`]) emit a hardware-op stream;
+//! [`cost::CostSink`] folds it **online** into [`timeline::HwTimeline`]
+//! accumulators under any number of [`config::SocConfig`]s (Baseline
+//! and TT-Edge in one pass, O(1) memory in trace length), and
+//! [`power`] integrates the Table-II power states over the phase
+//! timeline. [`report`] renders Table III. Recorded `VecSink` traces
+//! replay to the same accumulators bit-for-bit.
 //!
 //! See DESIGN.md section 6 for the modelling approach and section 2 for
 //! why a cycle-approximate simulator is the faithful substitute for
@@ -12,6 +15,7 @@
 
 pub mod config;
 pub mod core_model;
+pub mod cost;
 pub mod gemm;
 pub mod power;
 pub mod report;
@@ -20,6 +24,7 @@ pub mod ttd_engine;
 pub mod workload;
 
 pub use config::{CostModel, Features, SocConfig, Variant};
+pub use cost::CostSink;
 pub use report::{format_table3, SimReport};
 pub use timeline::HwTimeline;
 pub use workload::{compress_resnet32, CompressionOutcome};

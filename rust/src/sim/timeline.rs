@@ -53,6 +53,16 @@ impl PhaseCycles {
     pub fn total(&self) -> u64 {
         self.hbd + self.qr + self.sort_trunc + self.update_svd + self.reshape
     }
+
+    /// Fold another accumulator in (u64 adds: merging per-layer
+    /// summaries in any grouping is bit-identical to one long stream).
+    pub fn absorb(&mut self, other: &PhaseCycles) {
+        self.hbd += other.hbd;
+        self.qr += other.qr;
+        self.sort_trunc += other.sort_trunc;
+        self.update_svd += other.update_svd;
+        self.reshape += other.reshape;
+    }
 }
 
 /// Simple op statistics (introspection for benches / DESIGN.md).
@@ -67,7 +77,21 @@ pub struct OpStats {
     pub reshape_elems: u64,
 }
 
+impl OpStats {
+    /// Fold another stat block in (all counters are additive).
+    pub fn absorb(&mut self, other: &OpStats) {
+        self.house_gens += other.house_gens;
+        self.gemms += other.gemms;
+        self.gemm_tiles += other.gemm_tiles;
+        self.givens_rots += other.givens_rots;
+        self.sort_compares += other.sort_compares;
+        self.trunc_probes += other.trunc_probes;
+        self.reshape_elems += other.reshape_elems;
+    }
+}
+
 /// The timeline sink.
+#[derive(Clone, Debug)]
 pub struct HwTimeline {
     pub config: SocConfig,
     pub cycles: PhaseCycles,
@@ -87,6 +111,18 @@ impl HwTimeline {
 
     pub fn current_phase(&self) -> Phase {
         self.phase
+    }
+
+    /// Fold another timeline's accumulated cycles and stats into this
+    /// one. This is the deterministic per-layer merge: because every
+    /// layer's op stream re-asserts its phase (`SetPhase`) before its
+    /// first costed op, summing independently-folded layer timelines
+    /// in layer order is bit-identical to streaming the concatenated
+    /// trace through one timeline (all accumulators are u64). The
+    /// phase register is left untouched.
+    pub fn absorb(&mut self, other: &HwTimeline) {
+        self.cycles.absorb(&other.cycles);
+        self.stats.absorb(&other.stats);
     }
 
     fn cost(&mut self, op: &HwOp) -> u64 {

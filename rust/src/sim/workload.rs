@@ -13,10 +13,10 @@
 
 use crate::model::resnet32::{conv_layers, param_count, ConvLayer};
 use crate::sim::config::SocConfig;
+use crate::sim::cost::CostSink;
 use crate::sim::report::SimReport;
-use crate::sim::timeline::HwTimeline;
-use crate::trace::{TraceSink, VecSink};
-use crate::ttd::ttd::TtDecomp;
+use crate::trace::TraceSink;
+use crate::ttd::ttd::{TtDecomp, TtSpec};
 use crate::ttd::{decompose, reconstruct, Tensor};
 use crate::util::Rng;
 
@@ -94,16 +94,33 @@ pub fn synthetic_model(seed: u64, target_ratio: f64, noise: f32) -> Vec<(ConvLay
 }
 
 /// Fold per-layer decompositions into the whole-model accounting
-/// (shared by the serial path here and `crate::pipeline`'s parallel
-/// path, so both report byte-identical outcomes).
+/// (shared by the serial path here, `crate::pipeline`'s parallel
+/// path, and `crate::job`, so all report byte-identical outcomes).
 pub fn aggregate_outcome(
     layers: &[(ConvLayer, Tensor)],
     decomps: Vec<TtDecomp>,
     max_rel_err: f32,
 ) -> CompressionOutcome {
     let conv_dense: usize = layers.iter().map(|(l, _)| l.numel()).sum();
+    aggregate_outcome_conv(conv_dense, decomps, max_rel_err)
+}
+
+/// [`aggregate_outcome`] from a precomputed dense conv parameter count
+/// — for callers holding `(&ConvLayer, &Tensor)` refs instead of owned
+/// pairs (the coordinator's per-node locals, [`crate::job`]).
+///
+/// Accounting is **whole-ResNet-32**: the non-conv remainder comes
+/// from [`param_count`], matching what every legacy path reported
+/// (truncated layer subsets still count the full model's bn/fc
+/// params). Conv layers beyond the ResNet-32 budget saturate the
+/// remainder to zero rather than underflowing.
+pub fn aggregate_outcome_conv(
+    conv_dense: usize,
+    decomps: Vec<TtDecomp>,
+    max_rel_err: f32,
+) -> CompressionOutcome {
     let conv_tt: usize = decomps.iter().map(|d| d.param_count()).sum();
-    let model_dense = param_count();
+    let model_dense = param_count().max(conv_dense);
     let non_conv = model_dense - conv_dense;
     let final_params = non_conv + conv_tt;
     CompressionOutcome {
@@ -123,11 +140,12 @@ pub fn compress_model<S: TraceSink>(
     eps: f32,
     sink: &mut S,
 ) -> CompressionOutcome {
+    let spec = TtSpec::eps(eps);
     let mut decomps = Vec::with_capacity(layers.len());
     let mut max_rel = 0.0f32;
     for (layer, w) in layers {
         let t = w.reshape(&layer.tt_dims());
-        let d = decompose(&t, eps, None, sink);
+        let d = decompose(&t, &spec, sink);
         let err = crate::ttd::relative_error(&t, &d);
         if err > max_rel {
             max_rel = err;
@@ -138,7 +156,9 @@ pub fn compress_model<S: TraceSink>(
 }
 
 /// Full Table-III experiment: compress synthetic-trained ResNet-32
-/// once, replay the identical op trace under both SoCs.
+/// once, costing the identical op stream under every SoC **online**
+/// (one [`CostSink`] pass, O(1) memory in trace length — no
+/// `Vec<HwOp>` is ever materialized on this path).
 pub fn compress_resnet32(
     seed: u64,
     eps: f32,
@@ -147,19 +167,9 @@ pub fn compress_resnet32(
     // Ratio/noise chosen so prescribed-accuracy TTD at `eps` lands at
     // Table I's 3.4x whole-model ratio (see bench table1).
     let layers = synthetic_model(seed, 3.55, 0.035);
-    let mut trace = VecSink::default();
-    let outcome = compress_model(&layers, eps, &mut trace);
-    let reports = configs
-        .iter()
-        .map(|cfg| {
-            let mut tl = HwTimeline::new(cfg.clone());
-            for op in &trace.ops {
-                tl.op(*op);
-            }
-            SimReport::from_timeline(&tl)
-        })
-        .collect();
-    (outcome, reports)
+    let mut cost = CostSink::new(configs);
+    let outcome = compress_model(&layers, eps, &mut cost);
+    (outcome, cost.reports())
 }
 
 #[cfg(test)]
@@ -182,7 +192,7 @@ mod tests {
         let mut rng = Rng::new(5);
         let layer = conv_layers().pop().unwrap();
         let w = synthetic_trained_conv(&mut rng, &layer, 3.55, 0.035);
-        let d = decompose(&w.reshape(&layer.tt_dims()), 0.12, None, &mut NullSink);
+        let d = decompose(&w.reshape(&layer.tt_dims()), &TtSpec::eps(0.12), &mut NullSink);
         assert!(
             d.compression_ratio() > 2.5,
             "ratio {}",

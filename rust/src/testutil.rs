@@ -155,7 +155,7 @@ mod tests {
         let mut rng = Rng::new(4);
         let t = rand_tt_tensor(&mut rng, &[5, 6, 7], 2);
         // near-exact TTD recovery at tiny eps with ranks <= planted
-        let d = crate::ttd::decompose(&t, 1e-3, None, &mut NullSink);
+        let d = crate::ttd::decompose(&t, &crate::ttd::TtSpec::eps(1e-3), &mut NullSink);
         assert!(d.ranks[1] <= 5 && d.ranks[2] <= 7);
         assert!(rel_frobenius(&crate::ttd::reconstruct(&d), &t) < 1e-3);
     }

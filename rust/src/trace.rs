@@ -4,10 +4,24 @@
 //! The numeric code *is* the workload: as Algorithm 1/2 executes, it
 //! emits one [`HwOp`] per hardware-visible primitive (Householder
 //! generation, vector division, blockwise GEMM, bubble-sort pass,
-//! truncation probe, DMA movement, ...). The simulator replays the
-//! trace under a [`crate::sim::SocConfig`] to produce the paper's
-//! per-phase cycle and energy breakdown (Table III) — the same
-//! operation stream costed under two microarchitectures.
+//! truncation probe, DMA movement, ...). A [`TraceSink`] consumes the
+//! stream *as it is emitted*; the default consumer is the simulator's
+//! streaming cost sink ([`crate::sim::CostSink`]), which folds every
+//! op into per-phase cycles online — no trace is ever materialized
+//! unless a caller opts into [`VecSink`].
+//!
+//! Sinks compose instead of forking code paths:
+//!
+//! * [`NullSink`] — discard (pure math).
+//! * [`VecSink`] — record the full stream (tests/benches introspect).
+//! * [`CountingSink`] — count ops, O(1) memory.
+//! * [`SummarySink`] — per-kind op counts, O(1) memory.
+//! * [`Tee`] — duplicate the stream to two sinks in order.
+//! * [`PhaseScoped`] — forward only the ops attributed to one
+//!   Table-III [`Phase`] (a phase-scoped guard for ablations).
+//!
+//! `&mut S` also implements [`TraceSink`], so combinators can borrow
+//! sinks owned by the caller: `Tee::new(&mut cost, &mut trace)`.
 
 /// TTD phases exactly as Table III rows report them.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -76,10 +90,59 @@ pub enum HwOp {
     Reshape { elems: usize },
 }
 
+impl HwOp {
+    /// Kind labels in the fixed reporting order used by the golden
+    /// trace snapshots ([`HwOp::SetPhase`] deliberately last).
+    pub const KIND_LABELS: [&'static str; 11] = [
+        "HouseGen",
+        "VecDiv",
+        "Gemm",
+        "DataMove",
+        "Sort",
+        "ReorderBasis",
+        "Trunc",
+        "GivensRot",
+        "CoreScalar",
+        "Reshape",
+        "SetPhase",
+    ];
+
+    /// Index of this op's kind into [`HwOp::KIND_LABELS`].
+    pub fn kind_index(&self) -> usize {
+        match self {
+            HwOp::HouseGen { .. } => 0,
+            HwOp::VecDiv { .. } => 1,
+            HwOp::Gemm { .. } => 2,
+            HwOp::DataMove { .. } => 3,
+            HwOp::Sort { .. } => 4,
+            HwOp::ReorderBasis { .. } => 5,
+            HwOp::Trunc { .. } => 6,
+            HwOp::GivensRot { .. } => 7,
+            HwOp::CoreScalar { .. } => 8,
+            HwOp::Reshape { .. } => 9,
+            HwOp::SetPhase(_) => 10,
+        }
+    }
+
+    pub fn kind_label(&self) -> &'static str {
+        Self::KIND_LABELS[self.kind_index()]
+    }
+}
+
 /// Sink for hardware ops. The numerics call this; implementations
-/// range from [`NullSink`] (pure math) to the simulator's timeline.
+/// range from [`NullSink`] (pure math) to the simulator's streaming
+/// [`crate::sim::CostSink`].
 pub trait TraceSink {
     fn op(&mut self, op: HwOp);
+}
+
+/// Sinks borrow: `&mut S` forwards to `S`, so a caller-owned sink can
+/// be handed to combinators like [`Tee`] without giving it up.
+impl<S: TraceSink + ?Sized> TraceSink for &mut S {
+    #[inline]
+    fn op(&mut self, op: HwOp) {
+        (**self).op(op);
+    }
 }
 
 /// Discards everything — used when only the numbers matter.
@@ -108,6 +171,128 @@ impl VecSink {
     pub fn count(&self, pred: impl Fn(&HwOp) -> bool) -> usize {
         self.ops.iter().filter(|o| pred(o)).count()
     }
+
+    /// Replay the recorded stream into another sink, in order.
+    pub fn replay<S: TraceSink>(&self, sink: &mut S) {
+        for op in &self.ops {
+            sink.op(*op);
+        }
+    }
+}
+
+/// Counts ops (including [`HwOp::SetPhase`] markers) without storing
+/// them — `CountingSink::ops` equals `VecSink::ops.len()` for the same
+/// stream, at O(1) memory.
+#[derive(Default, Clone, Copy, Debug)]
+pub struct CountingSink {
+    pub ops: u64,
+}
+
+impl TraceSink for CountingSink {
+    #[inline]
+    fn op(&mut self, _op: HwOp) {
+        self.ops += 1;
+    }
+}
+
+/// Per-kind op counts — the streaming form of the golden harness's
+/// trace summary. O(1) memory regardless of trace length.
+#[derive(Default, Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SummarySink {
+    counts: [u64; HwOp::KIND_LABELS.len()],
+}
+
+impl TraceSink for SummarySink {
+    #[inline]
+    fn op(&mut self, op: HwOp) {
+        self.counts[op.kind_index()] += 1;
+    }
+}
+
+impl SummarySink {
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Count for one kind label (see [`HwOp::KIND_LABELS`]); unknown
+    /// labels count zero.
+    pub fn count(&self, label: &str) -> u64 {
+        HwOp::KIND_LABELS
+            .iter()
+            .position(|l| *l == label)
+            .map(|i| self.counts[i])
+            .unwrap_or(0)
+    }
+
+    /// `(label, count)` pairs in the fixed [`HwOp::KIND_LABELS`] order.
+    pub fn counts(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        HwOp::KIND_LABELS.iter().copied().zip(self.counts.iter().copied())
+    }
+}
+
+/// Duplicates the stream to two sinks, preserving op order in both.
+/// Sinks can be owned or borrowed (`Tee::new(&mut a, &mut b)`);
+/// nesting tees fans out to any width.
+#[derive(Default, Clone, Debug)]
+pub struct Tee<A, B> {
+    pub a: A,
+    pub b: B,
+}
+
+impl<A: TraceSink, B: TraceSink> Tee<A, B> {
+    pub fn new(a: A, b: B) -> Self {
+        Tee { a, b }
+    }
+
+    pub fn into_inner(self) -> (A, B) {
+        (self.a, self.b)
+    }
+}
+
+impl<A: TraceSink, B: TraceSink> TraceSink for Tee<A, B> {
+    #[inline]
+    fn op(&mut self, op: HwOp) {
+        self.a.op(op);
+        self.b.op(op);
+    }
+}
+
+/// Phase-scoped guard: forwards only the ops attributed to `scope`
+/// (tracking [`HwOp::SetPhase`] markers the way the simulator does,
+/// starting from the [`Phase::ReshapeEtc`] reset state). The
+/// `SetPhase` marker *entering* the scoped phase is forwarded so a
+/// downstream cost sink attributes cycles to the right Table-III row.
+#[derive(Clone, Debug)]
+pub struct PhaseScoped<S> {
+    pub inner: S,
+    scope: Phase,
+    current: Phase,
+}
+
+impl<S: TraceSink> PhaseScoped<S> {
+    pub fn new(scope: Phase, inner: S) -> Self {
+        PhaseScoped { inner, scope, current: Phase::ReshapeEtc }
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<S: TraceSink> TraceSink for PhaseScoped<S> {
+    #[inline]
+    fn op(&mut self, op: HwOp) {
+        if let HwOp::SetPhase(p) = op {
+            self.current = p;
+            if p == self.scope {
+                self.inner.op(op);
+            }
+            return;
+        }
+        if self.current == self.scope {
+            self.inner.op(op);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -128,5 +313,102 @@ mod tests {
         assert_eq!(Phase::Hbd.label(), "HBD");
         assert_eq!(Phase::SortTrunc.label(), "Sort. & Trunc.");
         assert_eq!(Phase::ALL.len(), 5);
+    }
+
+    fn sample_stream() -> Vec<HwOp> {
+        vec![
+            HwOp::SetPhase(Phase::Hbd),
+            HwOp::HouseGen { len: 8 },
+            HwOp::Gemm { m: 4, n: 4, k: 4 },
+            HwOp::SetPhase(Phase::QrDiag),
+            HwOp::GivensRot { len: 4 },
+            HwOp::SetPhase(Phase::Hbd),
+            HwOp::VecDiv { len: 8 },
+        ]
+    }
+
+    #[test]
+    fn tee_duplicates_in_order_to_both_branches() {
+        let mut tee = Tee::new(VecSink::default(), VecSink::default());
+        for op in sample_stream() {
+            tee.op(op);
+        }
+        let (a, b) = tee.into_inner();
+        assert_eq!(a.ops, sample_stream());
+        assert_eq!(b.ops, sample_stream());
+    }
+
+    #[test]
+    fn tee_borrows_caller_owned_sinks() {
+        let mut count = CountingSink::default();
+        let mut vec = VecSink::default();
+        {
+            let mut tee = Tee::new(&mut count, &mut vec);
+            for op in sample_stream() {
+                tee.op(op);
+            }
+        }
+        assert_eq!(count.ops as usize, vec.ops.len());
+    }
+
+    #[test]
+    fn counting_matches_vec_len_including_phase_markers() {
+        let mut c = CountingSink::default();
+        for op in sample_stream() {
+            c.op(op);
+        }
+        assert_eq!(c.ops as usize, sample_stream().len());
+    }
+
+    #[test]
+    fn summary_counts_per_kind() {
+        let mut s = SummarySink::default();
+        for op in sample_stream() {
+            s.op(op);
+        }
+        assert_eq!(s.count("SetPhase"), 3);
+        assert_eq!(s.count("HouseGen"), 1);
+        assert_eq!(s.count("Gemm"), 1);
+        assert_eq!(s.count("Trunc"), 0);
+        assert_eq!(s.total() as usize, sample_stream().len());
+        let labels: Vec<&str> = s.counts().map(|(l, _)| l).collect();
+        assert_eq!(labels, HwOp::KIND_LABELS.to_vec());
+    }
+
+    #[test]
+    fn phase_scoped_forwards_only_its_phase() {
+        let mut g = PhaseScoped::new(Phase::Hbd, VecSink::default());
+        for op in sample_stream() {
+            g.op(op);
+        }
+        let inner = g.into_inner();
+        assert_eq!(
+            inner.ops,
+            vec![
+                HwOp::SetPhase(Phase::Hbd),
+                HwOp::HouseGen { len: 8 },
+                HwOp::Gemm { m: 4, n: 4, k: 4 },
+                HwOp::SetPhase(Phase::Hbd),
+                HwOp::VecDiv { len: 8 },
+            ]
+        );
+    }
+
+    #[test]
+    fn replay_reproduces_the_stream() {
+        let mut v = VecSink::default();
+        for op in sample_stream() {
+            v.op(op);
+        }
+        let mut out = VecSink::default();
+        v.replay(&mut out);
+        assert_eq!(out.ops, v.ops);
+    }
+
+    #[test]
+    fn kind_labels_cover_every_op() {
+        for (i, op) in sample_stream().iter().enumerate() {
+            assert_eq!(HwOp::KIND_LABELS[op.kind_index()], op.kind_label(), "op {i}");
+        }
     }
 }

@@ -22,25 +22,31 @@ pub fn reconstruct(d: &TtDecomp) -> Tensor {
     Tensor::from_vec(&d.dims, acc.data)
 }
 
-/// Reconstruction error `||W - W_R||_F / ||W||_F`.
-pub fn relative_error(original: &Tensor, d: &TtDecomp) -> f32 {
-    let wr = reconstruct(d);
-    assert_eq!(wr.shape, original.shape);
+/// `||W - W_R||_F / ||W||_F` for any reconstruction — shared by the
+/// TT/TR/Tucker error metrics so Table I compares one formula.
+pub fn rel_error_to(original: &Tensor, reconstructed: &Tensor) -> f32 {
     let num: f64 = original
         .data
         .iter()
-        .zip(&wr.data)
+        .zip(&reconstructed.data)
         .map(|(a, b)| ((a - b) as f64).powi(2))
         .sum();
     let den: f64 = original.data.iter().map(|a| (*a as f64).powi(2)).sum();
     (num / den.max(1e-30)).sqrt() as f32
 }
 
+/// Reconstruction error `||W - W_R||_F / ||W||_F`.
+pub fn relative_error(original: &Tensor, d: &TtDecomp) -> f32 {
+    let wr = reconstruct(d);
+    assert_eq!(wr.shape, original.shape);
+    rel_error_to(original, &wr)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::trace::NullSink;
-    use crate::ttd::ttd::{decompose, TtCore};
+    use crate::ttd::ttd::{decompose, TtCore, TtSpec};
     use crate::util::Rng;
 
     #[test]
@@ -80,7 +86,7 @@ mod tests {
     fn roundtrip_error_metric() {
         let mut rng = Rng::new(91);
         let w = Tensor::from_vec(&[4, 5, 6], rng.normal_vec(120));
-        let d = decompose(&w, 0.0, None, &mut NullSink);
+        let d = decompose(&w, &TtSpec::eps(0.0), &mut NullSink);
         assert!(relative_error(&w, &d) < 1e-4);
     }
 
@@ -88,7 +94,7 @@ mod tests {
     fn two_core_decomposition_is_matrix_factorization() {
         let mut rng = Rng::new(92);
         let w = Tensor::from_vec(&[6, 9], rng.normal_vec(54));
-        let d = decompose(&w, 0.0, None, &mut NullSink);
+        let d = decompose(&w, &TtSpec::eps(0.0), &mut NullSink);
         assert_eq!(d.cores.len(), 2);
         assert!(relative_error(&w, &d) < 1e-4);
     }
@@ -97,7 +103,7 @@ mod tests {
     fn four_core_roundtrip() {
         let mut rng = Rng::new(93);
         let w = Tensor::from_vec(&[3, 4, 4, 5], rng.normal_vec(240));
-        let d = decompose(&w, 0.0, None, &mut NullSink);
+        let d = decompose(&w, &TtSpec::eps(0.0), &mut NullSink);
         assert_eq!(d.cores.len(), 4);
         assert!(relative_error(&w, &d) < 2e-4);
     }

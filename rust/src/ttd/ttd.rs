@@ -218,17 +218,83 @@ pub fn delta_truncation<S: TraceSink>(
     r.min(max_rank).max(1)
 }
 
-/// Algorithm 1: decompose `w` into TT cores with prescribed accuracy
-/// `eps` (and optional per-bond rank caps).
-pub fn decompose<S: TraceSink>(
-    w: &Tensor,
-    eps: f32,
-    max_ranks: Option<&[usize]>,
-    sink: &mut S,
-) -> TtDecomp {
+/// Per-bond rank caps for [`TtSpec`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum RankCaps {
+    Unbounded,
+    /// Same cap on every bond.
+    Uniform(usize),
+    /// `caps[k]` bounds bond `k`; missing trailing bonds are unbounded.
+    PerBond(Vec<usize>),
+}
+
+/// Tuning for one Algorithm-1 run. Replaces the positional
+/// `(eps, max_ranks)` pair that used to thread through every
+/// signature: construct with [`TtSpec::eps`], then chain
+/// [`TtSpec::rank_cap`] / [`TtSpec::rank_caps`].
+///
+/// ```
+/// use tt_edge::trace::NullSink;
+/// use tt_edge::ttd::{decompose, Tensor, TtSpec};
+/// use tt_edge::util::Rng;
+/// let mut rng = Rng::new(7);
+/// let w = Tensor::from_vec(&[4, 4, 4], rng.normal_vec(64));
+/// let d = decompose(&w, &TtSpec::eps(0.1).rank_cap(3), &mut NullSink);
+/// assert!(d.ranks.iter().all(|&r| r <= 3));
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct TtSpec {
+    /// Prescribed relative accuracy (the Oseledets bound; the
+    /// per-split truncation threshold `delta` derives from it).
+    pub eps: f32,
+    caps: RankCaps,
+}
+
+impl TtSpec {
+    /// Spec with prescribed accuracy `eps` and unbounded ranks.
+    pub fn eps(eps: f32) -> Self {
+        TtSpec { eps, caps: RankCaps::Unbounded }
+    }
+
+    /// Cap every bond rank at `cap`.
+    pub fn rank_cap(mut self, cap: usize) -> Self {
+        self.caps = RankCaps::Uniform(cap);
+        self
+    }
+
+    /// Per-bond caps: `caps[k]` bounds bond `k` (between cores `k` and
+    /// `k+1`); bonds past the end of the slice stay unbounded.
+    pub fn rank_caps(mut self, caps: &[usize]) -> Self {
+        self.caps = RankCaps::PerBond(caps.to_vec());
+        self
+    }
+
+    /// Effective cap for bond `bond` (`usize::MAX` when unbounded).
+    pub fn cap_for(&self, bond: usize) -> usize {
+        match &self.caps {
+            RankCaps::Unbounded => usize::MAX,
+            RankCaps::Uniform(c) => *c,
+            RankCaps::PerBond(v) => v.get(bond).copied().unwrap_or(usize::MAX),
+        }
+    }
+}
+
+impl Default for TtSpec {
+    /// The repo-wide default accuracy budget (`eps = 0.12`, the
+    /// Table-I operating point).
+    fn default() -> Self {
+        TtSpec::eps(0.12)
+    }
+}
+
+/// Algorithm 1: decompose `w` into TT cores under `spec` (prescribed
+/// accuracy + optional rank caps), emitting the hardware-op stream
+/// into `sink` as it runs.
+pub fn decompose<S: TraceSink>(w: &Tensor, spec: &TtSpec, sink: &mut S) -> TtDecomp {
     let dims = w.shape.clone();
     let nd = dims.len();
     assert!(nd >= 2, "TTD needs at least 2 dims");
+    let eps = spec.eps;
 
     // delta = eps / sqrt(d-1) * ||W||_F  (TRUNCATION module: SQRT,MUL,DIV)
     sink.op(HwOp::SetPhase(Phase::SortTrunc));
@@ -255,8 +321,7 @@ pub fn decompose<S: TraceSink>(
         // Sorting (line 9) + Truncation (line 10)
         sink.op(HwOp::SetPhase(Phase::SortTrunc));
         sorting_basis(&mut s, sink);
-        let cap = max_ranks.map(|m| m[k]).unwrap_or(usize::MAX);
-        let r = delta_truncation(&s.sigma, delta, cap, sink);
+        let r = delta_truncation(&s.sigma, delta, spec.cap_for(k), sink);
         ranks[k + 1] = r;
 
         // New core G_k = reshape(U_t) (line 13)
@@ -325,7 +390,7 @@ mod tests {
             let shape = [2 + rng.below(6), 2 + rng.below(8), 2 + rng.below(8)];
             let w = Tensor::from_vec(&shape, rng.normal_vec(shape.iter().product()));
             let eps = 0.3;
-            let d = decompose(&w, eps, None, &mut NullSink);
+            let d = decompose(&w, &TtSpec::eps(eps), &mut NullSink);
             let wr = reconstruct(&d);
             assert!(rel_err(&wr, &w) <= eps + 1e-3, "err {}", rel_err(&wr, &w));
         });
@@ -342,7 +407,7 @@ mod tests {
         let w12 = Matrix::from_vec(30, 2, w12.data);
         let w = w12.matmul(&g3); // (5*6, 7)
         let w = Tensor::from_vec(&[5, 6, 7], w.data);
-        let d = decompose(&w, 1e-3, None, &mut NullSink);
+        let d = decompose(&w, &TtSpec::eps(1e-3), &mut NullSink);
         assert_eq!(d.ranks, vec![1, 3, 2, 1]);
         let wr = reconstruct(&d);
         assert!(rel_err(&wr, &w) < 1e-3);
@@ -352,7 +417,7 @@ mod tests {
     fn boundary_ranks_are_one() {
         let mut rng = Rng::new(81);
         let w = Tensor::from_vec(&[4, 5, 6], rng.normal_vec(120));
-        let d = decompose(&w, 0.1, None, &mut NullSink);
+        let d = decompose(&w, &TtSpec::eps(0.1), &mut NullSink);
         assert_eq!(d.ranks[0], 1);
         assert_eq!(*d.ranks.last().unwrap(), 1);
         assert_eq!(d.cores.len(), 3);
@@ -367,7 +432,7 @@ mod tests {
     fn rank_caps_are_respected() {
         let mut rng = Rng::new(82);
         let w = Tensor::from_vec(&[6, 6, 6], rng.normal_vec(216));
-        let d = decompose(&w, 0.0, Some(&[2, 3]), &mut NullSink);
+        let d = decompose(&w, &TtSpec::eps(0.0).rank_caps(&[2, 3]), &mut NullSink);
         assert!(d.ranks[1] <= 2);
         assert!(d.ranks[2] <= 3);
     }
@@ -376,7 +441,7 @@ mod tests {
     fn eps_zero_keeps_full_rank() {
         let mut rng = Rng::new(83);
         let w = Tensor::from_vec(&[4, 4, 4], rng.normal_vec(64));
-        let d = decompose(&w, 0.0, None, &mut NullSink);
+        let d = decompose(&w, &TtSpec::eps(0.0), &mut NullSink);
         assert_eq!(d.ranks, vec![1, 4, 4, 1]);
         let wr = reconstruct(&d);
         assert!(rel_err(&wr, &w) < 1e-4);
@@ -388,7 +453,7 @@ mod tests {
         let w = Tensor::from_vec(&[6, 8, 8], rng.normal_vec(384));
         let mut last = usize::MAX;
         for eps in [0.01f32, 0.1, 0.3, 0.6] {
-            let d = decompose(&w, eps, None, &mut NullSink);
+            let d = decompose(&w, &TtSpec::eps(eps), &mut NullSink);
             assert!(d.param_count() <= last, "eps={eps}");
             last = d.param_count();
         }
@@ -398,7 +463,7 @@ mod tests {
     fn compression_accounting() {
         let mut rng = Rng::new(85);
         let w = Tensor::from_vec(&[4, 8, 8], rng.normal_vec(256));
-        let d = decompose(&w, 0.5, None, &mut NullSink);
+        let d = decompose(&w, &TtSpec::eps(0.5), &mut NullSink);
         let manual: usize = d
             .ranks
             .windows(2)
@@ -531,7 +596,7 @@ mod tests {
         let mut rng = Rng::new(87);
         let w = Tensor::from_vec(&[4, 6, 6], rng.normal_vec(144));
         let mut sink = VecSink::default();
-        let _ = decompose(&w, 0.2, None, &mut sink);
+        let _ = decompose(&w, &TtSpec::eps(0.2), &mut sink);
         for ph in Phase::ALL {
             assert!(
                 sink.ops.iter().any(|o| matches!(o, HwOp::SetPhase(p) if *p == ph)),

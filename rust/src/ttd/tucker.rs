@@ -98,15 +98,7 @@ pub fn reconstruct(d: &TuckerDecomp) -> Tensor {
 }
 
 pub fn relative_error(original: &Tensor, d: &TuckerDecomp) -> f32 {
-    let wr = reconstruct(d);
-    let num: f64 = original
-        .data
-        .iter()
-        .zip(&wr.data)
-        .map(|(a, b)| ((a - b) as f64).powi(2))
-        .sum();
-    let den: f64 = original.data.iter().map(|a| (*a as f64).powi(2)).sum();
-    (num / den.max(1e-30)).sqrt() as f32
+    crate::ttd::reconstruct::rel_error_to(original, &reconstruct(d))
 }
 
 #[cfg(test)]

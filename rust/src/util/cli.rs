@@ -53,8 +53,58 @@ impl Args {
         self.opt(key).and_then(|s| s.parse().ok())
     }
 
+    /// Strict parse: `Ok(None)` when `--key` is absent, `Err` when it
+    /// is present but unparseable — so a typo'd value is a usage
+    /// error, never a silent fall-back to the default.
+    pub fn parse_opt_strict<T: std::str::FromStr>(
+        &self,
+        key: &str,
+    ) -> Result<Option<T>, String> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("invalid value for --{key}: `{s}`")),
+        }
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
+    }
+
+    /// Validate the parsed arguments against a subcommand's declared
+    /// interface: every `--key value` must be a declared option, every
+    /// bare `--flag` a declared flag, and nothing positional may
+    /// follow the subcommand itself. Returns a usage-error message on
+    /// the first violation — unknown or misused arguments are a hard
+    /// error, never silently ignored.
+    pub fn validate(&self, opts: &[&str], flags: &[&str]) -> Result<(), String> {
+        for k in self.options.keys() {
+            if opts.iter().any(|o| o == k) {
+                continue;
+            }
+            if flags.iter().any(|f| f == k) {
+                return Err(format!(
+                    "--{k} is a flag and takes no value (got `--{k} {}`)",
+                    self.options[k]
+                ));
+            }
+            return Err(format!("unknown option --{k}"));
+        }
+        for f in &self.flags {
+            if flags.iter().any(|x| x == f) {
+                continue;
+            }
+            if opts.iter().any(|x| x == f) {
+                return Err(format!("--{f} requires a value"));
+            }
+            return Err(format!("unknown flag --{f}"));
+        }
+        if self.positional.len() > 1 {
+            return Err(format!("unexpected argument `{}`", self.positional[1]));
+        }
+        Ok(())
     }
 }
 
@@ -90,5 +140,52 @@ mod tests {
         // a value starting with '-' (not '--') still binds to the key
         let a = args("--delta -0.5");
         assert_eq!(a.parse_opt::<f64>("delta"), Some(-0.5));
+    }
+
+    #[test]
+    fn validate_accepts_declared_interface() {
+        let a = args("simulate --eps 0.12 --parallel 4 --json");
+        assert!(a.validate(&["eps", "seed", "parallel"], &["json"]).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_unknown_option_and_flag() {
+        let a = args("simulate --epz 0.12");
+        let err = a.validate(&["eps"], &["json"]).unwrap_err();
+        assert!(err.contains("unknown option --epz"), "{err}");
+        let b = args("simulate --jsn");
+        let err = b.validate(&["eps"], &["json"]).unwrap_err();
+        assert!(err.contains("unknown flag --jsn"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_flag_given_a_value_and_option_missing_one() {
+        // `--json 1`: the parser binds 1 as a value; validation names
+        // the misuse instead of silently treating it as an option.
+        let a = args("simulate --json 1");
+        let err = a.validate(&["eps"], &["json"]).unwrap_err();
+        assert!(err.contains("takes no value"), "{err}");
+        // `--eps` at end of line parses as a flag; validation catches
+        // the missing value.
+        let b = args("simulate --eps");
+        let err = b.validate(&["eps"], &["json"]).unwrap_err();
+        assert!(err.contains("requires a value"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_stray_positionals() {
+        let a = args("simulate extra");
+        let err = a.validate(&["eps"], &[]).unwrap_err();
+        assert!(err.contains("unexpected argument `extra`"), "{err}");
+    }
+
+    #[test]
+    fn strict_parse_distinguishes_absent_from_garbage() {
+        let a = args("simulate --eps 0.15x");
+        assert_eq!(a.parse_opt_strict::<f64>("seed"), Ok(None));
+        let err = a.parse_opt_strict::<f64>("eps").unwrap_err();
+        assert!(err.contains("invalid value for --eps"), "{err}");
+        let b = args("simulate --eps 0.15");
+        assert_eq!(b.parse_opt_strict("eps"), Ok(Some(0.15f64)));
     }
 }

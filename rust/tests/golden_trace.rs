@@ -18,10 +18,10 @@ use std::path::PathBuf;
 
 use tt_edge::pipeline;
 use tt_edge::sim::workload::{compress_model, synthetic_model};
-use tt_edge::sim::{HwTimeline, SimReport, SocConfig};
-use tt_edge::trace::{HwOp, Phase, TraceSink, VecSink};
+use tt_edge::sim::{CostSink, HwTimeline, SimReport, SocConfig};
+use tt_edge::trace::{HwOp, Phase, SummarySink, TraceSink, VecSink};
 use tt_edge::ttd::svd::svd;
-use tt_edge::ttd::{decompose, Matrix, Tensor};
+use tt_edge::ttd::{decompose, Matrix, Tensor, TtSpec};
 use tt_edge::util::Rng;
 
 fn svd_trace_16x8() -> VecSink {
@@ -36,7 +36,7 @@ fn ttd_trace_4x6x6() -> VecSink {
     let mut rng = Rng::new(0xB0B);
     let w = Tensor::from_vec(&[4, 6, 6], rng.normal_vec(144));
     let mut sink = VecSink::default();
-    let _ = decompose(&w, 0.15, None, &mut sink);
+    let _ = decompose(&w, &TtSpec::eps(0.15), &mut sink);
     sink
 }
 
@@ -49,50 +49,41 @@ fn phase_sequence(ops: &[HwOp]) -> Vec<Phase> {
         .collect()
 }
 
-fn op_kind_counts(ops: &[HwOp]) -> Vec<(&'static str, usize)> {
-    let mut counts = [
-        ("HouseGen", 0usize),
-        ("VecDiv", 0),
-        ("Gemm", 0),
-        ("DataMove", 0),
-        ("Sort", 0),
-        ("ReorderBasis", 0),
-        ("Trunc", 0),
-        ("GivensRot", 0),
-        ("CoreScalar", 0),
-        ("Reshape", 0),
-        ("SetPhase", 0),
-    ];
+/// Per-kind op counts via the streaming [`SummarySink`] — same labels
+/// and order the hand-rolled golden harness always used
+/// ([`HwOp::KIND_LABELS`] is defined to match).
+fn op_kind_counts(ops: &[HwOp]) -> Vec<(&'static str, u64)> {
+    let mut s = SummarySink::default();
     for op in ops {
-        let slot = match op {
-            HwOp::HouseGen { .. } => 0,
-            HwOp::VecDiv { .. } => 1,
-            HwOp::Gemm { .. } => 2,
-            HwOp::DataMove { .. } => 3,
-            HwOp::Sort { .. } => 4,
-            HwOp::ReorderBasis { .. } => 5,
-            HwOp::Trunc { .. } => 6,
-            HwOp::GivensRot { .. } => 7,
-            HwOp::CoreScalar { .. } => 8,
-            HwOp::Reshape { .. } => 9,
-            HwOp::SetPhase(_) => 10,
-        };
-        counts[slot].1 += 1;
+        s.op(*op);
     }
-    counts.to_vec()
+    s.counts().collect()
 }
 
 /// Phase-bracketed cycle totals on both SoCs — the simulator-facing
-/// fingerprint of a trace.
+/// fingerprint of a trace. Computed twice, via the streaming
+/// [`CostSink`] and via a recorded-trace replay, and asserted equal:
+/// the golden file therefore pins both paths to the same numbers.
 fn cost_fingerprint(ops: &[HwOp]) -> String {
+    let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
+    let mut streamed = CostSink::new(&configs);
+    for op in ops {
+        streamed.op(*op);
+    }
     let mut out = String::new();
-    for cfg in [SocConfig::baseline(), SocConfig::tt_edge()] {
+    for (tl, cfg) in streamed.timelines().iter().zip(&configs) {
         let name = cfg.name();
-        let mut tl = HwTimeline::new(cfg);
+        // replay oracle: bit-identical per-phase cycles
+        let mut replayed = HwTimeline::new(cfg.clone());
         for op in ops {
-            tl.op(*op);
+            replayed.op(*op);
         }
         for p in Phase::ALL {
+            assert_eq!(
+                tl.cycles.get(p),
+                replayed.cycles.get(p),
+                "streaming vs replay drift: {name}/{p:?}"
+            );
             out.push_str(&format!("{name}/{}: {} cycles\n", p.label(), tl.cycles.get(p)));
         }
         out.push_str(&format!("{name}/total: {} cycles\n", tl.cycles.total()));

@@ -6,7 +6,7 @@
 use tt_edge::runtime::{Engine, Value};
 use tt_edge::trace::NullSink;
 use tt_edge::ttd::svd::house::house;
-use tt_edge::ttd::{Matrix, Tensor};
+use tt_edge::ttd::{Matrix, Tensor, TtSpec};
 use tt_edge::util::Rng;
 
 fn engine() -> Option<Engine> {
@@ -161,7 +161,7 @@ fn ttd3_artifact_roundtrips_through_reconstruction() {
     let rel = (num / den).sqrt();
     assert!(rel <= eps as f64 + 0.02, "rel err {rel}");
     // and the rust-side TTD agrees on the retained ranks (+-small)
-    let d = tt_edge::ttd::decompose(&w3, eps, None, &mut NullSink);
+    let d = tt_edge::ttd::decompose(&w3, &TtSpec::eps(eps), &mut NullSink);
     assert!((d.ranks[1] as i32 - r1).abs() <= 2, "r1 {} vs {}", d.ranks[1], r1);
     assert!((d.ranks[2] as i32 - r2).abs() <= 4, "r2 {} vs {}", d.ranks[2], r2);
 }

@@ -11,7 +11,7 @@ use tt_edge::trace::NullSink;
 use tt_edge::ttd::svd::bidiag::bidiagonalize;
 use tt_edge::ttd::svd::jacobi::jacobi_svd;
 use tt_edge::ttd::svd::svd;
-use tt_edge::ttd::{decompose, reconstruct};
+use tt_edge::ttd::{decompose, reconstruct, TtSpec};
 
 /// `||W - reconstruct(TTD(W))||_F <= eps ||W||_F` — the Oseledets
 /// prescribed-accuracy bound — across random dimension counts, sizes
@@ -23,7 +23,7 @@ fn roundtrip_error_bounded_by_eps_random_dims() {
         let shape = rand_shape(rng, nd, 2, 6);
         let w = rand_tensor(rng, &shape);
         let eps = [0.05f32, 0.15, 0.3, 0.6][rng.below(4)];
-        let d = decompose(&w, eps, None, &mut NullSink);
+        let d = decompose(&w, &TtSpec::eps(eps), &mut NullSink);
         let err = rel_frobenius(&reconstruct(&d), &w);
         assert!(
             err <= eps + 1e-3,
@@ -46,7 +46,7 @@ fn zero_eps_roundtrip_is_exact() {
         let nd = 2 + rng.below(3);
         let shape = rand_shape(rng, nd, 2, 5);
         let w = rand_tensor(rng, &shape);
-        let d = decompose(&w, 0.0, None, &mut NullSink);
+        let d = decompose(&w, &TtSpec::eps(0.0), &mut NullSink);
         let err = rel_frobenius(&reconstruct(&d), &w);
         assert!(err < 5e-4, "shape {shape:?}: err {err}");
     });
@@ -61,7 +61,7 @@ fn planted_ranks_are_recovered() {
         let shape = rand_shape(rng, nd, 3, 6);
         let rmax = 1 + rng.below(3);
         let w = rand_tt_tensor(rng, &shape, rmax);
-        let d = decompose(&w, 1e-3, None, &mut NullSink);
+        let d = decompose(&w, &TtSpec::eps(1e-3), &mut NullSink);
         for r in &d.ranks[1..nd] {
             // recovered bond rank can never exceed the planted cap
             assert!(*r <= rmax, "rank {r} > planted cap {rmax} ({shape:?})");
@@ -80,12 +80,12 @@ fn truncation_monotone_and_caps_respected() {
         let w = rand_tensor(rng, &shape);
         let mut last = usize::MAX;
         for eps in [0.02f32, 0.1, 0.35, 0.7] {
-            let d = decompose(&w, eps, None, &mut NullSink);
+            let d = decompose(&w, &TtSpec::eps(eps), &mut NullSink);
             assert!(d.param_count() <= last, "eps {eps} grew params");
             last = d.param_count();
         }
         let caps = [1 + rng.below(3), 1 + rng.below(3)];
-        let d = decompose(&w, 0.0, Some(&caps), &mut NullSink);
+        let d = decompose(&w, &TtSpec::eps(0.0).rank_caps(&caps), &mut NullSink);
         assert!(d.ranks[1] <= caps[0] && d.ranks[2] <= caps[1]);
     });
 }
