@@ -25,7 +25,12 @@ fn main() {
         match *op {
             HwOp::SetPhase(p) => phase = p,
             HwOp::Gemm { m, n, k } => {
-                let t = tt_edge::sim::gemm::tiles(m as u64, n as u64, k as u64);
+                let t = tt_edge::sim::gemm::tiles(
+                    tt_edge::sim::gemm::PE_TILE,
+                    m as u64,
+                    n as u64,
+                    k as u64,
+                );
                 if phase == Phase::Hbd { tiles_hbd += t; gemm_count_hbd += 1; }
                 if phase == Phase::UpdateSvdInput { upd_elems += (m*n) as u64; }
             }

@@ -1,0 +1,69 @@
+//! DSE bench: how the streaming multi-config cost sink scales with
+//! the number of candidate SoCs in a single numerics pass, and an
+//! end-to-end frontier sweep over the feature space.
+//!
+//! Run: `cargo bench --bench dse_frontier`. Like the other benches it
+//! prints its tables and self-asserts the headline invariants; CI only
+//! compiles it (`cargo bench --no-run`).
+
+use tt_edge::dse::{explore, DesignSpace, ExploreConfig, SpaceKind, Strategy, Workload};
+use tt_edge::metrics::bench::{black_box, time_it};
+use tt_edge::sim::workload::{compress_model, synthetic_model};
+use tt_edge::sim::{CostSink, SocConfig};
+
+fn main() {
+    // ---- multi-config costing scaling -----------------------------
+    // One numerics pass, N timelines: the cost of adding candidates to
+    // a sweep is the per-op fold, not a numerics re-run.
+    let mut layers = synthetic_model(42, 3.55, 0.035);
+    layers.truncate(6);
+    let space = DesignSpace::new(SpaceKind::Full);
+    for n_configs in [1usize, 8, 32] {
+        let configs: Vec<SocConfig> =
+            space.genomes()[..n_configs].iter().map(|&g| space.to_soc(g)).collect();
+        let res = time_it(
+            &format!("6-layer TTD + streaming cost x{n_configs} configs"),
+            1,
+            5,
+            || {
+                let mut cost = CostSink::new(&configs);
+                let _ = compress_model(&layers, 0.12, &mut cost);
+                black_box(cost.reports().len());
+            },
+        );
+        println!("{}", res.report());
+    }
+    println!();
+
+    // ---- end-to-end sweep: feature space, grid --------------------
+    let cfg = ExploreConfig {
+        workload: Workload::Resnet32,
+        space: SpaceKind::Features,
+        strategy: Strategy::Grid,
+        budget: 32,
+        seed: 42,
+        eps: 0.12,
+        parallel: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    };
+    let t0 = std::time::Instant::now();
+    let out = explore(&cfg);
+    println!(
+        "explore: {} candidates in {:.0} ms wall\n",
+        out.evaluated.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    println!("{}", out.frontier_table());
+
+    // headline invariants: both paper anchors are frontier members and
+    // TT-Edge clears the paper margins
+    assert!(out.frontier.contains(&0), "baseline fell off the frontier");
+    assert!(out.frontier.contains(&1), "tt-edge fell off the frontier");
+    let tte = &out.evaluated[1];
+    assert!(out.speedup(tte) >= 1.5, "speedup {}", out.speedup(tte));
+    assert!(
+        out.energy_reduction_pct(tte) >= 35.0,
+        "energy reduction {}",
+        out.energy_reduction_pct(tte)
+    );
+    println!("dse_frontier OK");
+}

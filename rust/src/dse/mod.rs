@@ -1,0 +1,410 @@
+//! Design-space exploration over the TT-Edge SoC simulator.
+//!
+//! The PR-3 costing seam made one numerics pass cost arbitrarily many
+//! [`SocConfig`]s at once (streaming [`crate::sim::CostSink`], one
+//! `HwTimeline` per config). This module turns that capability into a
+//! scenario-diversity engine:
+//!
+//! * [`space`] — the candidate universe: all 2^5 [`Features`] combos
+//!   x knob axes (GEMM tile edge, SPM KB, FP-ALU count, gating
+//!   policy), enumerated canonically with the two paper anchors first.
+//! * [`strategy`] — exhaustive grid, seeded random sampling, and a
+//!   seeded evolutionary loop, all under an evaluation budget.
+//! * [`pareto`] — the (cycles, energy mJ, area-proxy LUTs) frontier
+//!   with dominance pruning and deterministic tie-breaking.
+//! * [`explore`] — the driver: each strategy batch becomes **one**
+//!   numerics pass through [`CompressionJob`] with the whole batch of
+//!   configs costed online (`--parallel` fans the layer work out via
+//!   `pipeline`; the simulated objectives are invariant to it).
+//!
+//! Determinism contract (pinned by `tests/dse_engine.rs`): for a
+//! fixed `(workload, space, strategy, budget, seed, eps)` the sweep
+//! artifact and frontier report render byte-identically at any
+//! `--parallel` width and any candidate evaluation order, because
+//! every objective is either a u64 cycle bank or an f64 computed from
+//! one, candidate ids follow the strategy's (seeded, thread-free)
+//! selection order, and the frontier is a pure function of the
+//! evaluated set.
+
+pub mod pareto;
+pub mod space;
+pub mod strategy;
+
+use std::collections::BTreeMap;
+
+use crate::job::CompressionJob;
+use crate::metrics::{f1, f2, Table};
+use crate::model::resnet32::ConvLayer;
+use crate::sim::config::SocConfig;
+use crate::sim::workload::synthetic_model;
+use crate::trace::Phase;
+use crate::ttd::Tensor;
+use crate::util::json::Json;
+
+pub use pareto::{dominates, pareto_front, Objectives};
+pub use space::{area_proxy_luts, DesignSpace, Genome, SpaceKind};
+pub use strategy::Strategy;
+
+/// Which workload the candidates are costed on (`--workload`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// All 31 synthetic-trained ResNet-32 conv layers (the paper's
+    /// Table-III workload).
+    Resnet32,
+    /// The first 4 layers — a fast proxy for tests/smoke runs.
+    Tiny,
+}
+
+impl Workload {
+    pub fn parse(s: &str) -> Option<Workload> {
+        match s {
+            "resnet32" => Some(Workload::Resnet32),
+            "tiny" => Some(Workload::Tiny),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Workload::Resnet32 => "resnet32",
+            Workload::Tiny => "tiny",
+        }
+    }
+
+    /// Materialize the layer set (same synthetic-trained generator the
+    /// `simulate` command uses; the seed keys the weights).
+    pub fn layers(&self, seed: u64) -> Vec<(ConvLayer, Tensor)> {
+        let mut layers = synthetic_model(seed, 3.55, 0.035);
+        if *self == Workload::Tiny {
+            layers.truncate(4);
+        }
+        layers
+    }
+}
+
+/// Everything one exploration run needs.
+#[derive(Clone, Debug)]
+pub struct ExploreConfig {
+    pub workload: Workload,
+    pub space: SpaceKind,
+    pub strategy: Strategy,
+    /// Max candidate evaluations (clamped to [2, space size]).
+    pub budget: usize,
+    /// Seeds the workload weights AND the search RNG.
+    pub seed: u64,
+    pub eps: f32,
+    /// Host worker threads per numerics pass (cost-invariant).
+    pub parallel: usize,
+}
+
+impl Default for ExploreConfig {
+    fn default() -> Self {
+        ExploreConfig {
+            workload: Workload::Resnet32,
+            space: SpaceKind::Full,
+            strategy: Strategy::Grid,
+            budget: 32,
+            seed: 42,
+            eps: 0.12,
+            parallel: 1,
+        }
+    }
+}
+
+/// One evaluated candidate.
+#[derive(Clone, Debug)]
+pub struct Evaluated {
+    /// Evaluation-order id (0 = baseline anchor, 1 = TT-Edge anchor).
+    pub id: usize,
+    pub genome: Genome,
+    pub name: String,
+    /// The decoded SoC this candidate simulated.
+    pub soc: SocConfig,
+    pub objectives: Objectives,
+    pub time_ms: f64,
+}
+
+/// The outcome of one exploration: every evaluated point + the
+/// frontier over them.
+#[derive(Clone, Debug)]
+pub struct ExploreOutcome {
+    pub cfg: ExploreConfig,
+    pub space_size: usize,
+    pub evaluated: Vec<Evaluated>,
+    /// Ids (= indices into `evaluated`) on the Pareto frontier, in the
+    /// deterministic (cycles, energy, area, id) order.
+    pub frontier: Vec<usize>,
+    /// Whole-model compression stats of the (config-independent)
+    /// numerics: (ratio, max rel err, final params).
+    pub compression: (f64, f32, usize),
+}
+
+impl ExploreOutcome {
+    /// The baseline anchor (id 0) — denominators for speedups.
+    pub fn baseline(&self) -> &Evaluated {
+        &self.evaluated[0]
+    }
+
+    pub fn speedup(&self, e: &Evaluated) -> f64 {
+        self.baseline().objectives.cycles as f64 / e.objectives.cycles as f64
+    }
+
+    pub fn energy_reduction_pct(&self, e: &Evaluated) -> f64 {
+        (1.0 - e.objectives.energy_mj / self.baseline().objectives.energy_mj) * 100.0
+    }
+
+    fn point_json(&self, e: &Evaluated) -> Json {
+        let soc = &e.soc;
+        let mut feats = BTreeMap::new();
+        feats.insert("hbd_acc".into(), Json::Bool(soc.features.hbd_acc));
+        feats.insert("direct_gemm_link".into(), Json::Bool(soc.features.direct_gemm_link));
+        feats.insert("spm_retention".into(), Json::Bool(soc.features.spm_retention));
+        feats.insert("hw_sort_trunc".into(), Json::Bool(soc.features.hw_sort_trunc));
+        feats.insert("clock_gating".into(), Json::Bool(soc.features.clock_gating));
+        let mut knobs = BTreeMap::new();
+        knobs.insert("gemm_tile".into(), Json::from(soc.cost.gemm_tile as f64));
+        knobs.insert("spm_kb".into(), Json::from(soc.cost.spm_kb as f64));
+        knobs.insert("fpalu_units".into(), Json::from(soc.cost.fpalu_units as f64));
+        knobs.insert("gating".into(), Json::from(soc.gating.label()));
+        let mut m = BTreeMap::new();
+        m.insert("id".into(), Json::from(e.id));
+        m.insert("name".into(), Json::from(e.name.as_str()));
+        m.insert("features".into(), Json::Obj(feats));
+        m.insert("knobs".into(), Json::Obj(knobs));
+        m.insert("cycles".into(), Json::from(e.objectives.cycles as f64));
+        m.insert("time_ms".into(), Json::from(e.time_ms));
+        m.insert("energy_mj".into(), Json::from(e.objectives.energy_mj));
+        m.insert("area_luts".into(), Json::from(e.objectives.area_luts as f64));
+        m.insert("speedup".into(), Json::from(self.speedup(e)));
+        m.insert(
+            "energy_reduction_pct".into(),
+            Json::from(self.energy_reduction_pct(e)),
+        );
+        m.insert("on_frontier".into(), Json::Bool(self.frontier.contains(&e.id)));
+        Json::Obj(m)
+    }
+
+    fn header_json(&self) -> BTreeMap<String, Json> {
+        let mut m = BTreeMap::new();
+        m.insert("workload".into(), Json::from(self.cfg.workload.label()));
+        m.insert("space".into(), Json::from(self.cfg.space.label()));
+        m.insert("strategy".into(), Json::from(self.cfg.strategy.label()));
+        m.insert("budget".into(), Json::from(self.cfg.budget));
+        // string, not number: u64 seeds above 2^53 would silently
+        // lose precision through JSON's f64 number path, breaking the
+        // regenerate-from-artifact contract
+        m.insert("seed".into(), Json::Str(self.cfg.seed.to_string()));
+        m.insert("eps".into(), Json::from(f64::from(self.cfg.eps)));
+        m.insert("space_size".into(), Json::from(self.space_size));
+        m.insert("evaluated".into(), Json::from(self.evaluated.len()));
+        let mut comp = BTreeMap::new();
+        comp.insert("ratio".into(), Json::from(self.compression.0));
+        comp.insert("max_rel_err".into(), Json::from(f64::from(self.compression.1)));
+        comp.insert("final_params".into(), Json::from(self.compression.2));
+        m.insert("compression".into(), Json::Obj(comp));
+        m.insert(
+            "frontier".into(),
+            Json::Arr(self.frontier.iter().map(|&i| Json::from(i)).collect()),
+        );
+        m
+    }
+
+    /// The frontier report (the `--json` stdout surface): run header +
+    /// frontier points only. Deliberately excludes `--parallel` and
+    /// all wall-clock times, so it is byte-identical at any width.
+    pub fn report_json(&self) -> Json {
+        let mut m = self.header_json();
+        m.insert("schema".into(), Json::from("dse-frontier-v1"));
+        m.insert(
+            "points".into(),
+            Json::Arr(self.frontier.iter().map(|&i| self.point_json(&self.evaluated[i])).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    /// The full sweep artifact (written into `EXPERIMENTS/`): run
+    /// header + every evaluated point in evaluation order.
+    pub fn sweep_json(&self) -> Json {
+        let mut m = self.header_json();
+        m.insert("schema".into(), Json::from("dse-sweep-v1"));
+        m.insert(
+            "points".into(),
+            Json::Arr(self.evaluated.iter().map(|e| self.point_json(e)).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    /// Human frontier table.
+    pub fn frontier_table(&self) -> String {
+        let mut t = Table::new(
+            &format!(
+                "Pareto frontier ({} of {} evaluated candidates, space `{}`, strategy `{}`)",
+                self.frontier.len(),
+                self.evaluated.len(),
+                self.cfg.space.label(),
+                self.cfg.strategy.label(),
+            ),
+            &["id", "config", "T (ms)", "E (mJ)", "area (LUT)", "speedup", "E save %"],
+        );
+        for &i in &self.frontier {
+            let e = &self.evaluated[i];
+            t.row(&[
+                e.id.to_string(),
+                e.name.clone(),
+                f2(e.time_ms),
+                f2(e.objectives.energy_mj),
+                e.objectives.area_luts.to_string(),
+                format!("{:.2}x", self.speedup(e)),
+                f1(self.energy_reduction_pct(e)),
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// Evaluate one batch of genomes: a single numerics pass with every
+/// candidate SoC costed online in the streaming multi-config sink,
+/// layer fan-out on `parallel` host workers.
+fn evaluate_batch(
+    layers: &[(ConvLayer, Tensor)],
+    space: &DesignSpace,
+    cfg: &ExploreConfig,
+    genomes: &[Genome],
+    next_id: usize,
+    out: &mut Vec<Evaluated>,
+) -> (f64, f32, usize) {
+    let socs: Vec<SocConfig> = genomes.iter().map(|&g| space.to_soc(g)).collect();
+    let job = CompressionJob::model(layers)
+        .eps(cfg.eps)
+        .parallel(cfg.parallel)
+        .socs(&socs)
+        .run()
+        .expect("explore jobs carry no cancel token");
+    for (i, (&g, report)) in genomes.iter().zip(&job.reports).enumerate() {
+        let cycles: u64 = Phase::ALL.iter().map(|&p| report.phase(p).cycles).sum();
+        out.push(Evaluated {
+            id: next_id + i,
+            genome: g,
+            name: space.name(g),
+            soc: socs[i].clone(),
+            objectives: Objectives {
+                cycles,
+                energy_mj: report.total_mj,
+                area_luts: space.area(g),
+            },
+            time_ms: report.total_ms,
+        });
+    }
+    (
+        job.outcome.compression_ratio,
+        job.outcome.max_rel_err,
+        job.outcome.final_params,
+    )
+}
+
+/// Run one exploration (see the [module docs](self) for the
+/// determinism contract).
+pub fn explore(cfg: &ExploreConfig) -> ExploreOutcome {
+    let space = DesignSpace::new(cfg.space);
+    let layers = cfg.workload.layers(cfg.seed);
+    let mut evaluated: Vec<Evaluated> = Vec::new();
+    let mut compression = (0.0f64, 0.0f32, 0usize);
+
+    match cfg.strategy {
+        Strategy::Grid | Strategy::Random => {
+            let plan = match cfg.strategy {
+                Strategy::Grid => strategy::plan_grid(&space, cfg.budget),
+                _ => strategy::plan_random(&space, cfg.budget, cfg.seed),
+            };
+            compression = evaluate_batch(&layers, &space, cfg, &plan, 0, &mut evaluated);
+        }
+        Strategy::Evolve => {
+            let mut comp = compression;
+            strategy::run_evolve(&space, cfg.budget, cfg.seed, |batch| {
+                let next_id = evaluated.len();
+                comp = evaluate_batch(&layers, &space, cfg, batch, next_id, &mut evaluated);
+                evaluated[next_id..].iter().map(|e| e.objectives).collect()
+            });
+            compression = comp;
+        }
+    }
+
+    let objs: Vec<Objectives> = evaluated.iter().map(|e| e.objectives).collect();
+    let frontier = pareto_front(&objs);
+    ExploreOutcome {
+        cfg: cfg.clone(),
+        space_size: space.len(),
+        evaluated,
+        frontier,
+        compression,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(strategy: Strategy, budget: usize) -> ExploreConfig {
+        ExploreConfig {
+            workload: Workload::Tiny,
+            space: SpaceKind::Features,
+            strategy,
+            budget,
+            seed: 5,
+            eps: 0.2,
+            parallel: 1,
+        }
+    }
+
+    #[test]
+    fn grid_explore_evaluates_the_prefix_and_fronts_ttedge() {
+        let out = explore(&tiny_cfg(Strategy::Grid, 4));
+        assert_eq!(out.evaluated.len(), 4);
+        assert_eq!(out.evaluated[0].name, "baseline");
+        assert_eq!(out.evaluated[1].name, "tt-edge");
+        assert!(!out.frontier.is_empty());
+        // anchors: tt-edge is faster and leaner in energy than base
+        let b = &out.evaluated[0].objectives;
+        let t = &out.evaluated[1].objectives;
+        assert!(t.cycles < b.cycles);
+        assert!(t.energy_mj < b.energy_mj);
+        assert!(t.area_luts > b.area_luts);
+        // compression stats are populated from the numerics
+        assert!(out.compression.0 > 1.0);
+        assert!(out.compression.2 > 0);
+    }
+
+    #[test]
+    fn evaluation_ids_are_dense_and_ordered() {
+        let out = explore(&tiny_cfg(Strategy::Evolve, 6));
+        for (i, e) in out.evaluated.iter().enumerate() {
+            assert_eq!(e.id, i);
+        }
+        assert!(out.evaluated.len() <= 6);
+        for &i in &out.frontier {
+            assert!(i < out.evaluated.len());
+        }
+    }
+
+    #[test]
+    fn report_is_a_subset_of_the_sweep() {
+        let out = explore(&tiny_cfg(Strategy::Grid, 5));
+        let report = out.report_json();
+        let sweep = out.sweep_json();
+        let rp = report.get("points").unwrap().as_arr().unwrap();
+        let sp = sweep.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(rp.len(), out.frontier.len());
+        assert_eq!(sp.len(), out.evaluated.len());
+        // every frontier point appears verbatim in the sweep
+        for p in rp {
+            assert!(sp.contains(p));
+        }
+        // both render as valid JSON for our own parser
+        let text = sweep.render();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("schema").unwrap().as_str().unwrap(),
+            "dse-sweep-v1"
+        );
+    }
+}

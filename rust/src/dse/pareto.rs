@@ -1,0 +1,113 @@
+//! Pareto-frontier engine over the three DSE objectives: simulated
+//! cycles, energy (mJ), and the area proxy (LUT-equivalents). All
+//! objectives minimize.
+//!
+//! Determinism contract: [`pareto_front`] depends only on the
+//! *multiset* of objective vectors and their indices — never on
+//! evaluation timing — so a sweep's frontier is byte-identical at any
+//! `--parallel` width. Ties (bit-identical objective vectors) are
+//! broken by index: the earliest-evaluated point stays on the
+//! frontier, later duplicates are pruned as dominated.
+
+/// One candidate's objective vector (all minimized).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Objectives {
+    /// Total simulated cycles across all Table-III phases (u64: the
+    /// merge-order-invariant accumulator the cost sink maintains).
+    pub cycles: u64,
+    /// Total energy, mJ.
+    pub energy_mj: f64,
+    /// Area proxy, LUT-equivalents (see `dse::space::area_proxy_luts`).
+    pub area_luts: u64,
+}
+
+/// Strict Pareto dominance: `a` is no worse in every objective and
+/// strictly better in at least one.
+pub fn dominates(a: &Objectives, b: &Objectives) -> bool {
+    let no_worse =
+        a.cycles <= b.cycles && a.energy_mj <= b.energy_mj && a.area_luts <= b.area_luts;
+    let better =
+        a.cycles < b.cycles || a.energy_mj < b.energy_mj || a.area_luts < b.area_luts;
+    no_worse && better
+}
+
+/// Is point `i` pruned from the frontier of `points`? True when some
+/// other point strictly dominates it, or an identical objective
+/// vector appears at a lower index (the deterministic tie-break).
+pub fn pruned_by(points: &[Objectives], i: usize) -> Option<usize> {
+    points.iter().enumerate().find_map(|(j, p)| {
+        let dup = j < i && *p == points[i];
+        (dominates(p, &points[i]) || dup).then_some(j)
+    })
+}
+
+/// Indices of the Pareto-optimal points, sorted by
+/// (cycles, energy, area, index) ascending — a total order, so the
+/// frontier listing is unique for a given evaluated set.
+pub fn pareto_front(points: &[Objectives]) -> Vec<usize> {
+    let mut front: Vec<usize> =
+        (0..points.len()).filter(|&i| pruned_by(points, i).is_none()).collect();
+    front.sort_by(|&a, &b| {
+        let pa = &points[a];
+        let pb = &points[b];
+        pa.cycles
+            .cmp(&pb.cycles)
+            .then(pa.energy_mj.total_cmp(&pb.energy_mj))
+            .then(pa.area_luts.cmp(&pb.area_luts))
+            .then(a.cmp(&b))
+    });
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(cycles: u64, energy_mj: f64, area_luts: u64) -> Objectives {
+        Objectives { cycles, energy_mj, area_luts }
+    }
+
+    #[test]
+    fn dominance_is_strict_and_irreflexive() {
+        let a = p(10, 1.0, 100);
+        assert!(!dominates(&a, &a));
+        assert!(dominates(&p(9, 1.0, 100), &a));
+        assert!(dominates(&p(9, 0.5, 50), &a));
+        // trade-off: neither dominates
+        assert!(!dominates(&p(9, 2.0, 100), &a));
+        assert!(!dominates(&a, &p(9, 2.0, 100)));
+    }
+
+    #[test]
+    fn frontier_keeps_tradeoffs_and_prunes_dominated() {
+        let pts = [p(10, 1.0, 100), p(5, 2.0, 100), p(12, 1.5, 100), p(5, 2.0, 90)];
+        let front = pareto_front(&pts);
+        // 2 is dominated by 0; 1 is dominated by 3 (same cycles/energy,
+        // less area); 0 and 3 trade off.
+        assert_eq!(front, vec![3, 0]);
+        assert_eq!(pruned_by(&pts, 2), Some(0));
+        assert_eq!(pruned_by(&pts, 1), Some(3));
+    }
+
+    #[test]
+    fn duplicate_vectors_keep_the_earliest_index() {
+        let pts = [p(10, 1.0, 100), p(10, 1.0, 100), p(10, 1.0, 100)];
+        assert_eq!(pareto_front(&pts), vec![0]);
+        assert_eq!(pruned_by(&pts, 1), Some(0));
+        assert_eq!(pruned_by(&pts, 2), Some(0));
+        assert_eq!(pruned_by(&pts, 0), None);
+    }
+
+    #[test]
+    fn frontier_order_is_total() {
+        let pts = [p(5, 3.0, 10), p(5, 2.0, 20), p(4, 4.0, 30), p(6, 1.0, 5)];
+        let front = pareto_front(&pts);
+        assert_eq!(front, vec![2, 1, 0, 3]);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert!(pareto_front(&[]).is_empty());
+        assert_eq!(pareto_front(&[p(1, 1.0, 1)]), vec![0]);
+    }
+}

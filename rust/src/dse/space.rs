@@ -1,0 +1,394 @@
+//! The design-space descriptor: which SoC candidates exist, how they
+//! are enumerated, and what each costs in area.
+//!
+//! A candidate is a [`Genome`]: the 5-bit [`Features`] mask plus one
+//! index per knob axis (GEMM tile edge, SPM capacity, FP-ALU count,
+//! clock-gating policy). [`DesignSpace`] owns the axis value lists and
+//! enumerates genomes in a fixed, documented order, so every strategy
+//! and every `--parallel` width sees the identical candidate universe.
+//!
+//! Genomes are *canonical*: knobs that cannot influence a candidate's
+//! cost (FP-ALU count without the engine instantiated, gating policy
+//! without the clock-gating feature) are pinned to their first axis
+//! value, so the space never contains two genomes that decode to
+//! cost-identical SoCs.
+
+use crate::sim::config::{Features, GatingPolicy, SocConfig, Variant};
+
+/// One candidate design point: feature mask + knob axis indices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Genome {
+    /// 5-bit [`Features`] mask (bit order per [`Features::SHORT_NAMES`]).
+    pub mask: u8,
+    /// Index into [`DesignSpace::tiles`].
+    pub tile: u8,
+    /// Index into [`DesignSpace::spm_kbs`].
+    pub spm: u8,
+    /// Index into [`DesignSpace::alus`].
+    pub alu: u8,
+    /// Index into [`DesignSpace::gates`].
+    pub gate: u8,
+}
+
+impl Genome {
+    /// The all-defaults genome for a feature mask.
+    pub fn of_mask(mask: u8) -> Genome {
+        Genome { mask, tile: 0, spm: 0, alu: 0, gate: 0 }
+    }
+}
+
+/// Which slice of the space to enumerate (`--space`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpaceKind {
+    /// The two paper SoCs only (baseline + TT-Edge).
+    Paper,
+    /// All 2^5 feature combinations at the paper's knob values.
+    Features,
+    /// Feature combinations x every knob axis (canonical genomes).
+    Full,
+}
+
+impl SpaceKind {
+    pub fn parse(s: &str) -> Option<SpaceKind> {
+        match s {
+            "paper" => Some(SpaceKind::Paper),
+            "features" => Some(SpaceKind::Features),
+            "full" => Some(SpaceKind::Full),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SpaceKind::Paper => "paper",
+            SpaceKind::Features => "features",
+            SpaceKind::Full => "full",
+        }
+    }
+}
+
+/// The candidate universe: knob axes + the enumeration over them.
+/// Axis position 0 is always the paper's default value, so
+/// `Genome::of_mask` decodes to a paper-knobbed SoC.
+#[derive(Clone, Debug)]
+pub struct DesignSpace {
+    pub kind: SpaceKind,
+    /// GEMM tile edges (position 0 = 16, the paper's).
+    pub tiles: Vec<u64>,
+    /// SPM capacities in KB (position 0 = 320).
+    pub spm_kbs: Vec<u64>,
+    /// FP-ALU unit counts (position 0 = 1).
+    pub alus: Vec<u64>,
+    /// Clock-gating policies (position 0 = engine-owned).
+    pub gates: Vec<GatingPolicy>,
+    /// Canonical genomes in enumeration order (anchors first).
+    genomes: Vec<Genome>,
+}
+
+impl DesignSpace {
+    /// Build the space for `kind`. Enumeration order: the two paper
+    /// anchors (baseline mask 0, TT-Edge mask 31, default knobs),
+    /// then knob combinations in axis-lexicographic order (defaults
+    /// first) with the feature mask varying fastest — so any budget
+    /// prefix is feature-diverse before it is knob-diverse.
+    pub fn new(kind: SpaceKind) -> DesignSpace {
+        let (tiles, spm_kbs, alus, gates) = match kind {
+            SpaceKind::Full => (
+                vec![16u64, 8, 32],
+                vec![320u64, 64, 160],
+                vec![1u64, 2, 4],
+                vec![GatingPolicy::EngineOwned, GatingPolicy::HbdOnly],
+            ),
+            _ => (
+                vec![16u64],
+                vec![320u64],
+                vec![1u64],
+                vec![GatingPolicy::EngineOwned],
+            ),
+        };
+        let mut space = DesignSpace { kind, tiles, spm_kbs, alus, gates, genomes: Vec::new() };
+        space.genomes = space.enumerate();
+        space
+    }
+
+    /// Anchor candidates: the paper's baseline and TT-Edge, always the
+    /// first two ids so speedup/energy comparisons and small budgets
+    /// are well-defined.
+    fn anchors() -> [Genome; 2] {
+        [Genome::of_mask(0), Genome::of_mask(0x1F)]
+    }
+
+    fn enumerate(&self) -> Vec<Genome> {
+        let mut v: Vec<Genome> = Self::anchors().to_vec();
+        if self.kind == SpaceKind::Paper {
+            return v;
+        }
+        for gate in 0..self.gates.len() as u8 {
+            for alu in 0..self.alus.len() as u8 {
+                for spm in 0..self.spm_kbs.len() as u8 {
+                    for tile in 0..self.tiles.len() as u8 {
+                        for mask in 0u8..32 {
+                            let g = Genome { mask, tile, spm, alu, gate };
+                            if self.canonical(g) == g && !v.contains(&g) {
+                                v.push(g);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        v
+    }
+
+    /// Pin cost-inert knob indices to 0 (see module docs).
+    pub fn canonical(&self, mut g: Genome) -> Genome {
+        let f = Features::from_mask(g.mask);
+        if !f.uses_engine() {
+            g.alu = 0;
+        }
+        if !f.clock_gating {
+            g.gate = 0;
+        }
+        g
+    }
+
+    /// All canonical genomes, anchors first.
+    pub fn genomes(&self) -> &[Genome] {
+        &self.genomes
+    }
+
+    /// Is `g` one of this space's candidates? (Mutation operators must
+    /// not wander outside the declared universe — e.g. the `paper`
+    /// space contains nothing but the two anchors.)
+    pub fn contains(&self, g: Genome) -> bool {
+        self.genomes.contains(&g)
+    }
+
+    pub fn len(&self) -> usize {
+        self.genomes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.genomes.is_empty()
+    }
+
+    /// Decode a genome into a simulatable SoC. A featureless genome is
+    /// the true [`Variant::Baseline`] (no engine area/power); anything
+    /// with a feature enabled is a TT-Edge variant.
+    pub fn to_soc(&self, g: Genome) -> SocConfig {
+        let features = Features::from_mask(g.mask);
+        let mut soc = if g.mask == 0 { SocConfig::baseline() } else { SocConfig::tt_edge() };
+        soc.features = features;
+        soc.gating = self.gates[g.gate as usize];
+        soc.cost.gemm_tile = self.tiles[g.tile as usize];
+        soc.cost.spm_kb = self.spm_kbs[g.spm as usize];
+        soc.cost.fpalu_units = self.alus[g.alu as usize];
+        soc
+    }
+
+    /// Human label for a genome: feature label + non-default knob
+    /// suffixes. The two anchors get their canonical names.
+    pub fn name(&self, g: Genome) -> String {
+        let anchors = Self::anchors();
+        if g == anchors[0] {
+            return "baseline".to_string();
+        }
+        if g == anchors[1] {
+            return "tt-edge".to_string();
+        }
+        let mut s = Features::from_mask(g.mask).label();
+        if g.tile != 0 {
+            s.push_str(&format!(" t{}", self.tiles[g.tile as usize]));
+        }
+        if g.spm != 0 {
+            s.push_str(&format!(" spm{}", self.spm_kbs[g.spm as usize]));
+        }
+        if g.alu != 0 {
+            s.push_str(&format!(" alu{}", self.alus[g.alu as usize]));
+        }
+        if g.gate != 0 {
+            s.push_str(&format!(" {}", self.gates[g.gate as usize].label()));
+        }
+        s
+    }
+
+    /// Area proxy for a genome, in LUT-equivalents (see
+    /// [`area_proxy_luts`]).
+    pub fn area(&self, g: Genome) -> u64 {
+        let soc = self.to_soc(g);
+        area_proxy_luts(&soc)
+    }
+}
+
+/// LUT-equivalents charged per KB of SPM away from the paper's 320 KB
+/// (BRAM macros don't consume LUTs on the FPGA; the proxy charges an
+/// area-equivalent so capacity is not free in the trade space).
+pub const SPM_LUT_EQ_PER_KB: u64 = 96;
+
+/// LUT cost of the clock-gating controller (ICG cells + FSM; tiny).
+pub const GATING_LUTS: u64 = 48;
+
+/// Area/overhead proxy for one SoC configuration, in LUT-equivalents.
+///
+/// Derived from the Table-II inventory ([`crate::hw_model`]): the
+/// non-specialized blocks are always present (the GEMM accelerator
+/// scaled linearly by PE count around the paper's 64), and each
+/// enabled TT-Edge mechanism adds its measured block — HBD-ACC +
+/// engine glue (kept by `hbd_acc` OR `direct_gemm_link`, since the
+/// hardware descriptor generator lives on the HBD-ACC address
+/// calculator), the direct-link interface, SORTING + TRUNCATION, the
+/// shared FP-ALU (once a compute-streaming module exists, times
+/// `fpalu_units`), and the gating controller. `sim::power` prices
+/// partial-feature candidates with the same absent-block rules, so
+/// the two objectives never disagree about which hardware exists.
+/// SPM capacity departures from 320 KB are
+/// charged at [`SPM_LUT_EQ_PER_KB`]. At the paper's two SoCs the
+/// proxy reproduces Table II's totals exactly (modulo the SPM term,
+/// which is zero there).
+pub fn area_proxy_luts(soc: &SocConfig) -> u64 {
+    // panics on unknown block names — a renamed Table-II block must
+    // fail loudly, not silently price a mechanism at zero area
+    let lut = |name: &str| -> u64 { crate::hw_model::block(name).luts };
+    // Always-present SoC fabric.
+    let mut area: u64 = 0;
+    for n in ["Rocket RISC-V Core", "SRAM", "DDR Controller",
+        "Peripherals incl. DMA", "System Interconnect"]
+    {
+        area += lut(n);
+    }
+    // GEMM accelerator scales with the PE array.
+    area += lut("GEMM Accelerator") * soc.cost.gemm_pes.max(1) / 64;
+    // SPM capacity proxy (signed around the 320 KB baseline).
+    let spm_delta = soc.cost.spm_kb as i64 - 320;
+    area = (area as i64 + spm_delta * SPM_LUT_EQ_PER_KB as i64).max(0) as u64;
+    // Feature-conditional engine blocks.
+    let f = &soc.features;
+    if soc.variant == Variant::Baseline {
+        return area;
+    }
+    if f.hbd_acc || f.direct_gemm_link {
+        // the HBD-ACC block hosts both the Householder pipeline and
+        // the hardware descriptor generator the direct link relies on
+        area += lut("HBD-ACC") + lut("TTD-Engine glue (unitemized)");
+    }
+    if f.direct_gemm_link {
+        area += lut("DMA/SPM/GEMM IF + interconnect");
+    }
+    if f.hw_sort_trunc {
+        area += lut("SORTING") + lut("TRUNCATION");
+    }
+    if f.uses_engine() {
+        area += lut("FP-ALU") * soc.cost.fpalu_units.max(1);
+    }
+    if f.clock_gating {
+        area += GATING_LUTS;
+    }
+    area
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw_model;
+
+    #[test]
+    fn paper_space_is_the_two_anchors() {
+        let s = DesignSpace::new(SpaceKind::Paper);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.name(s.genomes()[0]), "baseline");
+        assert_eq!(s.name(s.genomes()[1]), "tt-edge");
+        assert_eq!(s.to_soc(s.genomes()[0]).variant, Variant::Baseline);
+        assert_eq!(s.to_soc(s.genomes()[1]).variant, Variant::TtEdge);
+    }
+
+    #[test]
+    fn features_space_enumerates_all_masks_once() {
+        let s = DesignSpace::new(SpaceKind::Features);
+        assert_eq!(s.len(), 32);
+        let mut masks: Vec<u8> = s.genomes().iter().map(|g| g.mask).collect();
+        masks.sort_unstable();
+        masks.dedup();
+        assert_eq!(masks.len(), 32);
+        // anchors lead
+        assert_eq!(s.genomes()[0].mask, 0);
+        assert_eq!(s.genomes()[1].mask, 0x1F);
+    }
+
+    #[test]
+    fn full_space_is_canonical_and_duplicate_free() {
+        let s = DesignSpace::new(SpaceKind::Full);
+        let mut seen = std::collections::BTreeSet::new();
+        for &g in s.genomes() {
+            assert_eq!(s.canonical(g), g, "{g:?} not canonical");
+            assert!(seen.insert(g), "duplicate {g:?}");
+        }
+        // engine-less masks never vary the ALU axis; ungated masks
+        // never vary the policy axis
+        for &g in s.genomes() {
+            let f = Features::from_mask(g.mask);
+            if !f.uses_engine() {
+                assert_eq!(g.alu, 0);
+            }
+            if !f.clock_gating {
+                assert_eq!(g.gate, 0);
+            }
+        }
+        assert!(s.len() > 200, "{}", s.len());
+    }
+
+    #[test]
+    fn budget_prefix_is_feature_diverse() {
+        // the first 32+ genomes at default knobs cover every mask
+        let s = DesignSpace::new(SpaceKind::Full);
+        let prefix: Vec<u8> = s.genomes()[..32].iter().map(|g| g.mask).collect();
+        let mut sorted = prefix.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 32);
+        assert!(s.genomes()[..32].iter().all(|g| (g.tile, g.spm, g.alu, g.gate) == (0, 0, 0, 0)));
+    }
+
+    #[test]
+    fn anchor_areas_reproduce_table_ii() {
+        let s = DesignSpace::new(SpaceKind::Paper);
+        let hw = hw_model::summarize();
+        let tte = s.area(s.genomes()[1]);
+        assert_eq!(tte, hw.total_luts + GATING_LUTS);
+        let base = s.area(s.genomes()[0]);
+        assert_eq!(base, hw.total_luts - hw.ttd_engine_luts);
+        assert!(base < tte);
+    }
+
+    #[test]
+    fn knobs_move_the_area_proxy_monotonically() {
+        let s = DesignSpace::new(SpaceKind::Full);
+        let mut tte = s.to_soc(Genome::of_mask(0x1F));
+        let a1 = area_proxy_luts(&tte);
+        tte.cost.fpalu_units = 4;
+        let a4 = area_proxy_luts(&tte);
+        assert_eq!(a4 - a1, 3 * 3_314);
+        tte.cost.spm_kb = 64;
+        assert!(area_proxy_luts(&tte) < a4);
+        tte.cost.gemm_pes = 128;
+        assert!(area_proxy_luts(&tte) > a4 - (320 - 64) * SPM_LUT_EQ_PER_KB);
+    }
+
+    #[test]
+    fn direct_link_keeps_the_hbd_acc_block() {
+        // the link's descriptor generator lives on HBD-ACC: a
+        // link-only candidate pays for both blocks
+        let s = DesignSpace::new(SpaceKind::Features);
+        let base = s.area(Genome::of_mask(0));
+        let link_only = s.area(s.canonical(Genome::of_mask(0b00010)));
+        assert_eq!(link_only - base, 1_346 + 29 + 1_412);
+    }
+
+    #[test]
+    fn names_mention_non_default_knobs_only() {
+        let s = DesignSpace::new(SpaceKind::Full);
+        let g = Genome { mask: 0b01001, tile: 2, spm: 1, alu: 1, gate: 0 };
+        assert_eq!(s.name(s.canonical(g)), "hbd+sort t32 spm64 alu2");
+        let plain = Genome::of_mask(0b00110);
+        assert_eq!(s.name(plain), "link+spm");
+    }
+}

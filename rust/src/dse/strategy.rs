@@ -1,0 +1,322 @@
+//! Search strategies over a [`DesignSpace`] under an evaluation
+//! budget.
+//!
+//! * **Grid** — the enumeration-order prefix (anchors first, then
+//!   feature-diverse before knob-diverse; see `DesignSpace::new`).
+//! * **Random** — anchors + a seeded Fisher–Yates sample of the
+//!   remaining genomes, without replacement.
+//! * **Evolve** — a (mu + lambda)-style loop: seed with the anchors
+//!   plus random genomes, then repeatedly select the current Pareto
+//!   parents and mutate them (flip one feature bit or step one knob
+//!   axis) into unseen canonical children until the budget is spent.
+//!
+//! Every strategy is a pure function of `(space, budget, seed)` plus —
+//! for Evolve — the objective values the caller feeds back, all of
+//! which are host-thread-count invariant. Hence the selection order,
+//! and therefore the whole sweep artifact, is byte-identical at any
+//! `--parallel` width.
+
+use std::collections::BTreeSet;
+
+use crate::dse::pareto::{pareto_front, Objectives};
+use crate::dse::space::{DesignSpace, Genome};
+use crate::util::Rng;
+
+/// Which search to run (`--strategy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    Grid,
+    Random,
+    Evolve,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s {
+            "grid" => Some(Strategy::Grid),
+            "random" => Some(Strategy::Random),
+            "evolve" => Some(Strategy::Evolve),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Strategy::Grid => "grid",
+            Strategy::Random => "random",
+            Strategy::Evolve => "evolve",
+        }
+    }
+}
+
+/// Evolve-loop population per generation.
+const EVOLVE_POP: usize = 8;
+/// Parents kept per generation (frontier prefix).
+const EVOLVE_PARENTS: usize = 4;
+/// Mutation attempts before falling back to a fresh random genome.
+const MUTATE_TRIES: usize = 16;
+
+/// Clamp a requested budget to [2, space size]: the two anchors are
+/// always evaluated (speedup/energy reductions are relative to the
+/// baseline anchor).
+pub fn clamp_budget(space: &DesignSpace, budget: usize) -> usize {
+    // every space contains at least the two anchors
+    budget.clamp(2, space.len())
+}
+
+/// Grid plan: the first `budget` genomes in enumeration order.
+pub fn plan_grid(space: &DesignSpace, budget: usize) -> Vec<Genome> {
+    let n = clamp_budget(space, budget);
+    space.genomes()[..n].to_vec()
+}
+
+/// Random plan: anchors + a seeded sample (without replacement) of
+/// the rest of the space.
+pub fn plan_random(space: &DesignSpace, budget: usize, seed: u64) -> Vec<Genome> {
+    let n = clamp_budget(space, budget);
+    let mut rest: Vec<Genome> = space.genomes()[2..].to_vec();
+    let mut rng = Rng::new(seed ^ 0xD5E0_5EED);
+    // Partial Fisher–Yates: fix positions 0.. as we draw.
+    for i in 0..rest.len().min(n.saturating_sub(2)) {
+        let j = i + rng.below(rest.len() - i);
+        rest.swap(i, j);
+    }
+    let mut plan = space.genomes()[..2].to_vec();
+    plan.extend(rest.into_iter().take(n - 2));
+    plan
+}
+
+/// Mutate one gene of `g`: flip a feature bit or step a knob axis to a
+/// different value, then canonicalize. Every pick genuinely moves the
+/// genome: knob axes that canonicalization would pin back for this
+/// parent (FP-ALU count without the engine, gating policy without the
+/// clock-gating feature) are not offered. May still return a genome
+/// equal to a previously *seen* one — the caller dedups.
+fn mutate(space: &DesignSpace, rng: &mut Rng, g: Genome) -> Genome {
+    // Gene slots: 5 feature bits + the knob axes that have >1 value
+    // AND are expressible under the parent's feature mask.
+    let mut out = g;
+    let f = crate::sim::config::Features::from_mask(g.mask);
+    let knob_axes = [
+        space.tiles.len() > 1,
+        space.spm_kbs.len() > 1,
+        space.alus.len() > 1 && f.uses_engine(),
+        space.gates.len() > 1 && f.clock_gating,
+    ];
+    let n_knobs = knob_axes.iter().filter(|&&b| b).count();
+    let pick = rng.below(5 + n_knobs);
+    if pick < 5 {
+        out.mask ^= 1 << pick;
+    } else {
+        // index among the variable axes
+        let mut which = pick - 5;
+        let mut axis = 0;
+        for (i, &variable) in knob_axes.iter().enumerate() {
+            if variable {
+                if which == 0 {
+                    axis = i;
+                    break;
+                }
+                which -= 1;
+            }
+        }
+        let step = |cur: u8, len: usize, rng: &mut Rng| -> u8 {
+            let next = rng.below(len.saturating_sub(1));
+            // skip the current index so the gene always changes
+            if next as u8 >= cur { next as u8 + 1 } else { next as u8 }
+        };
+        match axis {
+            0 => out.tile = step(out.tile, space.tiles.len(), rng),
+            1 => out.spm = step(out.spm, space.spm_kbs.len(), rng),
+            2 => out.alu = step(out.alu, space.alus.len(), rng),
+            _ => out.gate = step(out.gate, space.gates.len(), rng),
+        }
+    }
+    space.canonical(out)
+}
+
+/// Run the evolutionary search. `eval` receives each generation's
+/// batch of genomes and must return one [`Objectives`] per genome in
+/// order (the caller records whatever else it needs). Returns the
+/// full evaluated genome sequence (anchors first), which together
+/// with `eval`'s bookkeeping is the sweep.
+pub fn run_evolve<F>(
+    space: &DesignSpace,
+    budget: usize,
+    seed: u64,
+    mut eval: F,
+) -> Vec<Genome>
+where
+    F: FnMut(&[Genome]) -> Vec<Objectives>,
+{
+    let budget = clamp_budget(space, budget);
+    let mut rng = Rng::new(seed ^ 0xE_0E_0E);
+    let mut seen: BTreeSet<Genome> = BTreeSet::new();
+    let mut evaluated: Vec<Genome> = Vec::new();
+    let mut scores: Vec<Objectives> = Vec::new();
+
+    // Fresh unseen genome drawn uniformly from the space (fallback
+    // when mutation keeps landing on seen genomes).
+    let fresh = |rng: &mut Rng, seen: &BTreeSet<Genome>| -> Option<Genome> {
+        let unseen: Vec<Genome> =
+            space.genomes().iter().copied().filter(|g| !seen.contains(g)).collect();
+        if unseen.is_empty() {
+            None
+        } else {
+            Some(unseen[rng.below(unseen.len())])
+        }
+    };
+
+    // Generation 0: anchors + random fill.
+    let mut batch: Vec<Genome> = space.genomes()[..2].to_vec();
+    for g in &batch {
+        seen.insert(*g);
+    }
+    while batch.len() < EVOLVE_POP.min(budget) {
+        match fresh(&mut rng, &seen) {
+            Some(g) => {
+                seen.insert(g);
+                batch.push(g);
+            }
+            None => break,
+        }
+    }
+
+    while !batch.is_empty() {
+        let objs = eval(&batch);
+        assert_eq!(objs.len(), batch.len(), "eval must score every genome");
+        evaluated.extend(batch.iter().copied());
+        scores.extend(objs);
+        let remaining = budget - evaluated.len();
+        if remaining == 0 {
+            break;
+        }
+        // Parents: the current frontier prefix (already sorted by the
+        // deterministic (cycles, energy, area, id) order).
+        let front = pareto_front(&scores);
+        let parents: Vec<Genome> =
+            front.iter().take(EVOLVE_PARENTS).map(|&i| evaluated[i]).collect();
+        // Children: mutated parents, deduped against everything seen.
+        batch = Vec::new();
+        let want = EVOLVE_POP.min(remaining);
+        'fill: while batch.len() < want {
+            let parent = parents[rng.below(parents.len())];
+            let mut child = None;
+            for _ in 0..MUTATE_TRIES {
+                let c = mutate(space, &mut rng, parent);
+                if space.contains(c) && !seen.contains(&c) {
+                    child = Some(c);
+                    break;
+                }
+            }
+            let c = match child.or_else(|| fresh(&mut rng, &seen)) {
+                Some(c) => c,
+                None => break 'fill, // space exhausted
+            };
+            seen.insert(c);
+            batch.push(c);
+        }
+    }
+    evaluated
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::space::SpaceKind;
+
+    #[test]
+    fn grid_is_the_enumeration_prefix() {
+        let s = DesignSpace::new(SpaceKind::Features);
+        let plan = plan_grid(&s, 8);
+        assert_eq!(plan.len(), 8);
+        assert_eq!(plan, s.genomes()[..8].to_vec());
+        // over-budget clamps to the space
+        assert_eq!(plan_grid(&s, 10_000).len(), 32);
+        // under-budget still evaluates both anchors
+        assert_eq!(plan_grid(&s, 0).len(), 2);
+    }
+
+    #[test]
+    fn random_is_seed_deterministic_and_duplicate_free() {
+        let s = DesignSpace::new(SpaceKind::Full);
+        let a = plan_random(&s, 20, 7);
+        let b = plan_random(&s, 20, 7);
+        assert_eq!(a, b);
+        let c = plan_random(&s, 20, 8);
+        assert_ne!(a, c);
+        let mut set: Vec<Genome> = a.clone();
+        set.sort();
+        set.dedup();
+        assert_eq!(set.len(), a.len(), "duplicates in random plan");
+        assert_eq!(&a[..2], &s.genomes()[..2]);
+    }
+
+    #[test]
+    fn mutation_always_moves_and_stays_canonical() {
+        let s = DesignSpace::new(SpaceKind::Full);
+        let mut rng = Rng::new(11);
+        // parents exercising every knob-applicability combination:
+        // full engine + gating, engine-less + ungated, gating-only
+        let parents = [
+            s.canonical(Genome { mask: 0b10011, tile: 1, spm: 2, alu: 1, gate: 1 }),
+            Genome::of_mask(0b00100),
+            s.canonical(Genome { mask: 0b10000, tile: 2, spm: 0, alu: 0, gate: 1 }),
+        ];
+        for g in parents {
+            for _ in 0..200 {
+                let m = mutate(&s, &mut rng, g);
+                assert_eq!(m, s.canonical(m), "mutants are canonical");
+                assert_ne!(m, g, "mutation must move (parent {g:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn evolve_respects_budget_and_dedups() {
+        let s = DesignSpace::new(SpaceKind::Features);
+        // Synthetic objective: fewer enabled features = more cycles,
+        // more area with mask (monotone fake landscape).
+        let evaluated = run_evolve(&s, 17, 3, |batch| {
+            batch
+                .iter()
+                .map(|g| Objectives {
+                    cycles: 1_000 - 10 * g.mask.count_ones() as u64,
+                    energy_mj: f64::from(g.mask) * 0.5 + 1.0,
+                    area_luts: 100 + u64::from(g.mask),
+                })
+                .collect()
+        });
+        assert!(evaluated.len() <= 17);
+        assert!(evaluated.len() >= 8, "{}", evaluated.len());
+        let mut uniq = evaluated.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), evaluated.len(), "evolve revisited a genome");
+        assert_eq!(&evaluated[..2], &s.genomes()[..2]);
+        // deterministic in the seed
+        let again = run_evolve(&s, 17, 3, |batch| {
+            batch
+                .iter()
+                .map(|g| Objectives {
+                    cycles: 1_000 - 10 * g.mask.count_ones() as u64,
+                    energy_mj: f64::from(g.mask) * 0.5 + 1.0,
+                    area_luts: 100 + u64::from(g.mask),
+                })
+                .collect()
+        });
+        assert_eq!(evaluated, again);
+    }
+
+    #[test]
+    fn evolve_exhausts_tiny_spaces_gracefully() {
+        let s = DesignSpace::new(SpaceKind::Paper);
+        let evaluated = run_evolve(&s, 10, 1, |batch| {
+            batch
+                .iter()
+                .map(|_| Objectives { cycles: 1, energy_mj: 1.0, area_luts: 1 })
+                .collect()
+        });
+        assert_eq!(evaluated.len(), 2);
+    }
+}

@@ -49,6 +49,17 @@ pub fn tt_edge_blocks() -> Vec<IpBlock> {
     ]
 }
 
+/// Look up one Table-II block by exact name. Panics on an unknown
+/// name: the derived models (`sim::power`, `dse::area_proxy_luts`)
+/// price mechanisms by these names, and a silent miss would zero a
+/// block's power/area instead of failing loudly on a rename.
+pub fn block(name: &str) -> IpBlock {
+    tt_edge_blocks()
+        .into_iter()
+        .find(|b| b.name == name)
+        .unwrap_or_else(|| panic!("unknown Table-II block `{name}`"))
+}
+
 /// Summary of Table II with derived quantities.
 #[derive(Clone, Debug)]
 pub struct ResourceSummary {
@@ -129,6 +140,20 @@ mod tests {
         let fpalu = spec.iter().find(|b| b.name == "FP-ALU").unwrap();
         // "the Shared FP-ALU takes up 45.6% of LUTs"
         assert!((fpalu.luts as f64 / luts as f64 * 100.0 - 45.6).abs() < 0.5);
+    }
+
+    #[test]
+    fn block_lookup_finds_every_inventory_name() {
+        for b in tt_edge_blocks() {
+            assert_eq!(block(b.name).luts, b.luts);
+        }
+        assert_eq!(block("FP-ALU").luts, 3_314);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown Table-II block")]
+    fn block_lookup_panics_on_unknown_names() {
+        let _ = block("FP-ALU-2");
     }
 
     #[test]

@@ -22,6 +22,7 @@
 #![allow(clippy::needless_range_loop)]
 
 pub mod coordinator;
+pub mod dse;
 pub mod hw_model;
 pub mod job;
 pub mod metrics;

@@ -11,7 +11,13 @@
 //!   simulated cycles are identical at any width; `--json` emits one
 //!   `SimReport` JSON object per SoC).
 //! * `compress`  — Table I: compare TTD / Tucker / TRD on the model
-//!   (`--method all|ttd|tucker|trd`, `--parallel N`).
+//!   (`--method all|ttd|tucker|trd`, `--parallel N`, `--json`).
+//! * `explore`   — design-space exploration: sweep feature toggles +
+//!   hardware knobs under a search strategy and budget, report the
+//!   (cycles, energy, area) Pareto frontier, and write the sweep
+//!   artifact into `EXPERIMENTS/` (`--workload`, `--space`,
+//!   `--strategy grid|random|evolve`, `--budget`, `--seed`,
+//!   `--parallel`, `--out`, `--json`).
 //! * `federate`  — Fig. 1: fault-tolerant federated rounds over
 //!   simulated edge nodes (`--nodes`, `--rounds`,
 //!   `--soc baseline|tt-edge`, chaos: `--dropout p --straggler-mult x
@@ -40,7 +46,12 @@ struct CmdSpec {
 
 const COMMANDS: &[CmdSpec] = &[
     CmdSpec { name: "simulate", opts: &["eps", "seed", "parallel"], flags: &["json"] },
-    CmdSpec { name: "compress", opts: &["method", "eps", "seed", "parallel"], flags: &[] },
+    CmdSpec { name: "compress", opts: &["method", "eps", "seed", "parallel"], flags: &["json"] },
+    CmdSpec {
+        name: "explore",
+        opts: &["workload", "space", "strategy", "budget", "seed", "eps", "parallel", "out"],
+        flags: &["json"],
+    },
     CmdSpec {
         name: "federate",
         opts: &[
@@ -85,6 +96,7 @@ fn main() {
     let result = match cmd {
         "simulate" => cmd_simulate(&args),
         "compress" => cmd_compress(&args),
+        "explore" => cmd_explore(&args),
         "federate" => cmd_federate(&args),
         "resources" => cmd_resources(),
         "related" => cmd_related(),
@@ -95,6 +107,14 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// Usage error for an enum-ish option value: print the expected
+/// values and exit 2 (same contract as unknown options/flags).
+fn invalid(key: &str, val: &str, expected: &str) -> ! {
+    eprintln!("error: invalid value for --{key}: `{val}` (expected {expected})");
+    eprintln!("run `ttedge help` for usage");
+    std::process::exit(2);
 }
 
 /// `--key` value with a default — but a *present, unparseable* value
@@ -114,9 +134,13 @@ fn opt_or<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> T {
 fn print_help() {
     println!(
         "ttedge — TT-Edge (DATE 2026) reproduction\n\n\
-         USAGE: ttedge <simulate|compress|federate|resources|related|artifacts> [--opts]\n\n\
+         USAGE: ttedge <simulate|compress|explore|federate|resources|related|artifacts> [--opts]\n\n\
          simulate   Table III (exec time + energy, baseline vs TT-Edge; --parallel N, --json)\n\
-         compress   Table I  (TTD vs Tucker vs TRD on ResNet-32; --parallel N)\n\
+         compress   Table I  (TTD vs Tucker vs TRD on ResNet-32; --parallel N, --json)\n\
+         explore    design-space exploration: Pareto frontier over (cycles, energy, area)\n\
+                    (--workload resnet32|tiny --space paper|features|full\n\
+                    --strategy grid|random|evolve --budget N --seed S --parallel N\n\
+                    --out FILE --json; sweep artifact lands in EXPERIMENTS/)\n\
          federate   Fig. 1   (fault-tolerant federated rounds; --threads N per node,\n\
                     --dropout p --straggler-mult x --straggler-frac f --quorum q\n\
                     --loss p --retries n --deadline-slack s --fault-seed s\n\
@@ -162,46 +186,32 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_compress(args: &Args) -> Result<()> {
+    use std::collections::BTreeMap;
     use tt_edge::sim::workload::synthetic_model;
+    use tt_edge::util::json::Json;
 
     let method = args.opt_or("method", "all");
     if !matches!(method.as_str(), "all" | "ttd" | "tucker" | "trd") {
-        eprintln!("error: invalid value for --method: `{method}` (expected all|ttd|tucker|trd)");
-        eprintln!("run `ttedge help` for usage");
-        std::process::exit(2);
+        invalid("method", &method, "all|ttd|tucker|trd");
     }
     let eps: f32 = opt_or(args, "eps", 0.12);
     let seed: u64 = opt_or(args, "seed", 42);
     let parallel: usize = opt_or(args, "parallel", 1);
+    let as_json = args.flag("json");
     let layers = synthetic_model(seed, 3.55, 0.035);
     let dense = tt_edge::model::param_count();
     let conv_dense: usize = layers.iter().map(|(l, _)| l.numel()).sum();
 
-    let mut t = Table::new(
-        "TABLE I: TD method comparison, ResNet-32 (synthetic-trained weights)",
-        &["Method", "Recon err", "Comp. ratio", "Final #params"],
-    );
-    t.row(&["Uncompressed".into(), "-".into(), "1.0x".into(), dense.to_string()]);
-
+    // (table label, json key, worst rel err or NaN, final params)
+    let mut rows: Vec<(&str, &str, f64, usize)> =
+        vec![("Uncompressed", "uncompressed", f64::NAN, dense)];
     if method == "all" || method == "tucker" {
         let (params, err) = run_tucker(&layers, eps);
-        let fin = dense - conv_dense + params;
-        t.row(&[
-            "Tucker [12]".into(),
-            format!("{err:.3}"),
-            format!("{:.1}x", dense as f64 / fin as f64),
-            fin.to_string(),
-        ]);
+        rows.push(("Tucker [12]", "tucker", f64::from(err), dense - conv_dense + params));
     }
     if method == "all" || method == "trd" {
         let (params, err) = run_trd(&layers, eps);
-        let fin = dense - conv_dense + params;
-        t.row(&[
-            "TRD [13]".into(),
-            format!("{err:.3}"),
-            format!("{:.1}x", dense as f64 / fin as f64),
-            fin.to_string(),
-        ]);
+        rows.push(("TRD [13]", "trd", f64::from(err), dense - conv_dense + params));
     }
     if method == "all" || method == "ttd" {
         let t0 = std::time::Instant::now();
@@ -212,20 +222,135 @@ fn cmd_compress(args: &Args) -> Result<()> {
             .expect("no cancel token on the CLI path")
             .outcome;
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        rows.push(("TTD (this work)", "ttd", f64::from(out.max_rel_err), out.final_params));
+        if !as_json {
+            println!(
+                "TTD: {} layers on {} host thread{} in {wall_ms:.0} ms",
+                layers.len(),
+                parallel.max(1),
+                if parallel > 1 { "s" } else { "" },
+            );
+        }
+    }
+
+    if as_json {
+        // Machine-readable Table I: one object per method, NaN rel
+        // errors (the uncompressed row) render as null.
+        let methods: Vec<Json> = rows
+            .iter()
+            .map(|(_, key, err, fin)| {
+                let mut m = BTreeMap::new();
+                m.insert("method".into(), Json::from(*key));
+                m.insert("recon_err".into(), Json::from(*err));
+                m.insert("compression_ratio".into(), Json::from(dense as f64 / *fin as f64));
+                m.insert("final_params".into(), Json::from(*fin));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("workload".into(), Json::from("resnet32"));
+        m.insert("eps".into(), Json::from(f64::from(eps)));
+        // string: u64 seeds don't fit JSON's f64-exact integer range
+        m.insert("seed".into(), Json::Str(seed.to_string()));
+        m.insert("dense_params".into(), Json::from(dense));
+        m.insert("methods".into(), Json::Arr(methods));
+        println!("{}", Json::Obj(m).render());
+        return Ok(());
+    }
+
+    let mut t = Table::new(
+        "TABLE I: TD method comparison, ResNet-32 (synthetic-trained weights)",
+        &["Method", "Recon err", "Comp. ratio", "Final #params"],
+    );
+    for (label, _, err, fin) in &rows {
         t.row(&[
-            "TTD (this work)".into(),
-            format!("{:.3}", out.max_rel_err),
-            format!("{:.1}x", out.compression_ratio),
-            out.final_params.to_string(),
+            (*label).to_string(),
+            if err.is_nan() { "-".into() } else { format!("{err:.3}") },
+            format!("{:.1}x", dense as f64 / *fin as f64),
+            fin.to_string(),
         ]);
-        println!(
-            "TTD: {} layers on {} host thread{} in {wall_ms:.0} ms",
-            layers.len(),
-            parallel.max(1),
-            if parallel > 1 { "s" } else { "" },
-        );
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_explore(args: &Args) -> Result<()> {
+    use std::path::PathBuf;
+    use tt_edge::dse::{self, ExploreConfig, SpaceKind, Strategy, Workload};
+
+    let workload = args.opt_or("workload", "resnet32");
+    let workload = Workload::parse(&workload)
+        .unwrap_or_else(|| invalid("workload", &workload, "resnet32|tiny"));
+    let space = args.opt_or("space", "full");
+    let space = SpaceKind::parse(&space)
+        .unwrap_or_else(|| invalid("space", &space, "paper|features|full"));
+    let strategy = args.opt_or("strategy", "grid");
+    let strategy = Strategy::parse(&strategy)
+        .unwrap_or_else(|| invalid("strategy", &strategy, "grid|random|evolve"));
+    let cfg = ExploreConfig {
+        workload,
+        space,
+        strategy,
+        budget: opt_or(args, "budget", 32),
+        seed: opt_or(args, "seed", 42),
+        eps: opt_or(args, "eps", 0.12),
+        parallel: opt_or(args, "parallel", 1),
+    };
+
+    let t0 = std::time::Instant::now();
+    let out = dse::explore(&cfg);
+
+    // Sweep artifact: every evaluated point (schema in
+    // EXPERIMENTS/README.md). Byte-identical at any --parallel width.
+    // Default target is the checkout's EXPERIMENTS/ when this binary
+    // still runs next to it, else ./EXPERIMENTS relative to the cwd
+    // (the compile-time manifest path is meaningless for a shipped
+    // binary). A failed artifact write warns but never aborts the run
+    // — the frontier report is the primary output.
+    let path: PathBuf = match args.opt("out") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            let checkout: PathBuf =
+                [env!("CARGO_MANIFEST_DIR"), "..", "EXPERIMENTS"].iter().collect();
+            let dir = if checkout.is_dir() {
+                checkout
+            } else {
+                PathBuf::from("EXPERIMENTS")
+            };
+            dir.join("DSE_sweep.json")
+        }
+    };
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    match std::fs::write(&path, out.sweep_json().render() + "\n") {
+        Ok(()) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write sweep artifact {}: {e}", path.display()),
+    }
+
+    if args.flag("json") {
+        println!("{}", out.report_json().render());
+        return Ok(());
+    }
+    println!(
+        "explored {} of {} candidates (workload {}, eps {}, {} host thread{}, {:.0} ms wall)\n",
+        out.evaluated.len(),
+        out.space_size,
+        cfg.workload.label(),
+        cfg.eps,
+        cfg.parallel.max(1),
+        if cfg.parallel > 1 { "s" } else { "" },
+        t0.elapsed().as_secs_f64() * 1e3,
+    );
+    println!("{}", out.frontier_table());
+    let tte = &out.evaluated[1];
+    println!(
+        "paper anchor `tt-edge`: {:.2}x speedup, {:.1}% energy reduction, +{} LUTs vs baseline{}",
+        out.speedup(tte),
+        out.energy_reduction_pct(tte),
+        tte.objectives.area_luts.saturating_sub(out.baseline().objectives.area_luts),
+        if out.frontier.contains(&1) { " (on the frontier)" } else { "" },
+    );
     Ok(())
 }
 
@@ -267,11 +392,7 @@ fn cmd_federate(args: &Args) -> Result<()> {
     let soc = match args.opt_or("soc", "tt-edge").as_str() {
         "baseline" => SocConfig::baseline(),
         "tt-edge" => SocConfig::tt_edge(),
-        other => {
-            eprintln!("error: invalid value for --soc: `{other}` (expected baseline|tt-edge)");
-            eprintln!("run `ttedge help` for usage");
-            std::process::exit(2);
-        }
+        other => invalid("soc", other, "baseline|tt-edge"),
     };
     let faults = FaultPlan {
         dropout: opt_or(args, "dropout", 0.0),

@@ -27,7 +27,7 @@ pub enum Variant {
 /// Individually toggleable TT-Edge mechanisms (all true = the paper's
 /// TT-Edge; all false = the baseline datapath with the engine present
 /// but unused).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Features {
     /// HBD-ACC executes HOUSE / VEC-DIVISION (else: core scalar FPU).
     pub hbd_acc: bool,
@@ -58,10 +58,106 @@ impl Features {
         hw_sort_trunc: false,
         clock_gating: false,
     };
+
+    /// Number of independent toggles (the DSE bitmask width).
+    pub const COUNT: usize = 5;
+
+    /// Short names in bit order (bit 0 = `hbd_acc`, ... bit 4 =
+    /// `clock_gating`) — the design-space enumeration and candidate
+    /// labels in [`crate::dse`] index these.
+    pub const SHORT_NAMES: [&'static str; Features::COUNT] =
+        ["hbd", "link", "spm", "sort", "gate"];
+
+    /// Decode a 5-bit mask (bit order per [`Features::SHORT_NAMES`]).
+    /// Bits above [`Features::COUNT`] are ignored, so
+    /// `from_mask(m)` for `m in 0..32` enumerates the whole space.
+    pub fn from_mask(mask: u8) -> Features {
+        Features {
+            hbd_acc: mask & 1 != 0,
+            direct_gemm_link: mask & 2 != 0,
+            spm_retention: mask & 4 != 0,
+            hw_sort_trunc: mask & 8 != 0,
+            clock_gating: mask & 16 != 0,
+        }
+    }
+
+    /// Inverse of [`Features::from_mask`].
+    pub fn mask(&self) -> u8 {
+        (self.hbd_acc as u8)
+            | (self.direct_gemm_link as u8) << 1
+            | (self.spm_retention as u8) << 2
+            | (self.hw_sort_trunc as u8) << 3
+            | (self.clock_gating as u8) << 4
+    }
+
+    /// Does this feature set instantiate the TTD-Engine datapath (and
+    /// therefore the shared FP-ALU)?
+    pub fn uses_engine(&self) -> bool {
+        self.hbd_acc || self.hw_sort_trunc
+    }
+
+    /// Compact label: `"base"`, `"all"`, or enabled short names joined
+    /// with `+` (e.g. `"hbd+sort"`).
+    pub fn label(&self) -> String {
+        match self.mask() {
+            0 => "base".to_string(),
+            0x1F => "all".to_string(),
+            m => {
+                let names: Vec<&str> = Features::SHORT_NAMES
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| m & (1 << i) != 0)
+                    .map(|(_, n)| *n)
+                    .collect();
+                names.join("+")
+            }
+        }
+    }
+}
+
+/// When the Rocket core's clock gate closes while the TTD-Engine owns
+/// the work — a power-only policy knob ([`crate::dse`] sweeps it).
+/// Gating only ever takes effect when [`Features::clock_gating`] is
+/// enabled; the policy narrows *which* engine-owned phases gate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum GatingPolicy {
+    /// Gate during both phases the engine fully owns (HBD and
+    /// Sort & Trunc) — the paper's policy.
+    #[default]
+    EngineOwned,
+    /// Gate only during HBD (conservative: avoids the wake latency on
+    /// the short Sort & Trunc bursts).
+    HbdOnly,
+    /// Gate only during Sort & Trunc.
+    SortTruncOnly,
+}
+
+impl GatingPolicy {
+    pub const ALL: [GatingPolicy; 3] =
+        [GatingPolicy::EngineOwned, GatingPolicy::HbdOnly, GatingPolicy::SortTruncOnly];
+
+    /// Is `phase` gated under this policy (assuming the clock-gating
+    /// feature itself is enabled)?
+    pub fn covers(&self, phase: crate::trace::Phase) -> bool {
+        use crate::trace::Phase;
+        match self {
+            GatingPolicy::EngineOwned => matches!(phase, Phase::Hbd | Phase::SortTrunc),
+            GatingPolicy::HbdOnly => phase == Phase::Hbd,
+            GatingPolicy::SortTruncOnly => phase == Phase::SortTrunc,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            GatingPolicy::EngineOwned => "engine-owned",
+            GatingPolicy::HbdOnly => "hbd-only",
+            GatingPolicy::SortTruncOnly => "sort-trunc-only",
+        }
+    }
 }
 
 /// Cycle costs @ 100 MHz. Comments: derivation / calibration role.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CostModel {
     // ---- Rocket core (in-order, scalar FPU) ----
     /// One load+FMA+loop-overhead step of a scalar dot/norm loop.
@@ -86,8 +182,23 @@ pub struct CostModel {
     pub core_scalar_op: u64,
 
     // ---- GEMM accelerator (16x16 PE-tile, 64 PEs) ----
-    /// Compute cycles per 16x16x16 tile (4096 MACs / 64 PEs).
-    pub tile_compute: u64,
+    /// Blockwise tile edge (the paper's accelerator uses 16x16 tiles).
+    /// A DSE knob: changing it moves the control-overhead vs DRAM-
+    /// traffic balance of every GEMM.
+    pub gemm_tile: u64,
+    /// Processing elements in the GEMM array (64 in the paper).
+    /// Compute cycles per tile = tile^3 / PEs (see
+    /// [`CostModel::tile_compute_cycles`]).
+    pub gemm_pes: u64,
+    /// Scratchpad capacity in KB (320 in the paper). Bounds what the
+    /// SPM can retain: Householder vectors (SPM-retention feature) and
+    /// the B-operand panel cached across a GEMM's k-loop.
+    pub spm_kb: u64,
+    /// Shared FP-ALU instances in the TTD-Engine (1 in the paper).
+    /// Extra units raise streaming throughput of norm/divide/compare
+    /// work — and cost area + power (see [`crate::dse`]'s proxy and
+    /// `sim::power`).
+    pub fpalu_units: u64,
     /// Core-side work per tile: descriptor computation (addresses,
     /// dims, layout — paper bottleneck #2) PLUS per-tile DMA
     /// programming and completion polling. ~100 scalar instructions +
@@ -150,8 +261,12 @@ impl Default for CostModel {
             core_scalar_op: 10,
             core_update_elem: 13,
 
-            // 16^3 MACs / 64 PEs = 64 compute cycles per tile.
-            tile_compute: 64,
+            // 16x16 tiles on 64 PEs: 16^3/64 = 64 compute cycles per
+            // tile; 320 KB SPM; one shared FP-ALU (the paper's SoC).
+            gemm_tile: 16,
+            gemm_pes: 64,
+            spm_kb: 320,
+            fpalu_units: 1,
             // descriptor math + DMA MMIO programming + completion poll
             // (the paper's bottleneck #2; calibrated vs Table III HBD).
             desc_core: 466,
@@ -180,13 +295,30 @@ impl Default for CostModel {
     }
 }
 
-/// A simulated SoC: variant + feature set + costs + clock.
-#[derive(Clone, Debug)]
+impl CostModel {
+    /// Compute cycles for one `gemm_tile`^3 tile op through the PE
+    /// array (tile^3 MACs spread over `gemm_pes` PEs).
+    pub fn tile_compute_cycles(&self) -> u64 {
+        (self.gemm_tile * self.gemm_tile * self.gemm_tile).div_ceil(self.gemm_pes.max(1))
+    }
+
+    /// SPM capacity in bytes.
+    pub fn spm_bytes(&self) -> u64 {
+        self.spm_kb * 1024
+    }
+}
+
+/// A simulated SoC: variant + feature set + costs + clock + gating
+/// policy.
+#[derive(Clone, Debug, PartialEq)]
 pub struct SocConfig {
     pub variant: Variant,
     pub features: Features,
     pub cost: CostModel,
     pub freq_mhz: f64,
+    /// Which engine-owned phases the core clock-gate covers (only
+    /// effective when `features.clock_gating` is set).
+    pub gating: GatingPolicy,
 }
 
 impl SocConfig {
@@ -197,6 +329,7 @@ impl SocConfig {
             features: Features::ALL_OFF,
             cost: CostModel::default(),
             freq_mhz: 100.0,
+            gating: GatingPolicy::EngineOwned,
         }
     }
 
@@ -207,6 +340,7 @@ impl SocConfig {
             features: Features::ALL_ON,
             cost: CostModel::default(),
             freq_mhz: 100.0,
+            gating: GatingPolicy::EngineOwned,
         }
     }
 
@@ -251,6 +385,48 @@ mod tests {
     #[test]
     fn tile_compute_is_macs_over_pes() {
         let c = CostModel::default();
-        assert_eq!(c.tile_compute, 16 * 16 * 16 / 64);
+        assert_eq!(c.tile_compute_cycles(), 16 * 16 * 16 / 64);
+        let mut wide = c.clone();
+        wide.gemm_tile = 32;
+        assert_eq!(wide.tile_compute_cycles(), 32 * 32 * 32 / 64);
+        wide.gemm_pes = 256;
+        assert_eq!(wide.tile_compute_cycles(), 32 * 32 * 32 / 256);
+    }
+
+    #[test]
+    fn feature_mask_round_trips_all_32_combos() {
+        for m in 0u8..32 {
+            let f = Features::from_mask(m);
+            assert_eq!(f.mask(), m);
+        }
+        assert_eq!(Features::ALL_ON.mask(), 0x1F);
+        assert_eq!(Features::ALL_OFF.mask(), 0);
+        assert_eq!(Features::from_mask(0x1F), Features::ALL_ON);
+        assert_eq!(Features::ALL_OFF.label(), "base");
+        assert_eq!(Features::ALL_ON.label(), "all");
+        assert_eq!(Features::from_mask(0b01001).label(), "hbd+sort");
+        assert!(Features::from_mask(0b01000).uses_engine());
+        assert!(!Features::from_mask(0b10110).uses_engine());
+    }
+
+    #[test]
+    fn gating_policy_covers_engine_phases() {
+        use crate::trace::Phase;
+        let eo = GatingPolicy::EngineOwned;
+        assert!(eo.covers(Phase::Hbd) && eo.covers(Phase::SortTrunc));
+        assert!(!eo.covers(Phase::QrDiag));
+        assert!(GatingPolicy::HbdOnly.covers(Phase::Hbd));
+        assert!(!GatingPolicy::HbdOnly.covers(Phase::SortTrunc));
+        assert!(GatingPolicy::SortTruncOnly.covers(Phase::SortTrunc));
+        assert!(!GatingPolicy::SortTruncOnly.covers(Phase::Hbd));
+        assert_eq!(GatingPolicy::default(), GatingPolicy::EngineOwned);
+        assert_eq!(SocConfig::tt_edge().gating, GatingPolicy::EngineOwned);
+    }
+
+    #[test]
+    fn default_knobs_match_the_paper_soc() {
+        let c = CostModel::default();
+        assert_eq!((c.gemm_tile, c.gemm_pes, c.spm_kb, c.fpalu_units), (16, 64, 320, 1));
+        assert_eq!(c.spm_bytes(), 320 * 1024);
     }
 }

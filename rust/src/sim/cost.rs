@@ -48,10 +48,12 @@ impl CostSink {
         );
         for (mine, theirs) in self.timelines.iter_mut().zip(&other.timelines) {
             // hard assert: silently merging cycles costed under a
-            // different SoC would corrupt every report downstream
-            assert_eq!(
-                mine.config.name(),
-                theirs.config.name(),
+            // different SoC would corrupt every report downstream.
+            // Compare the FULL config — variant labels alone cannot
+            // distinguish the many TT-Edge candidates a DSE sweep
+            // builds (same name, different features/knobs).
+            assert!(
+                mine.config == theirs.config,
                 "CostSink::absorb: config banks differ"
             );
             mine.absorb(theirs);
@@ -161,6 +163,19 @@ mod tests {
         assert_eq!(r[1].config_name, SocConfig::tt_edge().name());
         // offloaded phases cost less on TT-Edge
         assert!(r[1].total_ms < r[0].total_ms);
+    }
+
+    #[test]
+    #[should_panic(expected = "config banks differ")]
+    fn absorb_rejects_same_variant_different_knobs() {
+        // Both banks are single TT-Edge configs (identical name()),
+        // but with different knob values — merging them would sum
+        // cycles costed under different models.
+        let mut a = CostSink::single(SocConfig::tt_edge());
+        let mut tweaked = SocConfig::tt_edge();
+        tweaked.cost.gemm_tile = 32;
+        let b = CostSink::single(tweaked);
+        a.absorb(&b);
     }
 
     #[test]

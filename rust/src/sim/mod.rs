@@ -23,7 +23,7 @@ pub mod timeline;
 pub mod ttd_engine;
 pub mod workload;
 
-pub use config::{CostModel, Features, SocConfig, Variant};
+pub use config::{CostModel, Features, GatingPolicy, SocConfig, Variant};
 pub use cost::CostSink;
 pub use report::{format_table3, SimReport};
 pub use timeline::HwTimeline;

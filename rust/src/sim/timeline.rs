@@ -147,7 +147,8 @@ impl HwTimeline {
             }
             HwOp::Gemm { m, n, k } => {
                 self.stats.gemms += 1;
-                self.stats.gemm_tiles += gemm::tiles(m as u64, n as u64, k as u64);
+                self.stats.gemm_tiles +=
+                    gemm::tiles(c.gemm_tile, m as u64, n as u64, k as u64);
                 if self.phase == Phase::UpdateSvdInput {
                     // Sigma_t V_t^T is a core-managed scale loop in both
                     // designs (Table III's Update-SVD rows are equal).

@@ -3,21 +3,33 @@
 //! their floating-point work here, so its busy time is a serializing
 //! resource — the timeline adds these cycles sequentially, which is
 //! exactly the paper's single-FPU sharing discipline.
+//!
+//! `CostModel::fpalu_units` is the DSE sharing knob: extra units split
+//! the *streamed* element work (the Vector Streamer interleaves
+//! lanes), while per-op issue overhead and the final SQRT stay
+//! serialized. One unit (the paper's design) reproduces the original
+//! costs exactly.
 
 use crate::sim::config::CostModel;
 
+#[inline]
+fn units(c: &CostModel) -> u64 {
+    c.fpalu_units.max(1)
+}
+
 /// Dedicated `norm` opcode: stream `len` elements (1/cycle MAC
-/// accumulate) + final SQRT + issue overhead.
+/// accumulate per unit) + final SQRT + issue overhead.
 pub fn norm(c: &CostModel, len: u64) -> u64 {
-    c.fpalu_setup + len * c.fpalu_stream_per_elem + c.fpalu_sqrt
+    c.fpalu_setup + (len * c.fpalu_stream_per_elem).div_ceil(units(c)) + c.fpalu_sqrt
 }
 
-/// Elementwise vector divide v/beta, streamed through the DIV unit.
+/// Elementwise vector divide v/beta, streamed through the DIV units.
 pub fn vec_div(c: &CostModel, len: u64) -> u64 {
-    c.fpalu_setup + len * c.fpalu_div_per_elem
+    c.fpalu_setup + (len * c.fpalu_div_per_elem).div_ceil(units(c))
 }
 
-/// Single scalar ops (ADD/MUL/MAC/DIV/SQRT issued directly).
+/// Single scalar ops (ADD/MUL/MAC/DIV/SQRT issued directly) — issue
+/// is serialized regardless of unit count.
 pub fn scalar(c: &CostModel, ops: u64) -> u64 {
     ops * c.fpalu_setup
 }
@@ -44,5 +56,20 @@ mod tests {
     fn div_not_fully_pipelined() {
         let c = CostModel::default();
         assert!(vec_div(&c, 10) > norm(&c, 10) - c.fpalu_sqrt);
+    }
+
+    #[test]
+    fn extra_units_split_only_the_streamed_work() {
+        let one = CostModel::default();
+        let two = CostModel { fpalu_units: 2, ..CostModel::default() };
+        // streamed halves (up to the ceil), overheads unchanged
+        assert_eq!(
+            norm(&two, 1000),
+            one.fpalu_setup + 500 * one.fpalu_stream_per_elem + one.fpalu_sqrt
+        );
+        assert_eq!(vec_div(&two, 1000), one.fpalu_setup + 2000);
+        assert_eq!(scalar(&two, 5), scalar(&one, 5));
+        // one unit reproduces the paper's costs exactly
+        assert_eq!(norm(&one, 777), one.fpalu_setup + 777 + one.fpalu_sqrt);
     }
 }

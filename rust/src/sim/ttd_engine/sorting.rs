@@ -6,9 +6,10 @@
 use crate::sim::config::CostModel;
 
 /// Bubble sort of `n` values: n(n-1)/2 compare-and-store operations in
-/// the hardware comparator pipeline.
+/// the hardware comparator pipeline. Compares round-trip the shared
+/// FP-ALU (paper III-B), so extra `fpalu_units` interleave them.
 pub fn sort(c: &CostModel, n: u64) -> u64 {
-    n * n.saturating_sub(1) / 2 * c.sort_compare_hw
+    (n * n.saturating_sub(1) / 2 * c.sort_compare_hw).div_ceil(c.fpalu_units.max(1))
 }
 
 /// Reorder U columns / V^T rows (`elems` total) via SPM moves.

@@ -1,0 +1,180 @@
+//! DSE engine contracts:
+//!
+//! 1. Pareto properties — the frontier contains no dominated point,
+//!    and every pruned point is dominated (or duplicate-shadowed) by a
+//!    frontier member.
+//! 2. Seeded-search determinism — the same `seed` produces
+//!    byte-identical frontier/sweep JSON across serial and parallel
+//!    evaluation, for every strategy, over several seeds.
+//! 3. The paper anchors — on the ResNet-32 workload `ALL_ON` must
+//!    dominate `ALL_OFF` on both cycles and energy, sit on the
+//!    frontier, and clear the paper's headline margins (>=1.5x cycles,
+//!    >=35% energy).
+
+use tt_edge::dse::{
+    dominates, explore, pareto_front, ExploreConfig, Objectives, SpaceKind, Strategy, Workload,
+};
+use tt_edge::dse::pareto::pruned_by;
+use tt_edge::util::Rng;
+
+fn random_points(seed: u64, n: usize) -> Vec<Objectives> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| Objectives {
+            cycles: 1_000 + rng.below(500) as u64,
+            energy_mj: 10.0 + (rng.below(400) as f64) / 10.0,
+            area_luts: 100_000 + rng.below(20_000) as u64,
+        })
+        .collect()
+}
+
+#[test]
+fn frontier_has_no_dominated_member() {
+    for seed in [1u64, 2, 3] {
+        let pts = random_points(seed, 200);
+        let front = pareto_front(&pts);
+        assert!(!front.is_empty());
+        for &i in &front {
+            for &j in &front {
+                assert!(
+                    !dominates(&pts[j], &pts[i]),
+                    "seed {seed}: frontier member {j} dominates frontier member {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_pruned_point_is_dominated_by_a_frontier_member() {
+    for seed in [4u64, 5, 6] {
+        let pts = random_points(seed, 200);
+        let front = pareto_front(&pts);
+        for i in 0..pts.len() {
+            if front.contains(&i) {
+                continue;
+            }
+            let witness = pruned_by(&pts, i).expect("pruned point must have a pruner");
+            // the witness itself need not be frontier; but some
+            // frontier member must dominate or duplicate-shadow i
+            let covered = front.iter().any(|&f| {
+                dominates(&pts[f], &pts[i]) || (pts[f] == pts[i] && f < i)
+            });
+            assert!(covered, "seed {seed}: point {i} pruned by {witness} but uncovered");
+        }
+    }
+}
+
+fn cfg(strategy: Strategy, seed: u64, parallel: usize) -> ExploreConfig {
+    ExploreConfig {
+        workload: Workload::Tiny,
+        space: SpaceKind::Full,
+        strategy,
+        budget: 6,
+        seed,
+        eps: 0.2,
+        parallel,
+    }
+}
+
+#[test]
+fn seeded_search_is_byte_identical_across_parallel_widths() {
+    for strategy in [Strategy::Grid, Strategy::Random, Strategy::Evolve] {
+        for seed in [1u64, 2, 3] {
+            let serial = explore(&cfg(strategy, seed, 1));
+            let wide = explore(&cfg(strategy, seed, 4));
+            assert_eq!(
+                serial.report_json().render(),
+                wide.report_json().render(),
+                "{strategy:?} seed {seed}: frontier JSON diverged across widths"
+            );
+            assert_eq!(
+                serial.sweep_json().render(),
+                wide.sweep_json().render(),
+                "{strategy:?} seed {seed}: sweep JSON diverged across widths"
+            );
+        }
+    }
+}
+
+#[test]
+fn different_seeds_move_the_seeded_strategies() {
+    let a = explore(&cfg(Strategy::Random, 1, 1));
+    let b = explore(&cfg(Strategy::Random, 2, 1));
+    // seeds key both the weights and the sample: sweeps must differ
+    assert_ne!(a.sweep_json().render(), b.sweep_json().render());
+}
+
+#[test]
+fn evaluated_genomes_are_unique_and_within_budget() {
+    for strategy in [Strategy::Grid, Strategy::Random, Strategy::Evolve] {
+        let out = explore(&cfg(strategy, 9, 1));
+        assert!(out.evaluated.len() <= 6, "{strategy:?}");
+        assert!(out.evaluated.len() >= 2);
+        let mut genomes: Vec<_> = out.evaluated.iter().map(|e| e.genome).collect();
+        genomes.sort();
+        genomes.dedup();
+        assert_eq!(genomes.len(), out.evaluated.len(), "{strategy:?} revisited a genome");
+        assert_eq!(out.evaluated[0].name, "baseline");
+        assert_eq!(out.evaluated[1].name, "tt-edge");
+    }
+}
+
+#[test]
+fn all_on_dominates_all_off_on_the_paper_workload() {
+    // The acceptance anchor: paper workload, paper SoCs. One numerics
+    // pass costs both configs.
+    let out = explore(&ExploreConfig {
+        workload: Workload::Resnet32,
+        space: SpaceKind::Paper,
+        strategy: Strategy::Grid,
+        budget: 2,
+        seed: 42,
+        eps: 0.12,
+        parallel: 2,
+    });
+    assert_eq!(out.evaluated.len(), 2);
+    let base = &out.evaluated[0];
+    let tte = &out.evaluated[1];
+    // ALL_ON dominates ALL_OFF on cycles and energy...
+    assert!(tte.objectives.cycles < base.objectives.cycles);
+    assert!(tte.objectives.energy_mj < base.objectives.energy_mj);
+    // ...and therefore sits on the (cycles, energy, area) frontier
+    // (it trades area, so both anchors are frontier members).
+    assert!(out.frontier.contains(&1), "tt-edge not on the frontier");
+    assert!(out.frontier.contains(&0), "baseline (least area) not on the frontier");
+    // headline margins: >=1.5x cycle speedup, >=35% energy reduction
+    let speedup = out.speedup(tte);
+    let esave = out.energy_reduction_pct(tte);
+    assert!(speedup >= 1.5, "speedup {speedup}");
+    assert!(esave >= 35.0, "energy reduction {esave}%");
+}
+
+#[test]
+fn explore_matches_the_simulate_path_on_the_anchors() {
+    // The DSE evaluation must cost exactly what `simulate` costs: same
+    // job builder, same streaming sink, same workload generator.
+    use tt_edge::sim::SocConfig;
+    use tt_edge::CompressionJob;
+
+    let out = explore(&ExploreConfig {
+        workload: Workload::Tiny,
+        space: SpaceKind::Paper,
+        strategy: Strategy::Grid,
+        budget: 2,
+        seed: 7,
+        eps: 0.15,
+        parallel: 1,
+    });
+    let mut layers = tt_edge::sim::workload::synthetic_model(7, 3.55, 0.035);
+    layers.truncate(4);
+    let job = CompressionJob::model(&layers)
+        .eps(0.15)
+        .socs(&[SocConfig::baseline(), SocConfig::tt_edge()])
+        .run()
+        .unwrap();
+    for (e, r) in out.evaluated.iter().zip(&job.reports) {
+        assert_eq!(e.time_ms, r.total_ms);
+        assert_eq!(e.objectives.energy_mj, r.total_mj);
+    }
+}
