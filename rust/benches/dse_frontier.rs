@@ -6,7 +6,9 @@
 //! prints its tables and self-asserts the headline invariants; CI only
 //! compiles it (`cargo bench --no-run`).
 
-use tt_edge::dse::{explore, DesignSpace, ExploreConfig, SpaceKind, Strategy, Workload};
+use tt_edge::dse::{
+    explore, explore_live, DesignSpace, ExploreConfig, SpaceKind, Strategy, Workload,
+};
 use tt_edge::metrics::bench::{black_box, time_it};
 use tt_edge::sim::workload::{compress_model, synthetic_model};
 use tt_edge::sim::{CostSink, SocConfig};
@@ -64,6 +66,49 @@ fn main() {
         out.energy_reduction_pct(tte) >= 35.0,
         "energy reduction {}",
         out.energy_reduction_pct(tte)
+    );
+    println!();
+
+    // ---- live vs replay: multi-generation evolve sweep ------------
+    // The PR-5 acceptance metric: a seeded-evolutionary sweep with G
+    // generations used to pay G identical numerics passes; the
+    // record-once / replay-many driver pays exactly one. Budget 40 on
+    // the full space spans 5 evolve generations over the ResNet-32
+    // workload.
+    let evolve_cfg = ExploreConfig {
+        workload: Workload::Resnet32,
+        space: SpaceKind::Full,
+        strategy: Strategy::Evolve,
+        budget: 40,
+        seed: 42,
+        eps: 0.12,
+        parallel: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    };
+    let mut lived = None;
+    let live = time_it("evolve 40 (live: numerics per generation)", 0, 3, || {
+        lived = Some(black_box(explore_live(&evolve_cfg)));
+    });
+    println!("{}", live.report());
+    let mut replayed = None;
+    let replay = time_it("evolve 40 (record-once / replay-many)", 0, 3, || {
+        replayed = Some(black_box(explore(&evolve_cfg)));
+    });
+    println!("{}", replay.report());
+    let speedup = live.mean_ms / replay.mean_ms;
+    println!("  -> replay speedup over live costing: {speedup:.2}x");
+
+    let replayed = replayed.expect("timed at least once");
+    let lived = lived.expect("timed at least once");
+    assert_eq!(replayed.numerics_passes, 1, "replay driver re-ran the numerics");
+    assert!(lived.numerics_passes >= 3, "live evolve should pay per generation");
+    assert_eq!(
+        replayed.sweep_json().render(),
+        lived.sweep_json().render(),
+        "replay sweep diverged from the live-costed artifact"
+    );
+    assert!(
+        speedup >= 2.0,
+        "record-once / replay-many must be >= 2x on a multi-generation sweep, got {speedup:.2}x"
     );
     println!("dse_frontier OK");
 }

@@ -18,7 +18,7 @@ use tt_edge::pipeline;
 use tt_edge::sim::workload::{compress_model, synthetic_model};
 use tt_edge::sim::{CostSink, SocConfig};
 use tt_edge::trace::{NullSink, VecSink};
-use tt_edge::ttd::svd::bidiag::bidiagonalize;
+use tt_edge::ttd::svd::bidiag::{bidiagonalize, bidiagonalize_reference};
 use tt_edge::ttd::svd::house::{apply_left, house};
 use tt_edge::ttd::{decompose, Matrix, Tensor, TtSpec};
 use tt_edge::util::json::Json;
@@ -51,11 +51,21 @@ fn main() {
         apply_left(black_box(&mut m), 0, 1, &h.v, h.beta);
     }).report());
 
-    // full HBD of the dominant working matrix
+    // full HBD of the dominant working matrix: blocked compact-WY
+    // accumulation (the default) vs the per-reflector rank-1 reference
     let a2 = Matrix::from_vec(576, 64, rng.normal_vec(576 * 64));
-    println!("{}", time_it("bidiagonalize 576x64", 1, 10, || {
+    let hbd_blocked = time_it("bidiagonalize 576x64 (blocked WY)", 1, 10, || {
         black_box(bidiagonalize(&a2, &mut NullSink));
-    }).report());
+    });
+    println!("{}", hbd_blocked.report());
+    let hbd_reference = time_it("bidiagonalize 576x64 (per-reflector)", 1, 10, || {
+        black_box(bidiagonalize_reference(&a2, &mut NullSink));
+    });
+    println!("{}", hbd_reference.report());
+    println!(
+        "  -> blocked accumulation speedup over per-reflector: {:.2}x\n",
+        hbd_reference.mean_ms / hbd_blocked.mean_ms
+    );
 
     // full-layer TTD (9,64,64)
     let layer = tt_edge::model::conv_layers().pop().unwrap();
@@ -136,6 +146,23 @@ fn main() {
         black_box(cost.timelines()[1].cycles.total());
     });
     println!("{}", streaming.report());
+    // record-once / replay-many: the RLE program's O(#runs) run-fold
+    // vs the per-op replay loop above (same both-SoC cost bank)
+    let mut rec = tt_edge::trace::RecordingSink::default();
+    let _ = decompose(&w, &spec, &mut rec);
+    let mut program = tt_edge::trace::OpProgram::default();
+    program.push_layer(rec);
+    let program_fold = time_it("sim program fold (RLE runs, both SoCs)", 2, 50, || {
+        let mut cost = CostSink::new(&configs);
+        cost.fold_program(&program);
+        black_box(cost.timelines()[1].cycles.total());
+    });
+    println!(
+        "{}  ({} runs for {} ops)",
+        program_fold.report(),
+        program.run_count(),
+        program.op_count()
+    );
 
     // ---- machine-readable artifact (EXPERIMENTS/BENCH_pipeline.json)
     let mut obj = BTreeMap::new();
@@ -160,7 +187,14 @@ fn main() {
         })
         .collect();
     obj.insert("pipeline_parallel".into(), Json::Arr(par));
+    obj.insert("hbd_blocked_ms".into(), Json::from(hbd_blocked.mean_ms));
+    obj.insert("hbd_reference_ms".into(), Json::from(hbd_reference.mean_ms));
+    obj.insert(
+        "hbd_blocked_speedup".into(),
+        Json::from(hbd_reference.mean_ms / hbd_blocked.mean_ms),
+    );
     obj.insert("sim_replay_only_ms".into(), Json::from(replay.mean_ms));
+    obj.insert("sim_program_fold_ms".into(), Json::from(program_fold.mean_ms));
     obj.insert("ttd_record_then_replay_ms".into(), Json::from(record_replay.mean_ms));
     obj.insert("ttd_streaming_cost_ms".into(), Json::from(streaming.mean_ms));
     let path: PathBuf =

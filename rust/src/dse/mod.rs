@@ -12,10 +12,14 @@
 //!   seeded evolutionary loop, all under an evaluation budget.
 //! * [`pareto`] — the (cycles, energy mJ, area-proxy LUTs) frontier
 //!   with dominance pruning and deterministic tie-breaking.
-//! * [`explore`] — the driver: each strategy batch becomes **one**
-//!   numerics pass through [`CompressionJob`] with the whole batch of
-//!   configs costed online (`--parallel` fans the layer work out via
-//!   `pipeline`; the simulated objectives are invariant to it).
+//! * [`explore`] — the driver, record-once / replay-many: **one**
+//!   numerics pass total captures the workload's op stream as a
+//!   [`crate::job::JobProgram`] (`--parallel` fans the layer work out
+//!   via `pipeline`; the simulated objectives are invariant to it),
+//!   then every strategy batch — every evolve generation included —
+//!   is costed by replaying that program under the batch's SoC bank.
+//!   [`explore_live`] keeps the per-batch live costing as the pinned
+//!   reference path.
 //!
 //! Determinism contract (pinned by `tests/dse_engine.rs`): for a
 //! fixed `(workload, space, strategy, budget, seed, eps)` the sweep
@@ -137,6 +141,13 @@ pub struct ExploreOutcome {
     /// Whole-model compression stats of the (config-independent)
     /// numerics: (ratio, max rel err, final params).
     pub compression: (f64, f32, usize),
+    /// Numerics passes this exploration executed (counted on the
+    /// calling thread via [`crate::job::numerics_pass_count`]).
+    /// [`explore`] records once and replays, so this is 1 regardless
+    /// of strategy or generation count; [`explore_live`] pays one per
+    /// strategy batch. Deliberately NOT serialized into the sweep or
+    /// frontier artifacts — those stay byte-identical across paths.
+    pub numerics_passes: u64,
 }
 
 impl ExploreOutcome {
@@ -262,10 +273,58 @@ impl ExploreOutcome {
     }
 }
 
-/// Evaluate one batch of genomes: a single numerics pass with every
-/// candidate SoC costed online in the streaming multi-config sink,
-/// layer fan-out on `parallel` host workers.
-fn evaluate_batch(
+/// Append one batch's [`Evaluated`] records from its simulation
+/// reports (shared by the replay and live evaluators, so both produce
+/// byte-identical artifacts).
+fn push_evaluated(
+    space: &DesignSpace,
+    genomes: &[Genome],
+    socs: Vec<SocConfig>,
+    reports: &[crate::sim::report::SimReport],
+    next_id: usize,
+    out: &mut Vec<Evaluated>,
+) {
+    for (i, ((&g, soc), report)) in genomes.iter().zip(socs).zip(reports).enumerate() {
+        let cycles: u64 = Phase::ALL.iter().map(|&p| report.phase(p).cycles).sum();
+        out.push(Evaluated {
+            id: next_id + i,
+            genome: g,
+            name: space.name(g),
+            soc,
+            objectives: Objectives {
+                cycles,
+                energy_mj: report.total_mj,
+                area_luts: space.area(g),
+            },
+            time_ms: report.total_ms,
+        });
+    }
+}
+
+/// Evaluate one batch of genomes by replaying the recorded op program
+/// under every candidate SoC — zero numerics, bit-identical costing.
+fn evaluate_batch_replay(
+    program: &crate::job::JobProgram,
+    space: &DesignSpace,
+    genomes: &[Genome],
+    next_id: usize,
+    out: &mut Vec<Evaluated>,
+) {
+    let socs: Vec<SocConfig> = genomes.iter().map(|&g| space.to_soc(g)).collect();
+    let job = CompressionJob::replay(program)
+        .socs(&socs)
+        .run()
+        .expect("replay jobs carry no cancel token");
+    push_evaluated(space, genomes, socs, &job.reports, next_id, out);
+}
+
+/// Evaluate one batch with live costing: a full numerics pass with
+/// every candidate SoC costed online in the streaming multi-config
+/// sink, layer fan-out on `parallel` host workers. This is the
+/// pre-cache reference path [`explore_live`] keeps alive; the
+/// byte-identity of its artifacts against [`explore`]'s replay path is
+/// pinned by `tests/dse_engine.rs`.
+fn evaluate_batch_live(
     layers: &[(ConvLayer, Tensor)],
     space: &DesignSpace,
     cfg: &ExploreConfig,
@@ -280,21 +339,7 @@ fn evaluate_batch(
         .socs(&socs)
         .run()
         .expect("explore jobs carry no cancel token");
-    for (i, (&g, report)) in genomes.iter().zip(&job.reports).enumerate() {
-        let cycles: u64 = Phase::ALL.iter().map(|&p| report.phase(p).cycles).sum();
-        out.push(Evaluated {
-            id: next_id + i,
-            genome: g,
-            name: space.name(g),
-            soc: socs[i].clone(),
-            objectives: Objectives {
-                cycles,
-                energy_mj: report.total_mj,
-                area_luts: space.area(g),
-            },
-            time_ms: report.total_ms,
-        });
-    }
+    push_evaluated(space, genomes, socs, &job.reports, next_id, out);
     (
         job.outcome.compression_ratio,
         job.outcome.max_rel_err,
@@ -302,9 +347,81 @@ fn evaluate_batch(
     )
 }
 
+fn finish(
+    cfg: &ExploreConfig,
+    space: &DesignSpace,
+    evaluated: Vec<Evaluated>,
+    compression: (f64, f32, usize),
+    passes_before: u64,
+) -> ExploreOutcome {
+    let objs: Vec<Objectives> = evaluated.iter().map(|e| e.objectives).collect();
+    let frontier = pareto_front(&objs);
+    ExploreOutcome {
+        cfg: cfg.clone(),
+        space_size: space.len(),
+        evaluated,
+        frontier,
+        compression,
+        numerics_passes: crate::job::numerics_pass_count() - passes_before,
+    }
+}
+
 /// Run one exploration (see the [module docs](self) for the
 /// determinism contract).
+///
+/// Record-once / replay-many: the workload's op stream is captured in
+/// **one** numerics pass ([`CompressionJob::program`]) and every
+/// strategy batch — including every evolve generation — is costed by
+/// replaying that program under the batch's SoC bank. Replay is
+/// bit-identical to live costing, so the sweep/frontier artifacts are
+/// byte-identical to [`explore_live`] while the numerics cost stays
+/// constant in the generation count ([`ExploreOutcome::numerics_passes`]
+/// asserts exactly 1).
 pub fn explore(cfg: &ExploreConfig) -> ExploreOutcome {
+    let passes_before = crate::job::numerics_pass_count();
+    let space = DesignSpace::new(cfg.space);
+    let layers = cfg.workload.layers(cfg.seed);
+    // THE numerics pass: record the config-independent op program
+    // (no SoC bank attached — per-batch costing happens on replay).
+    let (job_out, program) = CompressionJob::model(&layers)
+        .eps(cfg.eps)
+        .parallel(cfg.parallel)
+        .program()
+        .expect("explore jobs carry no cancel token");
+    let compression = (
+        job_out.outcome.compression_ratio,
+        job_out.outcome.max_rel_err,
+        job_out.outcome.final_params,
+    );
+    let mut evaluated: Vec<Evaluated> = Vec::new();
+
+    match cfg.strategy {
+        Strategy::Grid | Strategy::Random => {
+            let plan = match cfg.strategy {
+                Strategy::Grid => strategy::plan_grid(&space, cfg.budget),
+                _ => strategy::plan_random(&space, cfg.budget, cfg.seed),
+            };
+            evaluate_batch_replay(&program, &space, &plan, 0, &mut evaluated);
+        }
+        Strategy::Evolve => {
+            strategy::run_evolve(&space, cfg.budget, cfg.seed, |batch| {
+                let next_id = evaluated.len();
+                evaluate_batch_replay(&program, &space, batch, next_id, &mut evaluated);
+                evaluated[next_id..].iter().map(|e| e.objectives).collect()
+            });
+        }
+    }
+
+    finish(cfg, &space, evaluated, compression, passes_before)
+}
+
+/// [`explore`] with live per-batch costing (one numerics pass per
+/// strategy batch — the pre-PR-5 behavior). Kept as the reference the
+/// replay path is pinned against (`tests/dse_engine.rs` asserts
+/// byte-identical artifacts) and as the baseline the live-vs-replay
+/// bench in `benches/dse_frontier.rs` measures.
+pub fn explore_live(cfg: &ExploreConfig) -> ExploreOutcome {
+    let passes_before = crate::job::numerics_pass_count();
     let space = DesignSpace::new(cfg.space);
     let layers = cfg.workload.layers(cfg.seed);
     let mut evaluated: Vec<Evaluated> = Vec::new();
@@ -316,28 +433,20 @@ pub fn explore(cfg: &ExploreConfig) -> ExploreOutcome {
                 Strategy::Grid => strategy::plan_grid(&space, cfg.budget),
                 _ => strategy::plan_random(&space, cfg.budget, cfg.seed),
             };
-            compression = evaluate_batch(&layers, &space, cfg, &plan, 0, &mut evaluated);
+            compression = evaluate_batch_live(&layers, &space, cfg, &plan, 0, &mut evaluated);
         }
         Strategy::Evolve => {
             let mut comp = compression;
             strategy::run_evolve(&space, cfg.budget, cfg.seed, |batch| {
                 let next_id = evaluated.len();
-                comp = evaluate_batch(&layers, &space, cfg, batch, next_id, &mut evaluated);
+                comp = evaluate_batch_live(&layers, &space, cfg, batch, next_id, &mut evaluated);
                 evaluated[next_id..].iter().map(|e| e.objectives).collect()
             });
             compression = comp;
         }
     }
 
-    let objs: Vec<Objectives> = evaluated.iter().map(|e| e.objectives).collect();
-    let frontier = pareto_front(&objs);
-    ExploreOutcome {
-        cfg: cfg.clone(),
-        space_size: space.len(),
-        evaluated,
-        frontier,
-        compression,
-    }
+    finish(cfg, &space, evaluated, compression, passes_before)
 }
 
 #[cfg(test)]
@@ -384,6 +493,24 @@ mod tests {
         for &i in &out.frontier {
             assert!(i < out.evaluated.len());
         }
+    }
+
+    #[test]
+    fn explore_records_once_regardless_of_generations() {
+        let mut cfg = tiny_cfg(Strategy::Evolve, 20);
+        cfg.space = SpaceKind::Full; // room for several generations
+        let out = explore(&cfg);
+        assert_eq!(out.numerics_passes, 1, "replay path re-ran the numerics");
+        assert!(
+            out.evaluated.len() > 8,
+            "budget 20 should span >1 generation, got {}",
+            out.evaluated.len()
+        );
+        let live = explore_live(&cfg);
+        assert!(live.numerics_passes >= 2, "live evolve pays per generation");
+        // and the artifacts agree byte for byte
+        assert_eq!(out.sweep_json().render(), live.sweep_json().render());
+        assert_eq!(out.report_json().render(), live.report_json().render());
     }
 
     #[test]

@@ -14,7 +14,10 @@
 //! for Evolve — the objective values the caller feeds back, all of
 //! which are host-thread-count invariant. Hence the selection order,
 //! and therefore the whole sweep artifact, is byte-identical at any
-//! `--parallel` width.
+//! `--parallel` width — and also across the two evaluators the driver
+//! offers (`dse::explore`'s op-program replay and `dse::explore_live`'s
+//! per-batch numerics), because replayed objectives are bit-identical
+//! to live-costed ones.
 
 use std::collections::BTreeSet;
 

@@ -32,15 +32,39 @@
 //! buffering (the observer sees the exact serial-order op stream) —
 //! that is the only path that stores ops.
 
+use std::cell::Cell;
+
 use crate::model::resnet32::ConvLayer;
 use crate::pipeline::{self, CancelToken};
 use crate::sim::config::SocConfig;
 use crate::sim::cost::CostSink;
 use crate::sim::report::SimReport;
 use crate::sim::workload::{aggregate_outcome_conv, synthetic_model, CompressionOutcome};
-use crate::trace::{Tee, TraceSink, VecSink};
+use crate::trace::{OpProgram, RecordingSink, Tee, TraceSink, VecSink};
 use crate::ttd::ttd::TtSpec;
 use crate::ttd::{decompose, relative_error, Tensor};
+
+thread_local! {
+    /// Numerics passes started by [`CompressionJob`] on this thread
+    /// (replay jobs never count). Thread-local on purpose: a pass is
+    /// attributed to the thread that called `run`/`program` — worker
+    /// threads the pipeline fans layers out to are part of that one
+    /// pass — so concurrent test threads cannot see each other's
+    /// passes.
+    static NUMERICS_PASSES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Total numerics passes [`CompressionJob`] has started on the calling
+/// thread. The DSE driver asserts record-once / replay-many against
+/// this: `explore` must move it by exactly 1 regardless of strategy or
+/// generation count.
+pub fn numerics_pass_count() -> u64 {
+    NUMERICS_PASSES.with(|c| c.get())
+}
+
+fn record_numerics_pass() {
+    NUMERICS_PASSES.with(|c| c.set(c.get() + 1));
+}
 
 enum Input<'a> {
     /// One bare tensor: a single Algorithm-1 run.
@@ -52,6 +76,56 @@ enum Input<'a> {
     Refs(Vec<(&'a ConvLayer, &'a Tensor)>),
     /// The synthetic-trained ResNet-32 workload (Table I/III).
     Synthetic { seed: u64, ratio: f64, noise: f32 },
+    /// A recorded op program: no numerics at all, just costing.
+    Replay(&'a JobProgram),
+}
+
+/// The record-once artifact of a job: the RLE-compacted hardware-op
+/// stream (one segment per layer, serial layer order) plus the
+/// config-independent compression summary. Produced by
+/// [`CompressionJob::program`]; replayed against arbitrarily many SoC
+/// banks by [`CompressionJob::replay`] without touching the numerics
+/// — costing a program is bit-identical (cycles, energy, per-phase
+/// banks) to live-costing the run that recorded it.
+#[derive(Clone, Debug)]
+pub struct JobProgram {
+    /// The compacted op stream (order-preserving; see [`OpProgram`]).
+    pub ops: OpProgram,
+    model_dense_params: usize,
+    conv_dense_params: usize,
+    conv_tt_params: usize,
+    final_params: usize,
+    compression_ratio: f64,
+    max_rel_err: f32,
+}
+
+impl JobProgram {
+    fn from_outcome(ops: OpProgram, o: &CompressionOutcome) -> Self {
+        JobProgram {
+            ops,
+            model_dense_params: o.model_dense_params,
+            conv_dense_params: o.conv_dense_params,
+            conv_tt_params: o.conv_tt_params,
+            final_params: o.final_params,
+            compression_ratio: o.compression_ratio,
+            max_rel_err: o.max_rel_err,
+        }
+    }
+
+    /// The recorded compression summary. Decompositions are not stored
+    /// in a program (replay only needs costing), so `decomps` is empty
+    /// — every scalar field matches the recording run exactly.
+    pub fn outcome(&self) -> CompressionOutcome {
+        CompressionOutcome {
+            decomps: Vec::new(),
+            model_dense_params: self.model_dense_params,
+            conv_dense_params: self.conv_dense_params,
+            conv_tt_params: self.conv_tt_params,
+            final_params: self.final_params,
+            compression_ratio: self.compression_ratio,
+            max_rel_err: self.max_rel_err,
+        }
+    }
 }
 
 /// Builder for one compression job; see the [module docs](self).
@@ -79,8 +153,13 @@ pub struct JobOutput {
 
 impl JobOutput {
     /// The first (for single-tensor jobs: the only) decomposition.
+    /// Panics on replay outputs — programs carry the compression
+    /// summary but no decompositions (see [`JobProgram::outcome`]).
     pub fn decomp(&self) -> &crate::ttd::TtDecomp {
-        &self.outcome.decomps[0]
+        self.outcome
+            .decomps
+            .first()
+            .expect("replay JobOutputs carry no decompositions")
     }
 
     /// The first configured SoC's report; panics if no `.soc(..)` was
@@ -127,6 +206,19 @@ impl<'a> CompressionJob<'a> {
     /// workload at the repo's calibrated ratio/noise).
     pub fn synthetic(seed: u64) -> Self {
         Self::with_input(Input::Synthetic { seed, ratio: 3.55, noise: 0.035 })
+    }
+
+    /// Replay a recorded [`JobProgram`] instead of running numerics:
+    /// [`run`] folds the program into the `.soc(..)` bank (bit-
+    /// identical to the live-costed recording run) and reuses the
+    /// recorded compression summary ([`JobProgram::outcome`] — no
+    /// decompositions). `.eps`/`.rank_cap`/`.parallel` have no effect
+    /// on a replay; `.sink(..)` observers still receive the exact
+    /// recorded op stream.
+    ///
+    /// [`run`]: CompressionJob::run
+    pub fn replay(program: &'a JobProgram) -> Self {
+        Self::with_input(Input::Replay(program))
     }
 
     /// Prescribed relative accuracy (Oseledets `eps`; the per-split
@@ -204,12 +296,24 @@ impl<'a> CompressionJob<'a> {
         let default_token = CancelToken::default();
         let cancel = cancel.unwrap_or(&default_token);
 
+        // Replay: no numerics at all (and no numerics-pass count) —
+        // fold the recorded program into the cost bank and reuse the
+        // recorded compression summary.
+        if let Input::Replay(p) = &input {
+            if cancel.is_cancelled() {
+                return None;
+            }
+            let reports = cost_program(p, &configs, observer);
+            return Some(JobOutput { outcome: p.outcome(), reports });
+        }
+
         // Single tensor: one Algorithm-1 run, streamed straight into
         // the cost sink (and the observer, when attached).
         if let Input::Tensor(w) = &input {
             if cancel.is_cancelled() {
                 return None;
             }
+            record_numerics_pass();
             let mut cost = CostSink::new(&configs);
             let d = match observer {
                 Some(obs) => {
@@ -223,33 +327,18 @@ impl<'a> CompressionJob<'a> {
             if cancel.is_cancelled() {
                 return None;
             }
-            let rel_err = relative_error(w, &d);
-            let numel = w.numel();
-            let tt = d.param_count();
-            let outcome = CompressionOutcome {
-                decomps: vec![d],
-                model_dense_params: numel,
-                conv_dense_params: numel,
-                conv_tt_params: tt,
-                final_params: tt,
-                compression_ratio: numel as f64 / tt as f64,
-                max_rel_err: rel_err,
-            };
+            let outcome = single_tensor_outcome(w, d);
             return Some(JobOutput { outcome, reports: cost.reports() });
         }
 
         // Model inputs: resolve to borrowed (layer, tensor) jobs.
-        let owned;
-        let jobs: Vec<(&ConvLayer, &Tensor)> = match input {
-            Input::Tensor(_) => unreachable!("handled above"),
-            Input::Layers(layers) => layers.iter().map(|(l, w)| (l, w)).collect(),
-            Input::Refs(jobs) => jobs,
-            Input::Synthetic { seed, ratio, noise } => {
-                owned = synthetic_model(seed, ratio, noise);
-                owned.iter().map(|(l, w)| (l, w)).collect()
-            }
-        };
+        let mut owned = None;
+        let jobs = resolve_model_input(input, &mut owned);
         let conv_dense: usize = jobs.iter().map(|(l, _)| l.numel()).sum();
+        if cancel.is_cancelled() {
+            return None;
+        }
+        record_numerics_pass();
 
         if let Some(obs) = observer {
             // Observer path: record per-layer traces, then stream them
@@ -277,6 +366,119 @@ impl<'a> CompressionJob<'a> {
         let outcome = aggregate_outcome_conv(conv_dense, batch.decomps, batch.max_rel_err);
         Some(JobOutput { outcome, reports })
     }
+
+    /// Run the job's numerics **once**, recording the op stream as an
+    /// RLE [`JobProgram`] alongside the normal output. The program
+    /// replays against any config bank via [`CompressionJob::replay`];
+    /// this call's own reports are produced by folding the freshly
+    /// recorded program (not by live costing), so recording and every
+    /// later replay are bit-identical by construction. `.sink(..)`
+    /// observers still receive the exact serial-order stream.
+    ///
+    /// Returns `None` iff the cancel token tripped. Panics on a
+    /// [`CompressionJob::replay`] job — there are no numerics to
+    /// record.
+    pub fn program(self) -> Option<(JobOutput, JobProgram)> {
+        let CompressionJob { input, spec, threads, configs, cancel, observer } = self;
+        let default_token = CancelToken::default();
+        let cancel = cancel.unwrap_or(&default_token);
+        assert!(
+            !matches!(input, Input::Replay(_)),
+            "CompressionJob::program: a replay job has no numerics to record"
+        );
+
+        // Single tensor: record one Algorithm-1 run.
+        if let Input::Tensor(w) = &input {
+            if cancel.is_cancelled() {
+                return None;
+            }
+            record_numerics_pass();
+            let mut rec = RecordingSink::default();
+            let d = decompose(w, &spec, &mut rec);
+            if cancel.is_cancelled() {
+                return None;
+            }
+            let mut ops = OpProgram::default();
+            ops.push_layer(rec);
+            let outcome = single_tensor_outcome(w, d);
+            let program = JobProgram::from_outcome(ops, &outcome);
+            let reports = cost_program(&program, &configs, observer);
+            return Some((JobOutput { outcome, reports }, program));
+        }
+
+        // Model inputs: the same resolution as run(), shared so the
+        // recorded numerics can never diverge from the live ones.
+        let mut owned = None;
+        let jobs = resolve_model_input(input, &mut owned);
+        let conv_dense: usize = jobs.iter().map(|(l, _)| l.numel()).sum();
+        if cancel.is_cancelled() {
+            return None;
+        }
+        record_numerics_pass();
+        let batch = pipeline::compress_layers_recorded(&jobs, &spec, threads, cancel)?;
+        let outcome = aggregate_outcome_conv(conv_dense, batch.decomps, batch.max_rel_err);
+        let program = JobProgram::from_outcome(batch.program, &outcome);
+        let reports = cost_program(&program, &configs, observer);
+        Some((JobOutput { outcome, reports }, program))
+    }
+}
+
+/// Resolve a model-shaped [`Input`] to borrowed `(layer, tensor)`
+/// jobs — shared by [`CompressionJob::run`] and
+/// [`CompressionJob::program`] so the two paths cannot drift.
+/// `owned` is the caller-kept backing store for synthetic workloads.
+/// Panics on the `Tensor`/`Replay` variants (both handled earlier).
+fn resolve_model_input<'a, 'b>(
+    input: Input<'a>,
+    owned: &'b mut Option<Vec<(ConvLayer, Tensor)>>,
+) -> Vec<(&'b ConvLayer, &'b Tensor)>
+where
+    'a: 'b,
+{
+    match input {
+        Input::Tensor(_) | Input::Replay(_) => unreachable!("handled above"),
+        Input::Layers(layers) => layers.iter().map(|(l, w)| (l, w)).collect(),
+        Input::Refs(jobs) => jobs,
+        Input::Synthetic { seed, ratio, noise } => {
+            *owned = Some(synthetic_model(seed, ratio, noise));
+            owned.as_ref().expect("just set").iter().map(|(l, w)| (l, w)).collect()
+        }
+    }
+}
+
+/// Single-tensor accounting shared by [`CompressionJob::run`] and
+/// [`CompressionJob::program`]: the "model" is just that tensor.
+fn single_tensor_outcome(w: &Tensor, d: crate::ttd::TtDecomp) -> CompressionOutcome {
+    let rel_err = relative_error(w, &d);
+    let numel = w.numel();
+    let tt = d.param_count();
+    CompressionOutcome {
+        decomps: vec![d],
+        model_dense_params: numel,
+        conv_dense_params: numel,
+        conv_tt_params: tt,
+        final_params: tt,
+        compression_ratio: numel as f64 / tt as f64,
+        max_rel_err: rel_err,
+    }
+}
+
+/// Cost a program under a config bank (fast run-fold; the per-op tee
+/// only when an observer needs the stream — both are bit-identical).
+fn cost_program(
+    program: &JobProgram,
+    configs: &[SocConfig],
+    observer: Option<&mut dyn TraceSink>,
+) -> Vec<SimReport> {
+    let mut cost = CostSink::new(configs);
+    match observer {
+        Some(obs) => {
+            let mut tee = Tee::new(&mut cost, obs);
+            program.ops.replay(&mut tee);
+        }
+        None => cost.fold_program(&program.ops),
+    }
+    cost.reports()
 }
 
 #[cfg(test)]
@@ -422,6 +624,111 @@ mod tests {
         assert_eq!(out.outcome.final_params, want.outcome.final_params);
         assert_eq!(out.reports.len(), 1);
         assert!(out.reports[0].total_ms > 0.0);
+    }
+
+    #[test]
+    fn program_records_once_and_replays_bit_identically() {
+        let layers = small_model();
+        let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
+        let live = CompressionJob::model(&layers)
+            .eps(0.12)
+            .socs(&configs)
+            .run()
+            .unwrap();
+        let (rec_out, program) = CompressionJob::model(&layers)
+            .eps(0.12)
+            .socs(&configs)
+            .program()
+            .unwrap();
+        // the recording run reports exactly what live costing reports
+        for (a, b) in live.reports.iter().zip(&rec_out.reports) {
+            assert_eq!(a.total_ms, b.total_ms);
+            assert_eq!(a.total_mj, b.total_mj);
+            for (pa, pb) in a.phases.iter().zip(&b.phases) {
+                assert_eq!(pa.cycles, pb.cycles, "{:?}", pa.phase);
+                assert_eq!(pa.energy_mj, pb.energy_mj);
+            }
+        }
+        assert_eq!(rec_out.outcome.final_params, live.outcome.final_params);
+        assert_eq!(rec_out.outcome.decomps.len(), layers.len());
+        // ...and so does every subsequent replay, with no numerics
+        let passes = super::numerics_pass_count();
+        let replayed = CompressionJob::replay(&program).socs(&configs).run().unwrap();
+        assert_eq!(super::numerics_pass_count(), passes, "replay ran numerics");
+        for (a, b) in live.reports.iter().zip(&replayed.reports) {
+            assert_eq!(a.total_ms, b.total_ms);
+            assert_eq!(a.total_mj, b.total_mj);
+            for (pa, pb) in a.phases.iter().zip(&b.phases) {
+                assert_eq!(pa.cycles, pb.cycles, "{:?}", pa.phase);
+            }
+        }
+        // replay outcomes carry the summary but no decompositions
+        assert!(replayed.outcome.decomps.is_empty());
+        assert_eq!(replayed.outcome.final_params, live.outcome.final_params);
+        assert_eq!(replayed.outcome.max_rel_err, live.outcome.max_rel_err);
+        assert_eq!(replayed.outcome.compression_ratio, live.outcome.compression_ratio);
+    }
+
+    #[test]
+    fn program_observer_sees_the_serial_trace() {
+        let layers = small_model();
+        let mut serial = crate::trace::VecSink::default();
+        let _ = compress_model(&layers, 0.12, &mut serial);
+        for threads in [1, 3] {
+            let mut observed = crate::trace::VecSink::default();
+            let (_, program) = CompressionJob::model(&layers)
+                .eps(0.12)
+                .parallel(threads)
+                .sink(&mut observed)
+                .program()
+                .unwrap();
+            assert_eq!(observed.ops, serial.ops, "threads={threads}");
+            assert_eq!(program.ops.op_count() as usize, serial.ops.len());
+            // replaying into an observer reproduces the stream again
+            let mut replayed = crate::trace::VecSink::default();
+            let _ = CompressionJob::replay(&program).sink(&mut replayed).run().unwrap();
+            assert_eq!(replayed.ops, serial.ops);
+        }
+    }
+
+    #[test]
+    fn run_counts_numerics_passes_and_replay_does_not() {
+        let layers = small_model();
+        let before = super::numerics_pass_count();
+        let (_, program) = CompressionJob::model(&layers).eps(0.2).program().unwrap();
+        assert_eq!(super::numerics_pass_count(), before + 1);
+        let _ = CompressionJob::model(&layers).eps(0.2).run().unwrap();
+        assert_eq!(super::numerics_pass_count(), before + 2);
+        for _ in 0..3 {
+            let _ = CompressionJob::replay(&program).soc(SocConfig::tt_edge()).run().unwrap();
+        }
+        assert_eq!(super::numerics_pass_count(), before + 2);
+    }
+
+    #[test]
+    fn single_tensor_program_matches_its_run() {
+        let mut rng = Rng::new(35);
+        let w = Tensor::from_vec(&[4, 6, 6], rng.normal_vec(144));
+        let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
+        let live = CompressionJob::new(&w).eps(0.2).socs(&configs).run().unwrap();
+        let (out, program) = CompressionJob::new(&w).eps(0.2).socs(&configs).program().unwrap();
+        assert_eq!(out.decomp().ranks, live.decomp().ranks);
+        assert_eq!(program.ops.layer_count(), 1);
+        let replayed = CompressionJob::replay(&program).socs(&configs).run().unwrap();
+        for (a, b) in live.reports.iter().zip(&replayed.reports) {
+            assert_eq!(a.total_ms, b.total_ms);
+            assert_eq!(a.total_mj, b.total_mj);
+        }
+    }
+
+    #[test]
+    fn cancelled_program_returns_none() {
+        let layers = small_model();
+        let token = CancelToken::cancelled();
+        assert!(CompressionJob::model(&layers).cancel(&token).program().is_none());
+        let mut rng = Rng::new(36);
+        let w = Tensor::from_vec(&[4, 4, 4], rng.normal_vec(64));
+        assert!(CompressionJob::new(&w).cancel(&token).program().is_none());
     }
 
     #[test]

@@ -35,4 +35,4 @@ pub mod trace;
 pub mod ttd;
 pub mod util;
 
-pub use job::{CompressionJob, JobOutput};
+pub use job::{numerics_pass_count, CompressionJob, JobOutput, JobProgram};

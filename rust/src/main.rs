@@ -299,6 +299,11 @@ fn cmd_explore(args: &Args) -> Result<()> {
 
     let t0 = std::time::Instant::now();
     let out = dse::explore(&cfg);
+    // Record-once / replay-many instrumentation: one numerics pass
+    // regardless of strategy or generation count. Printed to stderr
+    // (CI asserts it) so the stdout artifacts stay byte-identical to
+    // the live-costed reference path.
+    eprintln!("numerics passes: {}", out.numerics_passes);
 
     // Sweep artifact: every evaluated point (schema in
     // EXPERIMENTS/README.md). Byte-identical at any --parallel width.
@@ -333,13 +338,16 @@ fn cmd_explore(args: &Args) -> Result<()> {
         return Ok(());
     }
     println!(
-        "explored {} of {} candidates (workload {}, eps {}, {} host thread{}, {:.0} ms wall)\n",
+        "explored {} of {} candidates (workload {}, eps {}, {} host thread{}, \
+         {} numerics pass{}, {:.0} ms wall)\n",
         out.evaluated.len(),
         out.space_size,
         cfg.workload.label(),
         cfg.eps,
         cfg.parallel.max(1),
         if cfg.parallel > 1 { "s" } else { "" },
+        out.numerics_passes,
+        if out.numerics_passes == 1 { "" } else { "es" },
         t0.elapsed().as_secs_f64() * 1e3,
     );
     println!("{}", out.frontier_table());

@@ -39,7 +39,7 @@ use crate::sim::config::SocConfig;
 use crate::sim::cost::CostSink;
 use crate::sim::report::SimReport;
 use crate::sim::workload::{aggregate_outcome, synthetic_model, CompressionOutcome};
-use crate::trace::{TraceSink, VecSink};
+use crate::trace::{OpProgram, RecordingSink, TraceSink, VecSink};
 use crate::ttd::ttd::{TtDecomp, TtSpec};
 use crate::ttd::{decompose, relative_error, Tensor};
 
@@ -291,6 +291,50 @@ pub fn compress_layers_costed(
     Some(CostedBatch { decomps, rel_errs, max_rel_err: max_rel, cost })
 }
 
+/// A recorded layer batch: decompositions plus the RLE-compacted
+/// [`OpProgram`] (one segment per layer, layer order) — the
+/// record-once half of the record-once / replay-many costing seam
+/// ([`crate::job::CompressionJob::program`] builds on this).
+#[derive(Debug)]
+pub struct RecordedBatch {
+    pub decomps: Vec<TtDecomp>,
+    /// Per-layer relative reconstruction errors, in layer order.
+    pub rel_errs: Vec<f32>,
+    pub max_rel_err: f32,
+    /// The compacted op stream; replaying it is op-for-op identical
+    /// to the serial single-sink trace.
+    pub program: OpProgram,
+}
+
+/// Recording path for replay-many costing: compress the batch with
+/// each layer run-length-encoding its ops into a private
+/// [`RecordingSink`], then splice the segments in layer order into one
+/// [`OpProgram`]. Memory is O(#runs) — far below a `VecSink` trace —
+/// and the program replays bit-identically at any thread count (same
+/// determinism argument as [`compress_layers_costed`]).
+pub fn compress_layers_recorded(
+    jobs: &[(&ConvLayer, &Tensor)],
+    spec: &TtSpec,
+    threads: usize,
+    cancel: &CancelToken,
+) -> Option<RecordedBatch> {
+    let results =
+        compress_layers_sinked(jobs, spec, threads, cancel, RecordingSink::default)?;
+    let mut program = OpProgram::default();
+    let mut decomps = Vec::with_capacity(results.len());
+    let mut rel_errs = Vec::with_capacity(results.len());
+    let mut max_rel = 0.0f32;
+    for r in results {
+        program.push_layer(r.sink);
+        if r.rel_err > max_rel {
+            max_rel = r.rel_err;
+        }
+        rel_errs.push(r.rel_err);
+        decomps.push(r.decomp);
+    }
+    Some(RecordedBatch { decomps, rel_errs, max_rel_err: max_rel, program })
+}
+
 /// Replay the per-layer traces into `sink` in layer order — the
 /// deterministic merge of the recording path. Because Algorithm 1 is
 /// deterministic per layer, the merged stream equals the serial
@@ -503,6 +547,29 @@ mod tests {
         assert_eq!(worker_count(0, 5), 1);
         assert_eq!(worker_count(8, 3), 3);
         assert_eq!(worker_count(2, 0), 1);
+    }
+
+    #[test]
+    fn recorded_program_replays_the_serial_trace_at_any_width() {
+        let layers = small_model();
+        let jobs: Vec<(&ConvLayer, &Tensor)> = layers.iter().map(|(l, w)| (l, w)).collect();
+        let mut serial = VecSink::default();
+        let _ = compress_model(&layers, 0.12, &mut serial);
+        for threads in [1, 3] {
+            let batch = compress_layers_recorded(
+                &jobs,
+                &TtSpec::eps(0.12),
+                threads,
+                &CancelToken::default(),
+            )
+            .unwrap();
+            assert_eq!(batch.program.layer_count(), layers.len());
+            assert_eq!(batch.program.op_count() as usize, serial.ops.len());
+            let mut replayed = VecSink::default();
+            batch.program.replay(&mut replayed);
+            assert_eq!(replayed.ops, serial.ops, "threads={threads}");
+            assert_eq!(batch.rel_errs.len(), layers.len());
+        }
     }
 
     #[test]

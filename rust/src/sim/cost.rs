@@ -60,6 +60,20 @@ impl CostSink {
         }
     }
 
+    /// Replay a recorded [`OpProgram`] into every timeline, one run at
+    /// a time ([`HwTimeline::fold_run`]): O(#runs) per config instead
+    /// of O(#ops), and bit-identical — cycles, energy, per-phase banks
+    /// and op stats — to streaming the live op sequence, because a run
+    /// preserves order and `count * cost` equals `count` u64 adds.
+    /// This is the replay-many half of the record-once costing seam.
+    pub fn fold_program(&mut self, program: &crate::trace::OpProgram) {
+        for tl in &mut self.timelines {
+            for run in program.runs() {
+                tl.fold_run(run.op, run.count);
+            }
+        }
+    }
+
     /// One [`SimReport`] per configuration, in constructor order.
     pub fn reports(&self) -> Vec<SimReport> {
         self.timelines.iter().map(SimReport::from_timeline).collect()
@@ -176,6 +190,44 @@ mod tests {
         tweaked.cost.gemm_tile = 32;
         let b = CostSink::single(tweaked);
         a.absorb(&b);
+    }
+
+    #[test]
+    fn fold_program_equals_per_op_replay() {
+        use crate::trace::{RecordingSink, TraceSink};
+        let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
+        let mut rec = RecordingSink::default();
+        // repeated ops so RLE genuinely compacts
+        for _ in 0..3 {
+            for op in stream() {
+                rec.op(op);
+            }
+            for _ in 0..5 {
+                rec.op(HwOp::GivensRot { len: 20 });
+            }
+        }
+        let mut program = crate::trace::OpProgram::default();
+        program.push_layer(rec);
+        assert!(program.run_count() < program.op_count() as usize);
+
+        let mut live = CostSink::new(&configs);
+        program.replay(&mut live);
+        let mut folded = CostSink::new(&configs);
+        folded.fold_program(&program);
+        for (a, b) in live.timelines().iter().zip(folded.timelines()) {
+            for p in Phase::ALL {
+                assert_eq!(a.cycles.get(p), b.cycles.get(p), "{p:?}");
+            }
+            assert_eq!(a.stats.gemms, b.stats.gemms);
+            assert_eq!(a.stats.sort_compares, b.stats.sort_compares);
+            assert_eq!(a.stats.trunc_probes, b.stats.trunc_probes);
+        }
+        let ra = live.reports();
+        let rb = folded.reports();
+        for (a, b) in ra.iter().zip(&rb) {
+            assert_eq!(a.total_ms, b.total_ms);
+            assert_eq!(a.total_mj, b.total_mj);
+        }
     }
 
     #[test]

@@ -125,13 +125,16 @@ impl HwTimeline {
         self.stats.absorb(&other.stats);
     }
 
-    fn cost(&mut self, op: &HwOp) -> u64 {
+    /// Cycles for one op under this config in the current phase — pure
+    /// (stat bookkeeping lives in [`HwTimeline::note`]), so a run of
+    /// `count` identical ops costs `count * cost(op)`, bit-identical
+    /// to `count` repeated u64 adds.
+    fn cost(&self, op: &HwOp) -> u64 {
         let c = &self.config.cost;
         let f = &self.config.features;
         match *op {
             HwOp::SetPhase(_) => 0,
             HwOp::HouseGen { len } => {
-                self.stats.house_gens += 1;
                 if f.hbd_acc {
                     ttd_engine::hbd_acc::house_gen(c, len as u64)
                 } else {
@@ -146,9 +149,6 @@ impl HwTimeline {
                 }
             }
             HwOp::Gemm { m, n, k } => {
-                self.stats.gemms += 1;
-                self.stats.gemm_tiles +=
-                    gemm::tiles(c.gemm_tile, m as u64, n as u64, k as u64);
                 if self.phase == Phase::UpdateSvdInput {
                     // Sigma_t V_t^T is a core-managed scale loop in both
                     // designs (Table III's Update-SVD rows are equal).
@@ -159,12 +159,10 @@ impl HwTimeline {
             }
             HwOp::DataMove { bytes } => bytes as u64 / c.dram_bytes_per_cycle + c.dma_setup,
             HwOp::Sort { n, swaps: _ } => {
-                let n = n as u64;
-                self.stats.sort_compares += n * n.saturating_sub(1) / 2;
                 if f.hw_sort_trunc {
-                    ttd_engine::sorting::sort(c, n)
+                    ttd_engine::sorting::sort(c, n as u64)
                 } else {
-                    core_model::sort(c, n)
+                    core_model::sort(c, n as u64)
                 }
             }
             HwOp::ReorderBasis { rows, cols } => {
@@ -176,23 +174,56 @@ impl HwTimeline {
                 }
             }
             HwOp::Trunc { probes, veclen: _ } => {
-                self.stats.trunc_probes += probes as u64;
                 if f.hw_sort_trunc {
                     ttd_engine::truncation::trunc(c, probes as u64)
                 } else {
                     core_model::trunc(c, probes as u64)
                 }
             }
-            HwOp::GivensRot { len } => {
-                self.stats.givens_rots += 1;
-                core_model::givens(c, len as u64)
-            }
+            HwOp::GivensRot { len } => core_model::givens(c, len as u64),
             HwOp::CoreScalar { ops } => core_model::scalar(c, ops as u64),
-            HwOp::Reshape { elems } => {
-                self.stats.reshape_elems += elems as u64;
-                core_model::reshape(c, elems as u64)
-            }
+            HwOp::Reshape { elems } => core_model::reshape(c, elems as u64),
         }
+    }
+
+    /// Record `times` occurrences of `op` in the op statistics. All
+    /// counters are additive, so scaling by `times` equals `times`
+    /// individual bumps exactly.
+    fn note(&mut self, op: &HwOp, times: u64) {
+        match *op {
+            HwOp::HouseGen { .. } => self.stats.house_gens += times,
+            HwOp::Gemm { m, n, k } => {
+                self.stats.gemms += times;
+                self.stats.gemm_tiles += times
+                    * gemm::tiles(self.config.cost.gemm_tile, m as u64, n as u64, k as u64);
+            }
+            HwOp::Sort { n, swaps: _ } => {
+                let n = n as u64;
+                self.stats.sort_compares += times * (n * n.saturating_sub(1) / 2);
+            }
+            HwOp::Trunc { probes, .. } => self.stats.trunc_probes += times * probes as u64,
+            HwOp::GivensRot { .. } => self.stats.givens_rots += times,
+            HwOp::Reshape { elems } => self.stats.reshape_elems += times * elems as u64,
+            _ => {}
+        }
+    }
+
+    /// Fold a run of `count` identical ops in O(1): cost once,
+    /// accumulate `count * cycles`. Since u64 multiplication is exact
+    /// repeated addition, this is bit-identical (cycles and stats) to
+    /// streaming the ops one by one — the fast half of the
+    /// [`crate::trace::OpProgram`] replay seam.
+    pub fn fold_run(&mut self, op: HwOp, count: u64) {
+        if let HwOp::SetPhase(p) = op {
+            self.phase = p;
+            return;
+        }
+        if count == 0 {
+            return;
+        }
+        self.note(&op, count);
+        let cycles = self.cost(&op);
+        self.cycles.add(self.phase, cycles * count);
     }
 }
 
@@ -202,6 +233,7 @@ impl TraceSink for HwTimeline {
             self.phase = p;
             return;
         }
+        self.note(&op, 1);
         let cycles = self.cost(&op);
         self.cycles.add(self.phase, cycles);
     }
@@ -274,5 +306,40 @@ mod tests {
         t.op(HwOp::Gemm { m: 16, n: 16, k: 16 });
         assert_eq!(t.stats.gemms, 2);
         assert_eq!(t.stats.gemm_tiles, 8 + 1);
+    }
+
+    #[test]
+    fn fold_run_is_bit_identical_to_repeated_ops() {
+        for config in [SocConfig::baseline(), SocConfig::tt_edge()] {
+            let runs = [
+                (HwOp::SetPhase(Phase::Hbd), 1u64),
+                (HwOp::HouseGen { len: 100 }, 7),
+                (HwOp::Gemm { m: 33, n: 17, k: 65 }, 5),
+                (HwOp::SetPhase(Phase::SortTrunc), 1),
+                (HwOp::Sort { n: 16, swaps: 5 }, 3),
+                (HwOp::Trunc { probes: 4, veclen: 16 }, 2),
+                (HwOp::SetPhase(Phase::QrDiag), 1),
+                (HwOp::GivensRot { len: 68 }, 11),
+                (HwOp::Reshape { elems: 123 }, 4),
+            ];
+            let mut folded = HwTimeline::new(config.clone());
+            let mut streamed = HwTimeline::new(config);
+            for (op, count) in runs {
+                folded.fold_run(op, count);
+                for _ in 0..count {
+                    streamed.op(op);
+                }
+            }
+            for p in Phase::ALL {
+                assert_eq!(folded.cycles.get(p), streamed.cycles.get(p), "{p:?}");
+            }
+            assert_eq!(folded.stats.gemms, streamed.stats.gemms);
+            assert_eq!(folded.stats.gemm_tiles, streamed.stats.gemm_tiles);
+            assert_eq!(folded.stats.sort_compares, streamed.stats.sort_compares);
+            assert_eq!(folded.stats.trunc_probes, streamed.stats.trunc_probes);
+            assert_eq!(folded.stats.givens_rots, streamed.stats.givens_rots);
+            assert_eq!(folded.stats.reshape_elems, streamed.stats.reshape_elems);
+            assert_eq!(folded.current_phase(), streamed.current_phase());
+        }
     }
 }

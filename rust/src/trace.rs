@@ -22,6 +22,15 @@
 //!
 //! `&mut S` also implements [`TraceSink`], so combinators can borrow
 //! sinks owned by the caller: `Tee::new(&mut cost, &mut trace)`.
+//!
+//! [`program`] adds the record-once / replay-many seam: a
+//! [`RecordingSink`] run-length-encodes the stream into an
+//! [`OpProgram`] that replays (op-for-op, order-preserving) against
+//! any number of SoC configs without re-running the numerics.
+
+pub mod program;
+
+pub use program::{OpProgram, OpRun, RecordingSink};
 
 /// TTD phases exactly as Table III rows report them.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]

@@ -1,0 +1,229 @@
+//! Record-once / replay-many op-stream programs.
+//!
+//! TT-Edge's central premise is that the TTD hardware-op stream is a
+//! function of the *workload* alone — [`crate::sim`] configs only
+//! change how each op is costed. An [`OpProgram`] exploits that: a
+//! [`RecordingSink`] captures the stream as the numerics run (stacked
+//! like any other sink — `Tee::new(&mut cost, &mut rec)` works), and
+//! the resulting program replays against any number of `SocConfig`s
+//! without touching the numerics again.
+//!
+//! The encoding is a run-length compaction per layer: consecutive
+//! identical [`HwOp`]s collapse into one [`OpRun`] with a count
+//! (Givens sweeps over square stages and repeated phase markers
+//! collapse well; heterogeneous HBD runs stay near 1:1). Replay emits
+//! the ops **in the original order** — [`OpProgram::replay`] is
+//! op-for-op identical to the recorded stream, so phase attribution
+//! and the order-sensitive consumers downstream see exactly the live
+//! sequence. `crate::sim::CostSink::fold_program` additionally costs a
+//! run in O(1) (cycles x count is bit-identical to count u64 adds).
+
+use crate::trace::{HwOp, Phase, TraceSink};
+
+/// One maximal run of identical ops in the recorded stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpRun {
+    pub op: HwOp,
+    pub count: u64,
+}
+
+/// A [`TraceSink`] that run-length-encodes the op stream as it is
+/// emitted. O(#runs) memory; stack it via `Tee` or hand it to the
+/// pipeline as a per-layer sink factory.
+#[derive(Clone, Debug, Default)]
+pub struct RecordingSink {
+    runs: Vec<OpRun>,
+}
+
+impl TraceSink for RecordingSink {
+    #[inline]
+    fn op(&mut self, op: HwOp) {
+        if let Some(last) = self.runs.last_mut() {
+            if last.op == op {
+                last.count += 1;
+                return;
+            }
+        }
+        self.runs.push(OpRun { op, count: 1 });
+    }
+}
+
+impl RecordingSink {
+    /// Number of RLE runs recorded so far.
+    pub fn run_count(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// Number of ops recorded so far (sum of run counts).
+    pub fn op_count(&self) -> u64 {
+        self.runs.iter().map(|r| r.count).sum()
+    }
+
+    /// Replay the recorded stream into another sink, in order.
+    pub fn replay<S: TraceSink>(&self, sink: &mut S) {
+        for run in &self.runs {
+            for _ in 0..run.count {
+                sink.op(run.op);
+            }
+        }
+    }
+}
+
+/// A canonical, replayable compaction of a whole job's op stream: one
+/// RLE segment per layer, in serial layer order. Recorded once by
+/// [`crate::job::CompressionJob::program`], replayed arbitrarily many
+/// times by `CompressionJob::replay` / `CostSink::fold_program`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OpProgram {
+    layers: Vec<LayerProgram>,
+}
+
+/// One layer's RLE segment of an [`OpProgram`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LayerProgram {
+    runs: Vec<OpRun>,
+}
+
+impl LayerProgram {
+    pub fn runs(&self) -> &[OpRun] {
+        &self.runs
+    }
+}
+
+impl OpProgram {
+    /// Append one layer's recorded stream as the next segment.
+    pub fn push_layer(&mut self, sink: RecordingSink) {
+        self.layers.push(LayerProgram { runs: sink.runs });
+    }
+
+    /// Per-layer segments, in serial layer order.
+    pub fn layers(&self) -> &[LayerProgram] {
+        &self.layers
+    }
+
+    pub fn layer_count(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total RLE runs across all layers.
+    pub fn run_count(&self) -> usize {
+        self.layers.iter().map(|l| l.runs.len()).sum()
+    }
+
+    /// Total ops encoded (including `SetPhase` markers) — equals the
+    /// recorded stream's length.
+    pub fn op_count(&self) -> u64 {
+        self.layers.iter().flat_map(|l| &l.runs).map(|r| r.count).sum()
+    }
+
+    /// All runs in stream order (layer by layer).
+    pub fn runs(&self) -> impl Iterator<Item = &OpRun> + '_ {
+        self.layers.iter().flat_map(|l| l.runs.iter())
+    }
+
+    /// Ops attributed to one Table-III phase (tracking `SetPhase`
+    /// markers from the simulator's `ReshapeEtc` reset state; the
+    /// markers themselves are not counted).
+    pub fn ops_in_phase(&self, phase: Phase) -> u64 {
+        let mut current = Phase::ReshapeEtc;
+        let mut n = 0u64;
+        for run in self.runs() {
+            if let HwOp::SetPhase(p) = run.op {
+                current = p;
+            } else if current == phase {
+                n += run.count;
+            }
+        }
+        n
+    }
+
+    /// Replay the whole program into a sink, op for op, in the exact
+    /// recorded order (layer segments in layer order).
+    pub fn replay<S: TraceSink>(&self, sink: &mut S) {
+        for layer in &self.layers {
+            for run in &layer.runs {
+                for _ in 0..run.count {
+                    sink.op(run.op);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::VecSink;
+
+    fn sample_stream() -> Vec<HwOp> {
+        vec![
+            HwOp::SetPhase(Phase::Hbd),
+            HwOp::HouseGen { len: 8 },
+            HwOp::Gemm { m: 4, n: 4, k: 4 },
+            HwOp::SetPhase(Phase::QrDiag),
+            HwOp::GivensRot { len: 12 },
+            HwOp::GivensRot { len: 12 },
+            HwOp::GivensRot { len: 12 },
+            HwOp::GivensRot { len: 9 },
+            HwOp::SetPhase(Phase::Hbd),
+            HwOp::VecDiv { len: 8 },
+        ]
+    }
+
+    #[test]
+    fn recording_collapses_identical_neighbours_only() {
+        let mut rec = RecordingSink::default();
+        for op in sample_stream() {
+            rec.op(op);
+        }
+        assert_eq!(rec.op_count() as usize, sample_stream().len());
+        // the three identical GivensRot ops collapse into one run
+        assert_eq!(rec.run_count(), sample_stream().len() - 2);
+        let mut out = VecSink::default();
+        rec.replay(&mut out);
+        assert_eq!(out.ops, sample_stream());
+    }
+
+    #[test]
+    fn program_replays_layers_in_order() {
+        let mut program = OpProgram::default();
+        for _ in 0..2 {
+            let mut rec = RecordingSink::default();
+            for op in sample_stream() {
+                rec.op(op);
+            }
+            program.push_layer(rec);
+        }
+        assert_eq!(program.layer_count(), 2);
+        assert_eq!(program.op_count() as usize, 2 * sample_stream().len());
+        assert_eq!(program.run_count(), 2 * (sample_stream().len() - 2));
+        let mut out = VecSink::default();
+        program.replay(&mut out);
+        let mut want = sample_stream();
+        want.extend(sample_stream());
+        assert_eq!(out.ops, want);
+    }
+
+    #[test]
+    fn phase_attribution_matches_the_marker_stream() {
+        let mut program = OpProgram::default();
+        let mut rec = RecordingSink::default();
+        for op in sample_stream() {
+            rec.op(op);
+        }
+        program.push_layer(rec);
+        assert_eq!(program.ops_in_phase(Phase::Hbd), 3);
+        assert_eq!(program.ops_in_phase(Phase::QrDiag), 4);
+        assert_eq!(program.ops_in_phase(Phase::SortTrunc), 0);
+    }
+
+    #[test]
+    fn empty_program_replays_nothing() {
+        let program = OpProgram::default();
+        let mut out = VecSink::default();
+        program.replay(&mut out);
+        assert!(out.ops.is_empty());
+        assert_eq!(program.op_count(), 0);
+        assert_eq!(program.ops_in_phase(Phase::Hbd), 0);
+    }
+}

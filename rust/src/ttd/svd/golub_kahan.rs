@@ -81,13 +81,15 @@ fn wilkinson_shift(b: &Matrix, lo: usize, hi: usize) -> f32 {
 
 /// Implicit-shift QR SVD of an upper-bidiagonal `b` (n x n).
 ///
-/// `u_acc` (m x n) and `vt_acc` (n x n) are updated in place with the
-/// accumulated rotations (pass `U_B` / `V_B^T` from the HBD phase to
-/// get the full SVD of the original matrix).
+/// `u_acc` (m x n) and `vt_acc` (n x n) are taken by value, updated
+/// with the accumulated rotations, and **returned by move** as
+/// [`BidiagSvd::u`]/[`BidiagSvd::vt`] — no dense matrix is cloned
+/// (pass `U_B` / `V_B^T` from the HBD phase to get the full SVD of
+/// the original matrix).
 pub fn diagonalize<S: TraceSink>(
     b: &Matrix,
-    u_acc: &mut Matrix,
-    vt_acc: &mut Matrix,
+    mut u_acc: Matrix,
+    mut vt_acc: Matrix,
     sink: &mut S,
 ) -> BidiagSvd {
     let n = b.rows;
@@ -151,7 +153,7 @@ pub fn diagonalize<S: TraceSink>(
                         // rows (i, j): zero B[i,j] against pivot B[j,j]
                         let (c, s) = (djj / r, -eij / r);
                         rot_rows(&mut b, i, j, c, s);
-                        rot_cols(u_acc, i, j, c, s);
+                        rot_cols(&mut u_acc, i, j, c, s);
                         sink.op(HwOp::GivensRot { len: 4 + u_acc.rows });
                         b.set(i, j, 0.0); // exact by construction
                     }
@@ -179,12 +181,12 @@ pub fn diagonalize<S: TraceSink>(
                 // Right rotation in plane (k, k+1) annihilating z.
                 let (c, s, _) = rot(y, z);
                 rot_cols(&mut b, k, k + 1, c, s);
-                rot_rows(vt_acc, k, k + 1, c, s);
+                rot_rows(&mut vt_acc, k, k + 1, c, s);
                 sink.op(HwOp::GivensRot { len: 4 + vt_acc.cols });
                 // Left rotation zeroing the bulge at (k+1, k).
                 let (c2, s2, _) = rot(b.get(k, k), b.get(k + 1, k));
                 rot_rows(&mut b, k, k + 1, c2, s2);
-                rot_cols(u_acc, k, k + 1, c2, s2);
+                rot_cols(&mut u_acc, k, k + 1, c2, s2);
                 sink.op(HwOp::GivensRot { len: 4 + u_acc.rows });
                 b.set(k + 1, k, 0.0); // exact by construction
                 if k + 1 < hi {
@@ -207,7 +209,7 @@ pub fn diagonalize<S: TraceSink>(
         }
     }
 
-    BidiagSvd { u: u_acc.clone(), sigma, vt: vt_acc.clone(), iterations }
+    BidiagSvd { u: u_acc, sigma, vt: vt_acc, iterations }
 }
 
 #[cfg(test)]
@@ -245,9 +247,7 @@ mod tests {
         check(20, 400, |rng| {
             let n = 2 + rng.below(24);
             let b = rand_bidiag(rng, n);
-            let mut u = Matrix::eye(n, n);
-            let mut vt = Matrix::eye(n, n);
-            let svd = diagonalize(&b, &mut u, &mut vt, &mut NullSink);
+            let svd = diagonalize(&b, Matrix::eye(n, n), Matrix::eye(n, n), &mut NullSink);
             let recon = reconstruct(&svd.u, &svd.sigma, &svd.vt);
             let scale = b.frobenius().max(1.0);
             assert!(
@@ -264,11 +264,9 @@ mod tests {
         check(10, 401, |rng| {
             let n = 2 + rng.below(16);
             let b = rand_bidiag(rng, n);
-            let mut u = Matrix::eye(n, n);
-            let mut vt = Matrix::eye(n, n);
-            let _ = diagonalize(&b, &mut u, &mut vt, &mut NullSink);
-            assert!(u.transpose().matmul(&u).max_abs_diff(&Matrix::eye(n, n)) < 3e-4);
-            assert!(vt.matmul(&vt.transpose()).max_abs_diff(&Matrix::eye(n, n)) < 3e-4);
+            let svd = diagonalize(&b, Matrix::eye(n, n), Matrix::eye(n, n), &mut NullSink);
+            assert!(svd.u.transpose().matmul(&svd.u).max_abs_diff(&Matrix::eye(n, n)) < 3e-4);
+            assert!(svd.vt.matmul(&svd.vt.transpose()).max_abs_diff(&Matrix::eye(n, n)) < 3e-4);
         });
     }
 
@@ -278,9 +276,7 @@ mod tests {
         let mut rng = Rng::new(50);
         let n = 32;
         let b = rand_bidiag(&mut rng, n);
-        let mut u = Matrix::eye(n, n);
-        let mut vt = Matrix::eye(n, n);
-        let svd = diagonalize(&b, &mut u, &mut vt, &mut NullSink);
+        let svd = diagonalize(&b, Matrix::eye(n, n), Matrix::eye(n, n), &mut NullSink);
         assert!(svd.iterations < 8 * n, "iterations {}", svd.iterations);
     }
 
@@ -292,9 +288,7 @@ mod tests {
             let m = n + rng.below(16);
             let a = Matrix::from_vec(m, n, rng.normal_vec(m * n));
             let f = bidiagonalize(&a, &mut NullSink);
-            let mut u = f.u.clone();
-            let mut vt = f.vt.clone();
-            let svd = diagonalize(&f.b, &mut u, &mut vt, &mut NullSink);
+            let svd = diagonalize(&f.b, f.u, f.vt, &mut NullSink);
             let s_norm: f32 =
                 svd.sigma.iter().map(|s| (*s as f64) * (*s as f64)).sum::<f64>().sqrt() as f32;
             let fa = a.frobenius();
@@ -312,9 +306,7 @@ mod tests {
         b.set(2, 2, 3.0);
         b.set(2, 3, 0.5);
         b.set(3, 3, 2.0);
-        let mut u = Matrix::eye(4, 4);
-        let mut vt = Matrix::eye(4, 4);
-        let svd = diagonalize(&b, &mut u, &mut vt, &mut NullSink);
+        let svd = diagonalize(&b, Matrix::eye(4, 4), Matrix::eye(4, 4), &mut NullSink);
         let recon = reconstruct(&svd.u, &svd.sigma, &svd.vt);
         assert!(recon.max_abs_diff(&b) < 1e-4, "err {}", recon.max_abs_diff(&b));
     }
@@ -322,9 +314,7 @@ mod tests {
     #[test]
     fn identity_input_yields_unit_singular_values() {
         let b = Matrix::eye(5, 5);
-        let mut u = Matrix::eye(5, 5);
-        let mut vt = Matrix::eye(5, 5);
-        let svd = diagonalize(&b, &mut u, &mut vt, &mut NullSink);
+        let svd = diagonalize(&b, Matrix::eye(5, 5), Matrix::eye(5, 5), &mut NullSink);
         for s in &svd.sigma {
             assert!((s - 1.0).abs() < 1e-6);
         }

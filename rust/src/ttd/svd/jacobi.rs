@@ -136,9 +136,7 @@ mod tests {
             let m = n + rng.below(12);
             let a = Matrix::from_vec(m, n, rng.normal_vec(m * n));
             let f = bidiagonalize(&a, &mut NullSink);
-            let mut u = f.u.clone();
-            let mut vt = f.vt.clone();
-            let gk = diagonalize(&f.b, &mut u, &mut vt, &mut NullSink);
+            let gk = diagonalize(&f.b, f.u, f.vt, &mut NullSink);
             let jc = jacobi_svd(&f.b, 40);
             let mut gk_sorted = gk.sigma.clone();
             gk_sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());

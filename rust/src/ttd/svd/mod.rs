@@ -49,9 +49,9 @@ fn svd_tall<S: TraceSink>(a: &Matrix, sink: &mut S) -> Svd {
     sink.op(HwOp::SetPhase(Phase::Hbd));
     let f = bidiag::bidiagonalize(a, sink);
     sink.op(HwOp::SetPhase(Phase::QrDiag));
-    let mut u = f.u;
-    let mut vt = f.vt;
-    let d = golub_kahan::diagonalize(&f.b, &mut u, &mut vt, sink);
+    // diagonalize takes the HBD factors by value and returns them by
+    // move — no dense matrix is cloned on the SVD hot path.
+    let d = golub_kahan::diagonalize(&f.b, f.u, f.vt, sink);
     Svd { u: d.u, sigma: d.sigma, vt: d.vt, qr_iterations: d.iterations }
 }
 

@@ -264,6 +264,16 @@ impl<'a> MatrixView<'a> {
     }
 }
 
+/// `out += a @ b` over raw row-major slices through the blocked
+/// kernel — the accumulate form the blocked compact-WY Householder
+/// panels in [`crate::ttd::svd::bidiag`] build on (`out` may be a
+/// row-contiguous sub-slice of a larger matrix). `out` must hold at
+/// least `m * n` leading slots.
+pub fn matmul_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && out.len() >= m * n);
+    matmul_kernel(m, k, n, a, b, out);
+}
+
 /// Shared cache-blocked ikj kernel over raw row-major slices:
 /// `out += a @ b` with `a` (m x k), `b` (k x n), `out` (m x n).
 fn matmul_kernel(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
@@ -503,6 +513,30 @@ mod tests {
             a.apply_house_right(0, 0, &h.v, h.beta);
             apply_right(&mut b, 0, 0, &h.v, h.beta);
             assert_eq!(a, b);
+        });
+    }
+
+    #[test]
+    fn matmul_acc_accumulates_into_subslices() {
+        check(10, 106, |rng| {
+            let (m, k, n) = (1 + rng.below(12), 1 + rng.below(12), 1 + rng.below(12));
+            let a = rand_mat(rng, m, k);
+            let b = rand_mat(rng, k, n);
+            // accumulate into the tail rows of a larger buffer
+            let r0 = rng.below(4);
+            let mut big = rand_mat(rng, r0 + m, n);
+            let before = big.clone();
+            let prod = a.matmul(&b);
+            matmul_acc(m, k, n, &a.data, &b.data, &mut big.data[r0 * n..]);
+            for r in 0..r0 {
+                assert_eq!(big.row(r), before.row(r), "head rows untouched");
+            }
+            for r in 0..m {
+                for c in 0..n {
+                    let want = before.get(r0 + r, c) + prod.get(r, c);
+                    assert!((big.get(r0 + r, c) - want).abs() < 1e-4);
+                }
+            }
         });
     }
 

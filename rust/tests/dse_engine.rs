@@ -12,7 +12,8 @@
 //!    >=35% energy).
 
 use tt_edge::dse::{
-    dominates, explore, pareto_front, ExploreConfig, Objectives, SpaceKind, Strategy, Workload,
+    dominates, explore, explore_live, pareto_front, ExploreConfig, Objectives, SpaceKind,
+    Strategy, Workload,
 };
 use tt_edge::dse::pareto::pruned_by;
 use tt_edge::util::Rng;
@@ -94,6 +95,58 @@ fn seeded_search_is_byte_identical_across_parallel_widths() {
                 "{strategy:?} seed {seed}: sweep JSON diverged across widths"
             );
         }
+    }
+}
+
+#[test]
+fn replay_artifacts_are_byte_identical_to_the_live_costed_path() {
+    // The PR-5 acceptance pin: explore (record-once / replay-many)
+    // must render exactly the JSON the pre-cache live-costed driver
+    // renders — every strategy, several seeds, serial and parallel.
+    for strategy in [Strategy::Grid, Strategy::Random, Strategy::Evolve] {
+        for seed in [1u64, 2, 3] {
+            for parallel in [1usize, 4] {
+                let replayed = explore(&cfg(strategy, seed, parallel));
+                let live = explore_live(&cfg(strategy, seed, parallel));
+                assert_eq!(
+                    replayed.sweep_json().render(),
+                    live.sweep_json().render(),
+                    "{strategy:?} seed {seed} parallel {parallel}: sweep JSON diverged"
+                );
+                assert_eq!(
+                    replayed.report_json().render(),
+                    live.report_json().render(),
+                    "{strategy:?} seed {seed} parallel {parallel}: frontier JSON diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn evolve_costs_exactly_one_numerics_pass() {
+    // Budget 20 on the full space spans >= 3 evolve generations; the
+    // record-once driver must still run the numerics exactly once,
+    // while the live reference pays per generation.
+    let big = ExploreConfig {
+        workload: Workload::Tiny,
+        space: SpaceKind::Full,
+        strategy: Strategy::Evolve,
+        budget: 20,
+        seed: 11,
+        eps: 0.2,
+        parallel: 1,
+    };
+    let replayed = explore(&big);
+    assert_eq!(replayed.numerics_passes, 1);
+    assert_eq!(replayed.evaluated.len(), 20);
+    let live = explore_live(&big);
+    assert!(live.numerics_passes >= 3, "passes {}", live.numerics_passes);
+    assert_eq!(replayed.sweep_json().render(), live.sweep_json().render());
+    // grid and random are single-batch: one pass on both paths
+    for strategy in [Strategy::Grid, Strategy::Random] {
+        assert_eq!(explore(&cfg(strategy, 1, 1)).numerics_passes, 1);
+        assert_eq!(explore_live(&cfg(strategy, 1, 1)).numerics_passes, 1);
     }
 }
 

@@ -1,0 +1,115 @@
+//! Record-once / replay-many contracts for the [`tt_edge::trace::OpProgram`]
+//! seam:
+//!
+//! 1. RLE round-trip — a program recorded from a job replays op-for-op
+//!    identical to the `VecSink` trace of the same job, at any thread
+//!    count.
+//! 2. Costing bit-identity — replaying a program (both the per-op path
+//!    and the fast run-fold) produces cycles, energy and per-phase
+//!    banks identical to live `CostSink` costing, across >= 3 seeds x
+//!    both paper SoCs x serial-vs-`--parallel 4`.
+//! 3. The numerics-pass counter moves only when numerics actually run.
+
+use tt_edge::model::resnet32::ConvLayer;
+use tt_edge::sim::workload::{compress_model, synthetic_model};
+use tt_edge::sim::{CostSink, SocConfig};
+use tt_edge::trace::{Phase, VecSink};
+use tt_edge::ttd::Tensor;
+use tt_edge::CompressionJob;
+
+fn small_model(seed: u64) -> Vec<(ConvLayer, Tensor)> {
+    let mut layers = synthetic_model(seed, 3.55, 0.035);
+    layers.truncate(4);
+    layers
+}
+
+#[test]
+fn rle_compaction_round_trips_vec_sink_replay() {
+    for seed in [3u64, 7, 11] {
+        let layers = small_model(seed);
+        let mut serial = VecSink::default();
+        let _ = compress_model(&layers, 0.12, &mut serial);
+        for threads in [1, 4] {
+            let (_, program) = CompressionJob::model(&layers)
+                .eps(0.12)
+                .parallel(threads)
+                .program()
+                .unwrap();
+            assert_eq!(program.ops.layer_count(), layers.len());
+            assert_eq!(
+                program.ops.op_count() as usize,
+                serial.ops.len(),
+                "seed {seed} threads {threads}"
+            );
+            // RLE never inflates; how much it compacts depends on how
+            // homogeneous the Givens sweeps are (crafted-stream pins
+            // live in trace::program's unit tests)
+            assert!(program.ops.run_count() as u64 <= program.ops.op_count());
+            let mut replayed = VecSink::default();
+            program.ops.replay(&mut replayed);
+            assert_eq!(replayed.ops, serial.ops, "seed {seed} threads {threads}");
+        }
+    }
+}
+
+#[test]
+fn program_replay_costs_bit_identically_to_live_costing() {
+    let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
+    for seed in [1u64, 2, 3] {
+        let layers = small_model(seed);
+        for threads in [1, 4] {
+            let live = CompressionJob::model(&layers)
+                .eps(0.12)
+                .parallel(threads)
+                .socs(&configs)
+                .run()
+                .unwrap();
+            let (recorded, program) = CompressionJob::model(&layers)
+                .eps(0.12)
+                .parallel(threads)
+                .socs(&configs)
+                .program()
+                .unwrap();
+            let replayed = CompressionJob::replay(&program).socs(&configs).run().unwrap();
+            // fast run-fold path, driven directly
+            let mut folded = CostSink::new(&configs);
+            folded.fold_program(&program.ops);
+            let fold_reports = folded.reports();
+            for (((a, b), c), d) in live
+                .reports
+                .iter()
+                .zip(&recorded.reports)
+                .zip(&replayed.reports)
+                .zip(&fold_reports)
+            {
+                for r in [b, c, d] {
+                    assert_eq!(a.total_ms, r.total_ms, "seed {seed} threads {threads}");
+                    assert_eq!(a.total_mj, r.total_mj);
+                    for p in Phase::ALL {
+                        assert_eq!(a.phase(p).cycles, r.phase(p).cycles, "{p:?}");
+                        assert_eq!(a.phase(p).energy_mj, r.phase(p).energy_mj, "{p:?}");
+                    }
+                }
+            }
+            // the recorded summary survives into replay outcomes
+            assert_eq!(replayed.outcome.final_params, live.outcome.final_params);
+            assert_eq!(replayed.outcome.max_rel_err, live.outcome.max_rel_err);
+        }
+    }
+}
+
+#[test]
+fn replay_never_moves_the_numerics_pass_counter() {
+    let layers = small_model(9);
+    let (_, program) = CompressionJob::model(&layers).eps(0.2).program().unwrap();
+    let before = tt_edge::numerics_pass_count();
+    for _ in 0..5 {
+        let out = CompressionJob::replay(&program)
+            .soc(SocConfig::tt_edge())
+            .run()
+            .unwrap();
+        assert_eq!(out.reports.len(), 1);
+        assert!(out.reports[0].total_ms > 0.0);
+    }
+    assert_eq!(tt_edge::numerics_pass_count(), before);
+}
