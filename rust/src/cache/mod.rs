@@ -1,0 +1,526 @@
+//! Keyed [`JobProgram`] cache — the memory of the compression service.
+//!
+//! TT-Edge's record-once / replay-many seam (PR 5) made a recorded
+//! [`JobProgram`] bit-identical to live costing; this module makes
+//! that artifact *resident*: a request whose (workload, full
+//! [`TtSpec`]) key was seen before is served by replaying the cached
+//! program — zero numerics — while a first-of-its-kind request runs
+//! the numerics exactly once and populates the cache for everyone
+//! behind it.
+//!
+//! Design points:
+//!
+//! * **Key soundness.** A program is a pure function of the workload
+//!   weights and the *entire* numeric spec. [`CacheKey`] therefore
+//!   combines a [`Fingerprint`] of the workload identity with
+//!   `eps.to_bits()` **and** the effective per-bond rank caps read
+//!   through [`TtSpec::cap_for`] — so `rank_cap(8)` and
+//!   `rank_caps(&[8, 8])` share an entry (same numerics), while two
+//!   requests differing only in caps never collide.
+//! * **Single-flight misses.** Under a concurrent drain, the first
+//!   claimant of an absent key installs a *pending* slot and runs the
+//!   numerics; every later claimant blocks on a condvar and resolves
+//!   as a hit when the program lands. A request stream with R requests
+//!   over K unique keys costs exactly K numerics passes at any worker
+//!   count. If the recording claimant panics or is cancelled, its
+//!   [`MissGuard`] clears the pending slot on drop and wakes the
+//!   waiters so one of them becomes the new recorder — a failure never
+//!   wedges the key.
+//! * **LRU eviction.** Ready entries above `capacity` are evicted
+//!   least-recently-used first (pending slots are never evicted — they
+//!   hold no program yet and a waiter is counting on them). Capacity 0
+//!   is the degenerate "uncached" mode benchmarks use as a baseline:
+//!   every insert is immediately displaced, residency stays 0, and
+//!   correctness is unchanged.
+//! * **Observability.** All counters live in
+//!   [`crate::metrics::CacheStats`] and obey its conservation laws;
+//!   [`ProgramCache::stats`] snapshots them under the lock.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::job::JobProgram;
+use crate::metrics::CacheStats;
+use crate::ttd::ttd::TtSpec;
+
+/// Streaming FNV-1a (64-bit) over the workload identity. Not
+/// cryptographic — it keys a cache, it does not authenticate one —
+/// but deterministic across runs and platforms (explicit little-endian
+/// byte order, no pointer or layout dependence).
+#[derive(Clone, Copy, Debug)]
+pub struct Fingerprint(u64);
+
+impl Default for Fingerprint {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fingerprint {
+    pub fn new() -> Self {
+        Fingerprint(0xcbf2_9ce4_8422_2325)
+    }
+
+    #[inline]
+    fn byte(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    pub fn push_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.byte(b);
+        }
+    }
+
+    pub fn push_u64(&mut self, v: u64) {
+        self.push_bytes(&v.to_le_bytes());
+    }
+
+    pub fn push_usize(&mut self, v: usize) {
+        self.push_u64(v as u64);
+    }
+
+    /// Length-prefixed, so `("ab", "c")` and `("a", "bc")` digest
+    /// differently.
+    pub fn push_str(&mut self, s: &str) {
+        self.push_usize(s.len());
+        self.push_bytes(s.as_bytes());
+    }
+
+    /// Exact bit patterns (length-prefixed): distinct weights always
+    /// fingerprint differently, -0.0 vs 0.0 included.
+    pub fn push_f32s(&mut self, vs: &[f32]) {
+        self.push_usize(vs.len());
+        for v in vs {
+            self.push_bytes(&v.to_bits().to_le_bytes());
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// What a cached program is indexed by: the workload fingerprint plus
+/// the **full** numeric spec — `eps` bits and the effective cap of
+/// every bond the workload has. Caps are canonicalized through
+/// [`TtSpec::cap_for`], so equivalent specs expressed differently
+/// (uniform vs per-bond, trailing unbounded caps) map to one key.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CacheKey {
+    workload: u64,
+    eps_bits: u32,
+    caps: Vec<u64>,
+}
+
+impl CacheKey {
+    /// `bonds` is the number of TT bonds the workload's tensors have
+    /// (`dims.len() - 1`); caps past it cannot affect the numerics and
+    /// are deliberately excluded.
+    pub fn new(workload_fingerprint: u64, spec: &TtSpec, bonds: usize) -> Self {
+        CacheKey {
+            workload: workload_fingerprint,
+            eps_bits: spec.eps.to_bits(),
+            caps: (0..bonds).map(|b| spec.cap_for(b) as u64).collect(),
+        }
+    }
+}
+
+enum Slot {
+    /// A miss claimant is recording this key right now; waiters block
+    /// until it lands (or the claimant's guard drops).
+    Pending,
+    /// A resident program and its last-use tick (LRU order).
+    Ready(Arc<JobProgram>, u64),
+}
+
+struct Inner {
+    capacity: usize,
+    slots: HashMap<CacheKey, Slot>,
+    /// Monotonic logical clock; bumped on every cache operation so
+    /// last-use ticks are unique and LRU order is total.
+    tick: u64,
+    stats: CacheStats,
+}
+
+impl Inner {
+    fn evict_over_capacity(&mut self) {
+        while self.stats.resident > self.capacity as u64 {
+            let victim = self
+                .slots
+                .iter()
+                .filter_map(|(k, s)| match s {
+                    Slot::Ready(_, t) => Some((*t, k.clone())),
+                    Slot::Pending => None,
+                })
+                .min_by_key(|(t, _)| *t);
+            let Some((_, key)) = victim else { break };
+            if let Some(Slot::Ready(p, _)) = self.slots.remove(&key) {
+                self.stats.evictions += 1;
+                self.stats.resident -= 1;
+                self.stats.resident_bytes -= p.ops.encoded_bytes() as u64;
+            }
+        }
+    }
+
+    fn store(&mut self, key: CacheKey, program: Arc<JobProgram>) {
+        self.tick += 1;
+        let tick = self.tick;
+        let bytes = program.ops.encoded_bytes() as u64;
+        let prev = self.slots.insert(key, Slot::Ready(program, tick));
+        self.stats.inserts += 1;
+        match prev {
+            // Replacement: the displaced program counts as evicted —
+            // this is what keeps `inserts - evictions == resident`.
+            Some(Slot::Ready(old, _)) => {
+                self.stats.evictions += 1;
+                self.stats.resident_bytes -= old.ops.encoded_bytes() as u64;
+            }
+            // Fulfilling a pending claim, or a brand-new key.
+            Some(Slot::Pending) | None => self.stats.resident += 1,
+        }
+        self.stats.resident_bytes += bytes;
+        self.evict_over_capacity();
+    }
+}
+
+/// What [`ProgramCache::claim`] resolved to.
+pub enum Claim<'a> {
+    /// Served from cache (possibly after waiting out another worker's
+    /// in-flight recording): replay this, run no numerics.
+    Hit(Arc<JobProgram>),
+    /// This caller is the key's designated recorder: run the numerics
+    /// once and [`MissGuard::fulfill`] the guard.
+    Miss(MissGuard<'a>),
+}
+
+/// The exclusive right (and obligation) to record one missing key.
+/// Dropping it unfulfilled — panic, cancellation — releases the key so
+/// a waiter can take over.
+pub struct MissGuard<'a> {
+    cache: &'a ProgramCache,
+    key: CacheKey,
+    fulfilled: bool,
+}
+
+impl MissGuard<'_> {
+    /// Install the freshly recorded program, wake every waiter, and
+    /// return the shared handle (callers keep costing from it).
+    pub fn fulfill(mut self, program: JobProgram) -> Arc<JobProgram> {
+        let arc = Arc::new(program);
+        {
+            let mut inner = self.cache.state.lock().expect("program cache poisoned");
+            inner.store(self.key.clone(), arc.clone());
+        }
+        self.fulfilled = true;
+        self.cache.ready_cv.notify_all();
+        arc
+    }
+}
+
+impl Drop for MissGuard<'_> {
+    fn drop(&mut self) {
+        if self.fulfilled {
+            return;
+        }
+        {
+            let mut inner = self.cache.state.lock().expect("program cache poisoned");
+            if matches!(inner.slots.get(&self.key), Some(Slot::Pending)) {
+                inner.slots.remove(&self.key);
+            }
+        }
+        self.cache.ready_cv.notify_all();
+    }
+}
+
+/// The keyed, single-flight, LRU program cache. Shared by reference
+/// across worker threads (`&ProgramCache` is `Sync`); see the module
+/// docs for the semantics.
+#[derive(Debug)]
+pub struct ProgramCache {
+    state: Mutex<Inner>,
+    ready_cv: Condvar,
+}
+
+impl std::fmt::Debug for Inner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ProgramCache")
+            .field("capacity", &self.capacity)
+            .field("stats", &self.stats)
+            .finish()
+    }
+}
+
+impl ProgramCache {
+    /// A cache holding at most `capacity` ready programs. Capacity 0
+    /// disables residency (every lookup misses) without changing any
+    /// caller-visible output — the benchmark's uncached baseline.
+    pub fn new(capacity: usize) -> Self {
+        ProgramCache {
+            state: Mutex::new(Inner {
+                capacity,
+                slots: HashMap::new(),
+                tick: 0,
+                stats: CacheStats::default(),
+            }),
+            ready_cv: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.state.lock().expect("program cache poisoned").capacity
+    }
+
+    /// Ready programs resident right now.
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("program cache poisoned").stats.resident as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Counter snapshot (consistent: taken under the lock).
+    pub fn stats(&self) -> CacheStats {
+        self.state.lock().expect("program cache poisoned").stats
+    }
+
+    /// Whether `key` is resident and ready. No counter movement, no
+    /// LRU touch — an observation hook for tests, not a lookup.
+    pub fn contains(&self, key: &CacheKey) -> bool {
+        let inner = self.state.lock().expect("program cache poisoned");
+        matches!(inner.slots.get(key), Some(Slot::Ready(..)))
+    }
+
+    /// Single-flight keyed probe. A hit (including one resolved by
+    /// waiting out another claimant's recording) touches the entry's
+    /// LRU tick; an outright miss installs a pending slot and returns
+    /// the [`MissGuard`] obligating this caller to record.
+    pub fn claim(&self, key: &CacheKey) -> Claim<'_> {
+        enum Probe {
+            Ready(Arc<JobProgram>),
+            Pending,
+            Absent,
+        }
+        let mut inner = self.state.lock().expect("program cache poisoned");
+        inner.stats.lookups += 1;
+        loop {
+            inner.tick += 1;
+            let tick = inner.tick;
+            // Resolve the slot state without holding a borrow across
+            // the wait / insert below.
+            let probe = match inner.slots.get_mut(key) {
+                Some(Slot::Ready(program, last_used)) => {
+                    *last_used = tick;
+                    Probe::Ready(program.clone())
+                }
+                Some(Slot::Pending) => Probe::Pending,
+                None => Probe::Absent,
+            };
+            match probe {
+                Probe::Ready(program) => {
+                    inner.stats.hits += 1;
+                    return Claim::Hit(program);
+                }
+                Probe::Pending => {
+                    inner = self
+                        .ready_cv
+                        .wait(inner)
+                        .expect("program cache poisoned");
+                }
+                Probe::Absent => {
+                    inner.slots.insert(key.clone(), Slot::Pending);
+                    inner.stats.misses += 1;
+                    return Claim::Miss(MissGuard {
+                        cache: self,
+                        key: key.clone(),
+                        fulfilled: false,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Plain probe: hit (touches LRU) or miss, never waits and never
+    /// installs a pending slot. An in-flight pending key counts as a
+    /// miss here — use [`ProgramCache::claim`] for single-flight.
+    pub fn lookup(&self, key: &CacheKey) -> Option<Arc<JobProgram>> {
+        let mut inner = self.state.lock().expect("program cache poisoned");
+        inner.stats.lookups += 1;
+        inner.tick += 1;
+        let tick = inner.tick;
+        let found = match inner.slots.get_mut(key) {
+            Some(Slot::Ready(program, last_used)) => {
+                *last_used = tick;
+                Some(program.clone())
+            }
+            _ => None,
+        };
+        match found {
+            Some(program) => {
+                inner.stats.hits += 1;
+                Some(program)
+            }
+            None => {
+                inner.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Direct insert (no claim protocol). Replacing a resident entry
+    /// counts as insert + eviction of the displaced program. Intended
+    /// for tests and warm-start loaders; concurrent `claim`s on the
+    /// same key should go through [`MissGuard::fulfill`] instead.
+    pub fn insert(&self, key: CacheKey, program: JobProgram) -> Arc<JobProgram> {
+        let arc = Arc::new(program);
+        {
+            let mut inner = self.state.lock().expect("program cache poisoned");
+            inner.store(key, arc.clone());
+        }
+        self.ready_cv.notify_all();
+        arc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ttd::Tensor;
+    use crate::util::Rng;
+    use crate::CompressionJob;
+
+    fn sample_program() -> JobProgram {
+        let mut rng = Rng::new(901);
+        let w = Tensor::from_vec(&[4, 4, 4], rng.normal_vec(64));
+        let (_, program) = CompressionJob::new(&w).eps(0.2).program().unwrap();
+        program
+    }
+
+    fn key(eps: f32) -> CacheKey {
+        CacheKey::new(0xABCD, &TtSpec::eps(eps), 2)
+    }
+
+    #[test]
+    fn fingerprint_is_order_and_boundary_sensitive() {
+        let mut a = Fingerprint::new();
+        a.push_str("ab");
+        a.push_str("c");
+        let mut b = Fingerprint::new();
+        b.push_str("a");
+        b.push_str("bc");
+        assert_ne!(a.finish(), b.finish());
+        let mut c = Fingerprint::new();
+        c.push_f32s(&[0.0]);
+        let mut d = Fingerprint::new();
+        d.push_f32s(&[-0.0]);
+        assert_ne!(c.finish(), d.finish(), "distinct bit patterns must differ");
+        assert_eq!(Fingerprint::new().finish(), Fingerprint::new().finish());
+    }
+
+    #[test]
+    fn cache_key_canonicalizes_equivalent_caps() {
+        let spec_uniform = TtSpec::eps(0.12).rank_cap(8);
+        let spec_per_bond = TtSpec::eps(0.12).rank_caps(&[8, 8]);
+        assert_eq!(
+            CacheKey::new(1, &spec_uniform, 2),
+            CacheKey::new(1, &spec_per_bond, 2)
+        );
+        // trailing unbounded caps canonicalize too
+        let explicit_max = TtSpec::eps(0.12).rank_caps(&[8]);
+        let with_tail = TtSpec::eps(0.12).rank_caps(&[8, usize::MAX]);
+        assert_eq!(CacheKey::new(1, &explicit_max, 2), CacheKey::new(1, &with_tail, 2));
+        // ...but a real cap difference is a different key
+        assert_ne!(
+            CacheKey::new(1, &TtSpec::eps(0.12), 2),
+            CacheKey::new(1, &TtSpec::eps(0.12).rank_cap(8), 2)
+        );
+    }
+
+    #[test]
+    fn claim_miss_fulfill_then_hit() {
+        let cache = ProgramCache::new(4);
+        let k = key(0.1);
+        let Claim::Miss(guard) = cache.claim(&k) else {
+            panic!("first claim must miss")
+        };
+        let stored = guard.fulfill(sample_program());
+        let Claim::Hit(hit) = cache.claim(&k) else { panic!("second claim must hit") };
+        assert!(Arc::ptr_eq(&stored, &hit));
+        let s = cache.stats();
+        assert!(s.conserved(), "{s:?}");
+        assert_eq!((s.lookups, s.hits, s.misses), (2, 1, 1));
+        assert_eq!(s.resident, 1);
+        assert_eq!(s.resident_bytes, stored.ops.encoded_bytes() as u64);
+    }
+
+    #[test]
+    fn dropped_guard_releases_the_key() {
+        let cache = ProgramCache::new(4);
+        let k = key(0.1);
+        match cache.claim(&k) {
+            Claim::Miss(guard) => drop(guard), // recorder failed
+            Claim::Hit(_) => panic!("empty cache cannot hit"),
+        }
+        // the key is claimable again, not wedged
+        let Claim::Miss(guard) = cache.claim(&k) else {
+            panic!("released key must miss again")
+        };
+        guard.fulfill(sample_program());
+        assert!(cache.contains(&k));
+        assert!(cache.stats().conserved());
+    }
+
+    #[test]
+    fn concurrent_claims_coalesce_to_one_recorder() {
+        let cache = ProgramCache::new(8);
+        let k = key(0.3);
+        let recorders = std::sync::atomic::AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| match cache.claim(&k) {
+                    Claim::Miss(guard) => {
+                        recorders.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        guard.fulfill(sample_program());
+                    }
+                    Claim::Hit(p) => {
+                        assert!(p.ops.op_count() > 0);
+                    }
+                });
+            }
+        });
+        assert_eq!(recorders.load(std::sync::atomic::Ordering::Relaxed), 1);
+        let s = cache.stats();
+        assert!(s.conserved(), "{s:?}");
+        assert_eq!(s.lookups, 8);
+        assert_eq!(s.misses, 1, "single-flight: one miss for 8 racing claims");
+        assert_eq!(s.hits, 7);
+    }
+
+    #[test]
+    fn capacity_zero_keeps_nothing_resident() {
+        let cache = ProgramCache::new(0);
+        let k = key(0.1);
+        cache.insert(k.clone(), sample_program());
+        assert!(cache.is_empty());
+        assert!(!cache.contains(&k));
+        assert!(cache.lookup(&k).is_none());
+        let s = cache.stats();
+        assert!(s.conserved(), "{s:?}");
+        assert_eq!((s.inserts, s.evictions, s.resident), (1, 1, 0));
+        assert_eq!(s.resident_bytes, 0);
+    }
+
+    #[test]
+    fn replacement_counts_as_insert_plus_eviction() {
+        let cache = ProgramCache::new(4);
+        let k = key(0.1);
+        cache.insert(k.clone(), sample_program());
+        cache.insert(k.clone(), sample_program());
+        let s = cache.stats();
+        assert!(s.conserved(), "{s:?}");
+        assert_eq!((s.inserts, s.evictions, s.resident), (2, 1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+}

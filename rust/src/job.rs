@@ -34,6 +34,7 @@
 
 use std::cell::Cell;
 
+use crate::cache::{CacheKey, Claim, Fingerprint, ProgramCache};
 use crate::model::resnet32::ConvLayer;
 use crate::pipeline::{self, CancelToken};
 use crate::sim::config::SocConfig;
@@ -136,6 +137,7 @@ pub struct CompressionJob<'a> {
     configs: Vec<SocConfig>,
     cancel: Option<&'a CancelToken>,
     observer: Option<&'a mut dyn TraceSink>,
+    cache: Option<&'a ProgramCache>,
 }
 
 /// What a [`CompressionJob`] produced.
@@ -178,6 +180,7 @@ impl<'a> CompressionJob<'a> {
             configs: Vec::new(),
             cancel: None,
             observer: None,
+            cache: None,
         }
     }
 
@@ -290,9 +293,108 @@ impl<'a> CompressionJob<'a> {
         self
     }
 
+    /// Serve this job through a keyed program cache. [`run`] first
+    /// claims [`CompressionJob::cache_key`] in `cache`: a hit replays
+    /// the resident [`JobProgram`] (zero numerics, reports bit-
+    /// identical to a fresh run by the PR-5 replay contract); a miss
+    /// records the numerics **once** via [`CompressionJob::program`]
+    /// and populates the cache. Misses are single-flight — concurrent
+    /// callers of the same key coalesce onto one recording — so R
+    /// cached runs over K unique keys cost exactly K numerics passes.
+    /// Has no effect on an explicit [`CompressionJob::replay`] job
+    /// (that input already *is* a program).
+    ///
+    /// [`run`]: CompressionJob::run
+    pub fn cached(mut self, cache: &'a ProgramCache) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// The cache identity of this job: an order-sensitive fingerprint
+    /// of the workload (generator parameters for synthetic models —
+    /// the generator is deterministic, so they pin the weights without
+    /// materializing them; exact TT dims + weight bits for explicit
+    /// tensors) combined with the **full** numeric spec, `eps` and the
+    /// effective per-bond rank caps both. Two jobs share a key iff
+    /// their numerics are guaranteed identical. Panics on a
+    /// [`CompressionJob::replay`] job — a program has no workload to
+    /// fingerprint.
+    pub fn cache_key(&self) -> CacheKey {
+        let mut fp = Fingerprint::new();
+        let bonds = match &self.input {
+            Input::Replay(_) => panic!("CompressionJob::cache_key: replay jobs have no cache identity"),
+            Input::Tensor(w) => {
+                fp.push_str("tensor");
+                fp.push_usize(w.shape.len());
+                for &d in &w.shape {
+                    fp.push_usize(d);
+                }
+                fp.push_f32s(&w.data);
+                w.shape.len().saturating_sub(1)
+            }
+            // Layers and Refs digest identically on purpose: same
+            // content, same numerics, same key.
+            Input::Layers(layers) => {
+                fp.push_str("model");
+                fp.push_usize(layers.len());
+                for (l, w) in layers.iter() {
+                    fingerprint_layer(&mut fp, l, w);
+                }
+                2
+            }
+            Input::Refs(jobs) => {
+                fp.push_str("model");
+                fp.push_usize(jobs.len());
+                for &(l, w) in jobs {
+                    fingerprint_layer(&mut fp, l, w);
+                }
+                2
+            }
+            Input::Synthetic { seed, ratio, noise } => {
+                fp.push_str("synthetic-resnet32");
+                fp.push_u64(*seed);
+                fp.push_u64(ratio.to_bits());
+                fp.push_u64(u64::from(noise.to_bits()));
+                2
+            }
+        };
+        CacheKey::new(fp.finish(), &self.spec, bonds)
+    }
+
+    /// The cache-served run path (`.cached(..)` was configured and the
+    /// input is not already a replay).
+    fn run_cached(mut self) -> Option<JobOutput> {
+        let cache = self.cache.take().expect("run_cached requires .cached(..)");
+        let key = self.cache_key();
+        match cache.claim(&key) {
+            Claim::Hit(program) => {
+                let CompressionJob { configs, cancel, observer, .. } = self;
+                let default_token = CancelToken::default();
+                let cancel = cancel.unwrap_or(&default_token);
+                if cancel.is_cancelled() {
+                    return None;
+                }
+                let reports = cost_program(&program, &configs, observer);
+                Some(JobOutput { outcome: program.outcome(), reports })
+            }
+            Claim::Miss(guard) => match self.program() {
+                Some((out, program)) => {
+                    guard.fulfill(program);
+                    Some(out)
+                }
+                // Cancelled mid-recording: the guard's drop releases
+                // the pending slot so a waiter can take over the key.
+                None => None,
+            },
+        }
+    }
+
     /// Run the job. Returns `None` iff the cancel token tripped.
     pub fn run(self) -> Option<JobOutput> {
-        let CompressionJob { input, spec, threads, configs, cancel, observer } = self;
+        if self.cache.is_some() && !matches!(self.input, Input::Replay(_)) {
+            return self.run_cached();
+        }
+        let CompressionJob { input, spec, threads, configs, cancel, observer, .. } = self;
         let default_token = CancelToken::default();
         let cancel = cancel.unwrap_or(&default_token);
 
@@ -379,7 +481,7 @@ impl<'a> CompressionJob<'a> {
     /// [`CompressionJob::replay`] job — there are no numerics to
     /// record.
     pub fn program(self) -> Option<(JobOutput, JobProgram)> {
-        let CompressionJob { input, spec, threads, configs, cancel, observer } = self;
+        let CompressionJob { input, spec, threads, configs, cancel, observer, .. } = self;
         let default_token = CancelToken::default();
         let cancel = cancel.unwrap_or(&default_token);
         assert!(
@@ -444,6 +546,17 @@ where
             owned.as_ref().expect("just set").iter().map(|(l, w)| (l, w)).collect()
         }
     }
+}
+
+/// Digest one model layer for [`CompressionJob::cache_key`]: the full
+/// conv shape (it fixes both the TT dims the tensor is reshaped to and
+/// the dense-parameter accounting in the aggregate outcome) plus the
+/// exact weight bits.
+fn fingerprint_layer(fp: &mut Fingerprint, layer: &ConvLayer, w: &Tensor) {
+    for &d in &layer.shape {
+        fp.push_usize(d);
+    }
+    fp.push_f32s(&w.data);
 }
 
 /// Single-tensor accounting shared by [`CompressionJob::run`] and
@@ -729,6 +842,103 @@ mod tests {
         let mut rng = Rng::new(36);
         let w = Tensor::from_vec(&[4, 4, 4], rng.normal_vec(64));
         assert!(CompressionJob::new(&w).cancel(&token).program().is_none());
+    }
+
+    #[test]
+    fn cached_run_hits_are_byte_identical_and_skip_numerics() {
+        let layers = small_model();
+        let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
+        let cache = ProgramCache::new(8);
+        let fresh = CompressionJob::model(&layers).eps(0.12).socs(&configs).run().unwrap();
+
+        let before = super::numerics_pass_count();
+        let miss = CompressionJob::model(&layers)
+            .eps(0.12)
+            .socs(&configs)
+            .cached(&cache)
+            .run()
+            .unwrap();
+        assert_eq!(super::numerics_pass_count(), before + 1, "miss records once");
+        let hit = CompressionJob::model(&layers)
+            .eps(0.12)
+            .socs(&configs)
+            .cached(&cache)
+            .run()
+            .unwrap();
+        assert_eq!(super::numerics_pass_count(), before + 1, "hit must not run numerics");
+
+        for out in [&miss, &hit] {
+            assert_eq!(out.outcome.final_params, fresh.outcome.final_params);
+            assert_eq!(out.outcome.max_rel_err, fresh.outcome.max_rel_err);
+            assert_eq!(out.outcome.compression_ratio, fresh.outcome.compression_ratio);
+            for (a, b) in out.reports.iter().zip(&fresh.reports) {
+                assert_eq!(a.to_json().render(), b.to_json().render());
+            }
+        }
+        // hit outputs carry the summary but no decompositions (the
+        // replay contract — programs never store cores)
+        assert!(hit.outcome.decomps.is_empty());
+        let s = cache.stats();
+        assert!(s.conserved(), "{s:?}");
+        assert_eq!((s.lookups, s.hits, s.misses), (2, 1, 1));
+    }
+
+    #[test]
+    fn cache_key_covers_rank_caps_not_just_eps() {
+        let base = CompressionJob::synthetic(7).eps(0.12);
+        let capped = CompressionJob::synthetic(7).eps(0.12).rank_cap(2);
+        assert_ne!(
+            base.cache_key(),
+            capped.cache_key(),
+            "two specs sharing eps but differing in rank caps must never collide"
+        );
+        // equivalent cap spellings canonicalize to one key
+        let uniform = CompressionJob::synthetic(7).eps(0.12).rank_cap(2);
+        let per_bond = CompressionJob::synthetic(7).eps(0.12).rank_caps(&[2, 2]);
+        assert_eq!(uniform.cache_key(), per_bond.cache_key());
+        // and the workload side is part of the key too
+        assert_ne!(
+            CompressionJob::synthetic(7).eps(0.12).cache_key(),
+            CompressionJob::synthetic(8).eps(0.12).cache_key()
+        );
+    }
+
+    #[test]
+    fn layers_and_refs_share_a_cache_key_tensor_does_not() {
+        let layers = small_model();
+        let tensors: Vec<Tensor> = layers.iter().map(|(_, w)| w.clone()).collect();
+        let jobs: Vec<(&ConvLayer, &Tensor)> =
+            layers.iter().map(|(l, _)| l).zip(&tensors).collect();
+        assert_eq!(
+            CompressionJob::model(&layers).eps(0.12).cache_key(),
+            CompressionJob::layer_refs(jobs).eps(0.12).cache_key(),
+            "same content, same numerics, same key"
+        );
+        let mut rng = Rng::new(40);
+        let w = Tensor::from_vec(&[4, 4, 4], rng.normal_vec(64));
+        let w2 = {
+            let mut t = w.clone();
+            t.data[0] += 1.0;
+            t
+        };
+        assert_ne!(
+            CompressionJob::new(&w).eps(0.12).cache_key(),
+            CompressionJob::new(&w2).eps(0.12).cache_key(),
+            "one changed weight bit is a different workload"
+        );
+    }
+
+    #[test]
+    fn cancelled_cached_miss_returns_none_and_releases_the_key() {
+        let layers = small_model();
+        let cache = ProgramCache::new(8);
+        let token = CancelToken::cancelled();
+        assert!(CompressionJob::model(&layers).cached(&cache).cancel(&token).run().is_none());
+        // the pending slot was released: a healthy run can now record
+        let out = CompressionJob::model(&layers).cached(&cache).run();
+        assert!(out.is_some());
+        assert_eq!(cache.len(), 1);
+        assert!(cache.stats().conserved());
     }
 
     #[test]

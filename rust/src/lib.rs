@@ -21,6 +21,7 @@
 // `-D warnings` CI trip on the iterator-style suggestion.
 #![allow(clippy::needless_range_loop)]
 
+pub mod cache;
 pub mod coordinator;
 pub mod dse;
 pub mod hw_model;
@@ -29,10 +30,12 @@ pub mod metrics;
 pub mod model;
 pub mod pipeline;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod testutil;
 pub mod trace;
 pub mod ttd;
 pub mod util;
 
+pub use cache::{CacheKey, ProgramCache};
 pub use job::{numerics_pass_count, CompressionJob, JobOutput, JobProgram};

@@ -18,6 +18,12 @@
 //!   artifact into `EXPERIMENTS/` (`--workload`, `--space`,
 //!   `--strategy grid|random|evolve`, `--budget`, `--seed`,
 //!   `--parallel`, `--out`, `--json`).
+//! * `serve`     — compression-as-a-service: drain a JSONL request
+//!   queue through a keyed `JobProgram` cache (`--requests FILE`,
+//!   `--workers N`, `--cache CAPACITY`, `--out FILE`, `--json`); a
+//!   repeated (workload, TtSpec) key is served at replay speed with
+//!   zero numerics. The greppable cache metrics line goes to stderr;
+//!   the serve-metrics-v1 artifact lands in `EXPERIMENTS/`.
 //! * `federate`  — Fig. 1: fault-tolerant federated rounds over
 //!   simulated edge nodes (`--nodes`, `--rounds`,
 //!   `--soc baseline|tt-edge`, chaos: `--dropout p --straggler-mult x
@@ -71,6 +77,11 @@ const COMMANDS: &[CmdSpec] = &[
         ],
         flags: &["json", "no-oracle"],
     },
+    CmdSpec {
+        name: "serve",
+        opts: &["requests", "workers", "cache", "out"],
+        flags: &["json"],
+    },
     CmdSpec { name: "resources", opts: &[], flags: &[] },
     CmdSpec { name: "related", opts: &[], flags: &[] },
     CmdSpec { name: "artifacts", opts: &[], flags: &["smoke"] },
@@ -97,6 +108,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "compress" => cmd_compress(&args),
         "explore" => cmd_explore(&args),
+        "serve" => cmd_serve(&args),
         "federate" => cmd_federate(&args),
         "resources" => cmd_resources(),
         "related" => cmd_related(),
@@ -134,13 +146,17 @@ fn opt_or<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> T {
 fn print_help() {
     println!(
         "ttedge — TT-Edge (DATE 2026) reproduction\n\n\
-         USAGE: ttedge <simulate|compress|explore|federate|resources|related|artifacts> [--opts]\n\n\
+         USAGE: ttedge <simulate|compress|explore|serve|federate|resources|related|artifacts> [--opts]\n\n\
          simulate   Table III (exec time + energy, baseline vs TT-Edge; --parallel N, --json)\n\
          compress   Table I  (TTD vs Tucker vs TRD on ResNet-32; --parallel N, --json)\n\
          explore    design-space exploration: Pareto frontier over (cycles, energy, area)\n\
                     (--workload resnet32|tiny --space paper|features|full\n\
                     --strategy grid|random|evolve --budget N --seed S --parallel N\n\
                     --out FILE --json; sweep artifact lands in EXPERIMENTS/)\n\
+         serve      compression-as-a-service: drain a JSONL request queue through a\n\
+                    keyed JobProgram cache (--requests FILE --workers N --cache CAP\n\
+                    --out FILE --json; cache metrics on stderr, serve-metrics-v1\n\
+                    artifact in EXPERIMENTS/)\n\
          federate   Fig. 1   (fault-tolerant federated rounds; --threads N per node,\n\
                     --dropout p --straggler-mult x --straggler-frac f --quorum q\n\
                     --loss p --retries n --deadline-slack s --fault-seed s\n\
@@ -359,6 +375,109 @@ fn cmd_explore(args: &Args) -> Result<()> {
         tte.objectives.area_luts.saturating_sub(out.baseline().objectives.area_luts),
         if out.frontier.contains(&1) { " (on the frontier)" } else { "" },
     );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::path::PathBuf;
+    use tt_edge::serve::{self, ServeConfig};
+
+    let Some(path) = args.opt("requests") else {
+        eprintln!("error: serve requires --requests FILE (JSONL, one request object per line)");
+        eprintln!("run `ttedge help` for usage");
+        std::process::exit(2);
+    };
+    let workers: usize = opt_or(args, "workers", 1);
+    let capacity: usize = opt_or(args, "cache", 64);
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("could not read {path}: {e}"))?;
+    let requests = serve::parse_requests(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    anyhow::ensure!(!requests.is_empty(), "{path}: no requests in the queue");
+
+    let t0 = std::time::Instant::now();
+    let out = serve::serve(&requests, &ServeConfig { workers, cache_capacity: capacity });
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    // The greppable cache/numerics accounting goes to stderr (CI
+    // asserts hit counts and exactly-K numerics passes against it) so
+    // stdout stays byte-identical at any --workers width.
+    eprintln!("{}", out.metrics_line());
+
+    // serve-metrics-v1 artifact (same default-dir logic as `explore`:
+    // the checkout's EXPERIMENTS/ when the binary still runs next to
+    // it, else ./EXPERIMENTS; a failed write warns, never aborts).
+    let apath: PathBuf = match args.opt("out") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            let checkout: PathBuf =
+                [env!("CARGO_MANIFEST_DIR"), "..", "EXPERIMENTS"].iter().collect();
+            let dir = if checkout.is_dir() {
+                checkout
+            } else {
+                PathBuf::from("EXPERIMENTS")
+            };
+            dir.join("SERVE_metrics.json")
+        }
+    };
+    if let Some(dir) = apath.parent().filter(|d| !d.as_os_str().is_empty()) {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    match std::fs::write(&apath, out.metrics_json(wall_ms).render() + "\n") {
+        Ok(()) => eprintln!("wrote {}", apath.display()),
+        Err(e) => {
+            eprintln!("warning: could not write serve artifact {}: {e}", apath.display())
+        }
+    }
+
+    if args.flag("json") {
+        for r in &out.responses {
+            println!("{}", r.to_json().render());
+        }
+        return Ok(());
+    }
+    println!(
+        "served {} request{} with {} worker{} (cache capacity {}, hit rate {:.0}%, \
+         {} numerics pass{}, {wall_ms:.0} ms wall)\n",
+        out.responses.len(),
+        if out.responses.len() == 1 { "" } else { "s" },
+        out.workers,
+        if out.workers == 1 { "" } else { "s" },
+        out.cache_capacity,
+        out.stats.hit_rate() * 100.0,
+        out.numerics_passes,
+        if out.numerics_passes == 1 { "" } else { "es" },
+    );
+    let mut t = Table::new(
+        "serve: per-request compression + SoC costing",
+        &["req", "workload", "seed", "eps", "caps", "ratio", "SoC", "T (ms)", "E (mJ)"],
+    );
+    for r in &out.responses {
+        let caps = if !r.request.rank_caps.is_empty() {
+            r.request
+                .rank_caps
+                .iter()
+                .map(|c| c.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        } else if let Some(cap) = r.request.rank_cap {
+            format!("u{cap}")
+        } else {
+            "-".into()
+        };
+        for rep in &r.reports {
+            t.row(&[
+                r.index.to_string(),
+                r.request.workload.label().to_string(),
+                r.request.seed.to_string(),
+                format!("{}", r.request.eps),
+                caps.clone(),
+                format!("{:.2}x", r.compression_ratio),
+                rep.config_name.clone(),
+                f1(rep.total_ms),
+                f1(rep.total_mj),
+            ]);
+        }
+    }
+    println!("{}", t.render());
     Ok(())
 }
 

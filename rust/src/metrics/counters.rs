@@ -1,0 +1,131 @@
+//! Cache observability counters (the `serve` metrics surface).
+//!
+//! [`CacheStats`] is a plain snapshot — the [`crate::cache`] module
+//! owns the live counters under its lock and hands out copies, so a
+//! reader can never observe a torn update. Two conservation laws hold
+//! at every quiescent point and are pinned by `tests/program_cache.rs`:
+//!
+//! * `hits + misses == lookups`
+//! * `inserts - evictions == resident`
+//!
+//! (Replacing an existing entry counts as an insert *plus* an eviction
+//! of the entry it displaced, which is what keeps the second law exact.)
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Counter snapshot for one [`crate::cache::ProgramCache`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Keyed probes: every `lookup`/`claim` call counts exactly once
+    /// (a claim that waits out another worker's in-flight miss still
+    /// counts as a single lookup, resolved as a hit).
+    pub lookups: u64,
+    /// Lookups served from a resident program.
+    pub hits: u64,
+    /// Lookups that found nothing resident (the caller runs numerics).
+    pub misses: u64,
+    /// Programs stored (fulfilled misses + direct inserts; replacing
+    /// an existing entry counts here too).
+    pub inserts: u64,
+    /// Programs removed — LRU pressure and replacement displacements.
+    pub evictions: u64,
+    /// Programs resident right now.
+    pub resident: u64,
+    /// Total RLE-encoded bytes of the resident programs.
+    pub resident_bytes: u64,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from cache (0 when nothing was
+    /// looked up yet).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+
+    /// Both conservation laws (see the module docs). Test hook — the
+    /// cache upholds these by construction.
+    pub fn conserved(&self) -> bool {
+        self.hits + self.misses == self.lookups
+            && self.inserts >= self.evictions
+            && self.inserts - self.evictions == self.resident
+    }
+
+    /// The greppable `key=value` fragment used by the `serve` metrics
+    /// line (stable field order; CI anchors regexes on it).
+    pub fn render(&self) -> String {
+        format!(
+            "lookups={} hits={} misses={} inserts={} evictions={} resident={} resident_bytes={}",
+            self.lookups,
+            self.hits,
+            self.misses,
+            self.inserts,
+            self.evictions,
+            self.resident,
+            self.resident_bytes,
+        )
+    }
+
+    /// The same fields as flat JSON entries, ready to merge into a
+    /// metrics artifact object (serve-metrics-v1).
+    pub fn json_fields(&self) -> BTreeMap<String, Json> {
+        let mut m = BTreeMap::new();
+        m.insert("lookups".into(), Json::from(self.lookups as usize));
+        m.insert("hits".into(), Json::from(self.hits as usize));
+        m.insert("misses".into(), Json::from(self.misses as usize));
+        m.insert("inserts".into(), Json::from(self.inserts as usize));
+        m.insert("evictions".into(), Json::from(self.evictions as usize));
+        m.insert("resident".into(), Json::from(self.resident as usize));
+        m.insert("resident_bytes".into(), Json::from(self.resident_bytes as usize));
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_stats_are_conserved_and_rate_is_zero() {
+        let s = CacheStats::default();
+        assert!(s.conserved());
+        assert_eq!(s.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn render_and_json_agree_on_every_field() {
+        let s = CacheStats {
+            lookups: 10,
+            hits: 7,
+            misses: 3,
+            inserts: 3,
+            evictions: 1,
+            resident: 2,
+            resident_bytes: 4096,
+        };
+        assert!(s.conserved());
+        assert!((s.hit_rate() - 0.7).abs() < 1e-12);
+        let line = s.render();
+        for frag in
+            ["lookups=10", "hits=7", "misses=3", "inserts=3", "evictions=1", "resident=2"]
+        {
+            assert!(line.contains(frag), "{line}");
+        }
+        let j = s.json_fields();
+        assert_eq!(j["hits"], Json::from(7usize));
+        assert_eq!(j["resident_bytes"], Json::from(4096usize));
+    }
+
+    #[test]
+    fn violated_laws_are_detected() {
+        let s = CacheStats { lookups: 2, hits: 1, misses: 0, ..Default::default() };
+        assert!(!s.conserved());
+        let s = CacheStats { inserts: 1, evictions: 2, ..Default::default() };
+        assert!(!s.conserved());
+    }
+}

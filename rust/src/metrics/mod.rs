@@ -1,6 +1,10 @@
-//! Table formatting + a minimal bench harness (no criterion offline).
+//! Table formatting, a minimal bench harness (no criterion offline),
+//! and the cache observability counters the `serve` mode reports.
 
 pub mod bench;
+pub mod counters;
+
+pub use counters::CacheStats;
 
 /// Fixed-width text table builder (paper-style tables on stdout).
 #[derive(Debug, Default)]

@@ -1,0 +1,485 @@
+//! Compression-as-a-service: drain a queue of compression requests
+//! through a shared, keyed [`ProgramCache`].
+//!
+//! The wire format is JSONL — one request object per line, blank lines
+//! and `#` comment lines skipped:
+//!
+//! ```text
+//! {"workload": "tiny", "seed": "7", "eps": 0.12, "socs": ["baseline", "tt-edge"]}
+//! {"workload": "resnet32", "eps": 0.2, "rank_cap": 8}
+//! {"workload": "tiny", "seed": "7", "eps": 0.12, "rank_caps": [4, 6]}
+//! ```
+//!
+//! Every field is optional (`workload` resnet32, `seed` 42, `eps`
+//! 0.12, unbounded ranks, both SoCs); a *present but malformed* field
+//! — or an unknown key — is a hard parse error naming the line, never
+//! a silent default (the CmdSpec philosophy, applied to the wire).
+//!
+//! [`serve`] drains the queue with N workers stealing requests off a
+//! shared cursor (the `pipeline` idiom). Two properties are pinned by
+//! `tests/program_cache.rs`:
+//!
+//! * **Determinism** — each response is a pure function of its request
+//!   (cache hits replay a program that is bit-identical to what a
+//!   fresh run would record), so per-request outputs are byte-
+//!   identical at any worker count. Scheduling-dependent facts (which
+//!   occurrence of a key missed) are deliberately kept *out* of the
+//!   responses and live only in the aggregate [`ServeOutcome`].
+//! * **Exactly-K numerics** — R requests over K unique cache keys cost
+//!   exactly K numerics passes at any worker count (single-flight
+//!   misses; see [`crate::cache`]).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use crate::cache::ProgramCache;
+use crate::dse::Workload;
+use crate::job::{numerics_pass_count, CompressionJob};
+use crate::metrics::CacheStats;
+use crate::sim::report::SimReport;
+use crate::sim::SocConfig;
+use crate::ttd::ttd::TtSpec;
+use crate::util::json::{self, Json};
+
+/// Keys a request object may carry; anything else is a parse error.
+const REQUEST_KEYS: &[&str] = &["workload", "seed", "eps", "rank_cap", "rank_caps", "socs"];
+
+/// One parsed queue entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeRequest {
+    pub workload: Workload,
+    /// Seeds the synthetic-trained weights (the workload identity).
+    pub seed: u64,
+    pub eps: f32,
+    /// Uniform bond cap (`"rank_cap"`); `None` leaves bonds unbounded
+    /// unless `rank_caps` is given.
+    pub rank_cap: Option<usize>,
+    /// Per-bond caps (`"rank_caps"`); mutually exclusive with
+    /// `rank_cap` on the wire.
+    pub rank_caps: Vec<usize>,
+    /// SoC wire names to cost under, in request order.
+    pub socs: Vec<String>,
+}
+
+impl Default for ServeRequest {
+    fn default() -> Self {
+        ServeRequest {
+            workload: Workload::Resnet32,
+            seed: 42,
+            eps: 0.12,
+            rank_cap: None,
+            rank_caps: Vec::new(),
+            socs: vec!["baseline".into(), "tt-edge".into()],
+        }
+    }
+}
+
+impl ServeRequest {
+    /// The full numeric spec this request asks for.
+    pub fn spec(&self) -> TtSpec {
+        let spec = TtSpec::eps(self.eps);
+        if !self.rank_caps.is_empty() {
+            spec.rank_caps(&self.rank_caps)
+        } else if let Some(cap) = self.rank_cap {
+            spec.rank_cap(cap)
+        } else {
+            spec
+        }
+    }
+
+    /// Resolve the SoC wire names (validated at parse time).
+    pub fn soc_configs(&self) -> Vec<SocConfig> {
+        self.socs
+            .iter()
+            .map(|name| match name.as_str() {
+                "baseline" => SocConfig::baseline(),
+                "tt-edge" => SocConfig::tt_edge(),
+                other => unreachable!("parse_request validated soc names, got `{other}`"),
+            })
+            .collect()
+    }
+
+    /// Echo of the request (stable field order; part of the response).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("workload".into(), Json::from(self.workload.label()));
+        // string: u64 seeds don't fit JSON's f64-exact integer range
+        m.insert("seed".into(), Json::Str(self.seed.to_string()));
+        m.insert("eps".into(), Json::from(f64::from(self.eps)));
+        if let Some(cap) = self.rank_cap {
+            m.insert("rank_cap".into(), Json::from(cap));
+        }
+        if !self.rank_caps.is_empty() {
+            m.insert(
+                "rank_caps".into(),
+                Json::Arr(self.rank_caps.iter().map(|&c| Json::from(c)).collect()),
+            );
+        }
+        m.insert(
+            "socs".into(),
+            Json::Arr(self.socs.iter().map(|s| Json::from(s.as_str())).collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
+fn parse_seed(j: &Json) -> Result<u64, String> {
+    match j {
+        // string form is canonical (u64 exactness); a small integer
+        // number is accepted for hand-written request files
+        Json::Str(s) => s.parse().map_err(|_| format!("bad seed `{s}`")),
+        Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n < 9.0e15 => Ok(*n as u64),
+        other => Err(format!("bad seed {other:?}")),
+    }
+}
+
+fn parse_cap(j: &Json, field: &str) -> Result<usize, String> {
+    match j {
+        Json::Num(n) if n.fract() == 0.0 && *n >= 1.0 && *n < 9.0e15 => Ok(*n as usize),
+        _ => Err(format!("{field} entries must be integers >= 1")),
+    }
+}
+
+/// Parse one request line (a JSON object; see the module docs).
+pub fn parse_request(text: &str) -> Result<ServeRequest, String> {
+    let j = json::parse(text).map_err(|e| e.to_string())?;
+    let Json::Obj(map) = &j else {
+        return Err("request must be a JSON object".into());
+    };
+    for key in map.keys() {
+        if !REQUEST_KEYS.contains(&key.as_str()) {
+            return Err(format!("unknown request key `{key}`"));
+        }
+    }
+    let mut req = ServeRequest::default();
+    if let Some(w) = j.get("workload") {
+        let name = w.as_str().ok_or("workload must be a string")?;
+        req.workload =
+            Workload::parse(name).ok_or_else(|| format!("bad workload `{name}` (resnet32|tiny)"))?;
+    }
+    if let Some(s) = j.get("seed") {
+        req.seed = parse_seed(s)?;
+    }
+    if let Some(e) = j.get("eps") {
+        let eps = e.as_f64().ok_or("eps must be a number")?;
+        if !(eps.is_finite() && eps >= 0.0) {
+            return Err(format!("eps must be finite and >= 0, got {eps}"));
+        }
+        req.eps = eps as f32;
+    }
+    if map.contains_key("rank_cap") && map.contains_key("rank_caps") {
+        return Err("rank_cap and rank_caps are mutually exclusive".into());
+    }
+    if let Some(c) = j.get("rank_cap") {
+        req.rank_cap = Some(parse_cap(c, "rank_cap")?);
+    }
+    if let Some(caps) = j.get("rank_caps") {
+        let arr = caps.as_arr().ok_or("rank_caps must be an array")?;
+        if arr.is_empty() {
+            return Err("rank_caps must not be empty (omit it for unbounded)".into());
+        }
+        req.rank_caps =
+            arr.iter().map(|c| parse_cap(c, "rank_caps")).collect::<Result<_, _>>()?;
+    }
+    if let Some(socs) = j.get("socs") {
+        let arr = socs.as_arr().ok_or("socs must be an array of strings")?;
+        if arr.is_empty() {
+            return Err("socs must not be empty (omit it for both SoCs)".into());
+        }
+        req.socs = arr
+            .iter()
+            .map(|s| {
+                let name = s.as_str().ok_or("socs must be an array of strings")?;
+                if matches!(name, "baseline" | "tt-edge") {
+                    Ok(name.to_string())
+                } else {
+                    Err(format!("bad soc `{name}` (baseline|tt-edge)"))
+                }
+            })
+            .collect::<Result<_, String>>()?;
+    }
+    Ok(req)
+}
+
+/// Parse a whole JSONL request file. Blank lines and `#` comments are
+/// skipped; any malformed line fails the whole file with its line
+/// number (a queue with a corrupt entry should not half-run).
+pub fn parse_requests(text: &str) -> Result<Vec<ServeRequest>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        out.push(parse_request(line).map_err(|e| format!("request line {}: {e}", i + 1))?);
+    }
+    Ok(out)
+}
+
+/// One served request: the request echo, the compression summary, and
+/// one report per requested SoC. A pure function of the request —
+/// byte-identical whether it was served by a hit, a miss, or any
+/// worker interleaving.
+#[derive(Clone, Debug)]
+pub struct ServeResponse {
+    /// Position in the request file (responses are returned sorted).
+    pub index: usize,
+    pub request: ServeRequest,
+    pub compression_ratio: f64,
+    pub max_rel_err: f32,
+    pub final_params: usize,
+    pub reports: Vec<SimReport>,
+}
+
+impl ServeResponse {
+    pub fn to_json(&self) -> Json {
+        let mut c = BTreeMap::new();
+        c.insert("compression_ratio".into(), Json::from(self.compression_ratio));
+        c.insert("max_rel_err".into(), Json::from(f64::from(self.max_rel_err)));
+        c.insert("final_params".into(), Json::from(self.final_params));
+        let mut m = BTreeMap::new();
+        m.insert("index".into(), Json::from(self.index));
+        m.insert("request".into(), self.request.to_json());
+        m.insert("compression".into(), Json::Obj(c));
+        m.insert(
+            "reports".into(),
+            Json::Arr(self.reports.iter().map(|r| r.to_json()).collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Service knobs (`serve --workers N --cache C`).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    pub workers: usize,
+    /// Program-cache capacity; 0 disables residency (the uncached
+    /// baseline benchmarks compare against).
+    pub cache_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: 1, cache_capacity: 64 }
+    }
+}
+
+/// Everything one drain produced: per-request responses (sorted by
+/// request index) plus the aggregate cache/numerics accounting.
+#[derive(Debug)]
+pub struct ServeOutcome {
+    pub responses: Vec<ServeResponse>,
+    pub stats: CacheStats,
+    /// Numerics passes the whole drain cost (summed across workers).
+    /// With enough cache capacity this equals the number of unique
+    /// cache keys in the stream, at any worker count.
+    pub numerics_passes: u64,
+    pub workers: usize,
+    pub cache_capacity: usize,
+}
+
+impl ServeOutcome {
+    /// The greppable stderr metrics line. `numerics_passes` is last on
+    /// purpose — CI anchors `numerics_passes=K$` on it.
+    pub fn metrics_line(&self) -> String {
+        format!(
+            "serve metrics: requests={} workers={} cache_capacity={} {} numerics_passes={}",
+            self.responses.len(),
+            self.workers,
+            self.cache_capacity,
+            self.stats.render(),
+            self.numerics_passes,
+        )
+    }
+
+    /// The serve-metrics-v1 artifact object (schema in
+    /// `EXPERIMENTS/README.md`). `wall_ms` is host-measured; the
+    /// derived `rps` is the sustained requests/sec of this drain.
+    pub fn metrics_json(&self, wall_ms: f64) -> Json {
+        let mut m = self.stats.json_fields();
+        m.insert("schema".into(), Json::from("serve-metrics-v1"));
+        m.insert("requests".into(), Json::from(self.responses.len()));
+        m.insert("workers".into(), Json::from(self.workers));
+        m.insert("cache_capacity".into(), Json::from(self.cache_capacity));
+        m.insert("numerics_passes".into(), Json::from(self.numerics_passes as usize));
+        m.insert("wall_ms".into(), Json::from(wall_ms));
+        let rps = if wall_ms > 0.0 {
+            self.responses.len() as f64 / (wall_ms / 1e3)
+        } else {
+            f64::NAN // renders as null
+        };
+        m.insert("rps".into(), Json::from(rps));
+        Json::Obj(m)
+    }
+}
+
+/// Serve one request through the shared cache.
+fn serve_one(index: usize, req: &ServeRequest, cache: &ProgramCache) -> ServeResponse {
+    let spec = req.spec();
+    let socs = req.soc_configs();
+    let out = match req.workload {
+        // The synthetic builder keys the cache by generator params —
+        // a hit never even materializes the weights.
+        Workload::Resnet32 => CompressionJob::synthetic(req.seed)
+            .spec(spec)
+            .socs(&socs)
+            .cached(cache)
+            .run(),
+        Workload::Tiny => {
+            let layers = req.workload.layers(req.seed);
+            CompressionJob::model(&layers).spec(spec).socs(&socs).cached(cache).run()
+        }
+    }
+    .expect("serve requests carry no cancel token");
+    ServeResponse {
+        index,
+        request: req.clone(),
+        compression_ratio: out.outcome.compression_ratio,
+        max_rel_err: out.outcome.max_rel_err,
+        final_params: out.outcome.final_params,
+        reports: out.reports,
+    }
+}
+
+/// Drain `requests` with a fresh cache of `cfg.cache_capacity`.
+pub fn serve(requests: &[ServeRequest], cfg: &ServeConfig) -> ServeOutcome {
+    let cache = ProgramCache::new(cfg.cache_capacity);
+    serve_with_cache(requests, cfg.workers, &cache)
+}
+
+/// Drain `requests` against a caller-owned (possibly pre-warmed)
+/// cache. `workers <= 1` drains inline on the calling thread; more
+/// workers steal requests off a shared cursor (the `pipeline` idiom)
+/// and responses are re-sorted into request order.
+pub fn serve_with_cache(
+    requests: &[ServeRequest],
+    workers: usize,
+    cache: &ProgramCache,
+) -> ServeOutcome {
+    let capacity = cache.capacity();
+    let workers = workers.max(1).min(requests.len().max(1));
+    let (responses, numerics_passes) = if workers <= 1 {
+        let before = numerics_pass_count();
+        let responses: Vec<ServeResponse> = requests
+            .iter()
+            .enumerate()
+            .map(|(i, req)| serve_one(i, req, cache))
+            .collect();
+        (responses, numerics_pass_count() - before)
+    } else {
+        let cursor = AtomicUsize::new(0);
+        let passes = AtomicU64::new(0);
+        let (tx, rx) = mpsc::channel::<ServeResponse>();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let cursor = &cursor;
+                let passes = &passes;
+                scope.spawn(move || {
+                    // Fresh scope threads start at 0 passes, but take a
+                    // baseline anyway in case a runtime reuses threads.
+                    let before = numerics_pass_count();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= requests.len() {
+                            break;
+                        }
+                        if tx.send(serve_one(i, &requests[i], cache)).is_err() {
+                            break;
+                        }
+                    }
+                    passes.fetch_add(numerics_pass_count() - before, Ordering::Relaxed);
+                });
+            }
+        });
+        drop(tx);
+        let mut responses: Vec<ServeResponse> = rx.into_iter().collect();
+        responses.sort_by_key(|r| r.index);
+        (responses, passes.load(Ordering::Relaxed))
+    };
+    ServeOutcome {
+        responses,
+        stats: cache.stats(),
+        numerics_passes,
+        workers,
+        cache_capacity: capacity,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_defaults_and_explicit_fields() {
+        let req = parse_request(r#"{}"#).unwrap();
+        assert_eq!(req, ServeRequest::default());
+        let req = parse_request(
+            r#"{"workload": "tiny", "seed": "7", "eps": 0.2, "rank_cap": 8, "socs": ["tt-edge"]}"#,
+        )
+        .unwrap();
+        assert_eq!(req.workload, Workload::Tiny);
+        assert_eq!(req.seed, 7);
+        assert_eq!(req.eps, 0.2);
+        assert_eq!(req.rank_cap, Some(8));
+        assert_eq!(req.socs, vec!["tt-edge".to_string()]);
+        assert_eq!(req.spec().cap_for(0), 8);
+        // numeric seeds are accepted for hand-written files
+        assert_eq!(parse_request(r#"{"seed": 9}"#).unwrap().seed, 9);
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        for (line, needle) in [
+            (r#"[1]"#, "object"),
+            (r#"{"epz": 0.1}"#, "unknown request key"),
+            (r#"{"workload": "vgg"}"#, "bad workload"),
+            (r#"{"eps": "big"}"#, "eps must be a number"),
+            (r#"{"eps": -0.1}"#, ">= 0"),
+            (r#"{"seed": -3}"#, "bad seed"),
+            (r#"{"rank_cap": 0}"#, ">= 1"),
+            (r#"{"rank_caps": []}"#, "must not be empty"),
+            (r#"{"rank_cap": 2, "rank_caps": [2]}"#, "mutually exclusive"),
+            (r#"{"socs": ["gpu"]}"#, "bad soc"),
+            (r#"{"socs": []}"#, "must not be empty"),
+            (r#"not json"#, "json error"),
+        ] {
+            let err = parse_request(line).unwrap_err();
+            assert!(err.contains(needle), "line {line}: {err}");
+        }
+    }
+
+    #[test]
+    fn request_file_skips_blanks_and_names_bad_lines() {
+        let text = "\n# warm-up batch\n{\"workload\": \"tiny\"}\n\n{\"eps\": 0.3}\n";
+        let reqs = parse_requests(text).unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0].workload, Workload::Tiny);
+        assert_eq!(reqs[1].eps, 0.3);
+        let err = parse_requests("{\"workload\": \"tiny\"}\n{\"epz\": 1}\n").unwrap_err();
+        assert!(err.contains("request line 2"), "{err}");
+    }
+
+    #[test]
+    fn request_echo_round_trips_through_the_parser() {
+        let req = parse_request(
+            r#"{"workload": "tiny", "seed": "7", "eps": 0.2, "rank_caps": [4, 6]}"#,
+        )
+        .unwrap();
+        let echoed = parse_request(&req.to_json().render()).unwrap();
+        assert_eq!(echoed, req);
+    }
+
+    #[test]
+    fn empty_queue_drains_to_empty_outcome() {
+        let out = serve(&[], &ServeConfig::default());
+        assert!(out.responses.is_empty());
+        assert_eq!(out.numerics_passes, 0);
+        assert!(out.stats.conserved());
+        assert!(out.metrics_line().contains("requests=0"));
+        let j = out.metrics_json(0.0).render();
+        assert!(j.contains("\"schema\":\"serve-metrics-v1\""), "{j}");
+        assert!(j.contains("\"rps\":null"), "{j}");
+    }
+}

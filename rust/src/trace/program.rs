@@ -59,6 +59,12 @@ impl RecordingSink {
         self.runs.iter().map(|r| r.count).sum()
     }
 
+    /// RLE footprint of the recorded stream so far (what a resident
+    /// program cache pays to keep this recording).
+    pub fn encoded_bytes(&self) -> usize {
+        self.runs.len() * std::mem::size_of::<OpRun>()
+    }
+
     /// Replay the recorded stream into another sink, in order.
     pub fn replay<S: TraceSink>(&self, sink: &mut S) {
         for run in &self.runs {
@@ -87,6 +93,11 @@ pub struct LayerProgram {
 impl LayerProgram {
     pub fn runs(&self) -> &[OpRun] {
         &self.runs
+    }
+
+    /// Ops encoded in this segment (sum of run counts).
+    pub fn op_count(&self) -> u64 {
+        self.runs.iter().map(|r| r.count).sum()
     }
 }
 
@@ -119,6 +130,12 @@ impl OpProgram {
     /// All runs in stream order (layer by layer).
     pub fn runs(&self) -> impl Iterator<Item = &OpRun> + '_ {
         self.layers.iter().flat_map(|l| l.runs.iter())
+    }
+
+    /// RLE footprint of the whole program — the residency cost a
+    /// keyed program cache accounts for this entry.
+    pub fn encoded_bytes(&self) -> usize {
+        self.run_count() * std::mem::size_of::<OpRun>()
     }
 
     /// Ops attributed to one Table-III phase (tracking `SetPhase`
@@ -215,6 +232,23 @@ mod tests {
         assert_eq!(program.ops_in_phase(Phase::Hbd), 3);
         assert_eq!(program.ops_in_phase(Phase::QrDiag), 4);
         assert_eq!(program.ops_in_phase(Phase::SortTrunc), 0);
+    }
+
+    #[test]
+    fn encoded_bytes_tracks_run_count() {
+        let mut rec = RecordingSink::default();
+        for op in sample_stream() {
+            rec.op(op);
+        }
+        assert_eq!(rec.encoded_bytes(), rec.run_count() * std::mem::size_of::<OpRun>());
+        let mut program = OpProgram::default();
+        program.push_layer(rec);
+        assert_eq!(
+            program.encoded_bytes(),
+            program.run_count() * std::mem::size_of::<OpRun>()
+        );
+        assert_eq!(program.layers()[0].op_count(), sample_stream().len() as u64);
+        assert_eq!(OpProgram::default().encoded_bytes(), 0);
     }
 
     #[test]

@@ -1,0 +1,257 @@
+//! Program-cache + serve property suite (ISSUE 6).
+//!
+//! Pins the compression-as-a-service contracts:
+//!
+//! * hit-served reports are byte-identical to fresh-numerics reports
+//!   (3 seeds x both SoCs x serial/parallel-4);
+//! * a request stream with R requests over K unique (workload, TtSpec)
+//!   keys costs exactly K numerics passes at any worker count
+//!   (single-flight misses);
+//! * cache keys include rank caps, not just eps — the PR-6 bugfix
+//!   regression;
+//! * LRU invariants: capacity never exceeded, eviction follows
+//!   least-recent-use under a seeded request stream, counters conserve
+//!   (`hits + misses == lookups`, `inserts - evictions == resident`);
+//! * multi-worker queue drains are byte-identical to the serial drain
+//!   (same pattern as `tests/sink_composition.rs`).
+
+use tt_edge::cache::CacheKey;
+use tt_edge::dse::Workload;
+use tt_edge::serve::{serve, serve_with_cache, ServeConfig, ServeOutcome, ServeRequest};
+use tt_edge::sim::SocConfig;
+use tt_edge::ttd::Tensor;
+use tt_edge::util::Rng;
+use tt_edge::{numerics_pass_count, CompressionJob, JobProgram, ProgramCache};
+
+/// A tiny-workload request (4 layers — fast, same numerics substrate).
+fn req(seed: u64, eps: f32) -> ServeRequest {
+    ServeRequest { workload: Workload::Tiny, seed, eps, ..Default::default() }
+}
+
+fn rendered(out: &ServeOutcome) -> Vec<String> {
+    out.responses.iter().map(|r| r.to_json().render()).collect()
+}
+
+#[test]
+fn hit_served_reports_are_byte_identical_to_fresh_numerics() {
+    for seed in [3u64, 5, 9] {
+        // fresh-numerics oracle: no cache anywhere near it
+        let layers = Workload::Tiny.layers(seed);
+        let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
+        let fresh = CompressionJob::model(&layers)
+            .eps(0.12)
+            .socs(&configs)
+            .run()
+            .unwrap();
+
+        // two identical requests: the second is served from cache
+        let requests = [req(seed, 0.12), req(seed, 0.12)];
+        for workers in [1usize, 4] {
+            let before = numerics_pass_count();
+            let out = serve(&requests, &ServeConfig { workers, cache_capacity: 8 });
+            if workers == 1 {
+                assert_eq!(
+                    numerics_pass_count() - before,
+                    1,
+                    "seed={seed}: 2 requests, 1 unique key, 1 pass"
+                );
+            }
+            assert_eq!(out.numerics_passes, 1, "seed={seed} workers={workers}");
+            for resp in &out.responses {
+                assert_eq!(resp.reports.len(), fresh.reports.len());
+                for (got, want) in resp.reports.iter().zip(&fresh.reports) {
+                    assert_eq!(
+                        got.to_json().render(),
+                        want.to_json().render(),
+                        "seed={seed} workers={workers} req={} {}",
+                        resp.index,
+                        want.config_name,
+                    );
+                }
+                assert_eq!(resp.final_params, fresh.outcome.final_params);
+                assert_eq!(resp.max_rel_err, fresh.outcome.max_rel_err);
+                assert_eq!(resp.compression_ratio, fresh.outcome.compression_ratio);
+            }
+            assert!(out.stats.conserved(), "seed={seed}: {:?}", out.stats);
+        }
+    }
+}
+
+#[test]
+fn r_requests_over_k_keys_cost_exactly_k_numerics_passes() {
+    // K = 3 unique keys (eps varies), R = 7 requests
+    let requests = [
+        req(11, 0.12),
+        req(11, 0.2),
+        req(11, 0.12),
+        req(11, 0.3),
+        req(11, 0.2),
+        req(11, 0.12),
+        req(11, 0.3),
+    ];
+    for workers in [1usize, 4] {
+        let before = numerics_pass_count();
+        let out = serve(&requests, &ServeConfig { workers, cache_capacity: 8 });
+        if workers == 1 {
+            assert_eq!(numerics_pass_count() - before, 3, "thread-local pass counter");
+        }
+        assert_eq!(out.numerics_passes, 3, "workers={workers}");
+        assert_eq!(out.stats.lookups, 7);
+        assert_eq!(out.stats.misses, 3, "single-flight: K misses at any width");
+        assert_eq!(out.stats.hits, 4);
+        assert_eq!(out.stats.resident, 3);
+        assert!(out.stats.conserved(), "{:?}", out.stats);
+    }
+}
+
+#[test]
+fn concurrent_drain_is_byte_identical_to_serial_at_any_width() {
+    // 12 requests over 3 unique keys, in a scheduling-hostile order
+    let requests: Vec<ServeRequest> = (0..12)
+        .map(|i| match i % 3 {
+            0 => req(21, 0.12),
+            1 => req(21, 0.18),
+            _ => req(22, 0.12),
+        })
+        .collect();
+    let serial = serve(&requests, &ServeConfig { workers: 1, cache_capacity: 8 });
+    let want = rendered(&serial);
+    assert_eq!(serial.numerics_passes, 3);
+    for workers in [2usize, 4, 8] {
+        let out = serve(&requests, &ServeConfig { workers, cache_capacity: 8 });
+        assert_eq!(rendered(&out), want, "workers={workers}");
+        // aggregate accounting is deterministic too: single-flight
+        // makes exactly one miss per unique key at every width
+        assert_eq!(out.numerics_passes, 3, "workers={workers}");
+        assert_eq!(out.stats.misses, 3, "workers={workers}");
+        assert_eq!(out.stats.lookups, 12);
+        assert!(out.stats.conserved(), "workers={workers}: {:?}", out.stats);
+    }
+}
+
+#[test]
+fn rank_caps_are_part_of_the_cache_key() {
+    // The PR-6 bugfix regression: two requests sharing (workload,
+    // seed, eps) but differing in rank caps must never collide to the
+    // same program.
+    let unbounded = req(31, 0.12);
+    let capped = ServeRequest { rank_cap: Some(2), ..req(31, 0.12) };
+    let per_bond = ServeRequest { rank_caps: vec![2, 2], ..req(31, 0.12) };
+
+    let requests =
+        [unbounded.clone(), capped.clone(), unbounded.clone(), capped.clone()];
+    let before = numerics_pass_count();
+    let out = serve(&requests, &ServeConfig { workers: 1, cache_capacity: 8 });
+    assert_eq!(numerics_pass_count() - before, 2, "2 unique keys, 2 passes");
+    assert_eq!(out.stats.misses, 2);
+    assert_eq!(out.stats.hits, 2);
+    // the capped program genuinely differs (rank-2 bonds store fewer
+    // parameters) — a collision would have surfaced one of these twice
+    assert_ne!(
+        out.responses[0].final_params, out.responses[1].final_params,
+        "capped and unbounded programs should differ on this workload"
+    );
+    assert_eq!(out.responses[0].final_params, out.responses[2].final_params);
+    assert_eq!(out.responses[1].final_params, out.responses[3].final_params);
+
+    // ...while the two spellings of the same caps share one key: the
+    // canonicalization half of the same bugfix.
+    let spelled = [capped, per_bond];
+    let out = serve(&spelled, &ServeConfig { workers: 1, cache_capacity: 8 });
+    assert_eq!(out.numerics_passes, 1, "rank_cap(2) == rank_caps([2,2])");
+    assert_eq!(out.stats.hits, 1);
+}
+
+/// Record one small program to use as the LRU tests' payload (its
+/// contents are irrelevant to eviction order).
+fn sample_program() -> JobProgram {
+    let mut rng = Rng::new(77);
+    let w = Tensor::from_vec(&[4, 4, 4], rng.normal_vec(64));
+    let (_, program) = CompressionJob::new(&w).eps(0.2).program().unwrap();
+    program
+}
+
+#[test]
+fn lru_capacity_is_never_exceeded_and_eviction_is_least_recent_first() {
+    const CAPACITY: usize = 3;
+    let cache = ProgramCache::new(CAPACITY);
+    let program = sample_program();
+    // 6 distinct keys (eps varies); indices into `keys` drive the oracle
+    let keys: Vec<CacheKey> = (0..6)
+        .map(|i| CompressionJob::synthetic(1).eps(0.1 + 0.05 * i as f32).cache_key())
+        .collect();
+
+    // hand-rolled LRU oracle: key indices, least-recent first
+    let mut oracle: Vec<usize> = Vec::new();
+    let mut rng = Rng::new(2024);
+    for step in 0..80 {
+        let k = rng.below(keys.len());
+        let hit = cache.lookup(&keys[k]).is_some();
+        assert_eq!(hit, oracle.contains(&k), "step {step}: oracle disagrees on key {k}");
+        if hit {
+            // touch: move to most-recent
+            oracle.retain(|&i| i != k);
+            oracle.push(k);
+        } else {
+            cache.insert(keys[k].clone(), program.clone());
+            oracle.push(k);
+            if oracle.len() > CAPACITY {
+                let evicted = oracle.remove(0); // least recently used
+                assert!(
+                    !cache.contains(&keys[evicted]),
+                    "step {step}: key {evicted} should have been the LRU victim"
+                );
+            }
+        }
+        // capacity never exceeded; residency matches the oracle exactly
+        assert!(cache.len() <= CAPACITY, "step {step}");
+        assert_eq!(cache.len(), oracle.len(), "step {step}");
+        for (i, key) in keys.iter().enumerate() {
+            assert_eq!(
+                cache.contains(key),
+                oracle.contains(&i),
+                "step {step}: key {i} residency"
+            );
+        }
+        let s = cache.stats();
+        assert!(s.conserved(), "step {step}: {s:?}");
+    }
+    let s = cache.stats();
+    assert_eq!(s.lookups, 80);
+    assert!(s.evictions > 0, "80 draws over 6 keys at capacity 3 must evict");
+}
+
+#[test]
+fn capacity_zero_disables_residency_but_not_correctness() {
+    let requests = [req(41, 0.12), req(41, 0.12), req(41, 0.2)];
+    let cached = serve(&requests, &ServeConfig { workers: 1, cache_capacity: 8 });
+    let uncached = serve(&requests, &ServeConfig { workers: 1, cache_capacity: 0 });
+    // identical outputs...
+    assert_eq!(rendered(&cached), rendered(&uncached));
+    // ...but every request paid numerics and nothing stayed resident
+    assert_eq!(cached.numerics_passes, 2);
+    assert_eq!(uncached.numerics_passes, 3);
+    assert_eq!(uncached.stats.misses, 3);
+    assert_eq!(uncached.stats.resident, 0);
+    assert_eq!(uncached.stats.resident_bytes, 0);
+    assert!(uncached.stats.conserved(), "{:?}", uncached.stats);
+}
+
+#[test]
+fn pre_warmed_cache_serves_the_whole_drain_from_hits() {
+    let requests = [req(51, 0.12), req(51, 0.12)];
+    let cache = ProgramCache::new(8);
+    let warm = serve_with_cache(&requests, 1, &cache);
+    assert_eq!(warm.numerics_passes, 1);
+    // same cache, second drain: all hits, zero numerics
+    let before = numerics_pass_count();
+    let again = serve_with_cache(&requests, 1, &cache);
+    assert_eq!(numerics_pass_count() - before, 0, "warm drain must be numerics-free");
+    assert_eq!(again.numerics_passes, 0);
+    assert_eq!(rendered(&warm), rendered(&again));
+    let s = cache.stats();
+    assert_eq!(s.lookups, 4);
+    assert_eq!(s.hits, 3);
+    assert_eq!(s.misses, 1);
+    assert!(s.conserved(), "{s:?}");
+}
