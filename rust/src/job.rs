@@ -42,6 +42,8 @@ use crate::sim::cost::CostSink;
 use crate::sim::report::SimReport;
 use crate::sim::workload::{aggregate_outcome_conv, synthetic_model, CompressionOutcome};
 use crate::trace::{OpProgram, RecordingSink, Tee, TraceSink, VecSink};
+use crate::ttd::svd::bidiag;
+use crate::ttd::tensor::{set_gemm_kernel, GemmKernel};
 use crate::ttd::ttd::TtSpec;
 use crate::ttd::{decompose, relative_error, Tensor};
 
@@ -134,6 +136,8 @@ pub struct CompressionJob<'a> {
     input: Input<'a>,
     spec: TtSpec,
     threads: usize,
+    kernel: Option<GemmKernel>,
+    hbd_threads: Option<usize>,
     configs: Vec<SocConfig>,
     cancel: Option<&'a CancelToken>,
     observer: Option<&'a mut dyn TraceSink>,
@@ -177,6 +181,8 @@ impl<'a> CompressionJob<'a> {
             input,
             spec: TtSpec::default(),
             threads: 1,
+            kernel: None,
+            hbd_threads: None,
             configs: Vec::new(),
             cancel: None,
             observer: None,
@@ -215,9 +221,11 @@ impl<'a> CompressionJob<'a> {
     /// [`run`] folds the program into the `.soc(..)` bank (bit-
     /// identical to the live-costed recording run) and reuses the
     /// recorded compression summary ([`JobProgram::outcome`] — no
-    /// decompositions). `.eps`/`.rank_cap`/`.parallel` have no effect
-    /// on a replay; `.sink(..)` observers still receive the exact
-    /// recorded op stream.
+    /// decompositions). `.eps`/`.rank_cap` have no effect on a replay;
+    /// `.parallel(n)` selects the width of the per-layer program fold
+    /// (`CostSink::fold_program_parallel` — bit-identical to the
+    /// serial fold at any width); `.sink(..)` observers still receive
+    /// the exact recorded op stream.
     ///
     /// [`run`]: CompressionJob::run
     pub fn replay(program: &'a JobProgram) -> Self {
@@ -256,9 +264,33 @@ impl<'a> CompressionJob<'a> {
     }
 
     /// Host worker threads for the layer fan-out (work-stealing; the
-    /// simulated SoC cost is invariant to this).
+    /// simulated SoC cost is invariant to this). On a replay job the
+    /// same width drives the parallel program fold instead.
     pub fn parallel(mut self, n: usize) -> Self {
         self.threads = n;
+        self
+    }
+
+    /// Select the GEMM microkernel for this process
+    /// ([`GemmKernel::Vectorized`] is the default; `Reference` is the
+    /// pinned scalar loop). The two kernels are bit-identical by
+    /// construction, so this is a raw-speed knob only — traces, ranks
+    /// and reports do not change. Note the selection is **process-
+    /// wide** (it sets the same global that the `TTEDGE_KERNEL` env
+    /// var seeds), not scoped to this job.
+    pub fn kernel(mut self, kernel: GemmKernel) -> Self {
+        self.kernel = Some(kernel);
+        self
+    }
+
+    /// Worker threads for the row-band GEMM passes **inside** each
+    /// bidiagonalization (compact-WY accumulation). Composes with
+    /// [`CompressionJob::parallel`]: layer fan-out times in-layer
+    /// bands. Bit-identical to serial at any width — row bands leave
+    /// every k-accumulation chain intact. Process-wide, like
+    /// [`CompressionJob::kernel`] (seeded by `TTEDGE_HBD_THREADS`).
+    pub fn hbd_threads(mut self, threads: usize) -> Self {
+        self.hbd_threads = Some(threads);
         self
     }
 
@@ -361,6 +393,19 @@ impl<'a> CompressionJob<'a> {
         CacheKey::new(fp.finish(), &self.spec, bonds)
     }
 
+    /// Apply the process-wide tuning knobs (`.kernel(..)` /
+    /// `.hbd_threads(..)`) before any numerics or fold runs. Safe to
+    /// call more than once per job; every mode is bit-identical, so a
+    /// concurrent job flipping the globals cannot change results.
+    fn apply_tuning(&self) {
+        if let Some(kernel) = self.kernel {
+            set_gemm_kernel(kernel);
+        }
+        if let Some(threads) = self.hbd_threads {
+            bidiag::set_panel_threads(threads);
+        }
+    }
+
     /// The cache-served run path (`.cached(..)` was configured and the
     /// input is not already a replay).
     fn run_cached(mut self) -> Option<JobOutput> {
@@ -368,13 +413,13 @@ impl<'a> CompressionJob<'a> {
         let key = self.cache_key();
         match cache.claim(&key) {
             Claim::Hit(program) => {
-                let CompressionJob { configs, cancel, observer, .. } = self;
+                let CompressionJob { threads, configs, cancel, observer, .. } = self;
                 let default_token = CancelToken::default();
                 let cancel = cancel.unwrap_or(&default_token);
                 if cancel.is_cancelled() {
                     return None;
                 }
-                let reports = cost_program(&program, &configs, observer);
+                let reports = cost_program(&program, &configs, observer, threads);
                 Some(JobOutput { outcome: program.outcome(), reports })
             }
             Claim::Miss(guard) => match self.program() {
@@ -391,6 +436,7 @@ impl<'a> CompressionJob<'a> {
 
     /// Run the job. Returns `None` iff the cancel token tripped.
     pub fn run(self) -> Option<JobOutput> {
+        self.apply_tuning();
         if self.cache.is_some() && !matches!(self.input, Input::Replay(_)) {
             return self.run_cached();
         }
@@ -405,7 +451,7 @@ impl<'a> CompressionJob<'a> {
             if cancel.is_cancelled() {
                 return None;
             }
-            let reports = cost_program(p, &configs, observer);
+            let reports = cost_program(p, &configs, observer, threads);
             return Some(JobOutput { outcome: p.outcome(), reports });
         }
 
@@ -481,6 +527,7 @@ impl<'a> CompressionJob<'a> {
     /// [`CompressionJob::replay`] job — there are no numerics to
     /// record.
     pub fn program(self) -> Option<(JobOutput, JobProgram)> {
+        self.apply_tuning();
         let CompressionJob { input, spec, threads, configs, cancel, observer, .. } = self;
         let default_token = CancelToken::default();
         let cancel = cancel.unwrap_or(&default_token);
@@ -504,7 +551,7 @@ impl<'a> CompressionJob<'a> {
             ops.push_layer(rec);
             let outcome = single_tensor_outcome(w, d);
             let program = JobProgram::from_outcome(ops, &outcome);
-            let reports = cost_program(&program, &configs, observer);
+            let reports = cost_program(&program, &configs, observer, threads);
             return Some((JobOutput { outcome, reports }, program));
         }
 
@@ -520,7 +567,7 @@ impl<'a> CompressionJob<'a> {
         let batch = pipeline::compress_layers_recorded(&jobs, &spec, threads, cancel)?;
         let outcome = aggregate_outcome_conv(conv_dense, batch.decomps, batch.max_rel_err);
         let program = JobProgram::from_outcome(batch.program, &outcome);
-        let reports = cost_program(&program, &configs, observer);
+        let reports = cost_program(&program, &configs, observer, threads);
         Some((JobOutput { outcome, reports }, program))
     }
 }
@@ -577,11 +624,17 @@ fn single_tensor_outcome(w: &Tensor, d: crate::ttd::TtDecomp) -> CompressionOutc
 }
 
 /// Cost a program under a config bank (fast run-fold; the per-op tee
-/// only when an observer needs the stream — both are bit-identical).
+/// only when an observer needs the stream — all paths bit-identical).
+/// `threads` is the job's `.parallel(..)` width: > 1 folds per-layer
+/// segments concurrently via [`CostSink::fold_program_parallel`],
+/// which falls back to the serial fold when any segment is not
+/// self-phased. Observers always take the serial tee — they must see
+/// the exact recorded op order.
 fn cost_program(
     program: &JobProgram,
     configs: &[SocConfig],
     observer: Option<&mut dyn TraceSink>,
+    threads: usize,
 ) -> Vec<SimReport> {
     let mut cost = CostSink::new(configs);
     match observer {
@@ -589,7 +642,7 @@ fn cost_program(
             let mut tee = Tee::new(&mut cost, obs);
             program.ops.replay(&mut tee);
         }
-        None => cost.fold_program(&program.ops),
+        None => cost.fold_program_parallel(&program.ops, threads),
     }
     cost.reports()
 }
@@ -638,6 +691,34 @@ mod tests {
         let w = Tensor::from_vec(&[6, 6, 6], rng.normal_vec(216));
         let out = CompressionJob::new(&w).eps(0.0).rank_cap(2).run().unwrap();
         assert!(out.decomp().ranks.iter().all(|&r| r <= 2));
+    }
+
+    #[test]
+    fn tuning_knobs_do_not_change_results() {
+        // .kernel(Reference) and .hbd_threads(2) are raw-speed knobs:
+        // every mode is bit-identical, so flipping them must leave
+        // ranks, errors and reports untouched. (The knobs set process
+        // globals; restore the defaults afterwards so sibling tests
+        // see the standard configuration.)
+        let layers = small_model();
+        let configs = [SocConfig::tt_edge()];
+        let want = CompressionJob::model(&layers).eps(0.12).socs(&configs).run().unwrap();
+        let got = CompressionJob::model(&layers)
+            .eps(0.12)
+            .socs(&configs)
+            .kernel(GemmKernel::Reference)
+            .hbd_threads(2)
+            .parallel(2)
+            .run()
+            .unwrap();
+        set_gemm_kernel(GemmKernel::Vectorized);
+        bidiag::set_panel_threads(1);
+        assert_eq!(got.outcome.final_params, want.outcome.final_params);
+        assert_eq!(got.outcome.max_rel_err, want.outcome.max_rel_err);
+        for (a, b) in got.reports.iter().zip(&want.reports) {
+            assert_eq!(a.total_ms, b.total_ms);
+            assert_eq!(a.total_mj, b.total_mj);
+        }
     }
 
     #[test]

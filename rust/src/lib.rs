@@ -39,3 +39,4 @@ pub mod util;
 
 pub use cache::{CacheKey, ProgramCache};
 pub use job::{numerics_pass_count, CompressionJob, JobOutput, JobProgram};
+pub use ttd::tensor::GemmKernel;

@@ -7,7 +7,8 @@
 //! through the [`CompressionJob`] builder's streaming cost sink.
 //!
 //! * `simulate`  — Table III: TTD ResNet-32 compression on Baseline vs
-//!   TT-Edge SoCs (`--eps`, `--seed`, `--parallel N` host workers; the
+//!   TT-Edge SoCs (`--eps`, `--seed`, `--parallel N` host workers,
+//!   `--hbd-threads N` in-layer row-band workers; the
 //!   simulated cycles are identical at any width; `--json` emits one
 //!   `SimReport` JSON object per SoC).
 //! * `compress`  — Table I: compare TTD / Tucker / TRD on the model
@@ -51,7 +52,7 @@ struct CmdSpec {
 }
 
 const COMMANDS: &[CmdSpec] = &[
-    CmdSpec { name: "simulate", opts: &["eps", "seed", "parallel"], flags: &["json"] },
+    CmdSpec { name: "simulate", opts: &["eps", "seed", "parallel", "hbd-threads"], flags: &["json"] },
     CmdSpec { name: "compress", opts: &["method", "eps", "seed", "parallel"], flags: &["json"] },
     CmdSpec {
         name: "explore",
@@ -147,7 +148,7 @@ fn print_help() {
     println!(
         "ttedge — TT-Edge (DATE 2026) reproduction\n\n\
          USAGE: ttedge <simulate|compress|explore|serve|federate|resources|related|artifacts> [--opts]\n\n\
-         simulate   Table III (exec time + energy, baseline vs TT-Edge; --parallel N, --json)\n\
+         simulate   Table III (exec time + energy, baseline vs TT-Edge; --parallel N, --hbd-threads N, --json)\n\
          compress   Table I  (TTD vs Tucker vs TRD on ResNet-32; --parallel N, --json)\n\
          explore    design-space exploration: Pareto frontier over (cycles, energy, area)\n\
                     (--workload resnet32|tiny --space paper|features|full\n\
@@ -171,16 +172,22 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let eps: f32 = opt_or(args, "eps", 0.12);
     let seed: u64 = opt_or(args, "seed", 42);
     let parallel: usize = opt_or(args, "parallel", 1);
+    // In-layer row-band workers for each bidiagonalization; 0 keeps
+    // the TTEDGE_HBD_THREADS/env default. Bit-identical at any width,
+    // so the simulated cycles (and --json bytes) never move.
+    let hbd_threads: usize = opt_or(args, "hbd-threads", 0);
     let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
     let t0 = std::time::Instant::now();
     // Streaming job: ops fold into both SoC cost models online — no
     // trace is materialized at any --parallel width.
-    let job_out = CompressionJob::synthetic(seed)
+    let mut job = CompressionJob::synthetic(seed)
         .eps(eps)
         .parallel(parallel)
-        .socs(&configs)
-        .run()
-        .expect("no cancel token on the CLI path");
+        .socs(&configs);
+    if hbd_threads > 0 {
+        job = job.hbd_threads(hbd_threads);
+    }
+    let job_out = job.run().expect("no cancel token on the CLI path");
     let (out, reports) = (job_out.outcome, job_out.reports);
     if args.flag("json") {
         for r in &reports {

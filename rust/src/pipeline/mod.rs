@@ -30,6 +30,16 @@
 //! the federated coordinator (nodes compress their layer batch through
 //! this module and ship one [`TtBatch`]), and `benches/hotpath.rs`
 //! (serial vs parallel wall-clock).
+//!
+//! The layer fan-out here composes with **in-layer** parallelism: the
+//! compact-WY bidiagonalization inside each Algorithm-1 run can split
+//! its row-band GEMM passes across
+//! `crate::ttd::svd::bidiag::panel_threads()` workers
+//! (`CompressionJob::hbd_threads` / `TTEDGE_HBD_THREADS`). Row bands
+//! keep every k-accumulation chain intact, so the composed
+//! parallelism — layers times bands — is still bit-identical to the
+//! fully serial run; with few large layers in flight the in-layer
+//! split is where the remaining cores go.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;

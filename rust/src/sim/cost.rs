@@ -74,6 +74,64 @@ impl CostSink {
         }
     }
 
+    /// [`CostSink::fold_program`] with the per-layer segments farmed
+    /// out across `threads` scoped workers (work-stealing over the
+    /// layer index, the same shape as the pipeline engine). Each
+    /// worker folds whole segments into a private config bank; the
+    /// banks are then [`CostSink::absorb`]ed in layer order —
+    /// bit-identical to the serial fold because all accumulators are
+    /// u64 and every segment re-asserts its phase before its first
+    /// costed op ([`crate::trace::LayerProgram::is_self_phased`] —
+    /// true for every Algorithm-1 stream). Falls back to the serial
+    /// fold at width <= 1, for single-segment programs, and for
+    /// foreign programs with any non-self-phased segment (where a
+    /// fresh worker timeline could mis-attribute the segment head).
+    ///
+    /// One observable difference from the serial fold: the workers'
+    /// phase registers die with their banks, so `self`'s phase
+    /// register keeps its pre-call value instead of the program's
+    /// final phase. Reports never read it; a caller streaming more
+    /// ops into the same sink afterwards must re-assert phase (every
+    /// real stream opens with `SetPhase` anyway).
+    pub fn fold_program_parallel(&mut self, program: &crate::trace::OpProgram, threads: usize) {
+        let layers = program.layers();
+        let workers = threads.max(1).min(layers.len());
+        if workers <= 1 || !layers.iter().all(|l| l.is_self_phased()) {
+            self.fold_program(program);
+            return;
+        }
+        let configs: Vec<SocConfig> =
+            self.timelines.iter().map(|tl| tl.config.clone()).collect();
+        let cursor = std::sync::atomic::AtomicUsize::new(0);
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, CostSink)>();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let cursor = &cursor;
+                let configs = &configs;
+                scope.spawn(move || loop {
+                    let i = cursor.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let Some(layer) = layers.get(i) else { break };
+                    let mut bank = CostSink::new(configs);
+                    for tl in &mut bank.timelines {
+                        for run in layer.runs() {
+                            tl.fold_run(run.op, run.count);
+                        }
+                    }
+                    if tx.send((i, bank)).is_err() {
+                        break;
+                    }
+                });
+            }
+        });
+        drop(tx);
+        let mut banks: Vec<(usize, CostSink)> = rx.into_iter().collect();
+        banks.sort_by_key(|(i, _)| *i);
+        for (_, bank) in &banks {
+            self.absorb(bank);
+        }
+    }
+
     /// One [`SimReport`] per configuration, in constructor order.
     pub fn reports(&self) -> Vec<SimReport> {
         self.timelines.iter().map(SimReport::from_timeline).collect()
@@ -227,6 +285,80 @@ mod tests {
         for (a, b) in ra.iter().zip(&rb) {
             assert_eq!(a.total_ms, b.total_ms);
             assert_eq!(a.total_mj, b.total_mj);
+        }
+    }
+
+    fn multi_layer_program(layers: usize) -> crate::trace::OpProgram {
+        use crate::trace::RecordingSink;
+        let mut program = crate::trace::OpProgram::default();
+        for l in 0..layers {
+            let mut rec = RecordingSink::default();
+            for op in stream() {
+                rec.op(op); // opens with SetPhase -> self-phased
+            }
+            for _ in 0..l {
+                rec.op(HwOp::GivensRot { len: 20 + l });
+            }
+            program.push_layer(rec);
+        }
+        program
+    }
+
+    #[test]
+    fn parallel_fold_is_bit_identical_to_serial_at_any_width() {
+        let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
+        let program = multi_layer_program(5);
+        assert!(program.layers().iter().all(|l| l.is_self_phased()));
+        let mut serial = CostSink::new(&configs);
+        serial.fold_program(&program);
+        for threads in [1, 2, 4, 8] {
+            let mut par = CostSink::new(&configs);
+            par.fold_program_parallel(&program, threads);
+            for (a, b) in serial.timelines().iter().zip(par.timelines()) {
+                for p in Phase::ALL {
+                    assert_eq!(a.cycles.get(p), b.cycles.get(p), "{p:?} at width {threads}");
+                }
+                assert_eq!(a.stats.gemms, b.stats.gemms);
+                assert_eq!(a.stats.sort_compares, b.stats.sort_compares);
+                assert_eq!(a.stats.trunc_probes, b.stats.trunc_probes);
+            }
+            let ra = serial.reports();
+            let rb = par.reports();
+            for (a, b) in ra.iter().zip(&rb) {
+                assert_eq!(a.total_ms, b.total_ms, "width {threads}");
+                assert_eq!(a.total_mj, b.total_mj, "width {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_fold_falls_back_on_unphased_segments() {
+        use crate::trace::RecordingSink;
+        // Layer 1 carries no SetPhase marker: its ops must inherit
+        // layer 0's final phase, which only the serial fold can
+        // attribute — fold_program_parallel must detect this and take
+        // the fallback, staying bit-identical.
+        let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
+        let mut program = crate::trace::OpProgram::default();
+        let mut rec = RecordingSink::default();
+        for op in stream() {
+            rec.op(op);
+        }
+        program.push_layer(rec);
+        let mut bare = RecordingSink::default();
+        bare.op(HwOp::HouseGen { len: 32 });
+        bare.op(HwOp::Gemm { m: 8, n: 8, k: 8 });
+        program.push_layer(bare);
+        assert!(!program.layers()[1].is_self_phased());
+
+        let mut serial = CostSink::new(&configs);
+        serial.fold_program(&program);
+        let mut par = CostSink::new(&configs);
+        par.fold_program_parallel(&program, 4);
+        for (a, b) in serial.timelines().iter().zip(par.timelines()) {
+            for p in Phase::ALL {
+                assert_eq!(a.cycles.get(p), b.cycles.get(p), "{p:?}");
+            }
         }
     }
 

@@ -30,7 +30,7 @@
 
 pub mod program;
 
-pub use program::{OpProgram, OpRun, RecordingSink};
+pub use program::{LayerProgram, OpProgram, OpRun, RecordingSink};
 
 /// TTD phases exactly as Table III rows report them.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]

@@ -99,6 +99,21 @@ impl LayerProgram {
     pub fn op_count(&self) -> u64 {
         self.runs.iter().map(|r| r.count).sum()
     }
+
+    /// True when the segment establishes its own phase before any
+    /// costed op — its first run is a `SetPhase` marker (or the
+    /// segment is empty). Every Algorithm-1 layer stream is:
+    /// `decompose` opens with `SetPhase(SortTrunc)`. Self-phased
+    /// segments cost identically whether folded mid-stream or into a
+    /// fresh timeline, which is the precondition
+    /// `crate::sim::CostSink::fold_program_parallel` checks before
+    /// farming segments out to workers.
+    pub fn is_self_phased(&self) -> bool {
+        match self.runs.first() {
+            None => true,
+            Some(run) => matches!(run.op, HwOp::SetPhase(_)),
+        }
+    }
 }
 
 impl OpProgram {
@@ -249,6 +264,28 @@ mod tests {
         );
         assert_eq!(program.layers()[0].op_count(), sample_stream().len() as u64);
         assert_eq!(OpProgram::default().encoded_bytes(), 0);
+    }
+
+    #[test]
+    fn self_phased_detection_reads_the_first_run() {
+        let mut rec = RecordingSink::default();
+        for op in sample_stream() {
+            rec.op(op); // opens with SetPhase(Hbd)
+        }
+        let mut program = OpProgram::default();
+        program.push_layer(rec);
+        assert!(program.layers()[0].is_self_phased());
+
+        let mut bare = RecordingSink::default();
+        bare.op(HwOp::HouseGen { len: 8 }); // inherits ambient phase
+        let mut program = OpProgram::default();
+        program.push_layer(bare);
+        assert!(!program.layers()[0].is_self_phased());
+
+        // empty segments cost nothing anywhere — trivially self-phased
+        let mut program = OpProgram::default();
+        program.push_layer(RecordingSink::default());
+        assert!(program.layers()[0].is_self_phased());
     }
 
     #[test]

@@ -17,10 +17,55 @@
 //! ([`bidiagonalize_reference`] keeps the rank-1 reference loop
 //! available; the trace-equality + numeric-agreement pins live in
 //! this module's tests).
+//!
+//! PR-7 adds two host-speed refinements to the blocked path, both
+//! invisible to the trace and to the numerics bit-for-bit:
+//!
+//! * the five per-panel work buffers live in one [`WyScratch`] sized
+//!   once per factorization (the PR-5 pivot-scratch pattern — zero
+//!   allocations per panel, asserted in tests);
+//! * the panel GEMM passes optionally split their **output row
+//!   bands** across `std::thread::scope` workers ([`panel_threads`]).
+//!   A row band leaves every element's k-accumulation chain
+//!   untouched, so any worker count produces bit-identical panels —
+//!   and row-major row bands are disjoint `&mut` chunks, so the split
+//!   needs no unsafe striding.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::trace::{HwOp, TraceSink};
 use crate::ttd::svd::house::house;
 use crate::ttd::tensor::{matmul_acc, Matrix};
+
+// Process-global in-layer parallelism width: 0 = unresolved (read the
+// TTEDGE_HBD_THREADS env var on first use). Relaxed is enough — every
+// width is bit-identical, so racing readers cannot change results.
+static PANEL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Workers the compact-WY panel GEMMs fan their row bands across.
+/// Defaults to 1 (serial) unless the `TTEDGE_HBD_THREADS` env var
+/// says otherwise; jobs set it through `CompressionJob::hbd_threads`.
+/// Composes with pipeline-level layer fan-out: layers x in-layer
+/// bands.
+pub fn panel_threads() -> usize {
+    match PANEL_THREADS.load(Ordering::Relaxed) {
+        0 => {
+            let threads = std::env::var("TTEDGE_HBD_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(1)
+                .max(1);
+            PANEL_THREADS.store(threads, Ordering::Relaxed);
+            threads
+        }
+        threads => threads,
+    }
+}
+
+/// Select the process-wide panel-parallelism width (clamped to >= 1).
+pub fn set_panel_threads(threads: usize) {
+    PANEL_THREADS.store(threads.max(1), Ordering::Relaxed);
+}
 
 /// Reflectors per compact-WY accumulation panel. 32 keeps `T` and the
 /// panel buffers L1-resident for the workload's n <= 64 while the two
@@ -56,6 +101,58 @@ pub fn bidiagonalize_reference<S: TraceSink>(a: &Matrix, sink: &mut S) -> Bidiag
 
 fn bidiagonalize_with<S: TraceSink>(a: &Matrix, sink: &mut S, naive: bool) -> Bidiag {
     let (m, n) = (a.rows, a.cols);
+    let red = reduce(a, sink);
+
+    // ---- Householder Accumulation (Alg. 2, lines 14-18) ----
+    // U_B = H^L_1 .. H^L_n I  (apply backwards, left-multiplying);
+    // V_B^T = I H^R_n .. H^R_1 (apply backwards, right-multiplying).
+    //
+    // The op stream is emitted per reflector in the backward Alg.-2
+    // order in BOTH modes — sizes depend only on (m, n, i) and on
+    // which reflectors are degenerate, never on how the numerics
+    // batch the arithmetic (or across how many panel workers).
+    for i in (0..n).rev() {
+        let (v, _) = &red.vl[i];
+        if !v.is_empty() {
+            sink.op(HwOp::VecDiv { len: v.len() });
+            sink.op(HwOp::Gemm { m: 1, n: n - i, k: m - i });
+            sink.op(HwOp::Gemm { m: m - i, n: n - i, k: 1 });
+        }
+        let (v, _) = &red.vr[i];
+        if !v.is_empty() {
+            sink.op(HwOp::VecDiv { len: v.len() });
+            sink.op(HwOp::Gemm { m: n - i, n: 1, k: n - i - 1 });
+            sink.op(HwOp::Gemm { m: n - i, n: n - i - 1, k: 1 });
+        }
+    }
+
+    let (u, vt) = if naive {
+        accumulate_reference(m, n, &red.vl, &red.vr, &mut vec![0.0f32; n])
+    } else {
+        let threads = panel_threads();
+        let mut wy = WyScratch::for_shape(m, n);
+        let u = accumulate_u_blocked(m, n, &red.vl, &mut wy, threads);
+        let vt = accumulate_vt_blocked(n, &red.vr, &mut wy, threads);
+        debug_assert_eq!(wy.reallocs, 0, "WY scratch must be sized once per factorization");
+        (u, vt)
+    };
+
+    Bidiag { u, b: red.b, vt }
+}
+
+/// The reduction phase's outputs: the bidiagonal `b` plus the
+/// SPM-retained left/right reflector stores the accumulation phase
+/// replays.
+struct Reduction {
+    b: Matrix,
+    vl: Vec<(Vec<f32>, f32)>,
+    vr: Vec<(Vec<f32>, f32)>,
+}
+
+/// Householder Reduction (Alg. 2, lines 4-13), shared by both
+/// accumulation modes.
+fn reduce<S: TraceSink>(a: &Matrix, sink: &mut S) -> Reduction {
+    let (m, n) = (a.rows, a.cols);
     assert!(m >= n, "bidiagonalize expects tall input, got {m}x{n}");
     let mut a = a.clone();
     let mut b = Matrix::zeros(n, n);
@@ -70,7 +167,6 @@ fn bidiagonalize_with<S: TraceSink>(a: &Matrix, sink: &mut S, naive: bool) -> Bi
     let mut scratch = vec![0.0f32; n];
     let mut gather = vec![0.0f32; m];
 
-    // ---- Householder Reduction (Alg. 2, lines 4-13) ----
     for i in 0..n {
         // Left transform: annihilate sub-diagonal of column i.
         let x = &mut gather[..m - i];
@@ -127,36 +223,7 @@ fn bidiagonalize_with<S: TraceSink>(a: &Matrix, sink: &mut S, naive: bool) -> Bi
         }
     }
 
-    // ---- Householder Accumulation (Alg. 2, lines 14-18) ----
-    // U_B = H^L_1 .. H^L_n I  (apply backwards, left-multiplying);
-    // V_B^T = I H^R_n .. H^R_1 (apply backwards, right-multiplying).
-    //
-    // The op stream is emitted per reflector in the backward Alg.-2
-    // order in BOTH modes — sizes depend only on (m, n, i) and on
-    // which reflectors are degenerate, never on how the numerics
-    // batch the arithmetic.
-    for i in (0..n).rev() {
-        let (v, _) = &vl[i];
-        if !v.is_empty() {
-            sink.op(HwOp::VecDiv { len: v.len() });
-            sink.op(HwOp::Gemm { m: 1, n: n - i, k: m - i });
-            sink.op(HwOp::Gemm { m: m - i, n: n - i, k: 1 });
-        }
-        let (v, _) = &vr[i];
-        if !v.is_empty() {
-            sink.op(HwOp::VecDiv { len: v.len() });
-            sink.op(HwOp::Gemm { m: n - i, n: 1, k: n - i - 1 });
-            sink.op(HwOp::Gemm { m: n - i, n: n - i - 1, k: 1 });
-        }
-    }
-
-    let (u, vt) = if naive {
-        accumulate_reference(m, n, &vl, &vr, &mut scratch)
-    } else {
-        (accumulate_u_blocked(m, n, &vl), accumulate_vt_blocked(n, &vr))
-    };
-
-    Bidiag { u, b, vt }
+    Reduction { b, vl, vr }
 }
 
 /// Per-reflector backward accumulation — the Algorithm-2 reference.
@@ -182,6 +249,77 @@ fn accumulate_reference(
     (u, vt)
 }
 
+/// The five compact-WY panel work buffers, sized once per
+/// factorization and reused by every panel of both accumulation
+/// passes — the hot half of HBD performs **zero** allocations per
+/// panel (pinned in tests via the `reallocs` growth counter).
+struct WyScratch {
+    v_mat: Vec<f32>,
+    vt_mat: Vec<f32>,
+    t_mat: Vec<f32>,
+    s_buf: Vec<f32>,
+    w: Vec<f32>,
+    w2: Vec<f32>,
+    /// Times a panel had to grow a buffer — 0 by construction when
+    /// the scratch was sized with [`WyScratch::for_shape`].
+    reallocs: usize,
+}
+
+impl WyScratch {
+    /// Size every buffer for the worst panel of an `m x n` (tall)
+    /// factorization: panels hold `p <= WY_PANEL` reflectors, the U
+    /// pass spans up to `m` rows, the VT pass up to `n <= m`.
+    fn for_shape(m: usize, n: usize) -> Self {
+        let p = WY_PANEL.min(n).max(1);
+        WyScratch {
+            v_mat: vec![0.0; m * p],
+            vt_mat: vec![0.0; p * m],
+            t_mat: vec![0.0; p * p],
+            s_buf: vec![0.0; p],
+            w: vec![0.0; p * n],
+            w2: vec![0.0; p * n],
+            reallocs: 0,
+        }
+    }
+}
+
+/// Borrow `len` zeroed slots from a scratch buffer, growing (and
+/// counting the growth) only when undersized.
+fn borrow_zeroed<'a>(buf: &'a mut Vec<f32>, len: usize, reallocs: &mut usize) -> &'a mut [f32] {
+    if buf.len() < len {
+        *reallocs += 1;
+        buf.resize(len, 0.0);
+    }
+    let s = &mut buf[..len];
+    s.fill(0.0);
+    s
+}
+
+/// Split the `m` rows of `out` (row-major, `n` columns each) into one
+/// contiguous band per worker and run `f(first_row, band)` on scoped
+/// threads. Row bands partition the output and every element keeps
+/// its full serial k-accumulation chain, so any worker count is
+/// bit-identical to `f(0, out)`; width <= 1 runs inline with no
+/// thread traffic.
+fn par_row_bands<F>(threads: usize, m: usize, n: usize, out: &mut [f32], f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let body = &mut out[..m * n];
+    let workers = if n == 0 { 1 } else { threads.max(1).min(m.max(1)) };
+    if workers <= 1 {
+        f(0, body);
+        return;
+    }
+    let chunk = m.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (bi, band) in body.chunks_mut(chunk * n).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(bi * chunk, band));
+        }
+    });
+}
+
 /// `U_B = H^L_{p0} .. H^L_{n-1} E` accumulated panel by panel from the
 /// top index down, each panel applied as `U <- (I - V T V^T) U` — two
 /// blocked-GEMM passes over `U` instead of one rank-1 pass per
@@ -189,7 +327,13 @@ fn accumulate_reference(
 /// `U`, and the rows/columns a panel nominally over-covers are still
 /// unit-basis (only later reflectors touch them), so their panel
 /// contributions are exactly zero.
-fn accumulate_u_blocked(m: usize, n: usize, vl: &[(Vec<f32>, f32)]) -> Matrix {
+fn accumulate_u_blocked(
+    m: usize,
+    n: usize,
+    vl: &[(Vec<f32>, f32)],
+    scratch: &mut WyScratch,
+    threads: usize,
+) -> Matrix {
     let mut u = Matrix::eye(m, n);
     let mut p1 = n;
     while p1 > 0 {
@@ -203,19 +347,31 @@ fn accumulate_u_blocked(m: usize, n: usize, vl: &[(Vec<f32>, f32)]) -> Matrix {
         if nb > 0 {
             let r0 = seats[0];
             let rows = m - r0;
-            let (v_mat, vt_mat) = embed_panel(&seats, vl, r0, rows, 0);
-            let t_mat = wy_t(&seats, vl, 0);
-            // W = V^T U[r0..]  (first big GEMM)
-            let mut w = vec![0.0f32; nb * n];
-            matmul_acc(nb, rows, n, &vt_mat, &u.data[r0 * n..], &mut w);
-            // W2 = -(T W)  (small triangular apply)
-            let mut w2 = vec![0.0f32; nb * n];
-            matmul_acc(nb, nb, n, &t_mat, &w, &mut w2);
+            let WyScratch { v_mat, vt_mat, t_mat, s_buf, w, w2, reallocs } = scratch;
+            let v_mat = borrow_zeroed(v_mat, rows * nb, reallocs);
+            let vt_mat = borrow_zeroed(vt_mat, nb * rows, reallocs);
+            embed_panel(&seats, vl, r0, rows, 0, v_mat, vt_mat);
+            let t_mat = borrow_zeroed(t_mat, nb * nb, reallocs);
+            wy_t(&seats, vl, 0, t_mat, borrow_zeroed(s_buf, nb, reallocs));
+            let w = borrow_zeroed(w, nb * n, reallocs);
+            let w2 = borrow_zeroed(w2, nb * n, reallocs);
+            let (v_mat, vt_mat, t_mat) = (&*v_mat, &*vt_mat, &*t_mat);
+            // W = V^T U[r0..]  (first big GEMM, banded over the nb
+            // output rows when in-layer parallelism is on)
+            let u_top = &u.data[r0 * n..];
+            par_row_bands(threads, nb, n, w, |b0, band| {
+                matmul_acc(band.len() / n, rows, n, &vt_mat[b0 * rows..], u_top, band);
+            });
+            // W2 = -(T W)  (small triangular apply, serial)
+            matmul_acc(nb, nb, n, t_mat, w, w2);
             for x in w2.iter_mut() {
                 *x = -*x;
             }
-            // U[r0..] += V W2  (second big GEMM)
-            matmul_acc(rows, nb, n, &v_mat, &w2, &mut u.data[r0 * n..]);
+            // U[r0..] += V W2  (second big GEMM, banded over `rows`)
+            let w2 = &*w2;
+            par_row_bands(threads, rows, n, &mut u.data[r0 * n..], |b0, band| {
+                matmul_acc(band.len() / n, nb, n, &v_mat[b0 * nb..], w2, band);
+            });
         }
         p1 = p0;
     }
@@ -226,7 +382,12 @@ fn accumulate_u_blocked(m: usize, n: usize, vl: &[(Vec<f32>, f32)]) -> Matrix {
 /// applied as `VT <- VT (I - V T V^T)` (right reflector `G_i` acts on
 /// columns i+1..; the backward loop right-multiplies the highest index
 /// first, so the panel product appends DECREASING seats on the right).
-fn accumulate_vt_blocked(n: usize, vr: &[(Vec<f32>, f32)]) -> Matrix {
+fn accumulate_vt_blocked(
+    n: usize,
+    vr: &[(Vec<f32>, f32)],
+    scratch: &mut WyScratch,
+    threads: usize,
+) -> Matrix {
     let mut vt = Matrix::eye(n, n);
     let mut p1 = n;
     while p1 > 0 {
@@ -236,43 +397,69 @@ fn accumulate_vt_blocked(n: usize, vr: &[(Vec<f32>, f32)]) -> Matrix {
         let nb = seats.len();
         if nb > 0 {
             let r0 = *seats.last().expect("nb > 0");
-            // reflector i spans columns i+1..n of the n-wide basis
-            let (v_mat, vt_mat) = embed_panel(&seats, vr, 0, n, 1);
-            let t_mat = wy_t(&seats, vr, 1);
             let rows = n - r0;
+            let WyScratch { v_mat, vt_mat, t_mat, s_buf, w, w2, reallocs } = scratch;
+            // reflector i spans columns i+1..n of the n-wide basis
+            let v_mat = borrow_zeroed(v_mat, n * nb, reallocs);
+            let vt_mat = borrow_zeroed(vt_mat, nb * n, reallocs);
+            embed_panel(&seats, vr, 0, n, 1, v_mat, vt_mat);
+            let t_mat = borrow_zeroed(t_mat, nb * nb, reallocs);
+            wy_t(&seats, vr, 1, t_mat, borrow_zeroed(s_buf, nb, reallocs));
+            let w = borrow_zeroed(w, rows * nb, reallocs);
+            let w2 = borrow_zeroed(w2, rows * nb, reallocs);
+            let (v_mat, vt_mat, t_mat) = (&*v_mat, &*vt_mat, &*t_mat);
             let sub = &mut vt.data[r0 * n..];
-            // W = VT[r0..] V  (first big GEMM)
-            let mut w = vec![0.0f32; rows * nb];
-            matmul_acc(rows, n, nb, sub, &v_mat, &mut w);
-            // W2 = -(W T)
-            let mut w2 = vec![0.0f32; rows * nb];
-            matmul_acc(rows, nb, nb, &w, &t_mat, &mut w2);
-            for x in w2.iter_mut() {
-                *x = -*x;
+            // All three panel GEMMs touch only their own row band of
+            // VT[r0..] (W and W2 band along with it), so the whole
+            // chain fans out in one scope per panel:
+            //   W = VT[r0..] V ; W2 = -(W T) ; VT[r0..] += W2 V^T.
+            let run_band = |sub_b: &mut [f32], w_b: &mut [f32], w2_b: &mut [f32]| {
+                let br = sub_b.len() / n;
+                matmul_acc(br, n, nb, sub_b, v_mat, w_b);
+                matmul_acc(br, nb, nb, w_b, t_mat, w2_b);
+                for x in w2_b.iter_mut() {
+                    *x = -*x;
+                }
+                matmul_acc(br, nb, n, w2_b, vt_mat, sub_b);
+            };
+            let workers = threads.max(1).min(rows);
+            if workers <= 1 {
+                run_band(sub, w, w2);
+            } else {
+                let chunk = rows.div_ceil(workers);
+                std::thread::scope(|scope| {
+                    let bands = sub
+                        .chunks_mut(chunk * n)
+                        .zip(w.chunks_mut(chunk * nb))
+                        .zip(w2.chunks_mut(chunk * nb));
+                    for ((sub_b, w_b), w2_b) in bands {
+                        let run_band = &run_band;
+                        scope.spawn(move || run_band(sub_b, w_b, w2_b));
+                    }
+                });
             }
-            // VT[r0..] += W2 V^T  (second big GEMM)
-            matmul_acc(rows, nb, n, &w2, &vt_mat, sub);
         }
         p1 = p0;
     }
     vt
 }
 
-/// Materialize a panel's reflector block: `v_mat` is `V` (`rows` x nb,
-/// row-major) and `vt_mat` is `V^T` (nb x `rows`), with reflector
-/// `seats[j]` embedded at offset `seats[j] + shift - r0` (left panels:
-/// shift 0, seated on the diagonal row; right panels: shift 1, seated
-/// one past the diagonal column).
+/// Materialize a panel's reflector block into scratch: `v_mat` is `V`
+/// (`rows` x nb, row-major) and `vt_mat` is `V^T` (nb x `rows`), with
+/// reflector `seats[j]` embedded at offset `seats[j] + shift - r0`
+/// (left panels: shift 0, seated on the diagonal row; right panels:
+/// shift 1, seated one past the diagonal column). Both outputs must
+/// arrive zeroed.
 fn embed_panel(
     seats: &[usize],
     vs: &[(Vec<f32>, f32)],
     r0: usize,
     rows: usize,
     shift: usize,
-) -> (Vec<f32>, Vec<f32>) {
+    v_mat: &mut [f32],
+    vt_mat: &mut [f32],
+) {
     let nb = seats.len();
-    let mut v_mat = vec![0.0f32; rows * nb];
-    let mut vt_mat = vec![0.0f32; nb * rows];
     for (j, &s) in seats.iter().enumerate() {
         let (v, _) = &vs[s];
         let off = s + shift - r0;
@@ -281,17 +468,21 @@ fn embed_panel(
             vt_mat[j * rows + off + t] = x;
         }
     }
-    (v_mat, vt_mat)
 }
 
 /// Upper-triangular compact-WY factor for the panel product
 /// `Q = H_{seats[0]} H_{seats[1]} ..` with `H = I - tau v v^T`:
 /// appending `H_j` on the right extends `T` by the column
-/// `[-tau_j T (V^T v_j); tau_j]` (Schreiber–Van Loan).
-fn wy_t(seats: &[usize], vs: &[(Vec<f32>, f32)], shift: usize) -> Vec<f32> {
+/// `[-tau_j T (V^T v_j); tau_j]` (Schreiber–Van Loan). `t_mat`
+/// (nb x nb) must arrive zeroed; `s_buf` (nb) is pure scratch.
+fn wy_t(
+    seats: &[usize],
+    vs: &[(Vec<f32>, f32)],
+    shift: usize,
+    t_mat: &mut [f32],
+    s_buf: &mut [f32],
+) {
     let nb = seats.len();
-    let mut t_mat = vec![0.0f32; nb * nb];
-    let mut s_buf = vec![0.0f32; nb];
     for (j, &sj) in seats.iter().enumerate() {
         let (vj, beta) = &vs[sj];
         let tau = -1.0 / *beta;
@@ -320,7 +511,6 @@ fn wy_t(seats: &[usize], vs: &[(Vec<f32>, f32)], shift: usize) -> Vec<f32> {
         }
         t_mat[j * nb + j] = tau;
     }
-    t_mat
 }
 
 #[cfg(test)]
@@ -457,6 +647,71 @@ mod tests {
         assert!(gemms > 0 && gemms % 2 == 0);
         // first HOUSE spans the full column
         assert!(sink.ops.iter().any(|o| matches!(o, HouseGen { len: 20 })));
+    }
+
+    #[test]
+    fn wy_scratch_is_sized_once_with_zero_panel_growth() {
+        // The PR-7 allocation bugfix pin: a for_shape scratch carries
+        // every panel of both accumulation passes — and repeated
+        // factorizations — without a single buffer growth.
+        let mut rng = Rng::new(48);
+        let a = rand_mat(&mut rng, 80, 48); // two WY panels per pass
+        let red = reduce(&a, &mut NullSink);
+        let mut wy = WyScratch::for_shape(80, 48);
+        let u = accumulate_u_blocked(80, 48, &red.vl, &mut wy, 1);
+        let vt = accumulate_vt_blocked(48, &red.vr, &mut wy, 1);
+        let u_again = accumulate_u_blocked(80, 48, &red.vl, &mut wy, 1);
+        assert_eq!(wy.reallocs, 0, "panels must reuse the once-sized scratch");
+        assert_eq!(u_again.data, u.data, "scratch reuse must not leak state");
+        // the counter is live: an undersized scratch grows and says so,
+        // while the grown buffers still produce identical panels
+        let mut tiny = WyScratch::for_shape(2, 2);
+        let u_grown = accumulate_u_blocked(80, 48, &red.vl, &mut tiny, 1);
+        assert!(tiny.reallocs > 0, "undersized scratch must count its growth");
+        assert_eq!(u_grown.data, u.data);
+        let _ = vt;
+    }
+
+    #[test]
+    fn panel_parallel_accumulation_is_bit_identical_to_serial() {
+        check(8, 306, |rng| {
+            let n = 2 + rng.below(40); // crosses WY_PANEL = 32
+            let m = n + rng.below(24);
+            let a = rand_mat(rng, m, n);
+            let red = reduce(&a, &mut NullSink);
+            let mut wy = WyScratch::for_shape(m, n);
+            let u1 = accumulate_u_blocked(m, n, &red.vl, &mut wy, 1);
+            let vt1 = accumulate_vt_blocked(n, &red.vr, &mut wy, 1);
+            for threads in [2, 4, 8] {
+                let up = accumulate_u_blocked(m, n, &red.vl, &mut wy, threads);
+                let vtp = accumulate_vt_blocked(n, &red.vr, &mut wy, threads);
+                assert_eq!(up.data, u1.data, "U diverged at width {threads} ({m}x{n})");
+                assert_eq!(vtp.data, vt1.data, "V^T diverged at width {threads} ({m}x{n})");
+            }
+            assert_eq!(wy.reallocs, 0);
+        });
+    }
+
+    #[test]
+    fn bidiagonalize_is_panel_thread_invariant() {
+        // End-to-end: the thread knob changes neither the op stream
+        // nor a single output bit. Restores the process-global width
+        // afterwards; a concurrent test observing width 3 is benign
+        // because every width is bit-identical.
+        let mut rng = Rng::new(49);
+        let a = rand_mat(&mut rng, 40, 36);
+        let before = panel_threads();
+        set_panel_threads(1);
+        let mut serial_trace = VecSink::default();
+        let serial = bidiagonalize(&a, &mut serial_trace);
+        set_panel_threads(3);
+        let mut par_trace = VecSink::default();
+        let par = bidiagonalize(&a, &mut par_trace);
+        set_panel_threads(before);
+        assert_eq!(serial_trace.ops, par_trace.ops, "op stream saw the thread knob");
+        assert_eq!(par.u.data, serial.u.data);
+        assert_eq!(par.b.data, serial.b.data);
+        assert_eq!(par.vt.data, serial.vt.data);
     }
 
     #[test]

@@ -1,13 +1,21 @@
 //! Dense row-major tensors and matrices — the numeric substrate under
-//! Algorithm 1/2. No BLAS in this environment: `matmul` is a
-//! cache-blocked ikj kernel (see `benches/hotpath.rs` for its tuning
-//! and `matmul_naive` for the unblocked reference it is measured
-//! against). The Householder rank-1 updates (`apply_house_left` /
-//! `apply_house_right`) live here as in-place `Matrix` methods — the
-//! HBD hot loop never materializes a reflector matrix or clones the
-//! working buffer.
+//! Algorithm 1/2. No BLAS in this environment: every GEMM funnels
+//! through one process-selectable microkernel pair (see
+//! [`GemmKernel`]) — the cache-blocked scalar [`matmul_reference`]
+//! and the lanes-of-f32 register-tiled [`matmul_vectorized`]. The two
+//! are **bit-identical by construction** (same k-pairing, same
+//! `a0 * x + a1 * y` association per output element; the vectorized
+//! kernel only reorders *independent* output columns into register
+//! tiles), which is what keeps the op stream and every downstream
+//! Table-III pin byte-identical no matter which kernel runs. See
+//! `benches/hotpath.rs` for the tuning numbers and `matmul_naive` for
+//! the unblocked baseline both are measured against. The Householder
+//! rank-1 updates (`apply_house_left` / `apply_house_right`) live here
+//! as in-place `Matrix` methods — the HBD hot loop never materializes
+//! a reflector matrix or clones the working buffer.
 
 use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Row-major 2-D matrix of f32.
 #[derive(Clone, PartialEq)]
@@ -68,11 +76,24 @@ impl Matrix {
         (0..self.rows).map(|r| self.get(r, c)).collect()
     }
 
+    /// Cache-blocked transpose: both the row-major read and the
+    /// column-strided write stay inside one `TB x TB` tile, so the
+    /// write stream touches at most `TB` distinct cache lines at a
+    /// time instead of `rows` (the naive strided loop thrashed on the
+    /// wide-SVD hot path, where every wide input round-trips through
+    /// `transpose`).
     pub fn transpose(&self) -> Matrix {
+        const TB: usize = 32;
         let mut t = Matrix::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+        for r0 in (0..self.rows).step_by(TB) {
+            let r1 = (r0 + TB).min(self.rows);
+            for c0 in (0..self.cols).step_by(TB) {
+                let c1 = (c0 + TB).min(self.cols);
+                for r in r0..r1 {
+                    for c in c0..c1 {
+                        t.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
             }
         }
         t
@@ -185,8 +206,21 @@ impl Matrix {
         }
     }
 
-    /// `self @ other^T` (row-times-row dot products, cache-friendly).
+    /// `self @ other^T` through the shared microkernel: `other` is
+    /// packed once via the cache-blocked [`Matrix::transpose`] (an
+    /// O(kn) permutation next to the O(mkn) product) so the multiply
+    /// itself runs on whichever blocked/vectorized kernel is selected
+    /// instead of the old unblocked row-dot loop (kept as
+    /// [`Matrix::matmul_transb_reference`] and pinned in tests).
     pub fn matmul_transb(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_transb dim mismatch");
+        self.matmul(&other.transpose())
+    }
+
+    /// The pre-PR-7 hand-rolled `self @ other^T` (row-times-row dot
+    /// products, unblocked) — kept purely as the agreement reference
+    /// for [`Matrix::matmul_transb`]; not called from any hot path.
+    pub fn matmul_transb_reference(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.cols, "matmul_transb dim mismatch");
         let (m, k, n) = (self.rows, self.cols, other.rows);
         let mut out = Matrix::zeros(m, n);
@@ -264,19 +298,100 @@ impl<'a> MatrixView<'a> {
     }
 }
 
-/// `out += a @ b` over raw row-major slices through the blocked
+/// Which GEMM microkernel every `matmul`/`matmul_acc` call dispatches
+/// to. Both kernels compute every output element with the *same*
+/// f32 operation sequence (same k-pairing, same association), so the
+/// selection is purely a host-speed knob: results — and therefore the
+/// op stream, golden traces, and Table-III pins — are bit-identical
+/// either way. Pinned by `tests/kernel_equivalence.rs`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmKernel {
+    /// The cache-blocked scalar ikj kernel ([`matmul_reference`]).
+    Reference,
+    /// The lanes-of-f32 register-tiled kernel ([`matmul_vectorized`]).
+    Vectorized,
+}
+
+// Process-global kernel selection: 0 = unresolved (read the
+// TTEDGE_KERNEL env var on first use), then the encoded GemmKernel.
+// Relaxed ordering is enough — both kernels are bit-identical, so a
+// racing reader picking the stale kernel cannot change any result.
+static GEMM_KERNEL: AtomicU8 = AtomicU8::new(0);
+const KERNEL_REFERENCE: u8 = 1;
+const KERNEL_VECTORIZED: u8 = 2;
+
+/// The currently selected microkernel. Defaults to
+/// [`GemmKernel::Vectorized`] unless the `TTEDGE_KERNEL` env var says
+/// `reference`/`scalar` (how CI's kernel-matrix job forces the scalar
+/// path through an unmodified test suite).
+pub fn gemm_kernel() -> GemmKernel {
+    match GEMM_KERNEL.load(Ordering::Relaxed) {
+        KERNEL_REFERENCE => GemmKernel::Reference,
+        KERNEL_VECTORIZED => GemmKernel::Vectorized,
+        _ => {
+            let kernel = match std::env::var("TTEDGE_KERNEL").as_deref() {
+                Ok("reference") | Ok("scalar") => GemmKernel::Reference,
+                _ => GemmKernel::Vectorized,
+            };
+            set_gemm_kernel(kernel);
+            kernel
+        }
+    }
+}
+
+/// Select the process-wide microkernel (see [`GemmKernel`]; jobs set
+/// this through `CompressionJob::kernel`).
+pub fn set_gemm_kernel(kernel: GemmKernel) {
+    let enc = match kernel {
+        GemmKernel::Reference => KERNEL_REFERENCE,
+        GemmKernel::Vectorized => KERNEL_VECTORIZED,
+    };
+    GEMM_KERNEL.store(enc, Ordering::Relaxed);
+}
+
+/// `out += a @ b` over raw row-major slices through the selected
 /// kernel — the accumulate form the blocked compact-WY Householder
 /// panels in [`crate::ttd::svd::bidiag`] build on (`out` may be a
 /// row-contiguous sub-slice of a larger matrix). `out` must hold at
-/// least `m * n` leading slots.
+/// least `m * n` leading slots; real `assert!`s, because a release
+/// caller with a miscomputed `(m, k, n)` would otherwise read the
+/// wrong logical region and produce silently wrong panels (the cost
+/// is negligible next to the O(mkn) body).
 pub fn matmul_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
-    debug_assert!(a.len() >= m * k && b.len() >= k * n && out.len() >= m * n);
+    assert!(
+        a.len() >= m * k && b.len() >= k * n && out.len() >= m * n,
+        "matmul_acc size mismatch: a {} < {}x{} or b {} < {}x{} or out {} < {}x{}",
+        a.len(),
+        m,
+        k,
+        b.len(),
+        k,
+        n,
+        out.len(),
+        m,
+        n
+    );
     matmul_kernel(m, k, n, a, b, out);
 }
 
-/// Shared cache-blocked ikj kernel over raw row-major slices:
-/// `out += a @ b` with `a` (m x k), `b` (k x n), `out` (m x n).
+/// Dispatch to the selected microkernel (see [`GemmKernel`]).
 fn matmul_kernel(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    match gemm_kernel() {
+        GemmKernel::Reference => matmul_reference(m, k, n, a, b, out),
+        GemmKernel::Vectorized => matmul_vectorized(m, k, n, a, b, out),
+    }
+}
+
+/// Cache-blocked scalar ikj kernel over raw row-major slices:
+/// `out += a @ b` with `a` (m x k), `b` (k x n), `out` (m x n).
+///
+/// This is the arithmetic contract both kernels implement: k advances
+/// in pairs `(0,1), (2,3), ...` (the k-block size `BK` is even, so the
+/// pairing is global across blocks, with one unpaired remainder iff k
+/// is odd), and each output element accumulates
+/// `o += a0 * x + a1 * y` per pair. [`matmul_vectorized`] keeps this
+/// exact per-element sequence and only tiles *independent* outputs.
+pub fn matmul_reference(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
     const BK: usize = 128;
     for k0 in (0..k).step_by(BK) {
         let k1 = (k0 + BK).min(k);
@@ -304,6 +419,117 @@ fn matmul_kernel(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [
                     *o += a0 * bv;
                 }
             }
+        }
+    }
+}
+
+/// f32 lanes per accumulator vector in [`matmul_vectorized`] (one
+/// 256-bit register's worth; fixed-length `[f32; GEMM_LANES]` loops
+/// are what the compiler turns into packed SIMD).
+pub const GEMM_LANES: usize = 8;
+/// Rows per register tile.
+const GEMM_MR: usize = 4;
+/// Columns per register tile (two lane-vectors wide).
+const GEMM_NR: usize = 2 * GEMM_LANES;
+
+/// Explicitly vectorized microkernel: `out += a @ b`, bit-identical
+/// to [`matmul_reference`].
+///
+/// The output is walked in `GEMM_MR x GEMM_NR` register tiles (4 rows
+/// x 2 lane-vectors of [`GEMM_LANES`] f32). Each tile's accumulators
+/// live in registers for the whole k loop — the scalar kernel instead
+/// re-streams the full output row through memory once per k-pair,
+/// which is where the speedup comes from. Bit-identity holds because
+/// every output element still sees the reference's exact operation
+/// sequence (`acc += a0 * x + a1 * y` over the same global k-pairs;
+/// Rust f32 math is strict IEEE — never reassociated, no implicit FMA
+/// contraction) — lanes only batch *independent* columns.
+pub fn matmul_vectorized(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    let nv = n - n % GEMM_NR;
+    let mut i = 0;
+    while i + GEMM_MR <= m {
+        vec_row_tile::<GEMM_MR>(i, k, n, nv, a, b, out);
+        i += GEMM_MR;
+    }
+    while i < m {
+        vec_row_tile::<1>(i, k, n, nv, a, b, out);
+        i += 1;
+    }
+}
+
+/// One `R`-row band of the vectorized kernel: register tiles across
+/// the `nv` lane-aligned columns, then the scalar column tail
+/// (`nv..n`) with the same k-pairing.
+#[inline(always)]
+fn vec_row_tile<const R: usize>(
+    i: usize,
+    k: usize,
+    n: usize,
+    nv: usize,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+) {
+    const L: usize = GEMM_LANES;
+    let mut j = 0;
+    while j < nv {
+        // R x (2 lane-vectors) accumulator tile, loaded from out once.
+        let mut acc = [[[0.0f32; L]; 2]; R];
+        for (r, tile) in acc.iter_mut().enumerate() {
+            let orow = &out[(i + r) * n + j..];
+            for (h, lane) in tile.iter_mut().enumerate() {
+                lane.copy_from_slice(&orow[h * L..h * L + L]);
+            }
+        }
+        let mut kk = 0;
+        while kk + 1 < k {
+            let b0 = &b[kk * n + j..kk * n + j + GEMM_NR];
+            let b1 = &b[(kk + 1) * n + j..(kk + 1) * n + j + GEMM_NR];
+            for (r, tile) in acc.iter_mut().enumerate() {
+                let a0 = a[(i + r) * k + kk];
+                let a1 = a[(i + r) * k + kk + 1];
+                for (h, lane) in tile.iter_mut().enumerate() {
+                    for (l, slot) in lane.iter_mut().enumerate() {
+                        *slot += a0 * b0[h * L + l] + a1 * b1[h * L + l];
+                    }
+                }
+            }
+            kk += 2;
+        }
+        if kk < k {
+            let b0 = &b[kk * n + j..kk * n + j + GEMM_NR];
+            for (r, tile) in acc.iter_mut().enumerate() {
+                let a0 = a[(i + r) * k + kk];
+                for (h, lane) in tile.iter_mut().enumerate() {
+                    for (l, slot) in lane.iter_mut().enumerate() {
+                        *slot += a0 * b0[h * L + l];
+                    }
+                }
+            }
+        }
+        for (r, tile) in acc.iter().enumerate() {
+            let orow = &mut out[(i + r) * n + j..];
+            for (h, lane) in tile.iter().enumerate() {
+                orow[h * L..h * L + L].copy_from_slice(lane);
+            }
+        }
+        j += GEMM_NR;
+    }
+    // Scalar tail columns: identical pairing and association, one
+    // register accumulator per element.
+    for r in 0..R {
+        let arow = &a[(i + r) * k..(i + r) * k + k];
+        for col in nv..n {
+            let mut acc = out[(i + r) * n + col];
+            let mut kk = 0;
+            while kk + 1 < k {
+                acc += arow[kk] * b[kk * n + col] + arow[kk + 1] * b[(kk + 1) * n + col];
+                kk += 2;
+            }
+            if kk < k {
+                acc += arow[kk] * b[kk * n + col];
+            }
+            out[(i + r) * n + col] = acc;
         }
     }
 }
@@ -562,6 +788,82 @@ mod tests {
             let want = a.matmul(&b.transpose());
             assert!(got.max_abs_diff(&want) < 1e-4);
         });
+    }
+
+    #[test]
+    fn matmul_transb_agrees_with_the_old_rowdot_loop() {
+        // The kernel-routed matmul_transb vs the pre-PR-7 unblocked
+        // loop it replaced: summation orders differ (pairwise ikj vs
+        // sequential dot), so pin with a k-scaled tolerance.
+        check(10, 107, |rng| {
+            let (m, k, n) = (1 + rng.below(24), 1 + rng.below(200), 1 + rng.below(24));
+            let a = rand_mat(rng, m, k);
+            let b = rand_mat(rng, n, k);
+            let got = a.matmul_transb(&b);
+            let want = a.matmul_transb_reference(&b);
+            let tol = 1e-4 * (k as f32).sqrt().max(1.0);
+            assert!(got.max_abs_diff(&want) < tol, "m={m} k={k} n={n}");
+        });
+    }
+
+    #[test]
+    fn vectorized_kernel_is_bit_identical_to_reference() {
+        // Exact equality — not tolerance — across shapes that cross
+        // every tile boundary: n below one lane vector, n straddling
+        // the 16-column tile, odd k (unpaired remainder), row counts
+        // around the 4-row tile, and accumulation into non-zero out.
+        let shapes = [
+            (1, 1, 1),
+            (3, 5, 7),
+            (4, 2, 16),
+            (5, 9, 17),
+            (8, 33, 24),
+            (4, 128, 16),
+            (7, 129, 31),
+            (12, 257, 40),
+        ];
+        let mut rng = Rng::new(108);
+        for &(m, k, n) in &shapes {
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(k * n);
+            let seed_out = rng.normal_vec(m * n);
+            let mut out_ref = seed_out.clone();
+            let mut out_vec = seed_out;
+            matmul_reference(m, k, n, &a, &b, &mut out_ref);
+            matmul_vectorized(m, k, n, &a, &b, &mut out_vec);
+            assert_eq!(out_vec, out_ref, "kernel divergence at m={m} k={k} n={n}");
+        }
+        check(20, 109, |rng| {
+            let (m, k, n) = (1 + rng.below(40), 1 + rng.below(300), 1 + rng.below(60));
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(k * n);
+            let mut out_ref = vec![0.0f32; m * n];
+            let mut out_vec = vec![0.0f32; m * n];
+            matmul_reference(m, k, n, &a, &b, &mut out_ref);
+            matmul_vectorized(m, k, n, &a, &b, &mut out_vec);
+            assert_eq!(out_vec, out_ref, "kernel divergence at m={m} k={k} n={n}");
+        });
+    }
+
+    #[test]
+    fn kernel_selection_roundtrips() {
+        // Flipping the global is benign mid-suite: both kernels are
+        // bit-identical, so concurrent tests cannot observe the flip.
+        let before = gemm_kernel();
+        set_gemm_kernel(GemmKernel::Reference);
+        assert_eq!(gemm_kernel(), GemmKernel::Reference);
+        set_gemm_kernel(GemmKernel::Vectorized);
+        assert_eq!(gemm_kernel(), GemmKernel::Vectorized);
+        set_gemm_kernel(before);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul_acc size mismatch")]
+    fn matmul_acc_rejects_short_buffers() {
+        let a = vec![0.0f32; 4]; // claims 2x3 below: 2 slots short
+        let b = vec![0.0f32; 6];
+        let mut out = vec![0.0f32; 4];
+        matmul_acc(2, 3, 2, &a, &b, &mut out);
     }
 
     #[test]

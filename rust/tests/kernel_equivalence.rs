@@ -1,0 +1,151 @@
+//! PR-7 equivalence pins: the vectorized GEMM microkernel, the
+//! panel-parallel WY accumulation, and the parallel program fold must
+//! all be **bit-identical** to their serial/reference counterparts —
+//! not tolerance-close. The op stream feeds `W_temp = Sigma * V^T` and
+//! every downstream QR sweep / sort swap / truncation decision, so a
+//! single flipped low bit would fork the golden traces.
+//!
+//! The kernel and panel-width selectors are process globals (that is
+//! what makes `TTEDGE_KERNEL` / `TTEDGE_HBD_THREADS` work without
+//! threading a config through every call site). Flipping them from
+//! concurrently running tests is benign *because* every mode is
+//! bit-identical — which is exactly what this file proves. Each test
+//! still restores the defaults on exit out of politeness.
+
+use tt_edge::sim::workload::synthetic_model;
+use tt_edge::sim::SocConfig;
+use tt_edge::trace::VecSink;
+use tt_edge::ttd::svd::bidiag::{panel_threads, set_panel_threads};
+use tt_edge::ttd::tensor::{
+    matmul_reference, matmul_vectorized, set_gemm_kernel, GEMM_LANES,
+};
+use tt_edge::ttd::Tensor;
+use tt_edge::util::Rng;
+use tt_edge::{CompressionJob, GemmKernel};
+
+/// Shapes chosen to cross every control-flow edge of the vectorized
+/// microkernel: n below one lane, n on/off the `2*GEMM_LANES` column
+/// tile, m on/off the 4-row tile, odd k (the single-remainder path of
+/// the global k-pairing), and k across the BK=128 block edge.
+fn boundary_shapes() -> Vec<(usize, usize, usize)> {
+    let l = GEMM_LANES;
+    vec![
+        (1, 1, 1),
+        (2, 3, l - 1),          // column tail only, odd k
+        (4, 4, l),              // one lane exactly
+        (3, 7, 2 * l),          // full column tile, row remainder
+        (4, 128, 2 * l),        // k exactly one block
+        (5, 129, 2 * l + 3),    // k just over a block, ragged n
+        (9, 255, 3 * l + 1),    // odd k, tile + lane + scalar tail
+        (16, 64, 4 * l),
+    ]
+}
+
+#[test]
+fn vectorized_and_reference_kernels_agree_to_the_bit() {
+    let mut rng = Rng::new(4001);
+    for (m, k, n) in boundary_shapes() {
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        // nonzero seed exercises the accumulate-into-out contract
+        let seed: Vec<f32> = (0..m * n).map(|i| (i % 13) as f32 * 0.25 - 1.0).collect();
+        let mut out_v = seed.clone();
+        let mut out_r = seed;
+        matmul_vectorized(m, k, n, &a, &b, &mut out_v);
+        matmul_reference(m, k, n, &a, &b, &mut out_r);
+        assert_eq!(out_v, out_r, "kernel divergence at m={m} k={k} n={n}");
+    }
+}
+
+/// Run one single-tensor job under a given kernel, capturing the full
+/// op stream, the TT cores, and the Table-III reports.
+fn job_fingerprint(w: &Tensor, kernel: GemmKernel) -> (Vec<String>, Vec<Vec<f32>>, Vec<String>) {
+    let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
+    let mut sink = VecSink::default();
+    let out = CompressionJob::new(w)
+        .eps(0.12)
+        .kernel(kernel)
+        .socs(&configs)
+        .sink(&mut sink)
+        .run()
+        .unwrap();
+    let ops = sink.ops.iter().map(|op| format!("{op:?}")).collect();
+    let cores = out.decomp().cores.iter().map(|c| c.data.clone()).collect();
+    let reports = out.reports.iter().map(|r| r.to_json().render()).collect();
+    (ops, cores, reports)
+}
+
+#[test]
+fn decompose_is_kernel_invariant_trace_cores_and_reports() {
+    let mut rng = Rng::new(4002);
+    // [40, 6, 6]: stage-0 unfolding is 40x36, so the WY loop runs a
+    // full 32-reflector panel plus a ragged tail — both kernels see
+    // every accumulation shape class.
+    let tall = Tensor::from_vec(&[40, 6, 6], rng.normal_vec(40 * 36));
+    // rank-deficient: duplicated slices force early truncation, the
+    // path where a low-bit fork would move a rank decision.
+    let block = rng.normal_vec(6 * 25);
+    let mut defic = Vec::new();
+    for _ in 0..4 {
+        defic.extend_from_slice(&block);
+    }
+    let deficient = Tensor::from_vec(&[24, 5, 5], defic);
+
+    for w in [&tall, &deficient] {
+        let vec = job_fingerprint(w, GemmKernel::Vectorized);
+        let refr = job_fingerprint(w, GemmKernel::Reference);
+        set_gemm_kernel(GemmKernel::Vectorized);
+        assert_eq!(vec.0, refr.0, "op stream must be kernel-invariant");
+        assert_eq!(vec.1, refr.1, "TT cores must be kernel-invariant");
+        assert_eq!(vec.2, refr.2, "reports must be kernel-invariant");
+    }
+}
+
+#[test]
+fn panel_width_is_invisible_through_the_job() {
+    let mut rng = Rng::new(4003);
+    let w = Tensor::from_vec(&[40, 6, 6], rng.normal_vec(40 * 36));
+    let saved = panel_threads();
+    let run = |width: usize| {
+        let mut sink = VecSink::default();
+        let out = CompressionJob::new(&w)
+            .eps(0.12)
+            .hbd_threads(width)
+            .soc(SocConfig::tt_edge())
+            .sink(&mut sink)
+            .run()
+            .unwrap();
+        let ops: Vec<String> = sink.ops.iter().map(|op| format!("{op:?}")).collect();
+        let cores: Vec<Vec<f32>> = out.decomp().cores.iter().map(|c| c.data.clone()).collect();
+        (ops, cores, out.reports[0].to_json().render())
+    };
+    let baseline = run(1);
+    for width in [2, 4, 8] {
+        assert_eq!(run(width), baseline, "panel width {width} diverged from serial");
+    }
+    set_panel_threads(saved);
+}
+
+#[test]
+fn parallel_program_fold_is_byte_identical_through_replay() {
+    let mut layers = synthetic_model(7, 3.55, 0.035);
+    layers.truncate(5);
+    let (out, program) = CompressionJob::model(&layers).eps(0.12).program().unwrap();
+    let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
+    let render = |reports: &[tt_edge::sim::SimReport]| -> Vec<String> {
+        reports.iter().map(|r| r.to_json().render()).collect()
+    };
+    let recorded = {
+        let o = CompressionJob::replay(&program).socs(&configs).parallel(1).run().unwrap();
+        render(&o.reports)
+    };
+    for width in [2, 4, 8] {
+        let o = CompressionJob::replay(&program)
+            .socs(&configs)
+            .parallel(width)
+            .run()
+            .unwrap();
+        assert_eq!(render(&o.reports), recorded, "fold width {width} diverged");
+        assert_eq!(o.outcome.final_params, out.outcome.final_params);
+    }
+}
