@@ -1,0 +1,399 @@
+//! Minimal hand-rolled Rust lexer for `ttedge-lint` — just enough
+//! structure to run line-oriented rules soundly, with no `syn` and no
+//! network (the build stays fully offline).
+//!
+//! Two passes:
+//!
+//! * [`scrub`] blanks string literals (plain, byte, raw, raw-byte),
+//!   char literals, and comments — preserving the byte-for-byte line
+//!   layout so every reported column/line matches the original file —
+//!   and collects each line comment's text for pragma parsing. Rule
+//!   patterns therefore never fire inside quoted text or prose, which
+//!   is what lets the linter scan its own rule tables and the fixture
+//!   strings in `tests/lint_rules.rs` without tripping on them.
+//! * [`line_regions`] walks the scrubbed code tracking brace depth to
+//!   mark `#[cfg(test)]` / `#[test]` blocks and `lint: hotpath`
+//!   regions per line.
+//!
+//! Deliberately NOT a full parser. Known approximations, chosen to
+//! match the repo's house style: attributes are recognized on a single
+//! line; a region tag or `#[cfg(test)]` attribute applies from the
+//! *next* opened block, so one-liners like `#[cfg(test)] mod t { .. }`
+//! are only tracked from their own `{`; and a `lint: hotpath` tag must
+//! sit on its own line as the first line *inside* the block it covers.
+//! The tricky lexical cases that would cause unsound matches — nested
+//! block comments, `r#".."#` with hashes, `b'\''`, `'\u{41}'`,
+//! lifetime ticks vs char literals — are handled and unit-tested.
+
+/// One `//` line comment: its 1-indexed line and the text after `//`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// Output of [`scrub`]: code with all literals/comments blanked to
+/// spaces (newlines kept, so line numbers are unchanged) plus the
+/// collected line comments.
+#[derive(Clone, Debug)]
+pub struct Scrubbed {
+    pub code: String,
+    pub comments: Vec<Comment>,
+}
+
+fn blank(out: &mut Vec<u8>, n: usize) {
+    out.resize(out.len() + n, b' ');
+}
+
+/// Byte length of the UTF-8 code point starting with `b0`.
+fn utf8_len(b0: u8) -> usize {
+    if b0 < 0x80 {
+        1
+    } else if b0 >= 0xF0 {
+        4
+    } else if b0 >= 0xE0 {
+        3
+    } else {
+        2
+    }
+}
+
+/// Blank a `quote`-delimited literal with backslash escapes (plain
+/// strings, byte strings, escaped char literals). `i` points at the
+/// opening quote; returns the index just past the closing quote.
+fn scrub_quoted(b: &[u8], i: usize, quote: u8, out: &mut Vec<u8>, line: &mut usize) -> usize {
+    blank(out, 1);
+    let mut j = i + 1;
+    while j < b.len() {
+        if b[j] == b'\\' {
+            blank(out, 1);
+            j += 1;
+            if j < b.len() {
+                if b[j] == b'\n' {
+                    out.push(b'\n');
+                    *line += 1;
+                } else {
+                    blank(out, 1);
+                }
+                j += 1;
+            }
+        } else if b[j] == quote {
+            blank(out, 1);
+            j += 1;
+            break;
+        } else if b[j] == b'\n' {
+            out.push(b'\n');
+            *line += 1;
+            j += 1;
+        } else {
+            blank(out, 1);
+            j += 1;
+        }
+    }
+    j
+}
+
+/// Blank source `src` as described in the module docs.
+pub fn scrub(src: &str) -> Scrubbed {
+    let b = src.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(b.len());
+    let mut comments = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < b.len() {
+        match b[i] {
+            b'\n' => {
+                out.push(b'\n');
+                line += 1;
+                i += 1;
+            }
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                let start = i + 2;
+                let mut j = start;
+                while j < b.len() && b[j] != b'\n' {
+                    j += 1;
+                }
+                comments.push(Comment {
+                    line,
+                    text: String::from_utf8_lossy(&b[start..j]).into_owned(),
+                });
+                blank(&mut out, j - i);
+                i = j;
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                // Block comment; Rust block comments nest.
+                let mut depth = 1usize;
+                blank(&mut out, 2);
+                let mut j = i + 2;
+                while j < b.len() && depth > 0 {
+                    if b[j] == b'\n' {
+                        out.push(b'\n');
+                        line += 1;
+                        j += 1;
+                    } else if b[j] == b'/' && b.get(j + 1) == Some(&b'*') {
+                        depth += 1;
+                        blank(&mut out, 2);
+                        j += 2;
+                    } else if b[j] == b'*' && b.get(j + 1) == Some(&b'/') {
+                        depth -= 1;
+                        blank(&mut out, 2);
+                        j += 2;
+                    } else {
+                        blank(&mut out, 1);
+                        j += 1;
+                    }
+                }
+                i = j;
+            }
+            b'"' => {
+                i = scrub_quoted(b, i, b'"', &mut out, &mut line);
+            }
+            b'\'' => {
+                // Char literal or lifetime tick. A backslash right
+                // after the tick is always a char literal; otherwise
+                // it is a char literal iff the single code point that
+                // follows is closed by another tick (`'a'`), and a
+                // lifetime otherwise (`'a>`).
+                if b.get(i + 1) == Some(&b'\\') {
+                    i = scrub_quoted(b, i, b'\'', &mut out, &mut line);
+                } else {
+                    let l = utf8_len(b.get(i + 1).copied().unwrap_or(b' '));
+                    if b.get(i + 1 + l) == Some(&b'\'') {
+                        blank(&mut out, 2 + l);
+                        i += 2 + l;
+                    } else {
+                        blank(&mut out, 1);
+                        i += 1;
+                    }
+                }
+            }
+            b'r' | b'b' => {
+                // Possible raw / byte string prefix; fall through to
+                // a plain identifier byte when the quote never comes.
+                let mut j = i + 1;
+                let mut raw = b[i] == b'r';
+                if b[i] == b'b' && b.get(j) == Some(&b'r') {
+                    raw = true;
+                    j += 1;
+                }
+                if raw {
+                    let mut hashes = 0usize;
+                    while b.get(j) == Some(&b'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if b.get(j) == Some(&b'"') {
+                        blank(&mut out, j + 1 - i);
+                        let mut k = j + 1;
+                        while k < b.len() {
+                            if b[k] == b'\n' {
+                                out.push(b'\n');
+                                line += 1;
+                                k += 1;
+                            } else if b[k] == b'"'
+                                && (0..hashes).all(|h| b.get(k + 1 + h) == Some(&b'#'))
+                            {
+                                blank(&mut out, 1 + hashes);
+                                k += 1 + hashes;
+                                break;
+                            } else {
+                                blank(&mut out, 1);
+                                k += 1;
+                            }
+                        }
+                        i = k;
+                    } else {
+                        out.push(b[i]);
+                        i += 1;
+                    }
+                } else if b.get(j) == Some(&b'"') {
+                    // b"...": blank the prefix, then the quoted body
+                    blank(&mut out, 1);
+                    i = scrub_quoted(b, i + 1, b'"', &mut out, &mut line);
+                } else {
+                    out.push(b[i]);
+                    i += 1;
+                }
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    Scrubbed {
+        code: String::from_utf8(out).expect("scrub only blanks bytes, UTF-8 is preserved"),
+        comments,
+    }
+}
+
+/// Region membership of one source line.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LineFlags {
+    /// Inside a block opened under `#[cfg(test)]` or `#[test]`.
+    pub test: bool,
+    /// Inside a block carrying a `lint: hotpath` tag.
+    pub hotpath: bool,
+}
+
+/// Index of the `]` closing an attribute whose `[` sits at `i - 1`
+/// (bracket nesting respected); `lb.len()` when unterminated.
+fn attr_close(lb: &[u8], mut i: usize) -> usize {
+    let mut depth = 1usize;
+    while i < lb.len() {
+        match lb[i] {
+            b'[' => depth += 1,
+            b']' => {
+                depth -= 1;
+                if depth == 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Per-line region flags over scrubbed code (1-indexed; index 0 is
+/// unused padding). `hotpath_tag_lines` are the lines carrying a
+/// `lint: hotpath` comment (the caller extracts them from
+/// [`Scrubbed::comments`]); each tag opens a region at its line's
+/// brace depth that closes with the enclosing block.
+pub fn line_regions(code: &str, hotpath_tag_lines: &[usize]) -> Vec<LineFlags> {
+    let nlines = code.lines().count();
+    let mut flags = vec![LineFlags::default(); nlines + 2];
+    let mut depth: i64 = 0;
+    let mut pending_test = false;
+    let mut test_stack: Vec<i64> = Vec::new();
+    let mut hot_stack: Vec<i64> = Vec::new();
+    for (idx, text) in code.lines().enumerate() {
+        let line_no = idx + 1;
+        if hotpath_tag_lines.contains(&line_no) {
+            hot_stack.push(depth);
+        }
+        flags[line_no] = LineFlags {
+            test: !test_stack.is_empty(),
+            hotpath: !hot_stack.is_empty(),
+        };
+        let lb = text.as_bytes();
+        let mut i = 0usize;
+        while i < lb.len() {
+            match lb[i] {
+                b'#' if lb.get(i + 1) == Some(&b'[') => {
+                    let close = attr_close(lb, i + 2);
+                    let attr = &text[i + 2..close.min(lb.len())];
+                    // `cfg(test)` exactly — `cfg(not(test))` must NOT
+                    // open a test region.
+                    if attr.contains("cfg(test)") || attr.trim() == "test" {
+                        pending_test = true;
+                    }
+                    i = close + 1;
+                }
+                b'{' => {
+                    depth += 1;
+                    if pending_test {
+                        test_stack.push(depth);
+                        pending_test = false;
+                    }
+                    i += 1;
+                }
+                b'}' => {
+                    depth -= 1;
+                    while test_stack.last().is_some_and(|d| depth < *d) {
+                        test_stack.pop();
+                    }
+                    while hot_stack.last().is_some_and(|d| depth < *d) {
+                        hot_stack.pop();
+                    }
+                    i += 1;
+                }
+                b';' => {
+                    // attribute on a braceless item: `#[cfg(test)] use ..;`
+                    pending_test = false;
+                    i += 1;
+                }
+                _ => i += 1,
+            }
+        }
+    }
+    flags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrub_blanks_strings_and_keeps_layout() {
+        let src = "let a = \"thread::spawn\";\nlet b = 1;\n";
+        let s = scrub(src);
+        assert_eq!(s.code.len(), src.len());
+        assert!(!s.code.contains("thread::spawn"));
+        assert!(s.code.contains("let b = 1;"));
+        assert_eq!(s.code.matches('\n').count(), 2);
+    }
+
+    #[test]
+    fn scrub_handles_raw_and_byte_strings() {
+        let src = "let a = r#\"x \"quoted\" HashMap\"#;\nlet b = b\"bytes\\\"esc\";\nlet c = br##\"deep\"# still\"##;\nlet tail = 9;\n";
+        let s = scrub(src);
+        assert!(!s.code.contains("HashMap"));
+        assert!(!s.code.contains("quoted"));
+        assert!(!s.code.contains("bytes"));
+        assert!(!s.code.contains("still"));
+        assert!(s.code.contains("let tail = 9;"));
+    }
+
+    #[test]
+    fn scrub_distinguishes_chars_from_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) -> char { let q = '\\''; let r = '{'; 'x' }\nlet open = 1;\n";
+        let s = scrub(src);
+        // the char-literal braces/quotes are blanked...
+        assert!(!s.code.contains("'{'"), "{}", s.code);
+        assert!(!s.code.contains("'x'"));
+        // ...while lifetime names survive as plain identifiers
+        assert!(s.code.contains("a str"));
+        assert!(s.code.contains("let open = 1;"));
+        // brace balance is preserved: one open, one close
+        assert_eq!(s.code.matches('{').count(), 1);
+        assert_eq!(s.code.matches('}').count(), 1);
+    }
+
+    #[test]
+    fn scrub_collects_comments_and_nests_blocks() {
+        let src = "let x = 1; // lint: hotpath\n/* outer /* inner */ still comment */ let y = 2;\n";
+        let s = scrub(src);
+        assert_eq!(s.comments.len(), 1);
+        assert_eq!(s.comments[0].line, 1);
+        assert_eq!(s.comments[0].text.trim(), "lint: hotpath");
+        assert!(!s.code.contains("still comment"));
+        assert!(s.code.contains("let y = 2;"));
+    }
+
+    #[test]
+    fn regions_track_cfg_test_blocks() {
+        let src = "fn live() {\n    work();\n}\n#[cfg(test)]\nmod tests {\n    fn t() {\n        check();\n    }\n}\nfn live2() {}\n";
+        let f = line_regions(src, &[]);
+        assert!(!f[2].test, "body of live()");
+        assert!(f[6].test && f[7].test, "inside mod tests");
+        assert!(!f[10].test, "after the test mod closes");
+    }
+
+    #[test]
+    fn regions_ignore_cfg_not_test() {
+        let src = "#[cfg(not(test))]\nmod prod {\n    work();\n}\n";
+        let f = line_regions(src, &[]);
+        assert!(!f[3].test);
+    }
+
+    #[test]
+    fn regions_close_hotpath_with_block() {
+        let src = "fn hot() {\n\n    inner();\n    if x {\n        deep();\n    }\n}\nfn cold() {\n    other();\n}\n";
+        // tag on line 2 (blank in scrubbed code where the comment was)
+        let f = line_regions(src, &[2]);
+        assert!(f[3].hotpath && f[5].hotpath, "tagged block and nested block");
+        assert!(!f[9].hotpath, "next function is outside the region");
+    }
+}

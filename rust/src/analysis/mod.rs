@@ -1,0 +1,731 @@
+//! `ttedge-lint` — the repo-invariant static-analysis pass.
+//!
+//! Every headline number in this reproduction (the Table-III pins, the
+//! bench self-assertions) rests on bit-identity contracts: kernel vs
+//! reference, serial vs parallel, record vs replay. The architectural
+//! rules that keep those contracts true used to live only in ROADMAP
+//! prose and code comments; this module makes them machine-checked.
+//! The rules (deny-by-default, run by the `ttedge-lint` binary over
+//! `src/`, `tests/`, and `benches/`):
+//!
+//! | rule | what it catches |
+//! |------|-----------------|
+//! | `no-adhoc-threads` | `std::thread::{spawn,scope}` outside the blessed concurrency owners (`pipeline`, `sim/cost`, `ttd/svd/bidiag`, `serve`, `coordinator`) and `#[cfg(test)]` blocks |
+//! | `single-entry-point` | direct `ttd::decompose` / `pipeline::compress_layers*` calls outside `job.rs` and the defining modules (the PR-3 rule: `CompressionJob` is the one entry point) |
+//! | `no-unordered-iteration` | iterating a `HashMap`/`HashSet` (hasher order is not a total order) |
+//! | `no-wallclock-or-unseeded-rng` | `Instant::now` / `SystemTime::now` / unseeded RNG outside `benches/` and `src/metrics/` (artifacts must stay byte-deterministic) |
+//! | `hard-assert-dispatch-guards` | `debug_assert!` in `tensor.rs`/`bidiag.rs` kernel entry paths (the PR-7 `matmul_acc` bug class: guards that compile out in release) |
+//! | `no-hotpath-alloc` | allocation (`Vec::new`, `vec![]`, `.clone()`, `.collect()`, ...) inside a block tagged `lint: hotpath` (the `WyScratch` bug class) |
+//! | `lock-discipline` | bare `.lock().unwrap()` / `.lock().expect(..)` — each mutex gets one named lock helper stating its poison policy |
+//!
+//! Suppression is per-line via an allow pragma whose reason is
+//! **mandatory and non-empty**:
+//!
+//! ```text
+//! value.pragma_target_line();   <comment> lint: allow(<rule-id>): <reason>
+//! ```
+//!
+//! (written with `//` in real code; spelled `<comment>` above only so
+//! this doc comment is not itself a pragma). A pragma on a line of its
+//! own covers the next non-blank code line instead. A pragma with an
+//! empty reason or an unknown rule id is itself reported as a
+//! `malformed-pragma` violation and suppresses nothing.
+//!
+//! Hot regions are opened with a `lint: hotpath` comment placed on its
+//! own line as the first line inside the block it covers; the region
+//! closes with that block's closing brace.
+//!
+//! The pass is wired in three places: the `ttedge-lint` binary (CI's
+//! `static-analysis` job runs it in deny mode), the fixture suite in
+//! `tests/lint_rules.rs` proving each rule fires with the right
+//! `file:line`, and a clean-tree smoke test that keeps the real tree
+//! at zero violations under `cargo test`.
+
+pub mod lexer;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use lexer::{line_regions, scrub};
+
+/// Blessed `std::thread` owners: the modules whose *job* is
+/// parallelism, each carrying its own determinism argument (row-band
+/// partitioning, ordered response slots, quorum barriers). Everything
+/// else routes through them. Entries ending in `/` bless a directory.
+const THREAD_OWNERS: &[&str] = &[
+    "src/pipeline/",
+    "src/sim/cost.rs",
+    "src/ttd/svd/bidiag.rs",
+    "src/serve/",
+    "src/coordinator/",
+];
+
+/// Callers allowed to invoke the raw numerics entry points directly:
+/// the `CompressionJob` owner itself and the defining modules.
+const ENTRY_OWNERS: &[&str] = &["src/job.rs", "src/pipeline/", "src/ttd/"];
+
+/// Paths where wall-clock reads are the *point* (operator-facing
+/// timing that never feeds a byte-pinned artifact).
+const WALLCLOCK_EXEMPT: &[&str] = &["src/metrics/"];
+
+/// Kernel entry-path files where a size/shape guard must be a hard
+/// assert (the PR-7 `matmul_acc` rule).
+const KERNEL_GUARD_FILES: &[&str] = &["src/ttd/tensor.rs", "src/ttd/svd/bidiag.rs"];
+
+/// Which tree a file came from; drives per-rule scoping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FileClass {
+    Src,
+    Tests,
+    Benches,
+}
+
+impl FileClass {
+    pub fn of(rel_path: &str) -> FileClass {
+        if rel_path.starts_with("tests/") {
+            FileClass::Tests
+        } else if rel_path.starts_with("benches/") {
+            FileClass::Benches
+        } else {
+            FileClass::Src
+        }
+    }
+}
+
+/// The enforced rule set. `MalformedPragma` is the meta-rule for
+/// broken suppression comments; it has no allow pragma of its own.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    NoAdhocThreads,
+    SingleEntryPoint,
+    NoUnorderedIteration,
+    NoWallclock,
+    HardAssertDispatchGuards,
+    NoHotpathAlloc,
+    LockDiscipline,
+    MalformedPragma,
+}
+
+impl Rule {
+    pub const ENFORCED: [Rule; 7] = [
+        Rule::NoAdhocThreads,
+        Rule::SingleEntryPoint,
+        Rule::NoUnorderedIteration,
+        Rule::NoWallclock,
+        Rule::HardAssertDispatchGuards,
+        Rule::NoHotpathAlloc,
+        Rule::LockDiscipline,
+    ];
+
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::NoAdhocThreads => "no-adhoc-threads",
+            Rule::SingleEntryPoint => "single-entry-point",
+            Rule::NoUnorderedIteration => "no-unordered-iteration",
+            Rule::NoWallclock => "no-wallclock-or-unseeded-rng",
+            Rule::HardAssertDispatchGuards => "hard-assert-dispatch-guards",
+            Rule::NoHotpathAlloc => "no-hotpath-alloc",
+            Rule::LockDiscipline => "lock-discipline",
+            Rule::MalformedPragma => "malformed-pragma",
+        }
+    }
+
+    /// Resolve an allow-pragma rule id. Only enforced rules resolve —
+    /// `allow(malformed-pragma)` is deliberately unparseable.
+    pub fn from_id(id: &str) -> Option<Rule> {
+        Rule::ENFORCED.iter().copied().find(|r| r.id() == id)
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl Violation {
+    /// The canonical `file:line rule message` output line.
+    pub fn render(&self) -> String {
+        format!("{}:{} {} {}", self.file, self.line, self.rule.id(), self.message)
+    }
+}
+
+/// A parsed, well-formed `lint: allow(<rule>): <reason>` pragma.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AllowPragma {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub reason: String,
+}
+
+/// Per-file result: surviving violations (post-suppression, sorted by
+/// line) and every well-formed allow pragma found.
+#[derive(Clone, Debug, Default)]
+pub struct FileAnalysis {
+    pub violations: Vec<Violation>,
+    pub allows: Vec<AllowPragma>,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn find_with(line: &str, pat: &str, prev_ok: impl Fn(char) -> bool) -> Option<usize> {
+    let mut from = 0;
+    while let Some(rel) = line[from..].find(pat) {
+        let at = from + rel;
+        let ok = match line[..at].chars().next_back() {
+            None => true,
+            Some(prev) => prev_ok(prev),
+        };
+        if ok {
+            return Some(at);
+        }
+        from = at + 1;
+    }
+    None
+}
+
+/// First occurrence of `pat` not preceded by an identifier character
+/// (path qualification like `std::` before it is fine).
+fn find_qualified(line: &str, pat: &str) -> Option<usize> {
+    find_with(line, pat, |prev| !is_ident_char(prev))
+}
+
+/// First occurrence of `pat` as a bare token: not preceded by an
+/// identifier char, `:` (path segment) or `.` (method/field) — so
+/// `tucker::decompose(` does not match a bare `decompose(`.
+fn find_bare(line: &str, pat: &str) -> Option<usize> {
+    find_with(line, pat, |prev| !is_ident_char(prev) && prev != ':' && prev != '.')
+}
+
+fn path_in(rel: &str, list: &[&str]) -> bool {
+    list.iter().any(|p| {
+        if p.ends_with('/') {
+            rel.starts_with(p)
+        } else {
+            rel == *p
+        }
+    })
+}
+
+/// Trailing identifier of `s` (after trimming), if any.
+fn trailing_ident(s: &str) -> Option<String> {
+    let s = s.trim_end();
+    let start = s
+        .char_indices()
+        .rev()
+        .take_while(|(_, c)| is_ident_char(*c))
+        .last()
+        .map(|(i, _)| i)?;
+    let ident = &s[start..];
+    let head = ident.chars().next()?;
+    if head.is_ascii_alphabetic() || head == '_' {
+        Some(ident.to_string())
+    } else {
+        None
+    }
+}
+
+/// Record hash-container bindings declared on this line: both
+/// `name: HashMap<..>` (let/field/param annotations) and
+/// `name = HashMap::new()` style initializers.
+fn collect_hash_decls(line: &str, names: &mut Vec<String>) {
+    for marker in ["HashMap", "HashSet"] {
+        let mut from = 0;
+        while let Some(rel) = line[from..].find(marker) {
+            let at = from + rel;
+            from = at + marker.len();
+            if let Some(prev) = line[..at].chars().next_back() {
+                if is_ident_char(prev) {
+                    continue;
+                }
+            }
+            let before = line[..at].trim_end();
+            let name = if let Some(annotated) = before.strip_suffix(':') {
+                trailing_ident(annotated)
+            } else if before.ends_with('=') {
+                trailing_ident(before.trim_end_matches('=').trim_end())
+            } else {
+                None
+            };
+            if let Some(n) = name {
+                if !names.contains(&n) {
+                    names.push(n);
+                }
+            }
+        }
+    }
+}
+
+/// Whether this line is a `for .. in <path>` loop whose iterated
+/// expression's last path segment is `name`.
+fn for_loop_over(line: &str, name: &str) -> bool {
+    let t = line.trim_start();
+    if !t.starts_with("for ") {
+        return false;
+    }
+    let Some(pos) = t.find(" in ") else { return false };
+    let mut expr = t[pos + 4..].trim_start();
+    while let Some(rest) = expr.strip_prefix('&') {
+        expr = rest.trim_start();
+    }
+    expr = expr.strip_prefix("mut ").unwrap_or(expr).trim_start();
+    let end = expr
+        .find(|c: char| !is_ident_char(c) && c != '.' && c != ':')
+        .unwrap_or(expr.len());
+    let path = &expr[..end];
+    path == name || path.ends_with(&format!(".{name}")) || path.ends_with(&format!("::{name}"))
+}
+
+fn parse_allow(rest: &str) -> Result<(Rule, String), String> {
+    let Some(body) = rest.strip_prefix("allow(") else {
+        return Err(format!(
+            "unrecognized lint directive `{rest}` — expected `allow(<rule>): <reason>` or `hotpath`"
+        ));
+    };
+    let Some(close) = body.find(')') else {
+        return Err("malformed allow pragma: missing `)`".to_string());
+    };
+    let rule_id = body[..close].trim();
+    let Some(rule) = Rule::from_id(rule_id) else {
+        return Err(format!("unknown rule `{rule_id}` in allow pragma"));
+    };
+    let after = body[close + 1..].trim_start();
+    let Some(reason) = after.strip_prefix(':') else {
+        return Err(format!("allow({rule_id}) pragma is missing its `: <reason>`"));
+    };
+    let reason = reason.trim();
+    if reason.is_empty() {
+        return Err(format!(
+            "allow({rule_id}) pragma has an empty reason — a non-empty reason is mandatory"
+        ));
+    }
+    Ok((rule, reason.to_string()))
+}
+
+/// The line an allow pragma covers: its own line when that line has
+/// code (trailing pragma), else the next non-blank code line.
+fn allow_target(lines: &[&str], pragma_line: usize) -> usize {
+    let own_has_code = lines
+        .get(pragma_line - 1)
+        .map(|l| !l.trim().is_empty())
+        .unwrap_or(false);
+    if own_has_code {
+        return pragma_line;
+    }
+    for l in pragma_line + 1..=lines.len() {
+        if !lines[l - 1].trim().is_empty() {
+            return l;
+        }
+    }
+    pragma_line
+}
+
+struct LineCtx<'a> {
+    rel: &'a str,
+    class: FileClass,
+    in_test: bool,
+    hotpath: bool,
+    hash_names: &'a [String],
+    imports_decompose: bool,
+    imports_compress_layers: bool,
+}
+
+fn check_line(ctx: &LineCtx<'_>, line_no: usize, text: &str, out: &mut Vec<Violation>) {
+    let mut push = |rule: Rule, message: String| {
+        out.push(Violation {
+            file: ctx.rel.to_string(),
+            line: line_no,
+            rule,
+            message,
+        });
+    };
+
+    // no-adhoc-threads
+    if !ctx.in_test && !path_in(ctx.rel, THREAD_OWNERS) {
+        for pat in ["thread::spawn", "thread::scope", "thread::Builder"] {
+            if find_qualified(text, pat).is_some() {
+                push(
+                    Rule::NoAdhocThreads,
+                    format!(
+                        "`{pat}` outside a blessed concurrency owner — route parallelism \
+                         through pipeline/sim::cost/ttd::svd::bidiag/serve/coordinator \
+                         or move it under #[cfg(test)]"
+                    ),
+                );
+            }
+        }
+    }
+
+    // single-entry-point (the PR-3 rule; tests and benches may pin the
+    // raw entry points on purpose)
+    if ctx.class == FileClass::Src && !ctx.in_test && !path_in(ctx.rel, ENTRY_OWNERS) {
+        let qualified = find_qualified(text, "ttd::decompose").is_some()
+            || find_qualified(text, "pipeline::compress_layers").is_some();
+        let bare = (ctx.imports_decompose && find_bare(text, "decompose(").is_some())
+            || (ctx.imports_compress_layers && find_bare(text, "compress_layers").is_some());
+        if qualified || bare {
+            push(
+                Rule::SingleEntryPoint,
+                "direct decompose/compress_layers call — go through CompressionJob \
+                 (job.rs), the single entry point owning kernel selection, spec \
+                 canonicalization, and pass counting"
+                    .to_string(),
+            );
+        }
+    }
+
+    // no-unordered-iteration
+    for name in ctx.hash_names {
+        let method_hit = [
+            ".iter()",
+            ".iter_mut()",
+            ".keys()",
+            ".values()",
+            ".values_mut()",
+            ".into_iter()",
+            ".into_keys()",
+            ".into_values()",
+            ".drain(",
+            ".retain(",
+        ]
+        .iter()
+        .any(|suffix| find_qualified(text, &format!("{name}{suffix}")).is_some());
+        if method_hit || for_loop_over(text, name) {
+            push(
+                Rule::NoUnorderedIteration,
+                format!(
+                    "iterating `{name}` (HashMap/HashSet) observes hasher order — use a \
+                     BTreeMap/sorted view, or state the total-order argument in an allow \
+                     pragma"
+                ),
+            );
+        }
+    }
+
+    // no-wallclock-or-unseeded-rng
+    if ctx.class != FileClass::Benches && !path_in(ctx.rel, WALLCLOCK_EXEMPT) {
+        for pat in [
+            "Instant::now",
+            "SystemTime::now",
+            "thread_rng",
+            "from_entropy",
+            "rand::random",
+        ] {
+            if find_qualified(text, pat).is_some() {
+                push(
+                    Rule::NoWallclock,
+                    format!(
+                        "`{pat}` makes output nondeterministic — confine timing/entropy to \
+                         benches/ or src/metrics/, or justify why it never reaches a \
+                         byte-pinned artifact"
+                    ),
+                );
+            }
+        }
+    }
+
+    // hard-assert-dispatch-guards (the PR-7 bug class)
+    if !ctx.in_test && KERNEL_GUARD_FILES.contains(&ctx.rel) {
+        for pat in ["debug_assert!", "debug_assert_eq!", "debug_assert_ne!"] {
+            if find_qualified(text, pat).is_some() {
+                push(
+                    Rule::HardAssertDispatchGuards,
+                    "debug_assert on a kernel entry path compiles out in release — \
+                     size/shape guards here must be hard asserts (the PR-7 matmul_acc \
+                     bug class)"
+                        .to_string(),
+                );
+            }
+        }
+    }
+
+    // no-hotpath-alloc (the WyScratch bug class). Method-call patterns
+    // (leading `.`) are matched verbatim — their receiver is an
+    // identifier, so the boundary check would never fire on them.
+    if ctx.hotpath {
+        for pat in [
+            "Vec::new(",
+            "Vec::with_capacity(",
+            "vec![",
+            ".to_vec(",
+            ".collect(",
+            ".clone(",
+            "Box::new(",
+            "String::new(",
+            "format!(",
+            ".to_string(",
+            ".to_owned(",
+        ] {
+            let hit = if pat.starts_with('.') {
+                text.contains(pat)
+            } else {
+                find_qualified(text, pat).is_some()
+            };
+            if hit {
+                push(
+                    Rule::NoHotpathAlloc,
+                    format!(
+                        "`{pat}` allocates inside a hotpath region — hoist the buffer \
+                         into caller-owned scratch (the WyScratch pattern)"
+                    ),
+                );
+            }
+        }
+    }
+
+    // lock-discipline
+    if !ctx.in_test {
+        for pat in [".lock().unwrap()", ".lock().expect("] {
+            if text.contains(pat) {
+                push(
+                    Rule::LockDiscipline,
+                    "bare Mutex lock+unwrap — take the lock through the module's named \
+                     lock helper so the poison policy is stated exactly once (see \
+                     cache::ProgramCache::lock_cache)"
+                        .to_string(),
+                );
+            }
+        }
+    }
+}
+
+/// Run every rule over one file. `rel_path` is the `/`-separated path
+/// relative to the crate root (e.g. `src/cache/mod.rs`); it selects
+/// the file class and the blessed-owner exemptions, so fixtures can
+/// probe any scoping behavior by choosing a synthetic label.
+pub fn analyze_source(rel_path: &str, source: &str) -> FileAnalysis {
+    let class = FileClass::of(rel_path);
+    let scrubbed = scrub(source);
+
+    let mut allows: Vec<AllowPragma> = Vec::new();
+    let mut malformed: Vec<Violation> = Vec::new();
+    let mut hotpath_tags: Vec<usize> = Vec::new();
+    for c in &scrubbed.comments {
+        // `///` and `//!` doc text is prose, never a pragma
+        if c.text.starts_with('/') || c.text.starts_with('!') {
+            continue;
+        }
+        let Some(rest) = c.text.trim().strip_prefix("lint:") else {
+            continue;
+        };
+        let rest = rest.trim();
+        if rest == "hotpath" {
+            hotpath_tags.push(c.line);
+            continue;
+        }
+        match parse_allow(rest) {
+            Ok((rule, reason)) => allows.push(AllowPragma {
+                file: rel_path.to_string(),
+                line: c.line,
+                rule,
+                reason,
+            }),
+            Err(message) => malformed.push(Violation {
+                file: rel_path.to_string(),
+                line: c.line,
+                rule: Rule::MalformedPragma,
+                message,
+            }),
+        }
+    }
+
+    let flags = line_regions(&scrubbed.code, &hotpath_tags);
+    let lines: Vec<&str> = scrubbed.code.lines().collect();
+
+    let mut imports_decompose = false;
+    let mut imports_compress_layers = false;
+    let mut hash_names: Vec<String> = Vec::new();
+    for l in &lines {
+        let t = l.trim_start();
+        if t.starts_with("use ") || t.starts_with("pub use ") {
+            if l.contains("ttd") && l.contains("decompose") {
+                imports_decompose = true;
+            }
+            if l.contains("pipeline") && l.contains("compress_layers") {
+                imports_compress_layers = true;
+            }
+        }
+        collect_hash_decls(l, &mut hash_names);
+    }
+
+    let mut violations: Vec<Violation> = Vec::new();
+    for (idx, l) in lines.iter().enumerate() {
+        let line_no = idx + 1;
+        let f = flags[line_no];
+        let ctx = LineCtx {
+            rel: rel_path,
+            class,
+            in_test: f.test || class == FileClass::Tests,
+            hotpath: f.hotpath,
+            hash_names: &hash_names,
+            imports_decompose,
+            imports_compress_layers,
+        };
+        check_line(&ctx, line_no, l, &mut violations);
+    }
+
+    // Suppression: each well-formed allow covers exactly one line.
+    let targets: Vec<(Rule, usize)> = allows
+        .iter()
+        .map(|a| (a.rule, allow_target(&lines, a.line)))
+        .collect();
+    violations.retain(|v| !targets.iter().any(|(r, l)| *r == v.rule && *l == v.line));
+    violations.extend(malformed);
+    violations.sort_by_key(|v| (v.line, v.rule));
+
+    FileAnalysis { violations, allows }
+}
+
+/// Whole-tree report — the payload behind the `lint-report-v1` schema.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub root: String,
+    pub files_scanned: usize,
+    pub violations: Vec<Violation>,
+    pub allows: Vec<AllowPragma>,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Render as `lint-report-v1` JSON. Deterministic: object keys are
+    /// BTreeMap-ordered and files were walked in sorted order.
+    pub fn to_json(&self, mode: &str) -> Json {
+        let violation = |v: &Violation| {
+            let mut o = BTreeMap::new();
+            o.insert("file".to_string(), Json::Str(v.file.clone()));
+            o.insert("line".to_string(), Json::Num(v.line as f64));
+            o.insert("rule".to_string(), Json::Str(v.rule.id().to_string()));
+            o.insert("message".to_string(), Json::Str(v.message.clone()));
+            Json::Obj(o)
+        };
+        let allow = |a: &AllowPragma| {
+            let mut o = BTreeMap::new();
+            o.insert("file".to_string(), Json::Str(a.file.clone()));
+            o.insert("line".to_string(), Json::Num(a.line as f64));
+            o.insert("rule".to_string(), Json::Str(a.rule.id().to_string()));
+            o.insert("reason".to_string(), Json::Str(a.reason.clone()));
+            Json::Obj(o)
+        };
+        let mut obj = BTreeMap::new();
+        obj.insert("schema".to_string(), Json::Str("lint-report-v1".to_string()));
+        obj.insert("mode".to_string(), Json::Str(mode.to_string()));
+        obj.insert("root".to_string(), Json::Str(self.root.clone()));
+        obj.insert(
+            "files_scanned".to_string(),
+            Json::Num(self.files_scanned as f64),
+        );
+        obj.insert(
+            "rules".to_string(),
+            Json::Arr(
+                Rule::ENFORCED
+                    .iter()
+                    .map(|r| Json::Str(r.id().to_string()))
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "violations".to_string(),
+            Json::Arr(self.violations.iter().map(violation).collect()),
+        );
+        obj.insert(
+            "allows".to_string(),
+            Json::Arr(self.allows.iter().map(allow).collect()),
+        );
+        obj.insert("clean".to_string(), Json::Bool(self.clean()));
+        Json::Obj(obj)
+    }
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Walk `src/`, `tests/`, and `benches/` under `root` (whichever
+/// exist), analyzing every `.rs` file in sorted path order.
+pub fn analyze_tree(root: &Path) -> io::Result<Report> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for sub in ["src", "tests", "benches"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs_files(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    let mut violations = Vec::new();
+    let mut allows = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = fs::read_to_string(path)?;
+        let fa = analyze_source(&rel, &text);
+        violations.extend(fa.violations);
+        allows.extend(fa.allows);
+    }
+    Ok(Report {
+        root: root.display().to_string(),
+        files_scanned: files.len(),
+        violations,
+        allows,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_ids_round_trip() {
+        for r in Rule::ENFORCED {
+            assert_eq!(Rule::from_id(r.id()), Some(r));
+        }
+        assert_eq!(Rule::from_id("malformed-pragma"), None);
+        assert_eq!(Rule::from_id("no-such-rule"), None);
+    }
+
+    #[test]
+    fn hash_decl_collection_finds_fields_and_lets() {
+        let mut names = Vec::new();
+        collect_hash_decls("    slots: HashMap<CacheKey, Slot>,", &mut names);
+        collect_hash_decls("    let mut seen = HashSet::new();", &mut names);
+        collect_hash_decls("    let sorted: BTreeMap<u64, K> = x;", &mut names);
+        assert_eq!(names, vec!["slots".to_string(), "seen".to_string()]);
+    }
+
+    #[test]
+    fn bare_match_rejects_qualified_paths() {
+        assert!(find_bare("let d = decompose(&t, &spec);", "decompose(").is_some());
+        assert!(find_bare("let d = tucker::decompose(&t, eps);", "decompose(").is_none());
+        assert!(find_bare("self.decompose(x)", "decompose(").is_none());
+        assert!(find_qualified("crate::ttd::decompose(&t)", "ttd::decompose").is_some());
+        assert!(find_qualified("my_ttd::decomposer(&t)", "ttd::decompose").is_none());
+    }
+
+    #[test]
+    fn string_and_comment_content_never_fires() {
+        let src = "fn f() {\n    let s = \"std::thread::spawn(Instant::now())\";\n    let r = r#\"x.lock().unwrap()\"#;\n}\n";
+        let fa = analyze_source("src/quiet.rs", src);
+        assert!(fa.violations.is_empty(), "{:?}", fa.violations);
+    }
+}

@@ -1,0 +1,94 @@
+//! `ttedge-lint` — run the repo-invariant static-analysis pass over
+//! `src/`, `tests/`, and `benches/` (see `tt_edge::analysis` for the
+//! rule set and pragma grammar).
+//!
+//! ```text
+//! ttedge-lint [--root DIR] [--warn] [--json] [--report PATH]
+//! ```
+//!
+//! * `--root DIR`   crate root to scan (default: auto-detect — the
+//!   cwd if it has a `src/`, else `./rust`, else the compiled-in
+//!   manifest dir, so the binary works from the repo root, from
+//!   `rust/`, and from CI).
+//! * `--warn`       report violations but exit 0 (deny is the default:
+//!   any violation exits 1).
+//! * `--json`       print the `lint-report-v1` document to stdout
+//!   after the `file:line rule message` lines.
+//! * `--report PATH` also write the JSON document to `PATH`.
+//!
+//! Exit codes: 0 clean (or `--warn`), 1 violations in deny mode,
+//! 2 usage error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use tt_edge::analysis;
+use tt_edge::util::cli::Args;
+
+const USAGE: &str = "usage: ttedge-lint [--root DIR] [--warn] [--json] [--report PATH]";
+
+fn resolve_root(explicit: Option<&str>) -> PathBuf {
+    if let Some(dir) = explicit {
+        return PathBuf::from(dir);
+    }
+    if PathBuf::from("src").is_dir() {
+        return PathBuf::from(".");
+    }
+    if PathBuf::from("rust/src").is_dir() {
+        return PathBuf::from("rust");
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    if args.flag("help") {
+        println!("{USAGE}");
+        return ExitCode::SUCCESS;
+    }
+    if let Err(msg) = args.validate(&["root", "report"], &["warn", "json", "help"]) {
+        eprintln!("ttedge-lint: {msg}\n{USAGE}");
+        return ExitCode::from(2);
+    }
+    if !args.positional.is_empty() {
+        eprintln!(
+            "ttedge-lint: unexpected argument `{}`\n{USAGE}",
+            args.positional[0]
+        );
+        return ExitCode::from(2);
+    }
+
+    let root = resolve_root(args.opt("root"));
+    let report = match analysis::analyze_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("ttedge-lint: failed to scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    let mode = if args.flag("warn") { "warn" } else { "deny" };
+    for v in &report.violations {
+        println!("{}", v.render());
+    }
+    let json = report.to_json(mode).render();
+    if args.flag("json") {
+        println!("{json}");
+    }
+    if let Some(path) = args.opt("report") {
+        if let Err(e) = std::fs::write(path, format!("{json}\n")) {
+            eprintln!("ttedge-lint: failed to write --report {path}: {e}");
+            return ExitCode::from(2);
+        }
+    }
+    eprintln!(
+        "ttedge-lint: {} file(s) scanned, {} violation(s), {} allow pragma(s) [{mode} mode]",
+        report.files_scanned,
+        report.violations.len(),
+        report.allows.len()
+    );
+    if mode == "deny" && !report.clean() {
+        return ExitCode::FAILURE;
+    }
+    ExitCode::SUCCESS
+}

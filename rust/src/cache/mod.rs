@@ -28,16 +28,26 @@
 //!   wedges the key.
 //! * **LRU eviction.** Ready entries above `capacity` are evicted
 //!   least-recently-used first (pending slots are never evicted — they
-//!   hold no program yet and a waiter is counting on them). Capacity 0
-//!   is the degenerate "uncached" mode benchmarks use as a baseline:
-//!   every insert is immediately displaced, residency stays 0, and
-//!   correctness is unchanged.
+//!   hold no program yet and a waiter is counting on them). Recency is
+//!   tracked in a `BTreeMap<tick, key>` side index: ticks are unique
+//!   and monotonic under the lock, so BTreeMap order *is* recency
+//!   order and the victim is `pop_first()` — O(log n), deterministic
+//!   by construction rather than by a full-map scan whose tie-breaking
+//!   depends on hasher order. Capacity 0 is the degenerate "uncached"
+//!   mode benchmarks use as a baseline: every insert is immediately
+//!   displaced, residency stays 0, and correctness is unchanged.
 //! * **Observability.** All counters live in
 //!   [`crate::metrics::CacheStats`] and obey its conservation laws;
 //!   [`ProgramCache::stats`] snapshots them under the lock.
+//! * **Lock discipline.** Every acquisition of the state mutex goes
+//!   through [`ProgramCache::lock_cache`], the module's one named
+//!   lock helper — it documents why *propagating* a poison panic is
+//!   the correct policy here, so no call site carries its own ad-hoc
+//!   `.unwrap()` judgment (enforced by `ttedge-lint`'s
+//!   lock-discipline rule).
 
-use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use crate::job::JobProgram;
 use crate::metrics::CacheStats;
@@ -138,6 +148,11 @@ enum Slot {
 struct Inner {
     capacity: usize,
     slots: HashMap<CacheKey, Slot>,
+    /// Recency side index: last-use tick → key, mirroring exactly the
+    /// `Slot::Ready` entries of `slots` (pending slots are never
+    /// indexed). Ticks are unique and monotonic under the lock, so
+    /// the map's first entry is always the LRU victim.
+    lru: BTreeMap<u64, CacheKey>,
     /// Monotonic logical clock; bumped on every cache operation so
     /// last-use ticks are unique and LRU order is total.
     tick: u64,
@@ -145,21 +160,27 @@ struct Inner {
 }
 
 impl Inner {
+    /// Re-seat a just-used ready entry at its new tick: the slot's
+    /// `last_used` and the `lru` index must move together or eviction
+    /// order silently drifts from true recency.
+    fn touch(&mut self, key: &CacheKey, old_tick: u64, new_tick: u64) {
+        self.lru.remove(&old_tick);
+        self.lru.insert(new_tick, key.clone());
+    }
+
     fn evict_over_capacity(&mut self) {
         while self.stats.resident > self.capacity as u64 {
-            let victim = self
-                .slots
-                .iter()
-                .filter_map(|(k, s)| match s {
-                    Slot::Ready(_, t) => Some((*t, k.clone())),
-                    Slot::Pending => None,
-                })
-                .min_by_key(|(t, _)| *t);
-            let Some((_, key)) = victim else { break };
-            if let Some(Slot::Ready(p, _)) = self.slots.remove(&key) {
-                self.stats.evictions += 1;
-                self.stats.resident -= 1;
-                self.stats.resident_bytes -= p.ops.encoded_bytes() as u64;
+            let Some((_, key)) = self.lru.pop_first() else { break };
+            match self.slots.remove(&key) {
+                Some(Slot::Ready(p, _)) => {
+                    self.stats.evictions += 1;
+                    self.stats.resident -= 1;
+                    self.stats.resident_bytes -= p.ops.encoded_bytes() as u64;
+                }
+                // The index mirrors Ready slots exactly; a dangling
+                // tick means the mirror (and `resident`) is corrupt —
+                // fail loudly instead of evicting garbage.
+                _ => unreachable!("lru tick index points at a missing or pending slot"),
             }
         }
     }
@@ -168,12 +189,15 @@ impl Inner {
         self.tick += 1;
         let tick = self.tick;
         let bytes = program.ops.encoded_bytes() as u64;
-        let prev = self.slots.insert(key, Slot::Ready(program, tick));
+        let prev = self.slots.insert(key.clone(), Slot::Ready(program, tick));
+        self.lru.insert(tick, key);
         self.stats.inserts += 1;
         match prev {
             // Replacement: the displaced program counts as evicted —
-            // this is what keeps `inserts - evictions == resident`.
-            Some(Slot::Ready(old, _)) => {
+            // this is what keeps `inserts - evictions == resident` —
+            // and its stale tick leaves the index with it.
+            Some(Slot::Ready(old, old_tick)) => {
+                self.lru.remove(&old_tick);
                 self.stats.evictions += 1;
                 self.stats.resident_bytes -= old.ops.encoded_bytes() as u64;
             }
@@ -210,7 +234,7 @@ impl MissGuard<'_> {
     pub fn fulfill(mut self, program: JobProgram) -> Arc<JobProgram> {
         let arc = Arc::new(program);
         {
-            let mut inner = self.cache.state.lock().expect("program cache poisoned");
+            let mut inner = self.cache.lock_cache();
             inner.store(self.key.clone(), arc.clone());
         }
         self.fulfilled = true;
@@ -225,7 +249,7 @@ impl Drop for MissGuard<'_> {
             return;
         }
         {
-            let mut inner = self.cache.state.lock().expect("program cache poisoned");
+            let mut inner = self.cache.lock_cache();
             if matches!(inner.slots.get(&self.key), Some(Slot::Pending)) {
                 inner.slots.remove(&self.key);
             }
@@ -261,6 +285,7 @@ impl ProgramCache {
             state: Mutex::new(Inner {
                 capacity,
                 slots: HashMap::new(),
+                lru: BTreeMap::new(),
                 tick: 0,
                 stats: CacheStats::default(),
             }),
@@ -268,13 +293,29 @@ impl ProgramCache {
         }
     }
 
+    /// The one blessed way to take the cache mutex — every call site
+    /// in this module goes through here.
+    ///
+    /// Poison policy: **propagate the panic**. The lock is only
+    /// poisoned if a thread panicked *inside* one of this module's
+    /// short critical sections, which would leave a half-applied
+    /// counter update and silently break the [`CacheStats`]
+    /// conservation laws if we limped on via `into_inner`. Crashing
+    /// loudly is the deterministic option, and single-flight safety
+    /// does not depend on recovery: a recording claimant runs its
+    /// numerics *outside* the lock, and its [`MissGuard`] releases the
+    /// Pending key on drop, so a claimant panic never wedges waiters.
+    fn lock_cache(&self) -> MutexGuard<'_, Inner> {
+        self.state.lock().expect("program cache poisoned") // lint: allow(lock-discipline): this IS the named lock helper stating the poison policy; every other site calls lock_cache()
+    }
+
     pub fn capacity(&self) -> usize {
-        self.state.lock().expect("program cache poisoned").capacity
+        self.lock_cache().capacity
     }
 
     /// Ready programs resident right now.
     pub fn len(&self) -> usize {
-        self.state.lock().expect("program cache poisoned").stats.resident as usize
+        self.lock_cache().stats.resident as usize
     }
 
     pub fn is_empty(&self) -> bool {
@@ -283,13 +324,13 @@ impl ProgramCache {
 
     /// Counter snapshot (consistent: taken under the lock).
     pub fn stats(&self) -> CacheStats {
-        self.state.lock().expect("program cache poisoned").stats
+        self.lock_cache().stats
     }
 
     /// Whether `key` is resident and ready. No counter movement, no
     /// LRU touch — an observation hook for tests, not a lookup.
     pub fn contains(&self, key: &CacheKey) -> bool {
-        let inner = self.state.lock().expect("program cache poisoned");
+        let inner = self.lock_cache();
         matches!(inner.slots.get(key), Some(Slot::Ready(..)))
     }
 
@@ -299,11 +340,11 @@ impl ProgramCache {
     /// the [`MissGuard`] obligating this caller to record.
     pub fn claim(&self, key: &CacheKey) -> Claim<'_> {
         enum Probe {
-            Ready(Arc<JobProgram>),
+            Ready(Arc<JobProgram>, u64),
             Pending,
             Absent,
         }
-        let mut inner = self.state.lock().expect("program cache poisoned");
+        let mut inner = self.lock_cache();
         inner.stats.lookups += 1;
         loop {
             inner.tick += 1;
@@ -312,14 +353,15 @@ impl ProgramCache {
             // the wait / insert below.
             let probe = match inner.slots.get_mut(key) {
                 Some(Slot::Ready(program, last_used)) => {
-                    *last_used = tick;
-                    Probe::Ready(program.clone())
+                    let prev = std::mem::replace(last_used, tick);
+                    Probe::Ready(program.clone(), prev)
                 }
                 Some(Slot::Pending) => Probe::Pending,
                 None => Probe::Absent,
             };
             match probe {
-                Probe::Ready(program) => {
+                Probe::Ready(program, prev_tick) => {
+                    inner.touch(key, prev_tick, tick);
                     inner.stats.hits += 1;
                     return Claim::Hit(program);
                 }
@@ -346,19 +388,20 @@ impl ProgramCache {
     /// installs a pending slot. An in-flight pending key counts as a
     /// miss here — use [`ProgramCache::claim`] for single-flight.
     pub fn lookup(&self, key: &CacheKey) -> Option<Arc<JobProgram>> {
-        let mut inner = self.state.lock().expect("program cache poisoned");
+        let mut inner = self.lock_cache();
         inner.stats.lookups += 1;
         inner.tick += 1;
         let tick = inner.tick;
         let found = match inner.slots.get_mut(key) {
             Some(Slot::Ready(program, last_used)) => {
-                *last_used = tick;
-                Some(program.clone())
+                let prev = std::mem::replace(last_used, tick);
+                Some((program.clone(), prev))
             }
             _ => None,
         };
         match found {
-            Some(program) => {
+            Some((program, prev_tick)) => {
+                inner.touch(key, prev_tick, tick);
                 inner.stats.hits += 1;
                 Some(program)
             }
@@ -376,7 +419,7 @@ impl ProgramCache {
     pub fn insert(&self, key: CacheKey, program: JobProgram) -> Arc<JobProgram> {
         let arc = Arc::new(program);
         {
-            let mut inner = self.state.lock().expect("program cache poisoned");
+            let mut inner = self.lock_cache();
             inner.store(key, arc.clone());
         }
         self.ready_cv.notify_all();
@@ -510,6 +553,40 @@ mod tests {
         assert!(s.conserved(), "{s:?}");
         assert_eq!((s.inserts, s.evictions, s.resident), (1, 1, 0));
         assert_eq!(s.resident_bytes, 0);
+    }
+
+    #[test]
+    fn lru_index_mirrors_ready_slots_exactly() {
+        // Churn a capacity-2 cache through inserts, replacements,
+        // touches, and a pending claim, then audit the invariant the
+        // eviction path relies on: `lru` holds exactly one entry per
+        // Ready slot, keyed by that slot's current last-use tick.
+        let cache = ProgramCache::new(2);
+        let program = sample_program();
+        cache.insert(key(0.1), program.clone());
+        cache.insert(key(0.2), program.clone());
+        cache.lookup(&key(0.1)); // touch
+        cache.insert(key(0.3), program.clone()); // evicts 0.2
+        cache.insert(key(0.3), program.clone()); // replacement
+        let pending = key(0.4);
+        let Claim::Miss(guard) = cache.claim(&pending) else {
+            panic!("fresh key must miss")
+        };
+        let inner = cache.lock_cache();
+        assert_eq!(inner.lru.len() as u64, inner.stats.resident);
+        for (tick, k) in &inner.lru {
+            match inner.slots.get(k) {
+                Some(Slot::Ready(_, last_used)) => assert_eq!(last_used, tick),
+                _ => panic!("lru entry for tick {tick} has no ready slot"),
+            }
+        }
+        assert!(
+            !inner.lru.values().any(|k| *k == pending),
+            "pending slots must never be indexed"
+        );
+        drop(inner);
+        drop(guard);
+        assert!(cache.stats().conserved());
     }
 
     #[test]

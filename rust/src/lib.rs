@@ -21,6 +21,7 @@
 // `-D warnings` CI trip on the iterator-style suggestion.
 #![allow(clippy::needless_range_loop)]
 
+pub mod analysis;
 pub mod cache;
 pub mod coordinator;
 pub mod dse;

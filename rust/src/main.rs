@@ -177,6 +177,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     // so the simulated cycles (and --json bytes) never move.
     let hbd_threads: usize = opt_or(args, "hbd-threads", 0);
     let configs = [SocConfig::baseline(), SocConfig::tt_edge()];
+    // lint: allow(no-wallclock-or-unseeded-rng): operator-facing wall timing on stderr only; simulated cycles and --json bytes never depend on it
     let t0 = std::time::Instant::now();
     // Streaming job: ops fold into both SoC cost models online — no
     // trace is materialized at any --parallel width.
@@ -237,6 +238,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
         rows.push(("TRD [13]", "trd", f64::from(err), dense - conv_dense + params));
     }
     if method == "all" || method == "ttd" {
+        // lint: allow(no-wallclock-or-unseeded-rng): operator-facing wall timing on stderr only; table artifacts are derived from deterministic job outputs
         let t0 = std::time::Instant::now();
         let out = CompressionJob::model(&layers)
             .eps(eps)
@@ -320,6 +322,7 @@ fn cmd_explore(args: &Args) -> Result<()> {
         parallel: opt_or(args, "parallel", 1),
     };
 
+    // lint: allow(no-wallclock-or-unseeded-rng): operator-facing wall timing on stderr only; DSE rankings are cycle-model ordered, never wall-clock ordered
     let t0 = std::time::Instant::now();
     let out = dse::explore(&cfg);
     // Record-once / replay-many instrumentation: one numerics pass
@@ -401,6 +404,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let requests = serve::parse_requests(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
     anyhow::ensure!(!requests.is_empty(), "{path}: no requests in the queue");
 
+    // lint: allow(no-wallclock-or-unseeded-rng): wall_ms feeds the serve-metrics artifact by design (PR-6); byte-pinned outputs exclude it
     let t0 = std::time::Instant::now();
     let out = serve::serve(&requests, &ServeConfig { workers, cache_capacity: capacity });
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;

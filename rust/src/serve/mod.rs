@@ -28,6 +28,18 @@
 //! * **Exactly-K numerics** — R requests over K unique cache keys cost
 //!   exactly K numerics passes at any worker count (single-flight
 //!   misses; see [`crate::cache`]).
+//!
+//! **Lock discipline / poison policy.** This module owns no mutex of
+//! its own: workers share `&ProgramCache` and the response channel,
+//! and every cache-lock acquisition happens inside
+//! [`ProgramCache::lock_cache`] — the cache's single named helper,
+//! whose documented policy is to *propagate* a poison panic rather
+//! than recover. That propagation is safe for serve's single-flight
+//! protocol because a panicking recorder runs its numerics outside
+//! the lock and its `MissGuard` releases the Pending key on drop, so
+//! the remaining workers either take over the recording or crash the
+//! drain loudly — they never deadlock on a wedged key and never serve
+//! a response derived from half-updated cache state.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};

@@ -145,6 +145,7 @@ pub fn compress_model<S: TraceSink>(
     let mut max_rel = 0.0f32;
     for (layer, w) in layers {
         let t = w.reshape(&layer.tt_dims());
+        // lint: allow(single-entry-point): pre-Job serial reference path kept as the oracle the JobProgram pipeline is tested against (PR-3)
         let d = decompose(&t, &spec, sink);
         let err = crate::ttd::relative_error(&t, &d);
         if err > max_rel {

@@ -133,7 +133,11 @@ fn bidiagonalize_with<S: TraceSink>(a: &Matrix, sink: &mut S, naive: bool) -> Bi
         let mut wy = WyScratch::for_shape(m, n);
         let u = accumulate_u_blocked(m, n, &red.vl, &mut wy, threads);
         let vt = accumulate_vt_blocked(n, &red.vr, &mut wy, threads);
-        debug_assert_eq!(wy.reallocs, 0, "WY scratch must be sized once per factorization");
+        // Hard assert (the PR-7 rule): a release-mode realloc means a
+        // panel was mis-sized — the zero-alloc contract the benches
+        // self-assert against would rot silently under debug_assert.
+        // O(1), checked once per factorization.
+        assert_eq!(wy.reallocs, 0, "WY scratch must be sized once per factorization");
         (u, vt)
     };
 
@@ -459,6 +463,7 @@ fn embed_panel(
     v_mat: &mut [f32],
     vt_mat: &mut [f32],
 ) {
+    // lint: hotpath
     let nb = seats.len();
     for (j, &s) in seats.iter().enumerate() {
         let (v, _) = &vs[s];
@@ -482,6 +487,7 @@ fn wy_t(
     t_mat: &mut [f32],
     s_buf: &mut [f32],
 ) {
+    // lint: hotpath
     let nb = seats.len();
     for (j, &sj) in seats.iter().enumerate() {
         let (vj, beta) = &vs[sj];

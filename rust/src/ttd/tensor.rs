@@ -52,12 +52,14 @@ impl Matrix {
 
     #[inline(always)]
     pub fn get(&self, r: usize, c: usize) -> f32 {
+        // lint: allow(hard-assert-dispatch-guards): per-element accessor inside O(mkn) loops, not a dispatch guard — the slice index below hard-panics on OOB either way
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c]
     }
 
     #[inline(always)]
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        // lint: allow(hard-assert-dispatch-guards): per-element accessor inside O(mkn) loops, not a dispatch guard — the slice index below hard-panics on OOB either way
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c] = v;
     }
@@ -147,10 +149,14 @@ impl Matrix {
     /// callers in the HBD loop reuse one buffer across all columns so
     /// the hot path performs zero allocations.
     pub fn apply_house_left(&mut self, r0: usize, c0: usize, v: &[f32], beta: f32, scratch: &mut [f32]) {
+        // lint: hotpath
         if v.is_empty() {
             return;
         }
-        debug_assert_eq!(v.len(), self.rows - r0);
+        // Hard assert: this is a kernel entry-path size guard (the
+        // PR-7 bug class) — a wrong v length in release would read
+        // the wrong logical rows, O(1) cost next to the O(mn) body.
+        assert_eq!(v.len(), self.rows - r0);
         let cols = self.cols;
         let width = cols - c0;
         let w = &mut scratch[..width];
@@ -183,10 +189,13 @@ impl Matrix {
     /// `self[r0.., c0..]`: `A <- A + (A v)(v/beta)` with
     /// `v.len() == cols - c0`. Row-at-a-time, no scratch needed.
     pub fn apply_house_right(&mut self, r0: usize, c0: usize, v: &[f32], beta: f32) {
+        // lint: hotpath
         if v.is_empty() {
             return;
         }
-        debug_assert_eq!(v.len(), self.cols - c0);
+        // Hard assert: kernel entry-path size guard (the PR-7 bug
+        // class), O(1) next to the O(mn) body below.
+        assert_eq!(v.len(), self.cols - c0);
         let cols = self.cols;
         let inv_beta = 1.0 / beta;
         for r in r0..self.rows {
@@ -283,6 +292,7 @@ impl<'a> MatrixView<'a> {
 
     #[inline(always)]
     pub fn get(&self, r: usize, c: usize) -> f32 {
+        // lint: allow(hard-assert-dispatch-guards): per-element accessor, not a dispatch guard — the slice index below hard-panics on OOB either way
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c]
     }
@@ -392,6 +402,7 @@ fn matmul_kernel(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [
 /// `o += a0 * x + a1 * y` per pair. [`matmul_vectorized`] keeps this
 /// exact per-element sequence and only tiles *independent* outputs.
 pub fn matmul_reference(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    // lint: hotpath
     const BK: usize = 128;
     for k0 in (0..k).step_by(BK) {
         let k1 = (k0 + BK).min(k);
@@ -445,6 +456,7 @@ const GEMM_NR: usize = 2 * GEMM_LANES;
 /// Rust f32 math is strict IEEE — never reassociated, no implicit FMA
 /// contraction) — lanes only batch *independent* columns.
 pub fn matmul_vectorized(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    // lint: hotpath
     let nv = n - n % GEMM_NR;
     let mut i = 0;
     while i + GEMM_MR <= m {
@@ -470,6 +482,7 @@ fn vec_row_tile<const R: usize>(
     b: &[f32],
     out: &mut [f32],
 ) {
+    // lint: hotpath
     const L: usize = GEMM_LANES;
     let mut j = 0;
     while j < nv {

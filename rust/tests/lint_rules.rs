@@ -1,0 +1,237 @@
+//! Fixture suite for the `ttedge-lint` static-analysis pass (ISSUE 8).
+//!
+//! One known-bad fixture per rule pinning the exact `file:line` the
+//! scanner must report, the scoping exemptions (blessed owners,
+//! `#[cfg(test)]`, file class), the pragma grammar (trailing and
+//! own-line placement, mandatory reasons, unknown rules), and a
+//! clean-tree smoke run over this very crate — the same invocation the
+//! CI `static-analysis` job gates on.
+//!
+//! Fixtures are string literals, so scanning *this* file stays quiet:
+//! the lexer blanks them before any rule looks at the code.
+
+use std::path::Path;
+
+use tt_edge::analysis::{analyze_source, analyze_tree, FileAnalysis, Rule, Violation};
+
+/// Expect exactly one violation and return it.
+fn only(fa: &FileAnalysis) -> &Violation {
+    assert_eq!(fa.violations.len(), 1, "expected one violation: {:?}", fa.violations);
+    &fa.violations[0]
+}
+
+fn assert_quiet(rel: &str, src: &str) {
+    let fa = analyze_source(rel, src);
+    assert!(fa.violations.is_empty(), "{rel} should be quiet: {:?}", fa.violations);
+}
+
+#[test]
+fn no_adhoc_threads_fires_with_exact_location() {
+    let src = "fn f() {\n    std::thread::spawn(|| {});\n}\n";
+    let fa = analyze_source("src/fixture.rs", src);
+    let v = only(&fa);
+    assert_eq!(v.rule, Rule::NoAdhocThreads);
+    assert_eq!((v.file.as_str(), v.line), ("src/fixture.rs", 2));
+    assert!(v.render().starts_with("src/fixture.rs:2 no-adhoc-threads "));
+
+    // blessed owners and #[cfg(test)] regions are exempt
+    assert_quiet("src/serve/mod.rs", src);
+    assert_quiet("src/pipeline/mod.rs", src);
+    assert_quiet(
+        "src/fixture.rs",
+        "#[cfg(test)]\nmod tests {\n    fn f() { std::thread::spawn(|| {}); }\n}\n",
+    );
+    // cfg(not(test)) is NOT a test region
+    let gated = "#[cfg(not(test))]\nmod prod {\n    fn f() { std::thread::spawn(|| {}); }\n}\n";
+    assert_eq!(only(&analyze_source("src/fixture.rs", gated)).line, 3);
+}
+
+#[test]
+fn single_entry_point_fires_outside_blessed_callers() {
+    let bare =
+        "use crate::ttd::{decompose, Tensor};\nfn f() {\n    let d = decompose(&t, &spec, s);\n}\n";
+    let fa = analyze_source("src/sim/other.rs", bare);
+    let v = only(&fa);
+    assert_eq!(v.rule, Rule::SingleEntryPoint);
+    assert_eq!(v.line, 3);
+
+    let qualified = "fn f() {\n    let d = crate::ttd::decompose(&t, &spec, s);\n}\n";
+    assert_eq!(only(&analyze_source("src/sim/other.rs", qualified)).line, 2);
+
+    // job.rs and the defining modules own the entry points; tests and
+    // benches pin them on purpose; `tucker::decompose` is a different
+    // function, not a bare `decompose` call.
+    assert_quiet("src/job.rs", qualified);
+    assert_quiet("src/ttd/ttd.rs", qualified);
+    assert_quiet("tests/props.rs", bare);
+    assert_quiet("benches/hot.rs", bare);
+    assert_quiet(
+        "src/sim/other.rs",
+        "use crate::ttd::{decompose, Tensor};\nfn f() {\n    let d = tucker::decompose(&t, eps);\n}\n",
+    );
+    // without a ttd decompose import, a bare local `decompose(` is fine
+    assert_quiet("src/sim/other.rs", "fn g() {\n    let d = decompose(&t);\n}\n");
+}
+
+#[test]
+fn no_unordered_iteration_fires_on_declared_hash_containers() {
+    let looped = "use std::collections::HashMap;\nfn f() {\n    let mut m: HashMap<u32, u32> = HashMap::new();\n    for (k, v) in &m {\n    }\n}\n";
+    let fa = analyze_source("src/fixture.rs", looped);
+    let v = only(&fa);
+    assert_eq!(v.rule, Rule::NoUnorderedIteration);
+    assert_eq!(v.line, 4);
+    assert!(v.message.contains("`m`"), "names the container: {}", v.message);
+
+    let methods = "struct S { seen: HashSet<u64> }\nfn f(s: &S) {\n    let n = s.seen.iter().count();\n}\n";
+    assert_eq!(only(&analyze_source("src/fixture.rs", methods)).line, 3);
+
+    // BTreeMap iteration is ordered — never flagged; and a HashMap
+    // used only for point lookups is fine.
+    assert_quiet(
+        "src/fixture.rs",
+        "fn f() {\n    let m: BTreeMap<u32, u32> = BTreeMap::new();\n    for (k, v) in &m {\n    }\n}\n",
+    );
+    assert_quiet(
+        "src/fixture.rs",
+        "fn f() {\n    let m: HashMap<u32, u32> = HashMap::new();\n    let x = m.get(&1);\n}\n",
+    );
+}
+
+#[test]
+fn no_wallclock_fires_outside_benches_and_metrics() {
+    let src = "fn f() {\n    let t0 = std::time::Instant::now();\n}\n";
+    let fa = analyze_source("src/fixture.rs", src);
+    let v = only(&fa);
+    assert_eq!(v.rule, Rule::NoWallclock);
+    assert_eq!(v.line, 2);
+
+    assert_quiet("benches/wall.rs", src);
+    assert_quiet("src/metrics/bench.rs", src);
+
+    // unseeded RNG is the same class of nondeterminism
+    let rng = "fn f() {\n    let mut r = rand::thread_rng();\n}\n";
+    assert_eq!(only(&analyze_source("src/fixture.rs", rng)).line, 2);
+}
+
+#[test]
+fn hard_assert_rule_guards_the_kernel_entry_files() {
+    let src = "fn get(r: usize) {\n    debug_assert!(r < 4);\n}\n";
+    let fa = analyze_source("src/ttd/tensor.rs", src);
+    let v = only(&fa);
+    assert_eq!(v.rule, Rule::HardAssertDispatchGuards);
+    assert_eq!(v.line, 2);
+    assert_eq!(only(&analyze_source("src/ttd/svd/bidiag.rs", src)).line, 2);
+
+    // only the kernel entry-path files are in scope, and their own
+    // test modules may use debug_assert freely
+    assert_quiet("src/ttd/golub_kahan.rs", src);
+    assert_quiet(
+        "src/ttd/tensor.rs",
+        "#[cfg(test)]\nmod tests {\n    fn f() { debug_assert!(true); }\n}\n",
+    );
+}
+
+#[test]
+fn no_hotpath_alloc_fires_only_inside_tagged_regions() {
+    let src = "fn f(xs: &[f32]) {\n    // lint: hotpath\n    let v = xs.to_vec();\n}\nfn g(xs: &[f32]) {\n    let v = xs.to_vec();\n}\n";
+    let fa = analyze_source("src/fixture.rs", src);
+    let v = only(&fa);
+    assert_eq!(v.rule, Rule::NoHotpathAlloc);
+    assert_eq!(v.line, 3, "g's alloc is outside the tagged region");
+
+    // the region closes with its block: code after the brace is free
+    let closed = "fn f() {\n    {\n        // lint: hotpath\n        let a = 1;\n    }\n    let v = Vec::new();\n}\n";
+    assert_quiet("src/fixture.rs", closed);
+}
+
+#[test]
+fn lock_discipline_fires_on_bare_lock_unwrap() {
+    let src = "fn f(&self) {\n    let g = self.state.lock().unwrap();\n}\n";
+    let fa = analyze_source("src/fixture.rs", src);
+    let v = only(&fa);
+    assert_eq!(v.rule, Rule::LockDiscipline);
+    assert_eq!(v.line, 2);
+    let expect = "fn f(&self) {\n    let g = self.state.lock().expect(\"poisoned\");\n}\n";
+    assert_eq!(only(&analyze_source("src/fixture.rs", expect)).line, 2);
+
+    // tests may lock however they like
+    assert_quiet(
+        "src/fixture.rs",
+        "#[cfg(test)]\nmod tests {\n    fn f(m: &M) { m.state.lock().unwrap(); }\n}\n",
+    );
+}
+
+#[test]
+fn allow_pragmas_suppress_exactly_one_line_and_are_recorded() {
+    // own-line pragma covers the next non-blank code line
+    let own_line = "fn f() {\n    // lint: allow(no-wallclock-or-unseeded-rng): operator-facing timing only\n\n    let t0 = std::time::Instant::now();\n}\n";
+    let fa = analyze_source("src/fixture.rs", own_line);
+    assert!(fa.violations.is_empty(), "{:?}", fa.violations);
+    assert_eq!(fa.allows.len(), 1);
+    assert_eq!(fa.allows[0].rule, Rule::NoWallclock);
+    assert_eq!(fa.allows[0].reason, "operator-facing timing only");
+
+    // trailing pragma covers its own line...
+    let trailing = "fn f(&self) {\n    let g = self.state.lock().unwrap(); // lint: allow(lock-discipline): test double, single consumer\n}\n";
+    let fa = analyze_source("src/fixture.rs", trailing);
+    assert!(fa.violations.is_empty(), "{:?}", fa.violations);
+    assert_eq!(fa.allows.len(), 1);
+
+    // ...and only that line: the next occurrence still fires
+    let two = "fn f(&self) {\n    let a = self.state.lock().unwrap(); // lint: allow(lock-discipline): first site justified\n    let b = self.state.lock().unwrap();\n}\n";
+    assert_eq!(only(&analyze_source("src/fixture.rs", two)).line, 3);
+
+    // a pragma for a different rule suppresses nothing
+    let wrong = "fn f(&self) {\n    // lint: allow(no-adhoc-threads): wrong rule\n    let g = self.state.lock().unwrap();\n}\n";
+    let fa = analyze_source("src/fixture.rs", wrong);
+    assert_eq!(only(&fa).rule, Rule::LockDiscipline);
+    assert_eq!(fa.allows.len(), 1, "the mismatched pragma is still recorded");
+}
+
+#[test]
+fn malformed_pragmas_are_violations_and_never_suppress() {
+    // empty reason: rejected, and the covered violation survives
+    let empty = "fn f() {\n    // lint: allow(no-wallclock-or-unseeded-rng):\n    let t0 = std::time::Instant::now();\n}\n";
+    let fa = analyze_source("src/fixture.rs", empty);
+    assert_eq!(fa.violations.len(), 2, "{:?}", fa.violations);
+    assert_eq!(fa.violations[0].line, 2);
+    assert_eq!(fa.violations[0].rule, Rule::MalformedPragma);
+    assert_eq!(fa.violations[1].line, 3);
+    assert_eq!(fa.violations[1].rule, Rule::NoWallclock);
+    assert!(fa.allows.is_empty());
+
+    // unknown rule names are rejected, including the meta-rule itself
+    let unknown = "// lint: allow(no-such-rule): because\nfn f() {}\n";
+    assert_eq!(only(&analyze_source("src/fixture.rs", unknown)).rule, Rule::MalformedPragma);
+    let meta = "// lint: allow(malformed-pragma): nice try\nfn f() {}\n";
+    assert_eq!(only(&analyze_source("src/fixture.rs", meta)).rule, Rule::MalformedPragma);
+
+    // unrecognized directives are flagged, doc prose is not parsed
+    let directive = "// lint: frobnicate\nfn f() {}\n";
+    assert_eq!(only(&analyze_source("src/fixture.rs", directive)).rule, Rule::MalformedPragma);
+    assert_quiet("src/fixture.rs", "/// lint: allow(no-adhoc-threads): doc prose\nfn f() {}\n");
+}
+
+#[test]
+fn strings_and_comments_never_trip_rules() {
+    let src = "fn f() {\n    let a = \"std::thread::spawn(Instant::now())\";\n    let b = r#\"state.lock().unwrap()\"#;\n    // a comment mentioning debug_assert! and Vec::new()\n}\n";
+    assert_quiet("src/ttd/tensor.rs", src);
+}
+
+#[test]
+fn the_tree_scans_clean_with_reasoned_pragmas() {
+    // The same gate CI enforces: deny mode over this crate must be
+    // clean, and every allow pragma must carry a non-empty reason.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = analyze_tree(root).expect("scan the crate");
+    assert!(report.files_scanned > 20, "walked src/tests/benches: {}", report.files_scanned);
+    let rendered: Vec<String> = report.violations.iter().map(|v| v.render()).collect();
+    assert!(report.clean(), "tree must lint clean:\n{}", rendered.join("\n"));
+    assert!(!report.allows.is_empty(), "the tree documents its known exceptions");
+    for a in &report.allows {
+        assert!(!a.reason.trim().is_empty(), "{}:{} allow({}) needs a reason", a.file, a.line, a.rule.id());
+    }
+    let json = report.to_json("deny").render();
+    assert!(json.contains("lint-report-v1"));
+    assert!(json.contains("\"clean\":true"));
+}

@@ -222,6 +222,53 @@ fn lru_capacity_is_never_exceeded_and_eviction_is_least_recent_first() {
 }
 
 #[test]
+fn scripted_churn_pins_exact_eviction_victims() {
+    // Deterministic eviction-order regression for the BTreeMap tick
+    // index: a hand-scripted capacity-2 churn where every victim is
+    // pinned by name. Covers all three recency-moving operations —
+    // `insert`, a `lookup` hit, and a `claim` hit — so an index that
+    // forgets to re-key a touched entry (or evicts in hasher order)
+    // fails on the exact step, not statistically.
+    use tt_edge::cache::Claim;
+
+    let cache = ProgramCache::new(2);
+    let program = sample_program();
+    let keys: Vec<CacheKey> = (0..4)
+        .map(|i| CompressionJob::synthetic(1).eps(0.3 + 0.05 * i as f32).cache_key())
+        .collect();
+    let (a, b, c, d) = (&keys[0], &keys[1], &keys[2], &keys[3]);
+
+    cache.insert(a.clone(), program.clone()); // recency: [a]
+    cache.insert(b.clone(), program.clone()); // recency: [a, b]
+    cache.insert(c.clone(), program.clone()); // evicts a -> [b, c]
+    assert!(!cache.contains(a), "a was least-recent at the first overflow");
+    assert!(cache.contains(b) && cache.contains(c));
+
+    // lookup-hit on b moves it to most-recent: [c, b]
+    assert!(cache.lookup(b).is_some());
+    cache.insert(d.clone(), program.clone()); // evicts c, NOT b -> [b, d]
+    assert!(cache.contains(b), "the looked-up entry must have been touched");
+    assert!(!cache.contains(c), "c was least-recent after b's touch");
+
+    // claim-hit on b touches it too: [d, b]
+    match cache.claim(b) {
+        Claim::Hit(_) => {}
+        Claim::Miss(_) => panic!("b is resident — claim must hit"),
+    }
+    cache.insert(a.clone(), program.clone()); // evicts d, NOT b -> [b, a]
+    assert!(cache.contains(b), "the claim-hit entry must have been touched");
+    assert!(!cache.contains(d), "d was least-recent after b's claim-hit");
+    assert!(cache.contains(a));
+
+    let s = cache.stats();
+    assert_eq!(s.inserts, 5);
+    assert_eq!(s.evictions, 3);
+    assert_eq!(s.resident, 2);
+    assert_eq!(s.hits, 2, "one lookup hit + one claim hit");
+    assert!(s.conserved(), "{s:?}");
+}
+
+#[test]
 fn capacity_zero_disables_residency_but_not_correctness() {
     let requests = [req(41, 0.12), req(41, 0.12), req(41, 0.2)];
     let cached = serve(&requests, &ServeConfig { workers: 1, cache_capacity: 8 });
