@@ -45,6 +45,7 @@ fn main() {
         budget: 32,
         seed: 42,
         eps: 0.12,
+        method: tt_edge::ttd::SvdMethod::Exact,
         parallel: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
     };
     let t0 = std::time::Instant::now();
@@ -82,6 +83,7 @@ fn main() {
         budget: 40,
         seed: 42,
         eps: 0.12,
+        method: tt_edge::ttd::SvdMethod::Exact,
         parallel: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
     };
     let mut lived = None;

@@ -1,7 +1,9 @@
 //! Hot-path microbenchmarks for the perf pass (EXPERIMENTS/README.md):
 //! L3 numerics (rank-1 updates, HBD, GK, full-layer TTD), the blocked
 //! vs naive GEMM kernel, the vectorized vs reference microkernel (the
-//! PR-7 >= 1.5x self-assert, bit-identity checked inline), the serial
+//! PR-7 >= 1.5x self-assert, bit-identity checked inline), the seeded
+//! randomized range-finder vs the exact SVD (the ISSUE-9 >= 2x
+//! self-assert at sketch 32), the serial
 //! vs panel-parallel bidiagonalization, the serial vs parallel
 //! multi-layer pipeline (the ISSUE-1 acceptance numbers), and the
 //! simulator costing loop (streaming CostSink vs recorded-trace
@@ -25,6 +27,8 @@ use tt_edge::ttd::svd::bidiag::{
     bidiagonalize, bidiagonalize_reference, panel_threads, set_panel_threads,
 };
 use tt_edge::ttd::svd::house::{apply_left, house};
+use tt_edge::ttd::svd::randomized::rsvd;
+use tt_edge::ttd::svd::svd;
 use tt_edge::ttd::tensor::{matmul_reference, matmul_vectorized};
 use tt_edge::ttd::{decompose, Matrix, Tensor, TtSpec};
 use tt_edge::util::json::Json;
@@ -77,6 +81,27 @@ fn main() {
     assert!(
         gemm_speedup >= 1.5,
         "vectorized microkernel must be >= 1.5x over matmul_reference on 512^3, got {gemm_speedup:.2}x"
+    );
+
+    // ---- rsvd vs exact SVD (ISSUE 9) ------------------------------
+    // A tall transformer-shaped unfolding (bert-base d_model rows
+    // after the balanced reshape): the seeded randomized range-finder
+    // at sketch 32 (rank cap 24 + oversample 8) replaces the O(mn^2)
+    // dense HBD with O(mnl) sketch work and a 32-row projected SVD.
+    let tall = Matrix::from_vec(768, 256, rng.normal_vec(768 * 256));
+    let rsvd_exact = time_it("svd 768x256 (exact HBD+GK)", 1, 5, || {
+        black_box(svd(&tall, &mut NullSink));
+    });
+    println!("{}", rsvd_exact.report());
+    let rsvd_sketch = time_it("rsvd 768x256 (sketch 32 = cap 24 + oversample 8)", 1, 5, || {
+        black_box(rsvd(&tall, 32, 42, &mut NullSink));
+    });
+    println!("{}", rsvd_sketch.report());
+    let rsvd_speedup = rsvd_exact.mean_ms / rsvd_sketch.mean_ms;
+    println!("  -> rsvd speedup over exact at sketch 32: {rsvd_speedup:.2}x\n");
+    assert!(
+        rsvd_speedup >= 2.0,
+        "randomized range-finder must be >= 2x over the exact SVD at sketch 32 on 768x256, got {rsvd_speedup:.2}x"
     );
 
     // fused rank-1 update (the HBD inner loop), 576x64
@@ -271,6 +296,9 @@ fn main() {
     obj.insert("gemm_simd_ms".into(), Json::from(gemm_simd.mean_ms));
     obj.insert("gemm_reference_ms".into(), Json::from(gemm_ref.mean_ms));
     obj.insert("gemm_simd_speedup".into(), Json::from(gemm_speedup));
+    obj.insert("rsvd_exact_ms".into(), Json::from(rsvd_exact.mean_ms));
+    obj.insert("rsvd_ms".into(), Json::from(rsvd_sketch.mean_ms));
+    obj.insert("rsvd_speedup".into(), Json::from(rsvd_speedup));
     obj.insert("hbd_panel_par_serial_ms".into(), Json::from(hbd_par_serial.mean_ms));
     obj.insert("hbd_panel_par_ms".into(), Json::from(hbd_par.mean_ms));
     obj.insert(

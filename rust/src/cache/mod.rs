@@ -13,10 +13,12 @@
 //! * **Key soundness.** A program is a pure function of the workload
 //!   weights and the *entire* numeric spec. [`CacheKey`] therefore
 //!   combines a [`Fingerprint`] of the workload identity with
-//!   `eps.to_bits()` **and** the effective per-bond rank caps read
-//!   through [`TtSpec::cap_for`] — so `rank_cap(8)` and
-//!   `rank_caps(&[8, 8])` share an entry (same numerics), while two
-//!   requests differing only in caps never collide.
+//!   `eps.to_bits()`, the effective per-bond rank caps read through
+//!   [`TtSpec::cap_for`], **and** the SVD method discriminant
+//!   (exact vs randomized, with the sketch seed and oversampling) —
+//!   so `rank_cap(8)` and `rank_caps(&[8, 8])` share an entry (same
+//!   numerics), while two requests differing only in caps or only in
+//!   method never collide.
 //! * **Single-flight misses.** Under a concurrent drain, the first
 //!   claimant of an absent key installs a *pending* slot and runs the
 //!   numerics; every later claimant blocks on a condvar and resolves
@@ -51,7 +53,7 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use crate::job::JobProgram;
 use crate::metrics::CacheStats;
-use crate::ttd::ttd::TtSpec;
+use crate::ttd::ttd::{SvdMethod, TtSpec};
 
 /// Streaming FNV-1a (64-bit) over the workload identity. Not
 /// cryptographic — it keys a cache, it does not authenticate one —
@@ -122,6 +124,10 @@ pub struct CacheKey {
     workload: u64,
     eps_bits: u32,
     caps: Vec<u64>,
+    /// SVD method discriminant `(tag, seed, oversample)`: exact is
+    /// `(0, 0, 0)`; randomized carries its sketch seed and
+    /// oversampling, both of which change the op stream (ISSUE 9).
+    method: (u8, u64, u32),
 }
 
 impl CacheKey {
@@ -133,6 +139,10 @@ impl CacheKey {
             workload: workload_fingerprint,
             eps_bits: spec.eps.to_bits(),
             caps: (0..bonds).map(|b| spec.cap_for(b) as u64).collect(),
+            method: match spec.method() {
+                SvdMethod::Exact => (0, 0, 0),
+                SvdMethod::Randomized { seed, oversample } => (1, seed, oversample),
+            },
         }
     }
 }
@@ -479,6 +489,20 @@ mod tests {
             CacheKey::new(1, &TtSpec::eps(0.12), 2),
             CacheKey::new(1, &TtSpec::eps(0.12).rank_cap(8), 2)
         );
+    }
+
+    #[test]
+    fn cache_key_covers_the_svd_method() {
+        let exact = TtSpec::eps(0.12);
+        let rand = TtSpec::eps(0.12).rsvd(7, 8);
+        assert_ne!(
+            CacheKey::new(1, &exact, 2),
+            CacheKey::new(1, &rand, 2),
+            "exact and randomized runs emit different op streams"
+        );
+        assert_ne!(CacheKey::new(1, &rand, 2), CacheKey::new(1, &TtSpec::eps(0.12).rsvd(8, 8), 2));
+        assert_ne!(CacheKey::new(1, &rand, 2), CacheKey::new(1, &TtSpec::eps(0.12).rsvd(7, 16), 2));
+        assert_eq!(CacheKey::new(1, &rand, 2), CacheKey::new(1, &TtSpec::eps(0.12).rsvd(7, 8), 2));
     }
 
     #[test]

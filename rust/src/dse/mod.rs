@@ -39,10 +39,11 @@ use std::collections::BTreeMap;
 use crate::job::CompressionJob;
 use crate::metrics::{f1, f2, Table};
 use crate::model::resnet32::ConvLayer;
+use crate::model::transformer::TransformerSpec;
 use crate::sim::config::SocConfig;
 use crate::sim::workload::synthetic_model;
 use crate::trace::Phase;
-use crate::ttd::Tensor;
+use crate::ttd::{SvdMethod, Tensor, TtSpec};
 use crate::util::json::Json;
 
 pub use pareto::{dominates, pareto_front, Objectives};
@@ -57,6 +58,15 @@ pub enum Workload {
     Resnet32,
     /// The first 4 layers — a fast proxy for tests/smoke runs.
     Tiny,
+    /// A 2-block transformer decoder stack (ISSUE 9) — LLM-shaped
+    /// matrices at CI speed.
+    TinyGpt,
+    /// BERT-base scale: 12 blocks at (768, 3072). Shape-enumerable,
+    /// but decomposing it is a dedicated run, not a smoke job.
+    BertBase,
+    /// The tiny-gpt activation-map variant (per-block `seq_len x
+    /// d_model` stacks).
+    Activations,
 }
 
 impl Workload {
@@ -64,6 +74,9 @@ impl Workload {
         match s {
             "resnet32" => Some(Workload::Resnet32),
             "tiny" => Some(Workload::Tiny),
+            "tiny-gpt" => Some(Workload::TinyGpt),
+            "bert-base" => Some(Workload::BertBase),
+            "activations" => Some(Workload::Activations),
             _ => None,
         }
     }
@@ -72,17 +85,51 @@ impl Workload {
         match self {
             Workload::Resnet32 => "resnet32",
             Workload::Tiny => "tiny",
+            Workload::TinyGpt => "tiny-gpt",
+            Workload::BertBase => "bert-base",
+            Workload::Activations => "activations",
         }
     }
 
-    /// Materialize the layer set (same synthetic-trained generator the
-    /// `simulate` command uses; the seed keys the weights).
+    /// Materialize the layer set (same synthetic-trained generators
+    /// the `simulate`/`compress` commands use; the seed keys the
+    /// weights).
     pub fn layers(&self, seed: u64) -> Vec<(ConvLayer, Tensor)> {
-        let mut layers = synthetic_model(seed, 3.55, 0.035);
-        if *self == Workload::Tiny {
-            layers.truncate(4);
+        match self {
+            Workload::Resnet32 => synthetic_model(seed, 3.55, 0.035),
+            Workload::Tiny => {
+                let mut layers = synthetic_model(seed, 3.55, 0.035);
+                layers.truncate(4);
+                layers
+            }
+            Workload::TinyGpt => TransformerSpec::tiny_gpt().synthetic_weights(seed),
+            Workload::BertBase => TransformerSpec::bert_base().synthetic_weights(seed),
+            Workload::Activations => TransformerSpec::tiny_gpt().synthetic_activations(seed),
         }
-        layers
+    }
+
+    /// Build the workload's [`CompressionJob`] so every caller gets
+    /// the right whole-model accounting (transformer inputs carry
+    /// their own inventory; the ResNet-derived ones keep the legacy
+    /// whole-ResNet-32 remainder). `backing` owns materialized layer
+    /// sets for the ResNet workloads; transformer inputs materialize
+    /// lazily inside the job.
+    pub fn job<'a>(
+        &self,
+        seed: u64,
+        backing: &'a mut Option<Vec<(ConvLayer, Tensor)>>,
+    ) -> CompressionJob<'a> {
+        match self {
+            Workload::Resnet32 | Workload::Tiny => {
+                *backing = Some(self.layers(seed));
+                CompressionJob::model(backing.as_ref().expect("just set"))
+            }
+            Workload::TinyGpt => CompressionJob::transformer(TransformerSpec::tiny_gpt(), seed),
+            Workload::BertBase => CompressionJob::transformer(TransformerSpec::bert_base(), seed),
+            Workload::Activations => {
+                CompressionJob::transformer_activations(TransformerSpec::tiny_gpt(), seed)
+            }
+        }
     }
 }
 
@@ -97,6 +144,13 @@ pub struct ExploreConfig {
     /// Seeds the workload weights AND the search RNG.
     pub seed: u64,
     pub eps: f32,
+    /// SVD method for the numerics pass (`--method`). Exact by
+    /// default; the randomized range-finder trades a small rank
+    /// optimality loss for much cheaper sketches on LLM-shaped
+    /// matrices. Lives here — not on the genome — because it changes
+    /// the op stream, and record-once / replay-many requires every
+    /// candidate to replay the *same* program.
+    pub method: SvdMethod,
     /// Host worker threads per numerics pass (cost-invariant).
     pub parallel: usize,
 }
@@ -110,8 +164,16 @@ impl Default for ExploreConfig {
             budget: 32,
             seed: 42,
             eps: 0.12,
+            method: SvdMethod::Exact,
             parallel: 1,
         }
+    }
+}
+
+impl ExploreConfig {
+    /// The full numeric spec this exploration decomposes under.
+    pub fn spec(&self) -> TtSpec {
+        TtSpec::eps(self.eps).with_method(self.method)
     }
 }
 
@@ -177,6 +239,7 @@ impl ExploreOutcome {
         knobs.insert("spm_kb".into(), Json::from(soc.cost.spm_kb as f64));
         knobs.insert("fpalu_units".into(), Json::from(soc.cost.fpalu_units as f64));
         knobs.insert("gating".into(), Json::from(soc.gating.label()));
+        knobs.insert("backend".into(), Json::from(soc.backend.label()));
         let mut m = BTreeMap::new();
         m.insert("id".into(), Json::from(e.id));
         m.insert("name".into(), Json::from(e.name.as_str()));
@@ -206,6 +269,17 @@ impl ExploreOutcome {
         // regenerate-from-artifact contract
         m.insert("seed".into(), Json::Str(self.cfg.seed.to_string()));
         m.insert("eps".into(), Json::from(f64::from(self.cfg.eps)));
+        match self.cfg.method {
+            SvdMethod::Exact => {
+                m.insert("method".into(), Json::from("exact"));
+            }
+            SvdMethod::Randomized { seed, oversample } => {
+                m.insert("method".into(), Json::from("rsvd"));
+                // string for the same u64-precision reason as `seed`
+                m.insert("rsvd_seed".into(), Json::Str(seed.to_string()));
+                m.insert("rsvd_oversample".into(), Json::from(oversample as usize));
+            }
+        }
         m.insert("space_size".into(), Json::from(self.space_size));
         m.insert("evaluated".into(), Json::from(self.evaluated.len()));
         let mut comp = BTreeMap::new();
@@ -325,7 +399,6 @@ fn evaluate_batch_replay(
 /// byte-identity of its artifacts against [`explore`]'s replay path is
 /// pinned by `tests/dse_engine.rs`.
 fn evaluate_batch_live(
-    layers: &[(ConvLayer, Tensor)],
     space: &DesignSpace,
     cfg: &ExploreConfig,
     genomes: &[Genome],
@@ -333,8 +406,11 @@ fn evaluate_batch_live(
     out: &mut Vec<Evaluated>,
 ) -> (f64, f32, usize) {
     let socs: Vec<SocConfig> = genomes.iter().map(|&g| space.to_soc(g)).collect();
-    let job = CompressionJob::model(layers)
-        .eps(cfg.eps)
+    let mut backing = None;
+    let job = cfg
+        .workload
+        .job(cfg.seed, &mut backing)
+        .spec(cfg.spec())
         .parallel(cfg.parallel)
         .socs(&socs)
         .run()
@@ -380,11 +456,13 @@ fn finish(
 pub fn explore(cfg: &ExploreConfig) -> ExploreOutcome {
     let passes_before = crate::job::numerics_pass_count();
     let space = DesignSpace::new(cfg.space);
-    let layers = cfg.workload.layers(cfg.seed);
     // THE numerics pass: record the config-independent op program
     // (no SoC bank attached — per-batch costing happens on replay).
-    let (job_out, program) = CompressionJob::model(&layers)
-        .eps(cfg.eps)
+    let mut backing = None;
+    let (job_out, program) = cfg
+        .workload
+        .job(cfg.seed, &mut backing)
+        .spec(cfg.spec())
         .parallel(cfg.parallel)
         .program()
         .expect("explore jobs carry no cancel token");
@@ -423,7 +501,6 @@ pub fn explore(cfg: &ExploreConfig) -> ExploreOutcome {
 pub fn explore_live(cfg: &ExploreConfig) -> ExploreOutcome {
     let passes_before = crate::job::numerics_pass_count();
     let space = DesignSpace::new(cfg.space);
-    let layers = cfg.workload.layers(cfg.seed);
     let mut evaluated: Vec<Evaluated> = Vec::new();
     let mut compression = (0.0f64, 0.0f32, 0usize);
 
@@ -433,13 +510,13 @@ pub fn explore_live(cfg: &ExploreConfig) -> ExploreOutcome {
                 Strategy::Grid => strategy::plan_grid(&space, cfg.budget),
                 _ => strategy::plan_random(&space, cfg.budget, cfg.seed),
             };
-            compression = evaluate_batch_live(&layers, &space, cfg, &plan, 0, &mut evaluated);
+            compression = evaluate_batch_live(&space, cfg, &plan, 0, &mut evaluated);
         }
         Strategy::Evolve => {
             let mut comp = compression;
             strategy::run_evolve(&space, cfg.budget, cfg.seed, |batch| {
                 let next_id = evaluated.len();
-                comp = evaluate_batch_live(&layers, &space, cfg, batch, next_id, &mut evaluated);
+                comp = evaluate_batch_live(&space, cfg, batch, next_id, &mut evaluated);
                 evaluated[next_id..].iter().map(|e| e.objectives).collect()
             });
             compression = comp;
@@ -461,6 +538,7 @@ mod tests {
             budget,
             seed: 5,
             eps: 0.2,
+            method: SvdMethod::Exact,
             parallel: 1,
         }
     }
@@ -511,6 +589,42 @@ mod tests {
         // and the artifacts agree byte for byte
         assert_eq!(out.sweep_json().render(), live.sweep_json().render());
         assert_eq!(out.report_json().render(), live.report_json().render());
+    }
+
+    #[test]
+    fn transformer_workload_explores_under_rsvd_with_one_pass() {
+        let mut cfg = tiny_cfg(Strategy::Grid, 4);
+        cfg.workload = Workload::TinyGpt;
+        cfg.method = SvdMethod::Randomized { seed: 9, oversample: 8 };
+        cfg.eps = 0.12;
+        let out = explore(&cfg);
+        assert_eq!(out.numerics_passes, 1);
+        assert!(out.compression.0 > 1.0, "ratio {}", out.compression.0);
+        // the rsvd header fields are in the artifact
+        let sweep = out.sweep_json();
+        assert_eq!(sweep.get("method").unwrap().as_str().unwrap(), "rsvd");
+        assert_eq!(sweep.get("rsvd_seed").unwrap().as_str().unwrap(), "9");
+        assert_eq!(sweep.get("workload").unwrap().as_str().unwrap(), "tiny-gpt");
+        // replay-vs-live byte identity holds for the new method too
+        let live = explore_live(&cfg);
+        assert_eq!(out.sweep_json().render(), live.sweep_json().render());
+    }
+
+    #[test]
+    fn full_space_grid_budget_40_spans_both_backends() {
+        let mut cfg = tiny_cfg(Strategy::Grid, 40);
+        cfg.space = SpaceKind::Full;
+        let out = explore(&cfg);
+        assert_eq!(out.numerics_passes, 1, "cross-backend sweep must still record once");
+        let sweep = out.sweep_json();
+        let points = sweep.get("points").unwrap().as_arr().unwrap();
+        let systolic = points
+            .iter()
+            .filter(|p| {
+                p.get("knobs").unwrap().get("backend").unwrap().as_str() == Some("systolic")
+            })
+            .count();
+        assert_eq!(systolic, 8, "ids 32..40 are the first systolic genomes");
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //!
 //! A candidate is a [`Genome`]: the 5-bit [`Features`] mask plus one
 //! index per knob axis (GEMM tile edge, SPM capacity, FP-ALU count,
-//! clock-gating policy). [`DesignSpace`] owns the axis value lists and
+//! clock-gating policy, GEMM datapath backend). [`DesignSpace`] owns
+//! the axis value lists and
 //! enumerates genomes in a fixed, documented order, so every strategy
 //! and every `--parallel` width sees the identical candidate universe.
 //!
@@ -13,7 +14,7 @@
 //! value, so the space never contains two genomes that decode to
 //! cost-identical SoCs.
 
-use crate::sim::config::{Features, GatingPolicy, SocConfig, Variant};
+use crate::sim::config::{Backend, Features, GatingPolicy, SocConfig, Variant};
 
 /// One candidate design point: feature mask + knob axis indices.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -28,12 +29,15 @@ pub struct Genome {
     pub alu: u8,
     /// Index into [`DesignSpace::gates`].
     pub gate: u8,
+    /// Index into [`DesignSpace::backends`] (the GEMM datapath cost
+    /// model — ISSUE 9).
+    pub backend: u8,
 }
 
 impl Genome {
     /// The all-defaults genome for a feature mask.
     pub fn of_mask(mask: u8) -> Genome {
-        Genome { mask, tile: 0, spm: 0, alu: 0, gate: 0 }
+        Genome { mask, tile: 0, spm: 0, alu: 0, gate: 0, backend: 0 }
     }
 }
 
@@ -81,6 +85,10 @@ pub struct DesignSpace {
     pub alus: Vec<u64>,
     /// Clock-gating policies (position 0 = engine-owned).
     pub gates: Vec<GatingPolicy>,
+    /// GEMM datapath backends (position 0 = the paper's tiled
+    /// accelerator; the `full` space adds the group-vector systolic
+    /// model).
+    pub backends: Vec<Backend>,
     /// Canonical genomes in enumeration order (anchors first).
     genomes: Vec<Genome>,
 }
@@ -92,21 +100,24 @@ impl DesignSpace {
     /// first) with the feature mask varying fastest — so any budget
     /// prefix is feature-diverse before it is knob-diverse.
     pub fn new(kind: SpaceKind) -> DesignSpace {
-        let (tiles, spm_kbs, alus, gates) = match kind {
+        let (tiles, spm_kbs, alus, gates, backends) = match kind {
             SpaceKind::Full => (
                 vec![16u64, 8, 32],
                 vec![320u64, 64, 160],
                 vec![1u64, 2, 4],
                 vec![GatingPolicy::EngineOwned, GatingPolicy::HbdOnly],
+                Backend::ALL.to_vec(),
             ),
             _ => (
                 vec![16u64],
                 vec![320u64],
                 vec![1u64],
                 vec![GatingPolicy::EngineOwned],
+                vec![Backend::TtEdgeGemm],
             ),
         };
-        let mut space = DesignSpace { kind, tiles, spm_kbs, alus, gates, genomes: Vec::new() };
+        let mut space =
+            DesignSpace { kind, tiles, spm_kbs, alus, gates, backends, genomes: Vec::new() };
         space.genomes = space.enumerate();
         space
     }
@@ -123,14 +134,20 @@ impl DesignSpace {
         if self.kind == SpaceKind::Paper {
             return v;
         }
+        // backend varies second-fastest (inside every knob, outside
+        // the mask): a small budget prefix covers all 32 masks on the
+        // paper datapath and then the same 32 on the systolic one,
+        // before any other knob moves.
         for gate in 0..self.gates.len() as u8 {
             for alu in 0..self.alus.len() as u8 {
                 for spm in 0..self.spm_kbs.len() as u8 {
                     for tile in 0..self.tiles.len() as u8 {
-                        for mask in 0u8..32 {
-                            let g = Genome { mask, tile, spm, alu, gate };
-                            if self.canonical(g) == g && !v.contains(&g) {
-                                v.push(g);
+                        for backend in 0..self.backends.len() as u8 {
+                            for mask in 0u8..32 {
+                                let g = Genome { mask, tile, spm, alu, gate, backend };
+                                if self.canonical(g) == g && !v.contains(&g) {
+                                    v.push(g);
+                                }
                             }
                         }
                     }
@@ -180,6 +197,7 @@ impl DesignSpace {
         let mut soc = if g.mask == 0 { SocConfig::baseline() } else { SocConfig::tt_edge() };
         soc.features = features;
         soc.gating = self.gates[g.gate as usize];
+        soc.backend = self.backends[g.backend as usize];
         soc.cost.gemm_tile = self.tiles[g.tile as usize];
         soc.cost.spm_kb = self.spm_kbs[g.spm as usize];
         soc.cost.fpalu_units = self.alus[g.alu as usize];
@@ -208,6 +226,9 @@ impl DesignSpace {
         }
         if g.gate != 0 {
             s.push_str(&format!(" {}", self.gates[g.gate as usize].label()));
+        }
+        if g.backend != 0 {
+            s.push_str(&format!(" {}", self.backends[g.backend as usize].label()));
         }
         s
     }
@@ -345,7 +366,35 @@ mod tests {
         sorted.sort_unstable();
         sorted.dedup();
         assert_eq!(sorted.len(), 32);
-        assert!(s.genomes()[..32].iter().all(|g| (g.tile, g.spm, g.alu, g.gate) == (0, 0, 0, 0)));
+        assert!(s.genomes()[..32]
+            .iter()
+            .all(|g| (g.tile, g.spm, g.alu, g.gate, g.backend) == (0, 0, 0, 0, 0)));
+        // ...and the next 32 are the same masks on the systolic
+        // backend, still at default knobs — a budget of 64 spans both
+        // datapaths over every feature combination
+        let next: Vec<u8> = s.genomes()[32..64].iter().map(|g| g.mask).collect();
+        let mut next_sorted = next.clone();
+        next_sorted.sort_unstable();
+        next_sorted.dedup();
+        assert_eq!(next_sorted.len(), 32);
+        assert!(s.genomes()[32..64]
+            .iter()
+            .all(|g| (g.tile, g.spm, g.alu, g.gate, g.backend) == (0, 0, 0, 0, 1)));
+    }
+
+    #[test]
+    fn backend_axis_exists_only_in_the_full_space() {
+        assert_eq!(DesignSpace::new(SpaceKind::Paper).backends, vec![Backend::TtEdgeGemm]);
+        assert_eq!(DesignSpace::new(SpaceKind::Features).backends, vec![Backend::TtEdgeGemm]);
+        let s = DesignSpace::new(SpaceKind::Full);
+        assert_eq!(s.backends, Backend::ALL.to_vec());
+        let systolic_twin = Genome { backend: 1, ..Genome::of_mask(0x1F) };
+        assert!(s.contains(systolic_twin));
+        assert_eq!(s.to_soc(systolic_twin).backend, Backend::Systolic);
+        assert_eq!(s.name(systolic_twin), "all systolic");
+        // the backend repriced GEMM only: area (no new Table-II rows)
+        // is identical to the tiled twin
+        assert_eq!(s.area(systolic_twin), s.area(Genome::of_mask(0x1F)));
     }
 
     #[test]
@@ -386,7 +435,7 @@ mod tests {
     #[test]
     fn names_mention_non_default_knobs_only() {
         let s = DesignSpace::new(SpaceKind::Full);
-        let g = Genome { mask: 0b01001, tile: 2, spm: 1, alu: 1, gate: 0 };
+        let g = Genome { mask: 0b01001, tile: 2, spm: 1, alu: 1, gate: 0, backend: 0 };
         assert_eq!(s.name(s.canonical(g)), "hbd+sort t32 spm64 alu2");
         let plain = Genome::of_mask(0b00110);
         assert_eq!(s.name(plain), "link+spm");

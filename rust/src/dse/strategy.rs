@@ -105,6 +105,9 @@ fn mutate(space: &DesignSpace, rng: &mut Rng, g: Genome) -> Genome {
         space.spm_kbs.len() > 1,
         space.alus.len() > 1 && f.uses_engine(),
         space.gates.len() > 1 && f.clock_gating,
+        // the GEMM datapath backend reprices every candidate (GEMM
+        // ops exist at any mask), so it is always expressible
+        space.backends.len() > 1,
     ];
     let n_knobs = knob_axes.iter().filter(|&&b| b).count();
     let pick = rng.below(5 + n_knobs);
@@ -132,7 +135,8 @@ fn mutate(space: &DesignSpace, rng: &mut Rng, g: Genome) -> Genome {
             0 => out.tile = step(out.tile, space.tiles.len(), rng),
             1 => out.spm = step(out.spm, space.spm_kbs.len(), rng),
             2 => out.alu = step(out.alu, space.alus.len(), rng),
-            _ => out.gate = step(out.gate, space.gates.len(), rng),
+            3 => out.gate = step(out.gate, space.gates.len(), rng),
+            _ => out.backend = step(out.backend, space.backends.len(), rng),
         }
     }
     space.canonical(out)
@@ -262,9 +266,9 @@ mod tests {
         // parents exercising every knob-applicability combination:
         // full engine + gating, engine-less + ungated, gating-only
         let parents = [
-            s.canonical(Genome { mask: 0b10011, tile: 1, spm: 2, alu: 1, gate: 1 }),
+            s.canonical(Genome { mask: 0b10011, tile: 1, spm: 2, alu: 1, gate: 1, backend: 1 }),
             Genome::of_mask(0b00100),
-            s.canonical(Genome { mask: 0b10000, tile: 2, spm: 0, alu: 0, gate: 1 }),
+            s.canonical(Genome { mask: 0b10000, tile: 2, spm: 0, alu: 0, gate: 1, backend: 0 }),
         ];
         for g in parents {
             for _ in 0..200 {

@@ -36,11 +36,14 @@ use std::cell::Cell;
 
 use crate::cache::{CacheKey, Claim, Fingerprint, ProgramCache};
 use crate::model::resnet32::ConvLayer;
+use crate::model::transformer::TransformerSpec;
 use crate::pipeline::{self, CancelToken};
 use crate::sim::config::SocConfig;
 use crate::sim::cost::CostSink;
 use crate::sim::report::SimReport;
-use crate::sim::workload::{aggregate_outcome_conv, synthetic_model, CompressionOutcome};
+use crate::sim::workload::{
+    aggregate_outcome_conv, aggregate_outcome_model, synthetic_model, CompressionOutcome,
+};
 use crate::trace::{OpProgram, RecordingSink, Tee, TraceSink, VecSink};
 use crate::ttd::svd::bidiag;
 use crate::ttd::tensor::{set_gemm_kernel, GemmKernel};
@@ -79,8 +82,28 @@ enum Input<'a> {
     Refs(Vec<(&'a ConvLayer, &'a Tensor)>),
     /// The synthetic-trained ResNet-32 workload (Table I/III).
     Synthetic { seed: u64, ratio: f64, noise: f32 },
+    /// A synthetic-trained transformer decoder stack, or its
+    /// activation-map variant (ISSUE 9). Weights are materialized
+    /// lazily like [`Input::Synthetic`], so cache hits and key
+    /// computation never generate them.
+    Transformer { spec: TransformerSpec, activations: bool, seed: u64 },
     /// A recorded op program: no numerics at all, just costing.
     Replay(&'a JobProgram),
+}
+
+impl Input<'_> {
+    /// The workload's own whole-model inventory when it is not the
+    /// ResNet-32 one (see `workload::aggregate_outcome_model`).
+    fn model_dense_override(&self) -> Option<usize> {
+        match self {
+            Input::Transformer { spec, activations, .. } => Some(if *activations {
+                spec.activation_count()
+            } else {
+                spec.param_count()
+            }),
+            _ => None,
+        }
+    }
 }
 
 /// The record-once artifact of a job: the RLE-compacted hardware-op
@@ -215,6 +238,22 @@ impl<'a> CompressionJob<'a> {
     /// workload at the repo's calibrated ratio/noise).
     pub fn synthetic(seed: u64) -> Self {
         Self::with_input(Input::Synthetic { seed, ratio: 3.55, noise: 0.035 })
+    }
+
+    /// Compress a synthetic-trained transformer decoder stack
+    /// (ISSUE 9): the QKV/O projections plus FFN up/down pair per
+    /// block, generated at [`TransformerSpec`]'s planted weight
+    /// ratio. Outcome accounting is whole-model against
+    /// [`TransformerSpec::param_count`].
+    pub fn transformer(spec: TransformerSpec, seed: u64) -> Self {
+        Self::with_input(Input::Transformer { spec, activations: false, seed })
+    }
+
+    /// Compress the activation-map variant of a transformer workload:
+    /// one `seq_len x d_model` activation stack per block, against
+    /// [`TransformerSpec::activation_count`].
+    pub fn transformer_activations(spec: TransformerSpec, seed: u64) -> Self {
+        Self::with_input(Input::Transformer { spec, activations: true, seed })
     }
 
     /// Replay a recorded [`JobProgram`] instead of running numerics:
@@ -389,6 +428,19 @@ impl<'a> CompressionJob<'a> {
                 fp.push_u64(u64::from(noise.to_bits()));
                 2
             }
+            // The generator is deterministic in (spec, seed) — its
+            // ratio/noise are crate constants — so the spec fields pin
+            // the weights without materializing them.
+            Input::Transformer { spec, activations, seed } => {
+                fp.push_str(if *activations { "transformer-acts" } else { "transformer-weights" });
+                fp.push_str(spec.name);
+                fp.push_usize(spec.d_model);
+                fp.push_usize(spec.d_ff);
+                fp.push_usize(spec.layers);
+                fp.push_usize(spec.seq_len);
+                fp.push_u64(*seed);
+                2
+            }
         };
         CacheKey::new(fp.finish(), &self.spec, bonds)
     }
@@ -480,6 +532,7 @@ impl<'a> CompressionJob<'a> {
         }
 
         // Model inputs: resolve to borrowed (layer, tensor) jobs.
+        let model_dense = input.model_dense_override();
         let mut owned = None;
         let jobs = resolve_model_input(input, &mut owned);
         let conv_dense: usize = jobs.iter().map(|(l, _)| l.numel()).sum();
@@ -503,7 +556,7 @@ impl<'a> CompressionJob<'a> {
             }
             let max_rel = results.iter().map(|r| r.rel_err).fold(0.0f32, f32::max);
             let decomps = results.into_iter().map(|r| r.decomp).collect();
-            let outcome = aggregate_outcome_conv(conv_dense, decomps, max_rel);
+            let outcome = aggregate(model_dense, conv_dense, decomps, max_rel);
             return Some(JobOutput { outcome, reports: cost.reports() });
         }
 
@@ -511,7 +564,7 @@ impl<'a> CompressionJob<'a> {
         // layer order, no per-op storage anywhere.
         let batch = pipeline::compress_layers_costed(&jobs, &spec, threads, cancel, &configs)?;
         let reports = batch.reports();
-        let outcome = aggregate_outcome_conv(conv_dense, batch.decomps, batch.max_rel_err);
+        let outcome = aggregate(model_dense, conv_dense, batch.decomps, batch.max_rel_err);
         Some(JobOutput { outcome, reports })
     }
 
@@ -557,6 +610,7 @@ impl<'a> CompressionJob<'a> {
 
         // Model inputs: the same resolution as run(), shared so the
         // recorded numerics can never diverge from the live ones.
+        let model_dense = input.model_dense_override();
         let mut owned = None;
         let jobs = resolve_model_input(input, &mut owned);
         let conv_dense: usize = jobs.iter().map(|(l, _)| l.numel()).sum();
@@ -565,7 +619,7 @@ impl<'a> CompressionJob<'a> {
         }
         record_numerics_pass();
         let batch = pipeline::compress_layers_recorded(&jobs, &spec, threads, cancel)?;
-        let outcome = aggregate_outcome_conv(conv_dense, batch.decomps, batch.max_rel_err);
+        let outcome = aggregate(model_dense, conv_dense, batch.decomps, batch.max_rel_err);
         let program = JobProgram::from_outcome(batch.program, &outcome);
         let reports = cost_program(&program, &configs, observer, threads);
         Some((JobOutput { outcome, reports }, program))
@@ -592,6 +646,30 @@ where
             *owned = Some(synthetic_model(seed, ratio, noise));
             owned.as_ref().expect("just set").iter().map(|(l, w)| (l, w)).collect()
         }
+        Input::Transformer { spec, activations, seed } => {
+            *owned = Some(if activations {
+                spec.synthetic_activations(seed)
+            } else {
+                spec.synthetic_weights(seed)
+            });
+            owned.as_ref().expect("just set").iter().map(|(l, w)| (l, w)).collect()
+        }
+    }
+}
+
+/// Whole-model accounting dispatch shared by [`CompressionJob::run`]
+/// and [`CompressionJob::program`]: transformer inputs carry their own
+/// inventory override; every other model-shaped input keeps the
+/// legacy whole-ResNet-32 accounting.
+fn aggregate(
+    model_dense: Option<usize>,
+    conv_dense: usize,
+    decomps: Vec<crate::ttd::TtDecomp>,
+    max_rel_err: f32,
+) -> CompressionOutcome {
+    match model_dense {
+        Some(md) => aggregate_outcome_model(md, conv_dense, decomps, max_rel_err),
+        None => aggregate_outcome_conv(conv_dense, decomps, max_rel_err),
     }
 }
 
@@ -1020,6 +1098,75 @@ mod tests {
         assert!(out.is_some());
         assert_eq!(cache.len(), 1);
         assert!(cache.stats().conserved());
+    }
+
+    #[test]
+    fn transformer_job_uses_its_own_model_inventory() {
+        let spec = TransformerSpec::tiny_gpt();
+        let out = CompressionJob::transformer(spec, 3)
+            .eps(0.12)
+            .soc(SocConfig::tt_edge())
+            .run()
+            .unwrap();
+        assert_eq!(out.outcome.decomps.len(), 12);
+        assert_eq!(out.outcome.model_dense_params, spec.param_count());
+        assert_eq!(out.outcome.conv_dense_params, spec.matrix_params());
+        assert!(out.outcome.compression_ratio > 2.0, "{}", out.outcome.compression_ratio);
+        assert!(out.reports[0].total_ms > 0.0);
+
+        let acts = CompressionJob::transformer_activations(spec, 3).eps(0.12).run().unwrap();
+        assert_eq!(acts.outcome.decomps.len(), 2);
+        assert_eq!(acts.outcome.model_dense_params, spec.activation_count());
+        assert_eq!(acts.outcome.conv_dense_params, spec.activation_count());
+    }
+
+    #[test]
+    fn transformer_job_is_parallel_invariant_and_replays() {
+        let spec = TransformerSpec::tiny_gpt();
+        let serial = CompressionJob::transformer(spec, 4)
+            .eps(0.12)
+            .soc(SocConfig::tt_edge())
+            .run()
+            .unwrap();
+        let wide = CompressionJob::transformer(spec, 4)
+            .eps(0.12)
+            .parallel(4)
+            .soc(SocConfig::tt_edge())
+            .run()
+            .unwrap();
+        assert_eq!(serial.outcome.final_params, wide.outcome.final_params);
+        assert_eq!(serial.outcome.max_rel_err, wide.outcome.max_rel_err);
+        assert_eq!(serial.reports[0].total_ms, wide.reports[0].total_ms);
+        assert_eq!(serial.reports[0].total_mj, wide.reports[0].total_mj);
+        // record-once / replay-many holds for the new workload too
+        let (rec, program) = CompressionJob::transformer(spec, 4)
+            .eps(0.12)
+            .soc(SocConfig::tt_edge())
+            .program()
+            .unwrap();
+        assert_eq!(rec.reports[0].total_ms, serial.reports[0].total_ms);
+        let replayed =
+            CompressionJob::replay(&program).soc(SocConfig::tt_edge()).run().unwrap();
+        assert_eq!(replayed.reports[0].total_ms, serial.reports[0].total_ms);
+        assert_eq!(replayed.outcome.final_params, serial.outcome.final_params);
+    }
+
+    #[test]
+    fn transformer_cache_keys_split_on_variant_seed_and_spec() {
+        let spec = TransformerSpec::tiny_gpt();
+        let weights = CompressionJob::transformer(spec, 5).eps(0.12).cache_key();
+        assert_ne!(
+            weights,
+            CompressionJob::transformer_activations(spec, 5).eps(0.12).cache_key(),
+            "weight and activation variants are different workloads"
+        );
+        assert_ne!(weights, CompressionJob::transformer(spec, 6).eps(0.12).cache_key());
+        assert_ne!(
+            weights,
+            CompressionJob::transformer(TransformerSpec::bert_base(), 5).eps(0.12).cache_key()
+        );
+        // deterministic: the same job builds the same key
+        assert_eq!(weights, CompressionJob::transformer(spec, 5).eps(0.12).cache_key());
     }
 
     #[test]

@@ -11,14 +11,16 @@
 //!   `--hbd-threads N` in-layer row-band workers; the
 //!   simulated cycles are identical at any width; `--json` emits one
 //!   `SimReport` JSON object per SoC).
-//! * `compress`  — Table I: compare TTD / Tucker / TRD on the model
-//!   (`--method all|ttd|tucker|trd`, `--parallel N`, `--json`).
+//! * `compress`  — Table I: compare TTD / Tucker / TRD on a workload
+//!   (`--workload resnet32|tiny|tiny-gpt|bert-base|activations`,
+//!   `--method all|ttd|rsvd|tucker|trd`, `--parallel N`, `--json`;
+//!   `rsvd` runs TTD with the seeded randomized range-finder).
 //! * `explore`   — design-space exploration: sweep feature toggles +
 //!   hardware knobs under a search strategy and budget, report the
 //!   (cycles, energy, area) Pareto frontier, and write the sweep
 //!   artifact into `EXPERIMENTS/` (`--workload`, `--space`,
-//!   `--strategy grid|random|evolve`, `--budget`, `--seed`,
-//!   `--parallel`, `--out`, `--json`).
+//!   `--strategy grid|random|evolve`, `--method exact|rsvd`,
+//!   `--budget`, `--seed`, `--parallel`, `--out`, `--json`).
 //! * `serve`     — compression-as-a-service: drain a JSONL request
 //!   queue through a keyed `JobProgram` cache (`--requests FILE`,
 //!   `--workers N`, `--cache CAPACITY`, `--out FILE`, `--json`); a
@@ -27,7 +29,7 @@
 //!   the serve-metrics-v1 artifact lands in `EXPERIMENTS/`.
 //! * `federate`  — Fig. 1: fault-tolerant federated rounds over
 //!   simulated edge nodes (`--nodes`, `--rounds`,
-//!   `--soc baseline|tt-edge`, chaos: `--dropout p --straggler-mult x
+//!   `--soc baseline|tt-edge|systolic`, chaos: `--dropout p --straggler-mult x
 //!   --quorum q --loss p`, `--json` for machine-readable reports).
 //! * `resources` — Table II: FPGA/45 nm resource + power breakdown.
 //! * `related`   — Table IV: comparison with Qu et al. [21].
@@ -53,10 +55,14 @@ struct CmdSpec {
 
 const COMMANDS: &[CmdSpec] = &[
     CmdSpec { name: "simulate", opts: &["eps", "seed", "parallel", "hbd-threads"], flags: &["json"] },
-    CmdSpec { name: "compress", opts: &["method", "eps", "seed", "parallel"], flags: &["json"] },
+    CmdSpec {
+        name: "compress",
+        opts: &["workload", "method", "eps", "seed", "parallel"],
+        flags: &["json"],
+    },
     CmdSpec {
         name: "explore",
-        opts: &["workload", "space", "strategy", "budget", "seed", "eps", "parallel", "out"],
+        opts: &["workload", "space", "strategy", "method", "budget", "seed", "eps", "parallel", "out"],
         flags: &["json"],
     },
     CmdSpec {
@@ -149,10 +155,13 @@ fn print_help() {
         "ttedge — TT-Edge (DATE 2026) reproduction\n\n\
          USAGE: ttedge <simulate|compress|explore|serve|federate|resources|related|artifacts> [--opts]\n\n\
          simulate   Table III (exec time + energy, baseline vs TT-Edge; --parallel N, --hbd-threads N, --json)\n\
-         compress   Table I  (TTD vs Tucker vs TRD on ResNet-32; --parallel N, --json)\n\
+         compress   Table I  (TTD vs Tucker vs TRD; --workload resnet32|tiny|tiny-gpt|bert-base|activations\n\
+                    --method all|ttd|rsvd|tucker|trd --parallel N --json;\n\
+                    rsvd = TTD with the seeded randomized range-finder)\n\
          explore    design-space exploration: Pareto frontier over (cycles, energy, area)\n\
-                    (--workload resnet32|tiny --space paper|features|full\n\
-                    --strategy grid|random|evolve --budget N --seed S --parallel N\n\
+                    (--workload resnet32|tiny|tiny-gpt|bert-base|activations\n\
+                    --space paper|features|full --strategy grid|random|evolve\n\
+                    --method exact|rsvd --budget N --seed S --parallel N\n\
                     --out FILE --json; sweep artifact lands in EXPERIMENTS/)\n\
          serve      compression-as-a-service: drain a JSONL request queue through a\n\
                     keyed JobProgram cache (--requests FILE --workers N --cache CAP\n\
@@ -211,47 +220,76 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
 fn cmd_compress(args: &Args) -> Result<()> {
     use std::collections::BTreeMap;
-    use tt_edge::sim::workload::synthetic_model;
+    use tt_edge::dse::Workload;
+    use tt_edge::model::TransformerSpec;
+    use tt_edge::ttd::TtSpec;
     use tt_edge::util::json::Json;
 
     let method = args.opt_or("method", "all");
-    if !matches!(method.as_str(), "all" | "ttd" | "tucker" | "trd") {
-        invalid("method", &method, "all|ttd|tucker|trd");
+    if !matches!(method.as_str(), "all" | "ttd" | "rsvd" | "tucker" | "trd") {
+        invalid("method", &method, "all|ttd|rsvd|tucker|trd");
     }
+    let workload = args.opt_or("workload", "resnet32");
+    let workload = Workload::parse(&workload).unwrap_or_else(|| {
+        invalid("workload", &workload, "resnet32|tiny|tiny-gpt|bert-base|activations")
+    });
     let eps: f32 = opt_or(args, "eps", 0.12);
     let seed: u64 = opt_or(args, "seed", 42);
     let parallel: usize = opt_or(args, "parallel", 1);
     let as_json = args.flag("json");
-    let layers = synthetic_model(seed, 3.55, 0.035);
-    let dense = tt_edge::model::param_count();
-    let conv_dense: usize = layers.iter().map(|(l, _)| l.numel()).sum();
+
+    // Whole-model dense inventory: the ResNet workloads keep the
+    // paper's full param count (Table I denominators); transformer
+    // workloads account their own block inventory (ISSUE 9).
+    let dense = match workload {
+        Workload::Resnet32 | Workload::Tiny => tt_edge::model::param_count(),
+        Workload::TinyGpt => TransformerSpec::tiny_gpt().param_count(),
+        Workload::BertBase => TransformerSpec::bert_base().param_count(),
+        Workload::Activations => TransformerSpec::tiny_gpt().activation_count(),
+    };
 
     // (table label, json key, worst rel err or NaN, final params)
     let mut rows: Vec<(&str, &str, f64, usize)> =
         vec![("Uncompressed", "uncompressed", f64::NAN, dense)];
-    if method == "all" || method == "tucker" {
-        let (params, err) = run_tucker(&layers, eps);
-        rows.push(("Tucker [12]", "tucker", f64::from(err), dense - conv_dense + params));
+    if matches!(method.as_str(), "all" | "tucker" | "trd") {
+        // The baseline decompositions consume the materialized layer
+        // list directly, so only these branches pay to generate it.
+        let layers = workload.layers(seed);
+        let conv_dense: usize = layers.iter().map(|(l, _)| l.numel()).sum();
+        if method == "all" || method == "tucker" {
+            let (params, err) = run_tucker(&layers, eps);
+            rows.push(("Tucker [12]", "tucker", f64::from(err), dense - conv_dense + params));
+        }
+        if method == "all" || method == "trd" {
+            let (params, err) = run_trd(&layers, eps);
+            rows.push(("TRD [13]", "trd", f64::from(err), dense - conv_dense + params));
+        }
     }
-    if method == "all" || method == "trd" {
-        let (params, err) = run_trd(&layers, eps);
-        rows.push(("TRD [13]", "trd", f64::from(err), dense - conv_dense + params));
-    }
-    if method == "all" || method == "ttd" {
+    if matches!(method.as_str(), "all" | "ttd" | "rsvd") {
+        // `rsvd` swaps the exact bidiagonal SVD for the seeded
+        // randomized range-finder inside the same TTD pipeline; the
+        // sketch seed is the run seed so reruns are bit-identical.
+        let spec =
+            if method == "rsvd" { TtSpec::eps(eps).rsvd(seed, 8) } else { TtSpec::eps(eps) };
         // lint: allow(no-wallclock-or-unseeded-rng): operator-facing wall timing on stderr only; table artifacts are derived from deterministic job outputs
         let t0 = std::time::Instant::now();
-        let out = CompressionJob::model(&layers)
-            .eps(eps)
+        let mut backing = None;
+        let out = workload
+            .job(seed, &mut backing)
+            .spec(spec)
             .parallel(parallel)
             .run()
             .expect("no cancel token on the CLI path")
             .outcome;
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-        rows.push(("TTD (this work)", "ttd", f64::from(out.max_rel_err), out.final_params));
+        let (label, key) =
+            if method == "rsvd" { ("TTD (rsvd)", "rsvd") } else { ("TTD (this work)", "ttd") };
+        rows.push((label, key, f64::from(out.max_rel_err), out.final_params));
         if !as_json {
             println!(
-                "TTD: {} layers on {} host thread{} in {wall_ms:.0} ms",
-                layers.len(),
+                "TTD: {} decomposition{} on {} host thread{} in {wall_ms:.0} ms",
+                out.decomps.len(),
+                if out.decomps.len() == 1 { "" } else { "s" },
                 parallel.max(1),
                 if parallel > 1 { "s" } else { "" },
             );
@@ -273,7 +311,8 @@ fn cmd_compress(args: &Args) -> Result<()> {
             })
             .collect();
         let mut m = BTreeMap::new();
-        m.insert("workload".into(), Json::from("resnet32"));
+        m.insert("workload".into(), Json::from(workload.label()));
+        m.insert("method".into(), Json::from(method.as_str()));
         m.insert("eps".into(), Json::from(f64::from(eps)));
         // string: u64 seeds don't fit JSON's f64-exact integer range
         m.insert("seed".into(), Json::Str(seed.to_string()));
@@ -283,10 +322,11 @@ fn cmd_compress(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    let mut t = Table::new(
-        "TABLE I: TD method comparison, ResNet-32 (synthetic-trained weights)",
-        &["Method", "Recon err", "Comp. ratio", "Final #params"],
+    let title = format!(
+        "TABLE I: TD method comparison, {} (synthetic-trained weights)",
+        workload.label()
     );
+    let mut t = Table::new(&title, &["Method", "Recon err", "Comp. ratio", "Final #params"]);
     for (label, _, err, fin) in &rows {
         t.row(&[
             (*label).to_string(),
@@ -302,23 +342,36 @@ fn cmd_compress(args: &Args) -> Result<()> {
 fn cmd_explore(args: &Args) -> Result<()> {
     use std::path::PathBuf;
     use tt_edge::dse::{self, ExploreConfig, SpaceKind, Strategy, Workload};
+    use tt_edge::ttd::SvdMethod;
 
     let workload = args.opt_or("workload", "resnet32");
-    let workload = Workload::parse(&workload)
-        .unwrap_or_else(|| invalid("workload", &workload, "resnet32|tiny"));
+    let workload = Workload::parse(&workload).unwrap_or_else(|| {
+        invalid("workload", &workload, "resnet32|tiny|tiny-gpt|bert-base|activations")
+    });
     let space = args.opt_or("space", "full");
     let space = SpaceKind::parse(&space)
         .unwrap_or_else(|| invalid("space", &space, "paper|features|full"));
     let strategy = args.opt_or("strategy", "grid");
     let strategy = Strategy::parse(&strategy)
         .unwrap_or_else(|| invalid("strategy", &strategy, "grid|random|evolve"));
+    let seed: u64 = opt_or(args, "seed", 42);
+    let method = args.opt_or("method", "exact");
+    // `--method` is a numerics knob, not a genome axis: it shapes the
+    // recorded op stream, so it lives on the ExploreConfig and the
+    // whole sweep shares one method (record-once / replay-many holds).
+    let method = match method.as_str() {
+        "exact" => SvdMethod::Exact,
+        "rsvd" => SvdMethod::Randomized { seed, oversample: 8 },
+        _ => invalid("method", &method, "exact|rsvd"),
+    };
     let cfg = ExploreConfig {
         workload,
         space,
         strategy,
         budget: opt_or(args, "budget", 32),
-        seed: opt_or(args, "seed", 42),
+        seed,
         eps: opt_or(args, "eps", 0.12),
+        method,
         parallel: opt_or(args, "parallel", 1),
     };
 
@@ -530,7 +583,8 @@ fn cmd_federate(args: &Args) -> Result<()> {
     let soc = match args.opt_or("soc", "tt-edge").as_str() {
         "baseline" => SocConfig::baseline(),
         "tt-edge" => SocConfig::tt_edge(),
-        other => invalid("soc", other, "baseline|tt-edge"),
+        "systolic" => SocConfig::systolic(),
+        other => invalid("soc", other, "baseline|tt-edge|systolic"),
     };
     let faults = FaultPlan {
         dropout: opt_or(args, "dropout", 0.0),

@@ -1,7 +1,11 @@
-//! The compression workload: ResNet-32 parameter inventory and store.
+//! The compression workloads: ResNet-32 parameter inventory and
+//! store, plus transformer-scale decoder stacks and activation maps
+//! (ISSUE 9).
 
 pub mod params;
 pub mod resnet32;
+pub mod transformer;
 
 pub use params::ParamStore;
 pub use resnet32::{conv_layers, param_count, param_specs, ConvLayer};
+pub use transformer::TransformerSpec;

@@ -1,0 +1,247 @@
+//! Transformer-scale compression workloads (ISSUE 9, after arXiv
+//! 2501.19135's TTD-compressed LLM layers and arXiv 2411.06346's
+//! activation-map compression).
+//!
+//! A [`TransformerSpec`] is a parameterized decoder block stack: per
+//! layer the four attention projections (`Wq`/`Wk`/`Wv`/`Wo`, each
+//! `d_model x d_model`) and the FFN up/down pair (`d_model x d_ff` /
+//! `d_ff x d_model`). Every matrix is carried as a [`ConvLayer`] with
+//! a unit spatial extent — its `tt_dims()` become `[f1, f2, cols]`
+//! for a balanced factorization `f1 * f2 = rows` — so the whole
+//! existing pipeline (job builder, per-layer fan-out, program cache,
+//! serve wire format) consumes transformer workloads unchanged.
+//!
+//! Weights are *trained-like* via the same planted-TT-rank generator
+//! the ResNet workload uses ([`synthetic_trained_conv`]); the
+//! activation-map variant plants per-layer `seq_len x d_model`
+//! activation stacks instead (activations are the compression target
+//! in the 2411.06346 setting, not the weights).
+
+use crate::model::resnet32::ConvLayer;
+use crate::sim::workload::synthetic_trained_conv;
+use crate::ttd::Tensor;
+use crate::util::Rng;
+
+/// Planted compression ratio / relative noise for transformer weight
+/// matrices (LLM projections are strongly low-rank in the 2501.19135
+/// setting).
+pub const WEIGHT_RATIO: f64 = 6.0;
+pub const WEIGHT_NOISE: f32 = 0.02;
+
+/// Planted ratio / noise for activation maps (2411.06346 compresses
+/// them harder than weights).
+pub const ACTIVATION_RATIO: f64 = 8.0;
+pub const ACTIVATION_NOISE: f32 = 0.02;
+
+/// A decoder-block stack: `layers` blocks of QKV/O projections plus
+/// an FFN up/down pair at (`d_model`, `d_ff`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransformerSpec {
+    pub name: &'static str,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub layers: usize,
+    /// Sequence length of the activation-map variant.
+    pub seq_len: usize,
+}
+
+/// Balanced two-factor split of `n`: the largest divisor pair
+/// `(a, b)` with `a <= b` and `a * b = n`.
+pub fn balanced_factor(n: usize) -> (usize, usize) {
+    let mut a = (n.max(1) as f64).sqrt() as usize;
+    while a > 1 && n % a != 0 {
+        a -= 1;
+    }
+    let a = a.max(1);
+    (a, n / a)
+}
+
+/// One `rows x cols` matrix as a unit-spatial [`ConvLayer`] whose
+/// `tt_dims()` are `[f1, f2, cols]` with `f1 * f2 = rows`.
+fn matrix_layer(param_index: usize, name: String, rows: usize, cols: usize) -> ConvLayer {
+    let (f1, f2) = balanced_factor(rows);
+    ConvLayer { param_index, name, shape: [1, f1, f2, cols] }
+}
+
+impl TransformerSpec {
+    /// A test-fast decoder stack (the CI smoke workload).
+    pub fn tiny_gpt() -> Self {
+        TransformerSpec { name: "tiny-gpt", d_model: 64, d_ff: 256, layers: 2, seq_len: 32 }
+    }
+
+    /// BERT-base scale: 12 blocks at (768, 3072) — ~85 M matrix
+    /// parameters. Shape-enumerable everywhere; decomposing it is a
+    /// dedicated-hardware run, not a CI job.
+    pub fn bert_base() -> Self {
+        TransformerSpec { name: "bert-base", d_model: 768, d_ff: 3072, layers: 12, seq_len: 128 }
+    }
+
+    /// The TTD-compressible weight matrices, in canonical order
+    /// (`layer{i}/{wq,wk,wv,wo,ffn_up,ffn_down}`).
+    pub fn weight_layers(&self) -> Vec<ConvLayer> {
+        let mut out = Vec::with_capacity(self.layers * 6);
+        for i in 0..self.layers {
+            for proj in ["wq", "wk", "wv", "wo"] {
+                out.push(matrix_layer(
+                    out.len(),
+                    format!("layer{i}/{proj}"),
+                    self.d_model,
+                    self.d_model,
+                ));
+            }
+            out.push(matrix_layer(
+                out.len(),
+                format!("layer{i}/ffn_up"),
+                self.d_model,
+                self.d_ff,
+            ));
+            out.push(matrix_layer(
+                out.len(),
+                format!("layer{i}/ffn_down"),
+                self.d_ff,
+                self.d_model,
+            ));
+        }
+        out
+    }
+
+    /// The activation-map variant: one `seq_len x d_model` activation
+    /// stack per block output.
+    pub fn activation_layers(&self) -> Vec<ConvLayer> {
+        (0..self.layers)
+            .map(|i| {
+                matrix_layer(i, format!("layer{i}/act"), self.seq_len, self.d_model)
+            })
+            .collect()
+    }
+
+    /// Dense matrix parameters (the compression targets).
+    pub fn matrix_params(&self) -> usize {
+        self.layers * (4 * self.d_model * self.d_model + 2 * self.d_model * self.d_ff)
+    }
+
+    /// Whole-model inventory: matrices + projection/FFN biases + the
+    /// per-block and final layernorm affines — the uncompressed
+    /// remainder in the aggregate accounting, mirroring how the
+    /// ResNet path counts its bn/fc parameters.
+    pub fn param_count(&self) -> usize {
+        let per_block_small = 4 * self.d_model // proj biases
+            + self.d_ff                        // ffn_up bias
+            + self.d_model                     // ffn_down bias
+            + 4 * self.d_model; // two layernorm affines
+        self.matrix_params() + self.layers * per_block_small + 2 * self.d_model
+    }
+
+    /// Whole-"model" inventory of the activation variant: just the
+    /// activation stacks.
+    pub fn activation_count(&self) -> usize {
+        self.layers * self.seq_len * self.d_model
+    }
+
+    /// Generate the trained-like weight workload (seeded, per-matrix
+    /// forked streams like the ResNet generator).
+    pub fn synthetic_weights(&self, seed: u64) -> Vec<(ConvLayer, Tensor)> {
+        materialize(self.weight_layers(), seed, WEIGHT_RATIO, WEIGHT_NOISE)
+    }
+
+    /// Generate the activation-map workload.
+    pub fn synthetic_activations(&self, seed: u64) -> Vec<(ConvLayer, Tensor)> {
+        materialize(self.activation_layers(), seed, ACTIVATION_RATIO, ACTIVATION_NOISE)
+    }
+}
+
+fn materialize(
+    layers: Vec<ConvLayer>,
+    seed: u64,
+    ratio: f64,
+    noise: f32,
+) -> Vec<(ConvLayer, Tensor)> {
+    let rng = Rng::new(seed);
+    layers
+        .into_iter()
+        .map(|l| {
+            let mut child = rng.fork(l.param_index as u64);
+            let w = synthetic_trained_conv(&mut child, &l, ratio, noise);
+            (l, w)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+    use crate::ttd::{decompose, TtSpec};
+
+    #[test]
+    fn balanced_factors() {
+        assert_eq!(balanced_factor(64), (8, 8));
+        assert_eq!(balanced_factor(768), (24, 32));
+        assert_eq!(balanced_factor(3072), (48, 64));
+        assert_eq!(balanced_factor(32), (4, 8));
+        assert_eq!(balanced_factor(7), (1, 7));
+        assert_eq!(balanced_factor(1), (1, 1));
+    }
+
+    #[test]
+    fn tiny_gpt_inventory() {
+        let t = TransformerSpec::tiny_gpt();
+        let ws = t.weight_layers();
+        assert_eq!(ws.len(), 2 * 6);
+        assert_eq!(ws[0].tt_dims(), [8, 8, 64]);
+        assert_eq!(ws[4].tt_dims(), [8, 8, 256]); // ffn_up
+        assert_eq!(ws[5].tt_dims(), [16, 16, 64]); // ffn_down
+        let dense: usize = ws.iter().map(|l| l.numel()).sum();
+        assert_eq!(dense, t.matrix_params());
+        assert!(t.param_count() > t.matrix_params());
+        // param indices are the rng fork streams: dense and unique
+        for (i, l) in ws.iter().enumerate() {
+            assert_eq!(l.param_index, i);
+        }
+    }
+
+    #[test]
+    fn bert_base_is_bert_scale() {
+        let b = TransformerSpec::bert_base();
+        assert_eq!(b.weight_layers().len(), 72);
+        // 12 * (4*768^2 + 2*768*3072) = ~85 M
+        assert_eq!(b.matrix_params(), 84_934_656);
+        assert_eq!(b.weight_layers()[0].tt_dims(), [24, 32, 768]);
+    }
+
+    #[test]
+    fn activation_variant_shapes() {
+        let t = TransformerSpec::tiny_gpt();
+        let acts = t.activation_layers();
+        assert_eq!(acts.len(), 2);
+        assert_eq!(acts[0].tt_dims(), [4, 8, 64]);
+        assert_eq!(t.activation_count(), 2 * 32 * 64);
+    }
+
+    #[test]
+    fn synthetic_weights_are_seeded_and_compressible() {
+        let t = TransformerSpec::tiny_gpt();
+        let a = t.synthetic_weights(7);
+        let b = t.synthetic_weights(7);
+        assert_eq!(a.len(), 12);
+        for ((_, wa), (_, wb)) in a.iter().zip(&b) {
+            assert_eq!(wa.data, wb.data);
+        }
+        let c = t.synthetic_weights(8);
+        assert_ne!(a[0].1.data, c[0].1.data);
+        // the planted structure makes prescribed-accuracy TTD land
+        // near the planted ratio
+        let (l, w) = &a[0];
+        let d = decompose(&w.reshape(&l.tt_dims()), &TtSpec::eps(0.12), &mut NullSink);
+        assert!(d.compression_ratio() > 3.0, "ratio {}", d.compression_ratio());
+    }
+
+    #[test]
+    fn synthetic_activations_are_compressible() {
+        let t = TransformerSpec::tiny_gpt();
+        let acts = t.synthetic_activations(5);
+        let (l, w) = &acts[0];
+        let d = decompose(&w.reshape(&l.tt_dims()), &TtSpec::eps(0.12), &mut NullSink);
+        assert!(d.compression_ratio() > 3.0, "ratio {}", d.compression_ratio());
+    }
+}

@@ -8,10 +8,13 @@
 //! {"workload": "tiny", "seed": "7", "eps": 0.12, "socs": ["baseline", "tt-edge"]}
 //! {"workload": "resnet32", "eps": 0.2, "rank_cap": 8}
 //! {"workload": "tiny", "seed": "7", "eps": 0.12, "rank_caps": [4, 6]}
+//! {"workload": "tiny-gpt", "method": "rsvd", "socs": ["systolic"]}
 //! ```
 //!
 //! Every field is optional (`workload` resnet32, `seed` 42, `eps`
-//! 0.12, unbounded ranks, both SoCs); a *present but malformed* field
+//! 0.12, `method` exact, unbounded ranks, both SoCs; `method: "rsvd"`
+//! keys the randomized range-finder off the request seed with the
+//! default oversampling of 8); a *present but malformed* field
 //! — or an unknown key — is a hard parse error naming the line, never
 //! a silent default (the CmdSpec philosophy, applied to the wire).
 //!
@@ -51,11 +54,12 @@ use crate::job::{numerics_pass_count, CompressionJob};
 use crate::metrics::CacheStats;
 use crate::sim::report::SimReport;
 use crate::sim::SocConfig;
-use crate::ttd::ttd::TtSpec;
+use crate::ttd::ttd::{SvdMethod, TtSpec};
 use crate::util::json::{self, Json};
 
 /// Keys a request object may carry; anything else is a parse error.
-const REQUEST_KEYS: &[&str] = &["workload", "seed", "eps", "rank_cap", "rank_caps", "socs"];
+const REQUEST_KEYS: &[&str] =
+    &["workload", "seed", "eps", "method", "rank_cap", "rank_caps", "socs"];
 
 /// One parsed queue entry.
 #[derive(Clone, Debug, PartialEq)]
@@ -64,6 +68,9 @@ pub struct ServeRequest {
     /// Seeds the synthetic-trained weights (the workload identity).
     pub seed: u64,
     pub eps: f32,
+    /// SVD method (`"method": "exact"|"rsvd"`). `rsvd` resolves to the
+    /// randomized range-finder seeded by the request seed.
+    pub method: SvdMethod,
     /// Uniform bond cap (`"rank_cap"`); `None` leaves bonds unbounded
     /// unless `rank_caps` is given.
     pub rank_cap: Option<usize>,
@@ -80,6 +87,7 @@ impl Default for ServeRequest {
             workload: Workload::Resnet32,
             seed: 42,
             eps: 0.12,
+            method: SvdMethod::Exact,
             rank_cap: None,
             rank_caps: Vec::new(),
             socs: vec!["baseline".into(), "tt-edge".into()],
@@ -90,7 +98,7 @@ impl Default for ServeRequest {
 impl ServeRequest {
     /// The full numeric spec this request asks for.
     pub fn spec(&self) -> TtSpec {
-        let spec = TtSpec::eps(self.eps);
+        let spec = TtSpec::eps(self.eps).with_method(self.method);
         if !self.rank_caps.is_empty() {
             spec.rank_caps(&self.rank_caps)
         } else if let Some(cap) = self.rank_cap {
@@ -107,6 +115,7 @@ impl ServeRequest {
             .map(|name| match name.as_str() {
                 "baseline" => SocConfig::baseline(),
                 "tt-edge" => SocConfig::tt_edge(),
+                "systolic" => SocConfig::systolic(),
                 other => unreachable!("parse_request validated soc names, got `{other}`"),
             })
             .collect()
@@ -119,6 +128,9 @@ impl ServeRequest {
         // string: u64 seeds don't fit JSON's f64-exact integer range
         m.insert("seed".into(), Json::Str(self.seed.to_string()));
         m.insert("eps".into(), Json::from(f64::from(self.eps)));
+        if matches!(self.method, SvdMethod::Randomized { .. }) {
+            m.insert("method".into(), Json::from("rsvd"));
+        }
         if let Some(cap) = self.rank_cap {
             m.insert("rank_cap".into(), Json::from(cap));
         }
@@ -167,11 +179,23 @@ pub fn parse_request(text: &str) -> Result<ServeRequest, String> {
     let mut req = ServeRequest::default();
     if let Some(w) = j.get("workload") {
         let name = w.as_str().ok_or("workload must be a string")?;
-        req.workload =
-            Workload::parse(name).ok_or_else(|| format!("bad workload `{name}` (resnet32|tiny)"))?;
+        req.workload = Workload::parse(name).ok_or_else(|| {
+            format!("bad workload `{name}` (resnet32|tiny|tiny-gpt|bert-base|activations)")
+        })?;
     }
     if let Some(s) = j.get("seed") {
         req.seed = parse_seed(s)?;
+    }
+    if let Some(m) = j.get("method") {
+        let name = m.as_str().ok_or("method must be a string")?;
+        req.method = match name {
+            "exact" => SvdMethod::Exact,
+            // keyed off the (possibly defaulted) request seed: the
+            // sketch is part of the workload identity, so two seeds
+            // are two cache keys
+            "rsvd" => SvdMethod::Randomized { seed: req.seed, oversample: 8 },
+            _ => return Err(format!("bad method `{name}` (exact|rsvd)")),
+        };
     }
     if let Some(e) = j.get("eps") {
         let eps = e.as_f64().ok_or("eps must be a number")?;
@@ -203,10 +227,10 @@ pub fn parse_request(text: &str) -> Result<ServeRequest, String> {
             .iter()
             .map(|s| {
                 let name = s.as_str().ok_or("socs must be an array of strings")?;
-                if matches!(name, "baseline" | "tt-edge") {
+                if matches!(name, "baseline" | "tt-edge" | "systolic") {
                     Ok(name.to_string())
                 } else {
-                    Err(format!("bad soc `{name}` (baseline|tt-edge)"))
+                    Err(format!("bad soc `{name}` (baseline|tt-edge|systolic)"))
                 }
             })
             .collect::<Result<_, String>>()?;
@@ -342,6 +366,12 @@ fn serve_one(index: usize, req: &ServeRequest, cache: &ProgramCache) -> ServeRes
             let layers = req.workload.layers(req.seed);
             CompressionJob::model(&layers).spec(spec).socs(&socs).cached(cache).run()
         }
+        // Transformer inputs key the cache by spec (name, dims, seed)
+        // and materialize lazily on a miss, like `synthetic`.
+        Workload::TinyGpt | Workload::BertBase | Workload::Activations => {
+            let mut backing = None;
+            req.workload.job(req.seed, &mut backing).spec(spec).socs(&socs).cached(cache).run()
+        }
     }
     .expect("serve requests carry no cancel token");
     ServeResponse {
@@ -453,6 +483,8 @@ mod tests {
             (r#"{"rank_cap": 0}"#, ">= 1"),
             (r#"{"rank_caps": []}"#, "must not be empty"),
             (r#"{"rank_cap": 2, "rank_caps": [2]}"#, "mutually exclusive"),
+            (r#"{"method": "qr"}"#, "bad method"),
+            (r#"{"method": 3}"#, "method must be a string"),
             (r#"{"socs": ["gpu"]}"#, "bad soc"),
             (r#"{"socs": []}"#, "must not be empty"),
             (r#"not json"#, "json error"),
@@ -471,6 +503,21 @@ mod tests {
         assert_eq!(reqs[1].eps, 0.3);
         let err = parse_requests("{\"workload\": \"tiny\"}\n{\"epz\": 1}\n").unwrap_err();
         assert!(err.contains("request line 2"), "{err}");
+    }
+
+    #[test]
+    fn parses_transformer_rsvd_requests() {
+        let req = parse_request(
+            r#"{"workload": "tiny-gpt", "seed": "7", "method": "rsvd", "socs": ["systolic"]}"#,
+        )
+        .unwrap();
+        assert_eq!(req.workload, Workload::TinyGpt);
+        // the sketch is keyed by the request seed, not a fixed default
+        assert_eq!(req.method, SvdMethod::Randomized { seed: 7, oversample: 8 });
+        assert_eq!(req.spec().method(), req.method);
+        assert_eq!(req.soc_configs()[0].name(), SocConfig::systolic().name());
+        let echoed = parse_request(&req.to_json().render()).unwrap();
+        assert_eq!(echoed, req);
     }
 
     #[test]

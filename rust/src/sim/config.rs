@@ -115,6 +115,43 @@ impl Features {
     }
 }
 
+/// Which GEMM accelerator model prices `HwOp::Gemm` work (ISSUE 9).
+///
+/// The backend is a *costing* knob, never a numerics knob: the op
+/// stream is identical under every backend, only the cycle model that
+/// folds it differs. The two paper anchors keep the default backend,
+/// so Table-III pins and golden traces are untouched by construction.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Backend {
+    /// The paper's blockwise 16x16-tile GEMM accelerator
+    /// ([`crate::sim::gemm`]).
+    #[default]
+    TtEdgeGemm,
+    /// Group-vector systolic array (arXiv 2501.19135): vector lanes x
+    /// PE groups with skewed fill/drain ([`crate::sim::systolic`]).
+    Systolic,
+}
+
+impl Backend {
+    pub const ALL: [Backend; 2] = [Backend::TtEdgeGemm, Backend::Systolic];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Backend::TtEdgeGemm => "tt-edge-gemm",
+            Backend::Systolic => "systolic",
+        }
+    }
+
+    /// Parse a wire/CLI name (`"tt-edge-gemm"` | `"systolic"`).
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "tt-edge-gemm" => Some(Backend::TtEdgeGemm),
+            "systolic" => Some(Backend::Systolic),
+            _ => None,
+        }
+    }
+}
+
 /// When the Rocket core's clock gate closes while the TTD-Engine owns
 /// the work — a power-only policy knob ([`crate::dse`] sweeps it).
 /// Gating only ever takes effect when [`Features::clock_gating`] is
@@ -319,6 +356,9 @@ pub struct SocConfig {
     /// Which engine-owned phases the core clock-gate covers (only
     /// effective when `features.clock_gating` is set).
     pub gating: GatingPolicy,
+    /// Which accelerator model prices GEMM work (cost-only knob; the
+    /// default keeps both paper anchors bit-identical).
+    pub backend: Backend,
 }
 
 impl SocConfig {
@@ -330,6 +370,7 @@ impl SocConfig {
             cost: CostModel::default(),
             freq_mhz: 100.0,
             gating: GatingPolicy::EngineOwned,
+            backend: Backend::TtEdgeGemm,
         }
     }
 
@@ -341,6 +382,7 @@ impl SocConfig {
             cost: CostModel::default(),
             freq_mhz: 100.0,
             gating: GatingPolicy::EngineOwned,
+            backend: Backend::TtEdgeGemm,
         }
     }
 
@@ -349,10 +391,18 @@ impl SocConfig {
         SocConfig { features, ..Self::tt_edge() }
     }
 
+    /// TT-Edge with the group-vector systolic GEMM backend swapped in
+    /// (`--soc systolic`).
+    pub fn systolic() -> Self {
+        SocConfig { backend: Backend::Systolic, ..Self::tt_edge() }
+    }
+
     pub fn name(&self) -> &'static str {
-        match self.variant {
-            Variant::Baseline => "Baseline",
-            Variant::TtEdge => "TT-Edge",
+        match (self.variant, self.backend) {
+            (Variant::Baseline, Backend::TtEdgeGemm) => "Baseline",
+            (Variant::TtEdge, Backend::TtEdgeGemm) => "TT-Edge",
+            (Variant::Baseline, Backend::Systolic) => "Baseline/systolic",
+            (Variant::TtEdge, Backend::Systolic) => "TT-Edge/systolic",
         }
     }
 
@@ -421,6 +471,24 @@ mod tests {
         assert!(!GatingPolicy::SortTruncOnly.covers(Phase::Hbd));
         assert_eq!(GatingPolicy::default(), GatingPolicy::EngineOwned);
         assert_eq!(SocConfig::tt_edge().gating, GatingPolicy::EngineOwned);
+    }
+
+    #[test]
+    fn backend_defaults_keep_the_paper_anchors() {
+        // Both anchors price GEMMs on the paper's accelerator; the
+        // systolic preset differs ONLY in the backend knob.
+        assert_eq!(Backend::default(), Backend::TtEdgeGemm);
+        assert_eq!(SocConfig::baseline().backend, Backend::TtEdgeGemm);
+        assert_eq!(SocConfig::tt_edge().backend, Backend::TtEdgeGemm);
+        let s = SocConfig::systolic();
+        assert_eq!(s.backend, Backend::Systolic);
+        assert_eq!(SocConfig { backend: Backend::TtEdgeGemm, ..s }, SocConfig::tt_edge());
+        assert_eq!(SocConfig::systolic().name(), "TT-Edge/systolic");
+        assert_eq!(SocConfig::tt_edge().name(), "TT-Edge");
+        for b in Backend::ALL {
+            assert_eq!(Backend::parse(b.label()), Some(b));
+        }
+        assert_eq!(Backend::parse("warp"), None);
     }
 
     #[test]

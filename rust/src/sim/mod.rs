@@ -19,11 +19,12 @@ pub mod cost;
 pub mod gemm;
 pub mod power;
 pub mod report;
+pub mod systolic;
 pub mod timeline;
 pub mod ttd_engine;
 pub mod workload;
 
-pub use config::{CostModel, Features, GatingPolicy, SocConfig, Variant};
+pub use config::{Backend, CostModel, Features, GatingPolicy, SocConfig, Variant};
 pub use cost::CostSink;
 pub use report::{format_table3, SimReport};
 pub use timeline::HwTimeline;

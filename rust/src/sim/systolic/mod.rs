@@ -1,0 +1,135 @@
+//! Group-vector systolic GEMM backend (ISSUE 9, after arXiv
+//! 2501.19135's Group Vector Systolic Accelerator).
+//!
+//! The PE array is organized as `lanes` vector lanes x `groups` PE
+//! groups instead of the blockwise square tile of
+//! [`crate::sim::gemm`]. A matmul (m x k)@(k x n) is executed as
+//! *waves*: each wave maps a `lanes`-row band of A against a
+//! `groups`-column band of B, streaming the shared dimension `k`
+//! through the skewed array. A wave therefore costs `k` steady-state
+//! beats plus the systolic fill/drain skew of `lanes + groups - 1`
+//! beats — the signature difference from the tile model, which has no
+//! skew but pays a descriptor per k-tile.
+//!
+//! Everything is priced from the *same* [`CostModel`] constants as the
+//! tile backend (no new `hw_model` rows — the resource totals are
+//! test-pinned): the array reuses the `gemm_pes` PE budget, the
+//! control path reuses the descriptor/link constants per wave, and
+//! data traffic reuses the DRAM/AXI/DMA constants. Power likewise
+//! reuses the GEMM-accelerator block — the backend is a cycle-shape
+//! knob, not a new die. The backend is selected per
+//! [`crate::sim::config::SocConfig::backend`]; both paper anchors keep
+//! the default tile backend, so this module is cost-neutral for every
+//! calibrated pin by construction.
+
+use crate::sim::config::{CostModel, Features};
+
+/// Vector-lane count: one lane per row of the paper's PE tile edge, so
+/// the array consumes the same PE budget as the tile backend.
+pub fn lanes(c: &CostModel) -> u64 {
+    c.gemm_tile.max(1)
+}
+
+/// PE groups: the remaining PE budget split across column groups.
+pub fn groups(c: &CostModel) -> u64 {
+    (c.gemm_pes / lanes(c)).max(1)
+}
+
+/// Wave count for an (m x k)@(k x n) matmul: one wave per
+/// `lanes`-row x `groups`-column output band. `k` streams within a
+/// wave, so unlike the tile model there is no k-loop of descriptors.
+pub fn waves(c: &CostModel, m: u64, n: u64) -> u64 {
+    m.div_ceil(lanes(c)) * n.div_ceil(groups(c))
+}
+
+/// Cycles for one GEMM on the group-vector systolic array.
+pub fn gemm_cycles(c: &CostModel, f: &Features, m: u64, n: u64, k: u64) -> u64 {
+    let w = waves(c, m, n);
+    let skew = lanes(c) + groups(c) - 1;
+    // Compute: per wave, k steady-state beats + fill/drain skew.
+    let compute = w * (k.max(1) + skew);
+    // Control: one descriptor per wave (vs per tile op in the
+    // blockwise model — the systolic array's main control win).
+    let ctrl = if f.direct_gemm_link {
+        w * (c.desc_hw + c.link_per_tile)
+    } else {
+        w * (c.desc_core + c.apb_per_tile)
+    };
+    // Data: each wave streams a lanes x k A-band and writes a
+    // lanes x groups output band; the k x groups B-band is SPM-cached
+    // across the row-band sweep when it fits, re-streamed otherwise.
+    let a_bytes = lanes(c) * k * 4;
+    let out_bytes = lanes(c) * groups(c) * 4;
+    let mut dram_bytes = w * (a_bytes + out_bytes);
+    let b_band_bytes = k * groups(c) * 4;
+    if b_band_bytes > c.spm_bytes() {
+        dram_bytes += w * b_band_bytes;
+    }
+    let data = dram_bytes / c.dram_bytes_per_cycle + w * c.axi_per_tile + c.dma_setup;
+    ctrl + data + compute
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gemm;
+
+    #[test]
+    fn default_geometry_reuses_the_pe_budget() {
+        let c = CostModel::default();
+        assert_eq!(lanes(&c), 16);
+        assert_eq!(groups(&c), 4);
+        assert_eq!(lanes(&c) * groups(&c), c.gemm_pes);
+        assert_eq!(waves(&c, 64, 64), 4 * 16);
+    }
+
+    #[test]
+    fn wave_cost_scales_with_k_not_k_tiles() {
+        // Doubling k adds exactly w*k beats of compute + the extra
+        // A-band traffic: no new descriptors (the tile model would
+        // double its descriptor count).
+        let c = CostModel::default();
+        let f = Features::ALL_ON;
+        let short = gemm_cycles(&c, &f, 16, 4, 64);
+        let long = gemm_cycles(&c, &f, 16, 4, 128);
+        assert_eq!(long - short, 64 + (16 * 64 * 4) / c.dram_bytes_per_cycle);
+    }
+
+    #[test]
+    fn systolic_beats_tiles_on_deep_k_baselines() {
+        // On the baseline control path (core descriptors), a deep-k
+        // GEMM has ceil(k/16) descriptors per output tile in the
+        // blockwise model but one per output band here.
+        let c = CostModel::default();
+        let f = Features::ALL_OFF;
+        assert!(
+            gemm_cycles(&c, &f, 64, 64, 4096) < gemm::gemm_cycles(&c, &f, 64, 64, 4096)
+        );
+    }
+
+    #[test]
+    fn skew_makes_tiny_gemms_relatively_expensive() {
+        // Fill/drain cannot be amortized on a 1-beat GEMM: the wave
+        // still pays the full lanes+groups-1 skew.
+        let c = CostModel::default();
+        let f = Features::ALL_ON;
+        let one = gemm_cycles(&c, &f, 1, 1, 1);
+        assert!(one >= lanes(&c) + groups(&c), "skew floor: {one}");
+    }
+
+    #[test]
+    fn deterministic_and_feature_sensitive() {
+        let c = CostModel::default();
+        for (m, n, k) in [(9, 4096, 4096), (576, 64, 1), (64, 64, 64)] {
+            assert_eq!(
+                gemm_cycles(&c, &Features::ALL_ON, m, n, k),
+                gemm_cycles(&c, &Features::ALL_ON, m, n, k)
+            );
+            assert!(
+                gemm_cycles(&c, &Features::ALL_ON, m, n, k)
+                    < gemm_cycles(&c, &Features::ALL_OFF, m, n, k),
+                "direct link must help {m}x{n}x{k}"
+            );
+        }
+    }
+}

@@ -15,8 +15,8 @@
 //! | GivensRot     | core (both)               | core (both)                  |
 //! | Reshape/Scalar| core (both)               | core (both)                  |
 
-use crate::sim::config::SocConfig;
-use crate::sim::{core_model, gemm, ttd_engine};
+use crate::sim::config::{Backend, SocConfig};
+use crate::sim::{core_model, gemm, systolic, ttd_engine};
 use crate::trace::{HwOp, Phase, TraceSink};
 
 /// Per-phase cycle accumulator.
@@ -154,7 +154,14 @@ impl HwTimeline {
                     // designs (Table III's Update-SVD rows are equal).
                     (m * n) as u64 * c.core_update_elem
                 } else {
-                    gemm::gemm_cycles(c, f, m as u64, n as u64, k as u64)
+                    match self.config.backend {
+                        Backend::TtEdgeGemm => {
+                            gemm::gemm_cycles(c, f, m as u64, n as u64, k as u64)
+                        }
+                        Backend::Systolic => {
+                            systolic::gemm_cycles(c, f, m as u64, n as u64, k as u64)
+                        }
+                    }
                 }
             }
             HwOp::DataMove { bytes } => bytes as u64 / c.dram_bytes_per_cycle + c.dma_setup,
@@ -306,6 +313,36 @@ mod tests {
         t.op(HwOp::Gemm { m: 16, n: 16, k: 16 });
         assert_eq!(t.stats.gemms, 2);
         assert_eq!(t.stats.gemm_tiles, 8 + 1);
+    }
+
+    #[test]
+    fn systolic_backend_reprices_only_gemm_ops() {
+        let tile = SocConfig::tt_edge();
+        let sys = crate::sim::config::SocConfig::systolic();
+        // Non-GEMM ops and the core-managed Update-SVD scale loop are
+        // backend-invariant...
+        for (phase, op) in [
+            (Phase::Hbd, HwOp::HouseGen { len: 500 }),
+            (Phase::SortTrunc, HwOp::Sort { n: 64, swaps: 100 }),
+            (Phase::QrDiag, HwOp::GivensRot { len: 64 }),
+            (Phase::UpdateSvdInput, HwOp::Gemm { m: 64, n: 64, k: 1 }),
+        ] {
+            let mut a = HwTimeline::new(tile.clone());
+            let mut b = HwTimeline::new(sys.clone());
+            a.op(HwOp::SetPhase(phase));
+            b.op(HwOp::SetPhase(phase));
+            a.op(op);
+            b.op(op);
+            assert_eq!(a.cycles.total(), b.cycles.total(), "{op:?}");
+        }
+        // ...while an HBD GEMM is priced by the selected backend.
+        let mut a = HwTimeline::new(tile);
+        let mut b = HwTimeline::new(sys);
+        a.op(HwOp::SetPhase(Phase::Hbd));
+        b.op(HwOp::SetPhase(Phase::Hbd));
+        a.op(HwOp::Gemm { m: 64, n: 64, k: 576 });
+        b.op(HwOp::Gemm { m: 64, n: 64, k: 576 });
+        assert_ne!(a.cycles.total(), b.cycles.total());
     }
 
     #[test]

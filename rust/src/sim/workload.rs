@@ -119,8 +119,22 @@ pub fn aggregate_outcome_conv(
     decomps: Vec<TtDecomp>,
     max_rel_err: f32,
 ) -> CompressionOutcome {
+    aggregate_outcome_model(param_count(), conv_dense, decomps, max_rel_err)
+}
+
+/// [`aggregate_outcome_conv`] for a non-ResNet model inventory
+/// (transformer decoder stacks, activation maps — ISSUE 9):
+/// `model_dense` is the workload's own whole-model parameter count and
+/// supplies the uncompressed remainder. Saturates to `conv_dense` the
+/// same way the ResNet path does.
+pub fn aggregate_outcome_model(
+    model_dense: usize,
+    conv_dense: usize,
+    decomps: Vec<TtDecomp>,
+    max_rel_err: f32,
+) -> CompressionOutcome {
     let conv_tt: usize = decomps.iter().map(|d| d.param_count()).sum();
-    let model_dense = param_count().max(conv_dense);
+    let model_dense = model_dense.max(conv_dense);
     let non_conv = model_dense - conv_dense;
     let final_params = non_conv + conv_tt;
     CompressionOutcome {

@@ -12,4 +12,4 @@ pub mod ttd;
 
 pub use reconstruct::{reconstruct, relative_error};
 pub use tensor::{Matrix, Tensor};
-pub use ttd::{decompose, TtCore, TtDecomp, TtSpec};
+pub use ttd::{decompose, SvdMethod, TtCore, TtDecomp, TtSpec};

@@ -7,6 +7,7 @@ pub mod bidiag;
 pub mod golub_kahan;
 pub mod house;
 pub mod jacobi;
+pub mod randomized;
 
 use crate::trace::{HwOp, Phase, TraceSink};
 use crate::ttd::tensor::Matrix;

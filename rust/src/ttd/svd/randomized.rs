@@ -1,0 +1,201 @@
+//! Seeded randomized range-finder SVD (Halko, Martinsson & Tropp),
+//! Algorithm-1 line 8's `--method rsvd` (ISSUE 9).
+//!
+//! For a tall `A` (m x n) and sketch width `l`:
+//!
+//! 1. `Y = A Omega` with a seeded Gaussian `Omega` (n x l) — one big
+//!    GEMM, the step that replaces O(mn^2) dense HBD work with O(mnl).
+//! 2. Householder QR of `Y` -> orthonormal `Q` (m x l).
+//! 3. `B = Q^T A` (l x n), then the **existing** dense HBD/GK SVD of
+//!    `B` — so the small-problem numerics, phase bracketing, and op
+//!    vocabulary are exactly the ones the simulator already prices.
+//! 4. `U = Q U_B`.
+//!
+//! Everything is emitted through the same closed [`HwOp`] stream as
+//! the exact path (sketch/projection GEMMs + per-reflector
+//! `HouseGen`/rank-1 `Gemm` ops in the HBD phase), so programs,
+//! replay, caching, and every SoC backend compose unchanged. The
+//! factorization is a pure function of `(A, sketch, seed)` — no
+//! thread-count or kernel dependence anywhere on the path — which is
+//! what the byte-determinism suites pin.
+
+use crate::trace::{HwOp, Phase, TraceSink};
+use crate::ttd::svd::house;
+use crate::ttd::svd::{svd, Svd};
+use crate::ttd::tensor::Matrix;
+use crate::util::Rng;
+
+/// Economy randomized SVD with `min(sketch, min(m, n))` retained
+/// components. Like [`svd`], the result is **not** sorted —
+/// Sorting_Basis runs afterwards. Wide inputs go through the transpose
+/// (costed as a Reshape), mirroring the exact path.
+pub fn rsvd<S: TraceSink>(a: &Matrix, sketch: usize, seed: u64, sink: &mut S) -> Svd {
+    if a.rows >= a.cols {
+        rsvd_tall(a, sketch, seed, sink)
+    } else {
+        sink.op(HwOp::SetPhase(Phase::ReshapeEtc));
+        sink.op(HwOp::Reshape { elems: a.rows * a.cols });
+        let at = a.transpose();
+        let s = rsvd_tall(&at, sketch, seed, sink);
+        sink.op(HwOp::SetPhase(Phase::ReshapeEtc));
+        sink.op(HwOp::Reshape { elems: 2 * a.rows * a.cols });
+        Svd {
+            u: s.vt.transpose(),
+            sigma: s.sigma,
+            vt: s.u.transpose(),
+            qr_iterations: s.qr_iterations,
+        }
+    }
+}
+
+fn rsvd_tall<S: TraceSink>(a: &Matrix, sketch: usize, seed: u64, sink: &mut S) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    let l = sketch.clamp(1, n);
+
+    // 1. Sketch: Y = A Omega, Omega seeded Gaussian. The range-finder
+    // runs on the GEMM accelerator; Omega generation is core-side
+    // bookkeeping already covered by the GEMM's operand streaming.
+    sink.op(HwOp::SetPhase(Phase::Hbd));
+    let mut rng = Rng::new(seed);
+    let omega = Matrix::from_vec(n, l, rng.normal_vec(n * l));
+    sink.op(HwOp::Gemm { m, n: l, k: n });
+    let mut y = a.matmul(&omega);
+
+    // 2. Householder QR of Y: l reflectors, each generated
+    // (`HouseGen`) and applied to the trailing panel as a rank-1
+    // update through the GEMM unit — the same op shapes the HBD path
+    // emits, so both backends price the sketch QR natively.
+    let mut hs = Vec::with_capacity(l);
+    let mut col = vec![0.0f32; m];
+    {
+        // lint: hotpath
+        for j in 0..l {
+            let len = m - j;
+            for (i, c) in col[..len].iter_mut().enumerate() {
+                *c = y.get(j + i, j);
+            }
+            sink.op(HwOp::HouseGen { len });
+            let h = house::house(&col[..len]);
+            if j + 1 < l {
+                sink.op(HwOp::Gemm { m: len, n: l - j - 1, k: 1 });
+                house::apply_left(&mut y, j, j + 1, &h.v, h.beta);
+            }
+            hs.push(h);
+        }
+    }
+
+    // Explicit Q (m x l) by backward accumulation: H_j fixes e_c for
+    // c < j, so each reflector only touches the trailing block.
+    let mut q = Matrix::eye(m, l);
+    for j in (0..l).rev() {
+        let h = &hs[j];
+        sink.op(HwOp::Gemm { m: m - j, n: l - j, k: 1 });
+        house::apply_left(&mut q, j, j, &h.v, h.beta);
+    }
+
+    // 3. Project: B = Q^T A (l x n), then the existing dense SVD
+    // (emits its own Hbd/QrDiag phase brackets).
+    sink.op(HwOp::Gemm { m: l, n, k: m });
+    let b = q.transpose().matmul(a);
+    let s = svd(&b, sink);
+
+    // 4. Lift the left basis back: U = Q U_B (m x l @ l x k).
+    sink.op(HwOp::SetPhase(Phase::Hbd));
+    sink.op(HwOp::Gemm { m, n: s.u.cols, k: l });
+    Svd { u: q.matmul(&s.u), sigma: s.sigma, vt: s.vt, qr_iterations: s.qr_iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+    use crate::trace::{NullSink, VecSink};
+    use crate::util::Rng;
+
+    fn reconstruct(s: &Svd) -> Matrix {
+        let mut us = s.u.clone();
+        for r in 0..us.rows {
+            for c in 0..us.cols {
+                let v = us.get(r, c) * s.sigma[c];
+                us.set(r, c, v);
+            }
+        }
+        us.matmul(&s.vt)
+    }
+
+    #[test]
+    fn full_sketch_reconstructs_any_aspect_ratio() {
+        check(15, 900, |rng| {
+            let m = 2 + rng.below(24);
+            let n = 2 + rng.below(24);
+            let a = Matrix::from_vec(m, n, rng.normal_vec(m * n));
+            let s = rsvd(&a, m.max(n), 7, &mut NullSink);
+            let k = m.min(n);
+            assert_eq!((s.u.rows, s.u.cols), (m, k));
+            assert_eq!(s.sigma.len(), k);
+            assert_eq!((s.vt.rows, s.vt.cols), (k, n));
+            let scale = a.frobenius().max(1.0);
+            assert!(
+                reconstruct(&s).max_abs_diff(&a) / scale < 1e-3,
+                "m={m} n={n}"
+            );
+        });
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Rng::new(31);
+        let a = Matrix::from_vec(40, 12, rng.normal_vec(480));
+        let s = rsvd(&a, 6, 3, &mut NullSink);
+        // U = Q U_B with both factors orthonormal: U^T U = I_6.
+        let gram = s.u.transpose().matmul(&s.u);
+        assert!(gram.max_abs_diff(&Matrix::eye(6, 6)) < 1e-4);
+    }
+
+    #[test]
+    fn truncated_sketch_captures_a_planted_range() {
+        // A = L R with inner dimension 4: a rank-4 matrix must be
+        // recovered (to rounding) by any sketch >= 4.
+        let mut rng = Rng::new(32);
+        let l = Matrix::from_vec(50, 4, rng.normal_vec(200));
+        let r = Matrix::from_vec(4, 20, rng.normal_vec(80));
+        let a = l.matmul(&r);
+        let s = rsvd(&a, 8, 11, &mut NullSink);
+        let scale = a.frobenius();
+        assert!(reconstruct(&s).max_abs_diff(&a) / scale < 1e-3);
+        // trailing sketch directions beyond the true rank are noise
+        assert!(s.sigma.iter().filter(|v| **v > 1e-3 * scale).count() == 4);
+    }
+
+    #[test]
+    fn seed_determinism_is_bitwise() {
+        let mut rng = Rng::new(33);
+        let a = Matrix::from_vec(30, 10, rng.normal_vec(300));
+        let mut t1 = VecSink::default();
+        let mut t2 = VecSink::default();
+        let s1 = rsvd(&a, 5, 42, &mut t1);
+        let s2 = rsvd(&a, 5, 42, &mut t2);
+        assert_eq!(s1.u.data, s2.u.data);
+        assert_eq!(s1.sigma, s2.sigma);
+        assert_eq!(s1.vt.data, s2.vt.data);
+        assert_eq!(t1.ops, t2.ops);
+        // a different seed draws a different sketch
+        let s3 = rsvd(&a, 5, 43, &mut NullSink);
+        assert_ne!(s1.u.data, s3.u.data);
+    }
+
+    #[test]
+    fn trace_stays_in_the_closed_vocabulary_and_phases() {
+        let mut rng = Rng::new(34);
+        let a = Matrix::from_vec(18, 6, rng.normal_vec(108));
+        let mut sink = VecSink::default();
+        let _ = rsvd(&a, 4, 9, &mut sink);
+        assert!(matches!(sink.ops[0], HwOp::SetPhase(Phase::Hbd)));
+        assert!(sink.ops.iter().any(|o| matches!(o, HwOp::Gemm { .. })));
+        assert!(sink.ops.iter().any(|o| matches!(o, HwOp::HouseGen { .. })));
+        assert!(sink
+            .ops
+            .iter()
+            .any(|o| matches!(o, HwOp::SetPhase(Phase::QrDiag))));
+    }
+}

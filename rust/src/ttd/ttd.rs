@@ -2,7 +2,7 @@
 //! delta-Truncation, emitting the hardware trace the simulator costs.
 
 use crate::trace::{HwOp, Phase, TraceSink};
-use crate::ttd::svd::{svd, Svd};
+use crate::ttd::svd::{randomized, svd, Svd};
 use crate::ttd::tensor::{Matrix, MatrixView, Tensor};
 
 /// One TT core `G_k` of shape `(r_{k-1}, n_k, r_k)`, row-major.
@@ -228,6 +228,25 @@ enum RankCaps {
     PerBond(Vec<usize>),
 }
 
+/// Which SVD algorithm runs Algorithm-1 line 8 (ISSUE 9).
+///
+/// A *numerics* knob: it changes the factorization (and therefore the
+/// op stream, the program cache key, and potentially the ranks), so it
+/// lives on [`TtSpec`] — never on a cost-only axis like the simulator
+/// backend.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SvdMethod {
+    /// Dense HBD + Golub-Kahan SVD of every unfolding (the default).
+    #[default]
+    Exact,
+    /// Seeded randomized range-finder (Halko et al.): sketch
+    /// `Y = A Omega`, Householder QR of `Y`, dense SVD of `Q^T A`.
+    /// The sketch width is the bond's rank cap plus `oversample`
+    /// (clamped to the full rank, so uncapped specs keep the eps
+    /// contract exactly).
+    Randomized { seed: u64, oversample: u32 },
+}
+
 /// Tuning for one Algorithm-1 run. Replaces the positional
 /// `(eps, max_ranks)` pair that used to thread through every
 /// signature: construct with [`TtSpec::eps`], then chain
@@ -248,12 +267,14 @@ pub struct TtSpec {
     /// per-split truncation threshold `delta` derives from it).
     pub eps: f32,
     caps: RankCaps,
+    method: SvdMethod,
 }
 
 impl TtSpec {
-    /// Spec with prescribed accuracy `eps` and unbounded ranks.
+    /// Spec with prescribed accuracy `eps`, unbounded ranks, and the
+    /// exact SVD.
     pub fn eps(eps: f32) -> Self {
-        TtSpec { eps, caps: RankCaps::Unbounded }
+        TtSpec { eps, caps: RankCaps::Unbounded, method: SvdMethod::Exact }
     }
 
     /// Cap every bond rank at `cap`.
@@ -267,6 +288,24 @@ impl TtSpec {
     pub fn rank_caps(mut self, caps: &[usize]) -> Self {
         self.caps = RankCaps::PerBond(caps.to_vec());
         self
+    }
+
+    /// Run line 8 with the randomized range-finder (`--method rsvd`).
+    pub fn rsvd(mut self, seed: u64, oversample: u32) -> Self {
+        self.method = SvdMethod::Randomized { seed, oversample };
+        self
+    }
+
+    /// Set the SVD method wholesale (the serve wire path, where the
+    /// method arrives already parsed).
+    pub fn with_method(mut self, method: SvdMethod) -> Self {
+        self.method = method;
+        self
+    }
+
+    /// Which SVD algorithm line 8 runs.
+    pub fn method(&self) -> SvdMethod {
+        self.method
     }
 
     /// Effective cap for bond `bond` (`usize::MAX` when unbounded).
@@ -316,7 +355,22 @@ pub fn decompose<S: TraceSink>(w: &Tensor, spec: &TtSpec, sink: &mut S) -> TtDec
         let mat = Matrix::from_vec(w_rows, w_cols, w_temp.clone());
 
         // SVD (line 8) — phases traced inside
-        let mut s = svd(&mat, sink);
+        let mut s = match spec.method {
+            SvdMethod::Exact => svd(&mat, sink),
+            SvdMethod::Randomized { seed, oversample } => {
+                // Sketch width: the bond's cap + oversampling, clamped
+                // to the full rank (uncapped bonds degrade to a full
+                // sketch, preserving the eps contract exactly). The
+                // per-split seed is a deterministic function of the
+                // sketch seed and the split index.
+                let full = w_rows.min(w_cols);
+                let sketch =
+                    spec.cap_for(k).saturating_add(oversample as usize).min(full);
+                let split_seed =
+                    seed.wrapping_add((k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                randomized::rsvd(&mat, sketch, split_seed, sink)
+            }
+        };
 
         // Sorting (line 9) + Truncation (line 10)
         sink.op(HwOp::SetPhase(Phase::SortTrunc));
@@ -588,6 +642,34 @@ mod tests {
         assert_eq!(delta_truncation(&[5.0, 3.0, 1.0], 0.0, 2, &mut sink), 2);
         // never below 1
         assert_eq!(delta_truncation(&[1e-9], 1.0, usize::MAX, &mut sink), 1);
+    }
+
+    #[test]
+    fn rsvd_method_keeps_the_eps_contract_when_uncapped() {
+        // Uncapped bonds degrade rsvd to a full sketch, so the
+        // Oseledets bound must hold exactly as for the exact method.
+        check(6, 701, |rng| {
+            let shape = [2 + rng.below(5), 2 + rng.below(6), 2 + rng.below(6)];
+            let w = Tensor::from_vec(&shape, rng.normal_vec(shape.iter().product()));
+            let eps = 0.3;
+            let d = decompose(&w, &TtSpec::eps(eps).rsvd(9, 4), &mut NullSink);
+            let wr = reconstruct(&d);
+            assert!(rel_err(&wr, &w) <= eps + 1e-3, "err {}", rel_err(&wr, &w));
+        });
+    }
+
+    #[test]
+    fn rsvd_spec_is_explicit_and_default_is_exact() {
+        assert_eq!(TtSpec::eps(0.1).method(), SvdMethod::Exact);
+        assert_eq!(TtSpec::default().method(), SvdMethod::Exact);
+        assert_eq!(
+            TtSpec::eps(0.1).rsvd(7, 8).method(),
+            SvdMethod::Randomized { seed: 7, oversample: 8 }
+        );
+        // the method participates in spec equality (and so in cache
+        // keys derived from the spec)
+        assert_ne!(TtSpec::eps(0.1), TtSpec::eps(0.1).rsvd(7, 8));
+        assert_ne!(TtSpec::eps(0.1).rsvd(7, 8), TtSpec::eps(0.1).rsvd(8, 8));
     }
 
     #[test]

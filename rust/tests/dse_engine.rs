@@ -16,6 +16,7 @@ use tt_edge::dse::{
     Strategy, Workload,
 };
 use tt_edge::dse::pareto::pruned_by;
+use tt_edge::ttd::SvdMethod;
 use tt_edge::util::Rng;
 
 fn random_points(seed: u64, n: usize) -> Vec<Objectives> {
@@ -74,6 +75,7 @@ fn cfg(strategy: Strategy, seed: u64, parallel: usize) -> ExploreConfig {
         budget: 6,
         seed,
         eps: 0.2,
+        method: SvdMethod::Exact,
         parallel,
     }
 }
@@ -135,6 +137,7 @@ fn evolve_costs_exactly_one_numerics_pass() {
         budget: 20,
         seed: 11,
         eps: 0.2,
+        method: SvdMethod::Exact,
         parallel: 1,
     };
     let replayed = explore(&big);
@@ -174,6 +177,43 @@ fn evaluated_genomes_are_unique_and_within_budget() {
 }
 
 #[test]
+fn systolic_backend_is_byte_neutral_at_the_anchors_and_moves_its_twins() {
+    // ISSUE 9: the backend axis reprices GEMM ops only, and the two
+    // paper anchors decode to the paper datapath — so a sweep that
+    // spans the systolic backend must leave the anchors' objectives
+    // byte-identical to a paper-space sweep that never instantiates
+    // the systolic model at all.
+    let paper = explore(&ExploreConfig {
+        workload: Workload::Tiny,
+        space: SpaceKind::Paper,
+        strategy: Strategy::Grid,
+        budget: 2,
+        seed: 3,
+        eps: 0.2,
+        method: SvdMethod::Exact,
+        parallel: 1,
+    });
+    let mut wide = cfg(Strategy::Grid, 3, 1);
+    wide.budget = 40; // ids 32..40 are the first systolic genomes
+    let full = explore(&wide);
+    for i in [0usize, 1] {
+        assert_eq!(paper.evaluated[i].name, full.evaluated[i].name);
+        assert_eq!(paper.evaluated[i].objectives, full.evaluated[i].objectives, "anchor {i}");
+        assert_eq!(paper.evaluated[i].time_ms, full.evaluated[i].time_ms);
+    }
+    // the baseline's systolic twin shares its area (no new Table-II
+    // rows) but prices the GEMM stream differently
+    let twin = full
+        .evaluated
+        .iter()
+        .find(|e| e.name == "base systolic")
+        .expect("budget 40 must reach the systolic genomes");
+    let base = &full.evaluated[0];
+    assert_eq!(twin.objectives.area_luts, base.objectives.area_luts);
+    assert_ne!(twin.objectives.cycles, base.objectives.cycles);
+}
+
+#[test]
 fn all_on_dominates_all_off_on_the_paper_workload() {
     // The acceptance anchor: paper workload, paper SoCs. One numerics
     // pass costs both configs.
@@ -184,6 +224,7 @@ fn all_on_dominates_all_off_on_the_paper_workload() {
         budget: 2,
         seed: 42,
         eps: 0.12,
+        method: SvdMethod::Exact,
         parallel: 2,
     });
     assert_eq!(out.evaluated.len(), 2);
@@ -217,6 +258,7 @@ fn explore_matches_the_simulate_path_on_the_anchors() {
         budget: 2,
         seed: 7,
         eps: 0.15,
+        method: SvdMethod::Exact,
         parallel: 1,
     });
     let mut layers = tt_edge::sim::workload::synthetic_model(7, 3.55, 0.035);

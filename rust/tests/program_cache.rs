@@ -162,6 +162,40 @@ fn rank_caps_are_part_of_the_cache_key() {
     assert_eq!(out.stats.hits, 1);
 }
 
+#[test]
+fn svd_method_is_part_of_the_cache_key() {
+    // The ISSUE 9 twin of the rank-caps regression: two requests
+    // sharing (workload, seed, eps) but differing in SVD method — or
+    // in the rsvd sketch seed/oversampling — must never collide to the
+    // same program.
+    use tt_edge::ttd::{SvdMethod, TtSpec};
+
+    let exact = req(61, 0.12);
+    let rsvd = ServeRequest {
+        method: SvdMethod::Randomized { seed: 61, oversample: 8 },
+        ..req(61, 0.12)
+    };
+    let requests = [exact.clone(), rsvd.clone(), exact.clone(), rsvd.clone()];
+    let before = numerics_pass_count();
+    let out = serve(&requests, &ServeConfig { workers: 1, cache_capacity: 8 });
+    assert_eq!(numerics_pass_count() - before, 2, "2 unique keys, 2 passes");
+    assert_eq!(out.stats.misses, 2);
+    assert_eq!(out.stats.hits, 2);
+    // repeats replay their own method's program, never the other's
+    let texts = rendered(&out);
+    assert_eq!(texts[0], texts[2]);
+    assert_eq!(texts[1], texts[3]);
+
+    // the sketch parameters are numeric identity: seed and oversample
+    // each split the key, and the same spec spelled twice shares one
+    let key = |spec: TtSpec| CompressionJob::synthetic(1).spec(spec).cache_key();
+    let base = key(TtSpec::eps(0.12).rsvd(7, 8));
+    assert_ne!(base, key(TtSpec::eps(0.12).rsvd(8, 8)), "sketch seed");
+    assert_ne!(base, key(TtSpec::eps(0.12).rsvd(7, 16)), "oversample");
+    assert_ne!(base, key(TtSpec::eps(0.12)), "exact vs rsvd");
+    assert_eq!(base, key(TtSpec::eps(0.12).rsvd(7, 8)));
+}
+
 /// Record one small program to use as the LRU tests' payload (its
 /// contents are irrelevant to eviction order).
 fn sample_program() -> JobProgram {
