@@ -48,10 +48,14 @@ fn main() {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
 
     // ---- correctness first: cached == uncached, pass accounting ----
-    let uncached_out =
-        serve(&requests, &ServeConfig { workers: 1, cache_capacity: 0 });
-    let cached_out =
-        serve(&requests, &ServeConfig { workers: 1, cache_capacity: 16 });
+    let uncached_out = serve(
+        &requests,
+        &ServeConfig { workers: 1, cache_capacity: 0, ..ServeConfig::default() },
+    );
+    let cached_out = serve(
+        &requests,
+        &ServeConfig { workers: 1, cache_capacity: 16, ..ServeConfig::default() },
+    );
     assert_eq!(uncached_out.numerics_passes, requests.len() as u64);
     assert_eq!(cached_out.numerics_passes, UNIQUE_KEYS, "one pass per unique key");
     for (a, b) in uncached_out.responses.iter().zip(&cached_out.responses) {
@@ -73,7 +77,7 @@ fn main() {
             || {
                 let out = serve(
                     &requests,
-                    &ServeConfig { workers, cache_capacity: 0 },
+                    &ServeConfig { workers, cache_capacity: 0, ..ServeConfig::default() },
                 );
                 black_box(out.responses.len());
             },
@@ -86,7 +90,7 @@ fn main() {
             || {
                 let out = serve(
                     &requests,
-                    &ServeConfig { workers, cache_capacity: 16 },
+                    &ServeConfig { workers, cache_capacity: 16, ..ServeConfig::default() },
                 );
                 black_box(out.responses.len());
             },

@@ -61,6 +61,10 @@ const THREAD_OWNERS: &[&str] = &[
     "src/ttd/svd/bidiag.rs",
     "src/serve/",
     "src/coordinator/",
+    // ISSUE 10: the deadline watchdog (`fault::with_deadline`) parks a
+    // scoped thread on an mpsc timeout — no wall-clock reads, and the
+    // only observable effect is a CancelToken trip.
+    "src/fault/",
 ];
 
 /// Callers allowed to invoke the raw numerics entry points directly:

@@ -128,6 +128,10 @@ pub struct CacheKey {
     /// `(0, 0, 0)`; randomized carries its sketch seed and
     /// oversampling, both of which change the op stream (ISSUE 9).
     method: (u8, u64, u32),
+    /// Injected-stall discriminant (ISSUE 10): a chaos-stalled run
+    /// takes the Jacobi fallback and must never share a program with
+    /// the fault-free run of the same workload.
+    stall: u8,
 }
 
 impl CacheKey {
@@ -143,6 +147,7 @@ impl CacheKey {
                 SvdMethod::Exact => (0, 0, 0),
                 SvdMethod::Randomized { seed, oversample } => (1, seed, oversample),
             },
+            stall: spec.svd_stall().discriminant(),
         }
     }
 }
@@ -506,6 +511,27 @@ mod tests {
     }
 
     #[test]
+    fn cache_key_covers_the_injected_stall() {
+        use crate::fault::SvdStall;
+        let clean = TtSpec::eps(0.12);
+        let soft = TtSpec::eps(0.12).with_stall(SvdStall::Soft);
+        assert_ne!(
+            CacheKey::new(1, &clean, 2),
+            CacheKey::new(1, &soft, 2),
+            "the Jacobi fallback records a different program"
+        );
+        assert_ne!(
+            CacheKey::new(1, &soft, 2),
+            CacheKey::new(1, &TtSpec::eps(0.12).with_stall(SvdStall::Hard), 2)
+        );
+        assert_eq!(
+            CacheKey::new(1, &clean, 2),
+            CacheKey::new(1, &TtSpec::eps(0.12).with_stall(SvdStall::None), 2),
+            "a benign plan must not split any existing key"
+        );
+    }
+
+    #[test]
     fn claim_miss_fulfill_then_hit() {
         let cache = ProgramCache::new(4);
         let k = key(0.1);
@@ -563,6 +589,59 @@ mod tests {
         assert_eq!(s.lookups, 8);
         assert_eq!(s.misses, 1, "single-flight: one miss for 8 racing claims");
         assert_eq!(s.hits, 7);
+    }
+
+    #[test]
+    fn panicking_recorder_releases_the_key_and_wakes_claimants() {
+        // ISSUE 10: the hard-stall chaos path panics *inside* the
+        // MissGuard holder, mid-recording. That panic must release the
+        // Pending slot, wake every blocked claimant so one takes over
+        // the recording, and leave the CacheStats conservation laws
+        // intact — under an 8-thread race.
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let cache = ProgramCache::new(8);
+        let k = key(0.5);
+        let miss_claims = AtomicU64::new(0);
+        let fulfilled = AtomicU64::new(0);
+        let hit_claims = AtomicU64::new(0);
+        let caught = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    let outcome = catch_unwind(AssertUnwindSafe(|| match cache.claim(&k) {
+                        Claim::Miss(guard) => {
+                            // The first recorder dies mid-recording
+                            // (guard unfulfilled — its Drop must run
+                            // during the unwind); a waiter takes over.
+                            if miss_claims.fetch_add(1, Ordering::Relaxed) == 0 {
+                                panic!("injected recorder panic");
+                            }
+                            guard.fulfill(sample_program());
+                            fulfilled.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Claim::Hit(p) => {
+                            assert!(p.ops.op_count() > 0);
+                            hit_claims.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }));
+                    if outcome.is_err() {
+                        caught.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(caught.load(Ordering::Relaxed), 1, "exactly one injected panic");
+        assert_eq!(miss_claims.load(Ordering::Relaxed), 2, "panicked recorder + takeover");
+        assert_eq!(fulfilled.load(Ordering::Relaxed), 1, "exactly one recording lands");
+        assert_eq!(hit_claims.load(Ordering::Relaxed), 6);
+        assert!(cache.contains(&k), "the takeover recording must be resident");
+        let s = cache.stats();
+        assert!(s.conserved(), "{s:?}");
+        assert_eq!(s.lookups, 8);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.hits, 6);
+        assert_eq!((s.inserts, s.evictions, s.resident), (1, 0, 1));
     }
 
     #[test]

@@ -8,11 +8,13 @@
 //! (no dropout, unit multiplier, lossless link) leaves every numeric
 //! result of the round bit-identical to the fault-free path.
 
+use crate::fault::stream_rng;
 use crate::util::Rng;
 
 /// Stream-separation constants: fault decisions and transport loss
 /// draws must never alias the coordinator's `seed ^ round * 0x9E37`
-/// drift streams.
+/// drift streams — or the crate-wide chaos stream (`0x...0003`,
+/// `crate::fault`), which generalizes this module's idiom.
 const FAULT_STREAM: u64 = 0xFA_0175_0000_0001;
 const TRANSPORT_STREAM: u64 = 0xFA_0175_0000_0002;
 
@@ -84,7 +86,7 @@ impl FaultPlan {
     /// from per-node forked streams, so they are stable under changes
     /// to the node count of *other* rounds and under reordering.
     pub fn for_round(&self, round: usize, nodes: usize) -> Vec<NodeFaults> {
-        let base = Rng::new(self.seed ^ FAULT_STREAM ^ (round as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let base = stream_rng(self.seed, FAULT_STREAM, round as u64);
         (0..nodes)
             .map(|node| {
                 let mut rng = base.fork(node as u64 + 1);
@@ -112,8 +114,7 @@ impl FaultPlan {
     /// The RNG stream one node's transport attempts draw loss from in
     /// `round` (lossless links never consume it).
     pub fn transport_rng(&self, round: usize, node: usize) -> Rng {
-        Rng::new(self.seed ^ TRANSPORT_STREAM ^ (round as u64).wrapping_mul(0x9E3779B97F4A7C15))
-            .fork(node as u64 + 1)
+        stream_rng(self.seed, TRANSPORT_STREAM, round as u64).fork(node as u64 + 1)
     }
 }
 

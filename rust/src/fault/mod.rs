@@ -1,0 +1,381 @@
+//! Crate-wide seeded fault injection and the structured failure
+//! taxonomy (ISSUE 10).
+//!
+//! PR 2 proved the seeded-chaos pattern for the federated coordinator
+//! (`coordinator/faults.rs`): a plan is a pure function from
+//! `(seed, index, attempt)` to fault decisions, so an entire chaos run
+//! replays byte-for-byte from its seed and a *benign* plan leaves
+//! every numeric result bit-identical to the fault-free path. This
+//! module generalizes that idiom into injection points the whole
+//! numerics -> cache -> serve stack consults:
+//!
+//! * **poison** — NaN-poison one weight of the request's input before
+//!   submission (caught by the [`crate::job`] input screen as
+//!   [`JobError::NonFiniteInput`], never propagated into ranks);
+//! * **stall** — force SVD non-convergence ([`SvdStall`]): a *soft*
+//!   stall is rescued by the Jacobi fallback in `ttd::decompose`, a
+//!   *hard* stall models the fallback failing too and surfaces as
+//!   [`JobError::SvdNonConvergence`];
+//! * **panic** — a seeded worker panic mid-request, converted by the
+//!   serve supervisor's `catch_unwind` into a structured error
+//!   response instead of process death;
+//! * **cancel** — forced cache-miss cancellation through the existing
+//!   `CancelToken`, exercising the single-flight `MissGuard` release
+//!   path.
+//!
+//! Decisions are keyed per `(request, attempt)` — never per worker —
+//! so a chaos drain is byte-identical at any worker count. Forced
+//! indices fire on *every* attempt (a deterministic, greppable error
+//! count for CI); probabilistic faults redraw per attempt, so a
+//! bounded retry may genuinely rescue a request.
+
+use std::fmt;
+
+use crate::util::Rng;
+
+pub mod supervisor;
+
+pub use supervisor::{supervise, with_deadline};
+
+/// Stream-separation constant: chaos decisions must never alias the
+/// coordinator's fault/transport streams (`0x...0001`/`0x...0002`) or
+/// any workload weight stream.
+const CHAOS_STREAM: u64 = 0xFA_0175_0000_0003;
+
+/// The round/index mixer every fault stream uses (the PR-2 idiom,
+/// now shared crate-wide).
+pub(crate) const STREAM_MIX: u64 = 0x9E3779B97F4A7C15;
+
+/// The canonical fault-stream constructor: `seed ^ stream ^
+/// major * golden-ratio`, forked per minor index by the caller.
+pub fn stream_rng(seed: u64, stream: u64, major: u64) -> Rng {
+    Rng::new(seed ^ stream ^ major.wrapping_mul(STREAM_MIX))
+}
+
+/// Structured failure taxonomy for one compression request. Every
+/// variant has a stable wire `code()` — the serve JSONL error field —
+/// and a retryability class the supervisor consults.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobError {
+    /// A NaN/Inf weight reached the job input boundary (`layer` is the
+    /// first offending layer index).
+    NonFiniteInput { layer: usize },
+    /// The QR diagonalization hit its iteration cap and the Jacobi
+    /// fallback could not rescue it.
+    SvdNonConvergence { iterations: usize },
+    /// The request's `CancelToken` fired mid-run.
+    Cancelled,
+    /// The per-request deadline expired before the run finished.
+    DeadlineExceeded,
+    /// The request line failed to parse (only reachable under
+    /// `serve --lenient`; strict mode aborts the queue).
+    MalformedRequest(String),
+    /// A worker panicked mid-request (injected or real); the payload
+    /// is the panic message.
+    WorkerPanic(String),
+}
+
+impl JobError {
+    /// Stable wire identifier (the `error.code` response field).
+    pub fn code(&self) -> &'static str {
+        match self {
+            JobError::NonFiniteInput { .. } => "non-finite-input",
+            JobError::SvdNonConvergence { .. } => "svd-non-convergence",
+            JobError::Cancelled => "cancelled",
+            JobError::DeadlineExceeded => "deadline-exceeded",
+            JobError::MalformedRequest(_) => "malformed-request",
+            JobError::WorkerPanic(_) => "worker-panic",
+        }
+    }
+
+    /// Whether a bounded retry can plausibly clear the fault. Bad
+    /// input, cancellation, and expired deadlines are final; panics
+    /// and non-convergence may be transient (an injected probabilistic
+    /// fault redraws per attempt).
+    pub fn retryable(&self) -> bool {
+        matches!(self, JobError::WorkerPanic(_) | JobError::SvdNonConvergence { .. })
+    }
+}
+
+impl fmt::Display for JobError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobError::NonFiniteInput { layer } => {
+                write!(f, "non-finite weight in input layer {layer}")
+            }
+            JobError::SvdNonConvergence { iterations } => {
+                write!(f, "SVD failed to converge after {iterations} iterations")
+            }
+            JobError::Cancelled => write!(f, "request cancelled"),
+            JobError::DeadlineExceeded => write!(f, "request deadline exceeded"),
+            JobError::MalformedRequest(e) => write!(f, "malformed request: {e}"),
+            JobError::WorkerPanic(msg) => write!(f, "worker panicked: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+/// Forced SVD non-convergence mode, carried on `TtSpec` so it reaches
+/// `ttd::decompose` on any worker thread without globals — and, being
+/// numeric identity, participates in the cache key.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum SvdStall {
+    /// No injection: the QR path's own `converged` flag decides.
+    #[default]
+    None,
+    /// Pretend the QR sweep stalled — the Jacobi fallback rescues the
+    /// factorization and the job still succeeds.
+    Soft,
+    /// The fallback fails too: `decompose` raises
+    /// [`JobError::SvdNonConvergence`] mid-recording (exercising the
+    /// single-flight `MissGuard` panic path).
+    Hard,
+}
+
+impl SvdStall {
+    /// Stable cache-key discriminant.
+    pub fn discriminant(&self) -> u8 {
+        match self {
+            SvdStall::None => 0,
+            SvdStall::Soft => 1,
+            SvdStall::Hard => 2,
+        }
+    }
+}
+
+/// The fault decisions one `(request, attempt)` drew.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RequestFaults {
+    pub poison: bool,
+    pub stall: SvdStall,
+    pub panic: bool,
+    pub cancel: bool,
+}
+
+impl RequestFaults {
+    pub fn nominal() -> Self {
+        RequestFaults { poison: false, stall: SvdStall::None, panic: false, cancel: false }
+    }
+}
+
+/// Seeded chaos schedule for a serve drain (the crate-wide
+/// generalization of the coordinator's `FaultPlan`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosPlan {
+    pub seed: u64,
+    /// Per-attempt probability of NaN-poisoning the request input.
+    pub poison: f64,
+    /// Per-attempt probability of a *soft* SVD stall (Jacobi-rescued).
+    pub stall: f64,
+    /// Per-attempt probability of a worker panic.
+    pub panic: f64,
+    /// Per-attempt probability of a forced mid-run cancellation.
+    pub cancel: f64,
+    /// Request indices whose input is poisoned on every attempt.
+    pub forced_poison: Vec<usize>,
+    /// Request indices that *hard*-stall on every attempt (the
+    /// deterministic `svd-non-convergence` error count CI greps).
+    pub forced_stalls: Vec<usize>,
+    /// Request indices that panic on every attempt.
+    pub forced_panics: Vec<usize>,
+    /// Request indices cancelled on every attempt.
+    pub forced_cancels: Vec<usize>,
+}
+
+impl Default for ChaosPlan {
+    fn default() -> Self {
+        ChaosPlan {
+            seed: 0xC4A05,
+            poison: 0.0,
+            stall: 0.0,
+            panic: 0.0,
+            cancel: 0.0,
+            forced_poison: Vec::new(),
+            forced_stalls: Vec::new(),
+            forced_panics: Vec::new(),
+            forced_cancels: Vec::new(),
+        }
+    }
+}
+
+impl ChaosPlan {
+    /// True when the plan cannot perturb a drain — serve's fault-free
+    /// path must then be bit-identical to the pre-chaos behaviour.
+    pub fn is_benign(&self) -> bool {
+        self.poison <= 0.0
+            && self.stall <= 0.0
+            && self.panic <= 0.0
+            && self.cancel <= 0.0
+            && self.forced_poison.is_empty()
+            && self.forced_stalls.is_empty()
+            && self.forced_panics.is_empty()
+            && self.forced_cancels.is_empty()
+    }
+
+    fn rng(&self, index: usize, attempt: usize) -> Rng {
+        stream_rng(self.seed, CHAOS_STREAM, index as u64).fork(attempt as u64 + 1)
+    }
+
+    /// Decide one `(request, attempt)`'s faults. All four uniforms are
+    /// drawn unconditionally so each fault kind owns a fixed draw
+    /// slot: toggling one probability at the same seed never
+    /// reshuffles another kind's decisions (the PR-2 invariant).
+    pub fn for_request(&self, index: usize, attempt: usize) -> RequestFaults {
+        let mut rng = self.rng(index, attempt);
+        let poison_draw = rng.uniform();
+        let stall_draw = rng.uniform();
+        let panic_draw = rng.uniform();
+        let cancel_draw = rng.uniform();
+        let poison = self.forced_poison.contains(&index)
+            || (self.poison > 0.0 && poison_draw < self.poison);
+        let stall = if self.forced_stalls.contains(&index) {
+            SvdStall::Hard
+        } else if self.stall > 0.0 && stall_draw < self.stall {
+            SvdStall::Soft
+        } else {
+            SvdStall::None
+        };
+        let panic = self.forced_panics.contains(&index)
+            || (self.panic > 0.0 && panic_draw < self.panic);
+        let cancel = self.forced_cancels.contains(&index)
+            || (self.cancel > 0.0 && cancel_draw < self.cancel);
+        RequestFaults { poison, stall, panic, cancel }
+    }
+
+    /// Which weight slot of a `len`-element input the poison hits
+    /// (a pure function of the plan seed and request index, so a
+    /// poisoned drain replays byte-for-byte).
+    pub fn poison_slot(&self, index: usize, len: usize) -> usize {
+        debug_assert!(len > 0, "cannot poison an empty input");
+        stream_rng(self.seed, CHAOS_STREAM ^ 0x1, index as u64).below(len.max(1))
+    }
+
+    /// Seeded retry backoff in milliseconds — a pure function of
+    /// `(seed, request, attempt)`, bounded to [0, 4) so chaos suites
+    /// stay fast. Deterministic in *value*; the actual sleep is
+    /// wall-clock and never reaches a byte-pinned artifact.
+    pub fn backoff_ms(&self, index: usize, attempt: usize) -> u64 {
+        self.rng(index, attempt).fork(0x42).next_u64() % 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_benign_and_nominal() {
+        let plan = ChaosPlan::default();
+        assert!(plan.is_benign());
+        for index in 0..16 {
+            for attempt in 0..3 {
+                assert_eq!(plan.for_request(index, attempt), RequestFaults::nominal());
+            }
+        }
+    }
+
+    #[test]
+    fn decisions_replay_from_the_seed() {
+        let plan =
+            ChaosPlan { poison: 0.2, stall: 0.3, panic: 0.3, cancel: 0.1, ..ChaosPlan::default() };
+        assert!(!plan.is_benign());
+        for index in 0..32 {
+            for attempt in 0..3 {
+                assert_eq!(plan.for_request(index, attempt), plan.for_request(index, attempt));
+                assert_eq!(plan.backoff_ms(index, attempt), plan.backoff_ms(index, attempt));
+                assert!(plan.backoff_ms(index, attempt) < 4);
+            }
+        }
+    }
+
+    #[test]
+    fn fault_kinds_use_independent_draw_slots() {
+        // Toggling panic injection must not reshuffle which requests
+        // get poisoned or stalled at the same seed.
+        let base = ChaosPlan { poison: 0.3, stall: 0.3, ..ChaosPlan::default() };
+        let with_panics = ChaosPlan { panic: 0.5, ..base.clone() };
+        for index in 0..64 {
+            let a = base.for_request(index, 0);
+            let b = with_panics.for_request(index, 0);
+            assert_eq!(a.poison, b.poison, "request {index}");
+            assert_eq!(a.stall, b.stall, "request {index}");
+        }
+    }
+
+    #[test]
+    fn forced_faults_fire_on_every_attempt() {
+        let plan = ChaosPlan {
+            forced_poison: vec![1],
+            forced_stalls: vec![2],
+            forced_panics: vec![3],
+            forced_cancels: vec![4],
+            ..ChaosPlan::default()
+        };
+        assert!(!plan.is_benign());
+        for attempt in 0..4 {
+            assert!(plan.for_request(1, attempt).poison);
+            assert_eq!(plan.for_request(2, attempt).stall, SvdStall::Hard);
+            assert!(plan.for_request(3, attempt).panic);
+            assert!(plan.for_request(4, attempt).cancel);
+            // neighbours stay nominal
+            assert_eq!(plan.for_request(0, attempt), RequestFaults::nominal());
+            assert_eq!(plan.for_request(5, attempt), RequestFaults::nominal());
+        }
+    }
+
+    #[test]
+    fn probabilistic_faults_redraw_per_attempt() {
+        // With p = 0.5 some request must panic on attempt 0 and
+        // recover on attempt 1 — that redraw is what makes a retry
+        // worth paying for.
+        let plan = ChaosPlan { panic: 0.5, ..ChaosPlan::default() };
+        let recovered = (0..64).any(|i| {
+            plan.for_request(i, 0).panic && !plan.for_request(i, 1).panic
+        });
+        assert!(recovered, "no request recovered on retry across 64 draws");
+    }
+
+    #[test]
+    fn fault_rate_roughly_matches_probability() {
+        let plan = ChaosPlan { panic: 0.25, ..ChaosPlan::default() };
+        let hits = (0..1024).filter(|&i| plan.for_request(i, 0).panic).count();
+        let rate = hits as f64 / 1024.0;
+        assert!((0.18..0.32).contains(&rate), "rate {rate}");
+    }
+
+    #[test]
+    fn poison_slot_is_stable_and_in_range() {
+        let plan = ChaosPlan::default();
+        for index in 0..8 {
+            let slot = plan.poison_slot(index, 100);
+            assert!(slot < 100);
+            assert_eq!(slot, plan.poison_slot(index, 100));
+        }
+    }
+
+    #[test]
+    fn error_codes_are_stable_and_retryability_is_classed() {
+        let cases: [(JobError, &str, bool); 6] = [
+            (JobError::NonFiniteInput { layer: 3 }, "non-finite-input", false),
+            (JobError::SvdNonConvergence { iterations: 40 }, "svd-non-convergence", true),
+            (JobError::Cancelled, "cancelled", false),
+            (JobError::DeadlineExceeded, "deadline-exceeded", false),
+            (JobError::MalformedRequest("bad".into()), "malformed-request", false),
+            (JobError::WorkerPanic("boom".into()), "worker-panic", true),
+        ];
+        for (err, code, retryable) in cases {
+            assert_eq!(err.code(), code);
+            assert_eq!(err.retryable(), retryable, "{code}");
+            assert!(!err.to_string().is_empty());
+        }
+    }
+
+    #[test]
+    fn stall_discriminants_are_distinct() {
+        assert_eq!(SvdStall::default(), SvdStall::None);
+        let d: Vec<u8> =
+            [SvdStall::None, SvdStall::Soft, SvdStall::Hard].iter().map(|s| s.discriminant()).collect();
+        assert_eq!(d, vec![0, 1, 2]);
+    }
+}

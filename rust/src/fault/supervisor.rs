@@ -1,0 +1,143 @@
+//! Request supervision: panic containment and per-request deadlines.
+//!
+//! [`supervise`] is the serve drain's isolation boundary — it converts
+//! any panic escaping one request (injected chaos or a genuine bug)
+//! into a structured [`JobError`] so one bad request can never kill
+//! the process. [`with_deadline`] arms the existing cooperative
+//! [`CancelToken`] from a watchdog thread; a zero deadline expires
+//! before the run starts, which is the fully deterministic spelling
+//! the chaos suites and CI use (positive deadlines are best-effort
+//! wall-clock and excluded from byte-determinism claims).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use super::JobError;
+use crate::pipeline::CancelToken;
+
+/// Run `f` with panic containment. A panic carrying a [`JobError`]
+/// payload (the `ttd::decompose` hard-stall path uses
+/// `std::panic::panic_any`) surfaces as that error; string panics
+/// become [`JobError::WorkerPanic`] with the message preserved.
+pub fn supervise<T>(f: impl FnOnce() -> Result<T, JobError>) -> Result<T, JobError> {
+    // AssertUnwindSafe: the closure only borrows the shared cache,
+    // whose single-flight MissGuard releases its Pending slot on
+    // unwind — no half-updated state survives the catch.
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(result) => result,
+        Err(payload) => Err(downcast_panic(payload.as_ref())),
+    }
+}
+
+fn downcast_panic(payload: &(dyn std::any::Any + Send)) -> JobError {
+    if let Some(err) = payload.downcast_ref::<JobError>() {
+        err.clone()
+    } else if let Some(msg) = payload.downcast_ref::<&str>() {
+        JobError::WorkerPanic((*msg).to_string())
+    } else if let Some(msg) = payload.downcast_ref::<String>() {
+        JobError::WorkerPanic(msg.clone())
+    } else {
+        JobError::WorkerPanic("opaque panic payload".to_string())
+    }
+}
+
+/// Run `f` under a per-request deadline, arming `token` when it
+/// expires. `None` runs unwatched; `Some(0)` cancels the token before
+/// `f` starts (deterministic); `Some(ms)` parks a watchdog thread on
+/// an `mpsc::recv_timeout` — no `Instant::now` polling — that cancels
+/// the token on timeout and exits silently when `f` finishes first.
+pub fn with_deadline<T>(deadline_ms: Option<u64>, token: &CancelToken, f: impl FnOnce() -> T) -> T {
+    match deadline_ms {
+        None => f(),
+        Some(0) => {
+            token.cancel();
+            f()
+        }
+        Some(ms) => {
+            let (done_tx, done_rx) = mpsc::channel::<()>();
+            std::thread::scope(|scope| {
+                scope.spawn(move || {
+                    if matches!(
+                        done_rx.recv_timeout(Duration::from_millis(ms)),
+                        Err(mpsc::RecvTimeoutError::Timeout)
+                    ) {
+                        token.cancel();
+                    }
+                });
+                let out = f();
+                // Disconnect wakes the watchdog without a timeout.
+                drop(done_tx);
+                out
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn supervise_passes_results_through() {
+        assert_eq!(supervise(|| Ok::<_, JobError>(7)), Ok(7));
+        assert_eq!(
+            supervise(|| Err::<u32, _>(JobError::Cancelled)),
+            Err(JobError::Cancelled)
+        );
+    }
+
+    #[test]
+    fn supervise_downcasts_string_panics() {
+        let got = supervise(|| -> Result<(), JobError> { panic!("injected worker panic") });
+        assert_eq!(got, Err(JobError::WorkerPanic("injected worker panic".into())));
+        let got = supervise(|| -> Result<(), JobError> {
+            std::panic::panic_any("static str".to_string())
+        });
+        assert_eq!(got, Err(JobError::WorkerPanic("static str".into())));
+    }
+
+    #[test]
+    fn supervise_preserves_joberror_panic_payloads() {
+        let got = supervise(|| -> Result<(), JobError> {
+            std::panic::panic_any(JobError::SvdNonConvergence { iterations: 41 })
+        });
+        assert_eq!(got, Err(JobError::SvdNonConvergence { iterations: 41 }));
+    }
+
+    #[test]
+    fn zero_deadline_expires_before_the_run_starts() {
+        let token = CancelToken::default();
+        let cancelled_at_entry = with_deadline(Some(0), &token, || token.is_cancelled());
+        assert!(cancelled_at_entry);
+    }
+
+    #[test]
+    fn absent_deadline_never_arms_the_token() {
+        let token = CancelToken::default();
+        let cancelled_at_entry = with_deadline(None, &token, || token.is_cancelled());
+        assert!(!cancelled_at_entry);
+        assert!(!token.is_cancelled());
+    }
+
+    #[test]
+    fn generous_deadline_leaves_a_fast_run_uncancelled() {
+        let token = CancelToken::default();
+        let out = with_deadline(Some(60_000), &token, || 3 + 4);
+        assert_eq!(out, 7);
+        assert!(!token.is_cancelled());
+    }
+
+    #[test]
+    fn expired_deadline_arms_the_token() {
+        let token = CancelToken::default();
+        with_deadline(Some(1), &token, || {
+            // Park until the watchdog fires; the cooperative check is
+            // how real jobs observe the deadline.
+            while !token.is_cancelled() {
+                std::thread::yield_now();
+            }
+        });
+        assert!(token.is_cancelled());
+    }
+}

@@ -35,6 +35,7 @@
 use std::cell::Cell;
 
 use crate::cache::{CacheKey, Claim, Fingerprint, ProgramCache};
+use crate::fault::JobError;
 use crate::model::resnet32::ConvLayer;
 use crate::model::transformer::TransformerSpec;
 use crate::pipeline::{self, CancelToken};
@@ -347,10 +348,12 @@ impl<'a> CompressionJob<'a> {
         self
     }
 
-    /// Cooperative cancellation: a tripped token makes [`run`]
-    /// return `None` — never a partial result.
+    /// Cooperative cancellation: a tripped token makes [`try_run`]
+    /// return [`JobError::Cancelled`] (and [`run`] `None`) — never a
+    /// partial result.
     ///
     /// [`run`]: CompressionJob::run
+    /// [`try_run`]: CompressionJob::try_run
     pub fn cancel(mut self, token: &'a CancelToken) -> Self {
         self.cancel = Some(token);
         self
@@ -460,8 +463,8 @@ impl<'a> CompressionJob<'a> {
 
     /// The cache-served run path (`.cached(..)` was configured and the
     /// input is not already a replay).
-    fn run_cached(mut self) -> Option<JobOutput> {
-        let cache = self.cache.take().expect("run_cached requires .cached(..)");
+    fn try_run_cached(mut self) -> Result<JobOutput, JobError> {
+        let cache = self.cache.take().expect("try_run_cached requires .cached(..)");
         let key = self.cache_key();
         match cache.claim(&key) {
             Claim::Hit(program) => {
@@ -469,28 +472,45 @@ impl<'a> CompressionJob<'a> {
                 let default_token = CancelToken::default();
                 let cancel = cancel.unwrap_or(&default_token);
                 if cancel.is_cancelled() {
-                    return None;
+                    return Err(JobError::Cancelled);
                 }
                 let reports = cost_program(&program, &configs, observer, threads);
-                Some(JobOutput { outcome: program.outcome(), reports })
+                Ok(JobOutput { outcome: program.outcome(), reports })
             }
-            Claim::Miss(guard) => match self.program() {
-                Some((out, program)) => {
+            Claim::Miss(guard) => match self.try_program() {
+                Ok((out, program)) => {
                     guard.fulfill(program);
-                    Some(out)
+                    Ok(out)
                 }
-                // Cancelled mid-recording: the guard's drop releases
-                // the pending slot so a waiter can take over the key.
-                None => None,
+                // Cancelled or rejected mid-recording: the guard's
+                // drop releases the pending slot so a waiter can take
+                // over the key.
+                Err(e) => Err(e),
             },
         }
     }
 
-    /// Run the job. Returns `None` iff the cancel token tripped.
+    /// Run the job, swallowing the failure reason: `None` when the
+    /// cancel token tripped or the input was rejected. Thin wrapper
+    /// over [`CompressionJob::try_run`], which reports the structured
+    /// [`JobError`] instead.
     pub fn run(self) -> Option<JobOutput> {
+        self.try_run().ok()
+    }
+
+    /// Run the job, reporting failures as a structured [`JobError`]:
+    /// [`JobError::Cancelled`] when the token tripped,
+    /// [`JobError::NonFiniteInput`] when a weight tensor carries a
+    /// NaN/Inf (every materialized input is screened at this boundary
+    /// before any numerics run). A hard-stalled SVD escapes as a panic
+    /// carrying [`JobError::SvdNonConvergence`] rather than a `Result`
+    /// — it is raised mid-recording on purpose so supervisors exercise
+    /// the cache's pending-release path; [`crate::fault::supervise`]
+    /// converts that panic back into this error taxonomy.
+    pub fn try_run(self) -> Result<JobOutput, JobError> {
         self.apply_tuning();
         if self.cache.is_some() && !matches!(self.input, Input::Replay(_)) {
-            return self.run_cached();
+            return self.try_run_cached();
         }
         let CompressionJob { input, spec, threads, configs, cancel, observer, .. } = self;
         let default_token = CancelToken::default();
@@ -501,18 +521,19 @@ impl<'a> CompressionJob<'a> {
         // recorded compression summary.
         if let Input::Replay(p) = &input {
             if cancel.is_cancelled() {
-                return None;
+                return Err(JobError::Cancelled);
             }
             let reports = cost_program(p, &configs, observer, threads);
-            return Some(JobOutput { outcome: p.outcome(), reports });
+            return Ok(JobOutput { outcome: p.outcome(), reports });
         }
 
         // Single tensor: one Algorithm-1 run, streamed straight into
         // the cost sink (and the observer, when attached).
         if let Input::Tensor(w) = &input {
             if cancel.is_cancelled() {
-                return None;
+                return Err(JobError::Cancelled);
             }
+            screen_tensor(w, 0)?;
             record_numerics_pass();
             let mut cost = CostSink::new(&configs);
             let d = match observer {
@@ -525,19 +546,20 @@ impl<'a> CompressionJob<'a> {
             // Same contract as the model path: a token tripped while
             // the numerics ran means no result escapes.
             if cancel.is_cancelled() {
-                return None;
+                return Err(JobError::Cancelled);
             }
             let outcome = single_tensor_outcome(w, d);
-            return Some(JobOutput { outcome, reports: cost.reports() });
+            return Ok(JobOutput { outcome, reports: cost.reports() });
         }
 
         // Model inputs: resolve to borrowed (layer, tensor) jobs.
         let model_dense = input.model_dense_override();
         let mut owned = None;
         let jobs = resolve_model_input(input, &mut owned);
+        screen_jobs(&jobs)?;
         let conv_dense: usize = jobs.iter().map(|(l, _)| l.numel()).sum();
         if cancel.is_cancelled() {
-            return None;
+            return Err(JobError::Cancelled);
         }
         record_numerics_pass();
 
@@ -546,7 +568,8 @@ impl<'a> CompressionJob<'a> {
             // in layer order through a tee of (cost fold, observer) —
             // the observer sees exactly the serial trace.
             let results =
-                pipeline::compress_layers_sinked(&jobs, &spec, threads, cancel, VecSink::default)?;
+                pipeline::compress_layers_sinked(&jobs, &spec, threads, cancel, VecSink::default)
+                    .ok_or(JobError::Cancelled)?;
             let mut cost = CostSink::new(&configs);
             {
                 let mut tee = Tee::new(&mut cost, obs);
@@ -557,15 +580,16 @@ impl<'a> CompressionJob<'a> {
             let max_rel = results.iter().map(|r| r.rel_err).fold(0.0f32, f32::max);
             let decomps = results.into_iter().map(|r| r.decomp).collect();
             let outcome = aggregate(model_dense, conv_dense, decomps, max_rel);
-            return Some(JobOutput { outcome, reports: cost.reports() });
+            return Ok(JobOutput { outcome, reports: cost.reports() });
         }
 
         // Default: the streaming path — per-layer cost folds merged in
         // layer order, no per-op storage anywhere.
-        let batch = pipeline::compress_layers_costed(&jobs, &spec, threads, cancel, &configs)?;
+        let batch = pipeline::compress_layers_costed(&jobs, &spec, threads, cancel, &configs)
+            .ok_or(JobError::Cancelled)?;
         let reports = batch.reports();
         let outcome = aggregate(model_dense, conv_dense, batch.decomps, batch.max_rel_err);
-        Some(JobOutput { outcome, reports })
+        Ok(JobOutput { outcome, reports })
     }
 
     /// Run the job's numerics **once**, recording the op stream as an
@@ -576,10 +600,19 @@ impl<'a> CompressionJob<'a> {
     /// later replay are bit-identical by construction. `.sink(..)`
     /// observers still receive the exact serial-order stream.
     ///
-    /// Returns `None` iff the cancel token tripped. Panics on a
+    /// Returns `None` iff the job failed (cancelled or rejected —
+    /// thin wrapper over [`CompressionJob::try_program`]). Panics on a
     /// [`CompressionJob::replay`] job — there are no numerics to
     /// record.
     pub fn program(self) -> Option<(JobOutput, JobProgram)> {
+        self.try_program().ok()
+    }
+
+    /// [`CompressionJob::program`] with the structured failure
+    /// taxonomy of [`CompressionJob::try_run`]: every materialized
+    /// input is NaN/Inf-screened before the recording starts, and a
+    /// tripped token maps to [`JobError::Cancelled`].
+    pub fn try_program(self) -> Result<(JobOutput, JobProgram), JobError> {
         self.apply_tuning();
         let CompressionJob { input, spec, threads, configs, cancel, observer, .. } = self;
         let default_token = CancelToken::default();
@@ -592,20 +625,21 @@ impl<'a> CompressionJob<'a> {
         // Single tensor: record one Algorithm-1 run.
         if let Input::Tensor(w) = &input {
             if cancel.is_cancelled() {
-                return None;
+                return Err(JobError::Cancelled);
             }
+            screen_tensor(w, 0)?;
             record_numerics_pass();
             let mut rec = RecordingSink::default();
             let d = decompose(w, &spec, &mut rec);
             if cancel.is_cancelled() {
-                return None;
+                return Err(JobError::Cancelled);
             }
             let mut ops = OpProgram::default();
             ops.push_layer(rec);
             let outcome = single_tensor_outcome(w, d);
             let program = JobProgram::from_outcome(ops, &outcome);
             let reports = cost_program(&program, &configs, observer, threads);
-            return Some((JobOutput { outcome, reports }, program));
+            return Ok((JobOutput { outcome, reports }, program));
         }
 
         // Model inputs: the same resolution as run(), shared so the
@@ -613,16 +647,18 @@ impl<'a> CompressionJob<'a> {
         let model_dense = input.model_dense_override();
         let mut owned = None;
         let jobs = resolve_model_input(input, &mut owned);
+        screen_jobs(&jobs)?;
         let conv_dense: usize = jobs.iter().map(|(l, _)| l.numel()).sum();
         if cancel.is_cancelled() {
-            return None;
+            return Err(JobError::Cancelled);
         }
         record_numerics_pass();
-        let batch = pipeline::compress_layers_recorded(&jobs, &spec, threads, cancel)?;
+        let batch = pipeline::compress_layers_recorded(&jobs, &spec, threads, cancel)
+            .ok_or(JobError::Cancelled)?;
         let outcome = aggregate(model_dense, conv_dense, batch.decomps, batch.max_rel_err);
         let program = JobProgram::from_outcome(batch.program, &outcome);
         let reports = cost_program(&program, &configs, observer, threads);
-        Some((JobOutput { outcome, reports }, program))
+        Ok((JobOutput { outcome, reports }, program))
     }
 }
 
@@ -655,6 +691,28 @@ where
             owned.as_ref().expect("just set").iter().map(|(l, w)| (l, w)).collect()
         }
     }
+}
+
+/// NaN/Inf screening at the job input boundary (ISSUE 10): every
+/// weight tensor is scanned before any numerics run, so a poisoned
+/// workload fails with a structured [`JobError::NonFiniteInput`]
+/// naming the offending layer instead of propagating non-finite
+/// values through the decomposition. Single-tensor jobs screen as
+/// layer 0; generated workloads (synthetic/transformer) are screened
+/// post-materialization — their generators only emit finite values,
+/// so on those inputs the screen can fire only under chaos poisoning.
+fn screen_tensor(w: &Tensor, layer: usize) -> Result<(), JobError> {
+    if w.data.iter().all(|v| v.is_finite()) {
+        Ok(())
+    } else {
+        Err(JobError::NonFiniteInput { layer })
+    }
+}
+
+/// Screen every layer of a resolved model input, in layer order —
+/// the reported layer index is the first offender.
+fn screen_jobs(jobs: &[(&ConvLayer, &Tensor)]) -> Result<(), JobError> {
+    jobs.iter().enumerate().try_for_each(|(i, (_, w))| screen_tensor(w, i))
 }
 
 /// Whole-model accounting dispatch shared by [`CompressionJob::run`]
@@ -1167,6 +1225,84 @@ mod tests {
         );
         // deterministic: the same job builds the same key
         assert_eq!(weights, CompressionJob::transformer(spec, 5).eps(0.12).cache_key());
+    }
+
+    #[test]
+    fn nan_tensor_is_rejected_as_layer_zero() {
+        let mut rng = Rng::new(50);
+        let mut w = Tensor::from_vec(&[4, 4, 4], rng.normal_vec(64));
+        w.data[17] = f32::NAN;
+        let before = super::numerics_pass_count();
+        let err = CompressionJob::new(&w).eps(0.2).try_run().unwrap_err();
+        assert_eq!(err, JobError::NonFiniteInput { layer: 0 });
+        assert!(CompressionJob::new(&w).try_program().is_err());
+        // the screen fires before the pass counter — no numerics ran
+        assert_eq!(super::numerics_pass_count(), before);
+        assert!(CompressionJob::new(&w).run().is_none(), "run() swallows the taxonomy");
+    }
+
+    #[test]
+    fn model_screen_names_the_first_poisoned_layer() {
+        let mut layers = small_model();
+        layers[2].1.data[5] = f32::INFINITY;
+        let err = CompressionJob::model(&layers).eps(0.12).try_run().unwrap_err();
+        assert_eq!(err, JobError::NonFiniteInput { layer: 2 });
+        assert_eq!(err.code(), "non-finite-input");
+        assert!(!err.retryable(), "a poisoned input never heals on retry");
+    }
+
+    #[test]
+    fn layer_ref_screen_names_the_first_poisoned_layer() {
+        let layers = small_model();
+        let mut tensors: Vec<Tensor> = layers.iter().map(|(_, w)| w.clone()).collect();
+        tensors[1].data[0] = f32::NEG_INFINITY;
+        let jobs: Vec<(&ConvLayer, &Tensor)> =
+            layers.iter().map(|(l, _)| l).zip(&tensors).collect();
+        let err = CompressionJob::layer_refs(jobs).eps(0.12).try_run().unwrap_err();
+        assert_eq!(err, JobError::NonFiniteInput { layer: 1 });
+    }
+
+    #[test]
+    fn generated_workloads_pass_the_input_screen() {
+        // Synthetic and transformer generators only emit finite
+        // weights, so the post-materialization screen is a no-op on
+        // them — but poisoning the materialized weights (the serve
+        // chaos path) trips the same screen through ::model.
+        assert!(CompressionJob::synthetic(7).eps(0.3).try_run().is_ok());
+        let spec = TransformerSpec::tiny_gpt();
+        assert!(CompressionJob::transformer_activations(spec, 3).eps(0.3).try_run().is_ok());
+        let mut weights = spec.synthetic_weights(3);
+        weights[4].1.data[9] = f32::NAN;
+        let err = CompressionJob::model(&weights).eps(0.3).try_run().unwrap_err();
+        assert_eq!(err, JobError::NonFiniteInput { layer: 4 });
+    }
+
+    #[test]
+    fn cancellation_maps_to_the_structured_error() {
+        let layers = small_model();
+        let token = CancelToken::cancelled();
+        let err = CompressionJob::model(&layers).cancel(&token).try_run().unwrap_err();
+        assert_eq!(err, JobError::Cancelled);
+        let err = CompressionJob::model(&layers).cancel(&token).try_program().unwrap_err();
+        assert_eq!(err, JobError::Cancelled);
+    }
+
+    #[test]
+    fn rejected_cached_miss_releases_the_pending_slot() {
+        let mut layers = small_model();
+        layers[0].1.data[0] = f32::NAN;
+        let cache = ProgramCache::new(8);
+        let err = CompressionJob::model(&layers).cached(&cache).try_run().unwrap_err();
+        assert_eq!(err, JobError::NonFiniteInput { layer: 0 });
+        // the pending slot was released, not leaked: the same poisoned
+        // key can be claimed (and rejected) again, and the stats stay
+        // conserved with nothing resident
+        let err = CompressionJob::model(&layers).cached(&cache).try_run().unwrap_err();
+        assert_eq!(err, JobError::NonFiniteInput { layer: 0 });
+        assert_eq!(cache.len(), 0);
+        let s = cache.stats();
+        assert!(s.conserved(), "{s:?}");
+        assert_eq!((s.lookups, s.misses, s.hits), (2, 2, 0));
     }
 
     #[test]

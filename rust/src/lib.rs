@@ -25,6 +25,7 @@ pub mod analysis;
 pub mod cache;
 pub mod coordinator;
 pub mod dse;
+pub mod fault;
 pub mod hw_model;
 pub mod job;
 pub mod metrics;
@@ -39,5 +40,6 @@ pub mod ttd;
 pub mod util;
 
 pub use cache::{CacheKey, ProgramCache};
+pub use fault::{ChaosPlan, JobError, SvdStall};
 pub use job::{numerics_pass_count, CompressionJob, JobOutput, JobProgram};
 pub use ttd::tensor::GemmKernel;

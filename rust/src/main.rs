@@ -26,7 +26,13 @@
 //!   `--workers N`, `--cache CAPACITY`, `--out FILE`, `--json`); a
 //!   repeated (workload, TtSpec) key is served at replay speed with
 //!   zero numerics. The greppable cache metrics line goes to stderr;
-//!   the serve-metrics-v1 artifact lands in `EXPERIMENTS/`.
+//!   the serve-metrics-v1 artifact lands in `EXPERIMENTS/`. The drain
+//!   is supervised (ISSUE 10): `--lenient` answers malformed lines in
+//!   place, and the seeded chaos knobs (`--fault-seed`, `--poison p`,
+//!   `--stall p`, `--panic p`, `--cancel p`, `--forced-*` index
+//!   lists, `--retries n`) inject faults that surface as structured
+//!   `"status": "error"` responses — never process death — plus a
+//!   fault-report-v1 artifact when the plan is non-benign.
 //! * `federate`  — Fig. 1: fault-tolerant federated rounds over
 //!   simulated edge nodes (`--nodes`, `--rounds`,
 //!   `--soc baseline|tt-edge|systolic`, chaos: `--dropout p --straggler-mult x
@@ -86,8 +92,23 @@ const COMMANDS: &[CmdSpec] = &[
     },
     CmdSpec {
         name: "serve",
-        opts: &["requests", "workers", "cache", "out"],
-        flags: &["json"],
+        opts: &[
+            "requests",
+            "workers",
+            "cache",
+            "out",
+            "retries",
+            "fault-seed",
+            "poison",
+            "stall",
+            "panic",
+            "cancel",
+            "forced-poison",
+            "forced-stalls",
+            "forced-panics",
+            "forced-cancels",
+        ],
+        flags: &["json", "lenient"],
     },
     CmdSpec { name: "resources", opts: &[], flags: &[] },
     CmdSpec { name: "related", opts: &[], flags: &[] },
@@ -166,7 +187,12 @@ fn print_help() {
          serve      compression-as-a-service: drain a JSONL request queue through a\n\
                     keyed JobProgram cache (--requests FILE --workers N --cache CAP\n\
                     --out FILE --json; cache metrics on stderr, serve-metrics-v1\n\
-                    artifact in EXPERIMENTS/)\n\
+                    artifact in EXPERIMENTS/). Supervised drain: --lenient answers\n\
+                    malformed lines in place; chaos: --fault-seed S --poison p\n\
+                    --stall p --panic p --cancel p --forced-poison I,J\n\
+                    --forced-stalls I,J --forced-panics I,J --forced-cancels I,J\n\
+                    --retries n (faults become structured error responses and a\n\
+                    fault-report-v1 artifact, never process death)\n\
          federate   Fig. 1   (fault-tolerant federated rounds; --threads N per node,\n\
                     --dropout p --straggler-mult x --straggler-frac f --quorum q\n\
                     --loss p --retries n --deadline-slack s --fault-seed s\n\
@@ -443,7 +469,8 @@ fn cmd_explore(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use std::path::PathBuf;
-    use tt_edge::serve::{self, ServeConfig};
+    use tt_edge::fault::ChaosPlan;
+    use tt_edge::serve::{self, QueueEntry, ServeConfig};
 
     let Some(path) = args.opt("requests") else {
         eprintln!("error: serve requires --requests FILE (JSONL, one request object per line)");
@@ -452,14 +479,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let workers: usize = opt_or(args, "workers", 1);
     let capacity: usize = opt_or(args, "cache", 64);
+    // Seeded chaos plan (ISSUE 10). The defaults are the benign plan
+    // — zero probabilities, empty forced lists — under which the drain
+    // is bit-identical to the unsupervised PR-6 path.
+    let chaos = ChaosPlan {
+        seed: opt_or(args, "fault-seed", ChaosPlan::default().seed),
+        poison: opt_or(args, "poison", 0.0),
+        stall: opt_or(args, "stall", 0.0),
+        panic: opt_or(args, "panic", 0.0),
+        cancel: opt_or(args, "cancel", 0.0),
+        forced_poison: index_list(args, "forced-poison"),
+        forced_stalls: index_list(args, "forced-stalls"),
+        forced_panics: index_list(args, "forced-panics"),
+        forced_cancels: index_list(args, "forced-cancels"),
+    };
+    let cfg = ServeConfig {
+        workers,
+        cache_capacity: capacity,
+        chaos: chaos.clone(),
+        retries: opt_or(args, "retries", ServeConfig::default().retries),
+    };
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("could not read {path}: {e}"))?;
-    let requests = serve::parse_requests(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
-    anyhow::ensure!(!requests.is_empty(), "{path}: no requests in the queue");
+    // Strict mode fails the whole file on the first malformed line;
+    // --lenient turns each bad line into an in-place error response.
+    let entries: Vec<QueueEntry> = if args.flag("lenient") {
+        serve::parse_requests_lenient(&text)
+    } else {
+        serve::parse_requests(&text)
+            .map_err(|e| anyhow::anyhow!("{path}: {e} (--lenient answers bad lines in place)"))?
+            .into_iter()
+            .map(QueueEntry::Request)
+            .collect()
+    };
+    anyhow::ensure!(!entries.is_empty(), "{path}: no requests in the queue");
 
     // lint: allow(no-wallclock-or-unseeded-rng): wall_ms feeds the serve-metrics artifact by design (PR-6); byte-pinned outputs exclude it
     let t0 = std::time::Instant::now();
-    let out = serve::serve(&requests, &ServeConfig { workers, cache_capacity: capacity });
+    let out = serve::serve_queue(&entries, &cfg);
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     // The greppable cache/numerics accounting goes to stderr (CI
     // asserts hit counts and exactly-K numerics passes against it) so
@@ -492,6 +549,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
 
+    // fault-report-v1 artifact, only under a non-benign plan (benign
+    // runs keep the PR-6 artifact surface byte-for-byte). Lands next
+    // to the serve-metrics artifact; a failed write warns, never
+    // aborts — the responses are the primary output.
+    if !chaos.is_benign() {
+        let fpath = apath.with_file_name("FAULT_report.json");
+        match std::fs::write(&fpath, serve::fault_report(&out, &chaos).render() + "\n") {
+            Ok(()) => eprintln!("wrote {}", fpath.display()),
+            Err(e) => {
+                eprintln!("warning: could not write fault report {}: {e}", fpath.display())
+            }
+        }
+    }
+
     if args.flag("json") {
         for r in &out.responses {
             println!("{}", r.to_json().render());
@@ -515,24 +586,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
         &["req", "workload", "seed", "eps", "caps", "ratio", "SoC", "T (ms)", "E (mJ)"],
     );
     for r in &out.responses {
-        let caps = if !r.request.rank_caps.is_empty() {
-            r.request
-                .rank_caps
-                .iter()
-                .map(|c| c.to_string())
-                .collect::<Vec<_>>()
-                .join(",")
-        } else if let Some(cap) = r.request.rank_cap {
+        // Error responses (injected faults, deadlines, lenient-mode
+        // malformed lines) keep their queue slot in the table: one row
+        // with the structured error code where the SoC costing would
+        // have gone. Malformed lines never parsed, so the request echo
+        // columns are dashes.
+        let Some(req) = &r.request else {
+            let code =
+                r.error.as_ref().map(|e| e.code().to_string()).unwrap_or_else(|| "?".into());
+            t.row(&[
+                r.index.to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                format!("error: {code}"),
+                "-".into(),
+                "-".into(),
+            ]);
+            continue;
+        };
+        let caps = if !req.rank_caps.is_empty() {
+            req.rank_caps.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(",")
+        } else if let Some(cap) = req.rank_cap {
             format!("u{cap}")
         } else {
             "-".into()
         };
+        if let Some(e) = &r.error {
+            t.row(&[
+                r.index.to_string(),
+                req.workload.label().to_string(),
+                req.seed.to_string(),
+                format!("{}", req.eps),
+                caps.clone(),
+                "-".into(),
+                format!("error: {}", e.code()),
+                "-".into(),
+                "-".into(),
+            ]);
+            continue;
+        }
         for rep in &r.reports {
             t.row(&[
                 r.index.to_string(),
-                r.request.workload.label().to_string(),
-                r.request.seed.to_string(),
-                format!("{}", r.request.eps),
+                req.workload.label().to_string(),
+                req.seed.to_string(),
+                format!("{}", req.eps),
                 caps.clone(),
                 format!("{:.2}x", r.compression_ratio),
                 rep.config_name.clone(),
@@ -543,6 +644,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     println!("{}", t.render());
     Ok(())
+}
+
+/// `--forced-*` chaos lists: the CLI option surface is single-valued,
+/// so request-index lists ride in one comma-separated argument.
+fn index_list(args: &Args, key: &str) -> Vec<usize> {
+    let Some(raw) = args.opt(key) else {
+        return Vec::new();
+    };
+    raw.split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            s.parse().unwrap_or_else(|_| {
+                invalid(key, raw, "comma-separated request indices, e.g. 0,3,7")
+            })
+        })
+        .collect()
 }
 
 fn run_tucker(

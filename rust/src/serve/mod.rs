@@ -43,15 +43,30 @@
 //! the remaining workers either take over the recording or crash the
 //! drain loudly — they never deadlock on a wedged key and never serve
 //! a response derived from half-updated cache state.
+//!
+//! **Supervision & chaos (ISSUE 10).** Every request attempt runs
+//! inside [`crate::fault::supervise`]'s `catch_unwind`: a worker panic
+//! (injected by a [`ChaosPlan`] or real) becomes a structured
+//! `"status": "error"` response instead of process death. Retryable
+//! faults (panics, SVD non-convergence) get up to
+//! [`ServeConfig::retries`] extra attempts with seeded bounded
+//! backoff; an optional per-request `"deadline_ms"` arms the existing
+//! `CancelToken` through [`crate::fault::with_deadline`]. Fault
+//! decisions are keyed per `(request, attempt)` — never per worker —
+//! so a chaos drain, like a benign one, is byte-identical at any
+//! worker count and across reruns of the same plan.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
+use std::time::Duration;
 
 use crate::cache::ProgramCache;
 use crate::dse::Workload;
-use crate::job::{numerics_pass_count, CompressionJob};
+use crate::fault::{supervise, with_deadline, ChaosPlan, JobError, RequestFaults};
+use crate::job::{numerics_pass_count, CompressionJob, JobOutput};
 use crate::metrics::CacheStats;
+use crate::pipeline::CancelToken;
 use crate::sim::report::SimReport;
 use crate::sim::SocConfig;
 use crate::ttd::ttd::{SvdMethod, TtSpec};
@@ -59,7 +74,7 @@ use crate::util::json::{self, Json};
 
 /// Keys a request object may carry; anything else is a parse error.
 const REQUEST_KEYS: &[&str] =
-    &["workload", "seed", "eps", "method", "rank_cap", "rank_caps", "socs"];
+    &["workload", "seed", "eps", "method", "rank_cap", "rank_caps", "socs", "deadline_ms"];
 
 /// One parsed queue entry.
 #[derive(Clone, Debug, PartialEq)]
@@ -79,6 +94,11 @@ pub struct ServeRequest {
     pub rank_caps: Vec<usize>,
     /// SoC wire names to cost under, in request order.
     pub socs: Vec<String>,
+    /// Optional per-request deadline (`"deadline_ms"`): the serve
+    /// supervisor arms the job's `CancelToken` when it expires, and
+    /// the response reports `deadline-exceeded`. `0` expires before
+    /// the run starts (the deterministic form tests and CI use).
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for ServeRequest {
@@ -91,6 +111,7 @@ impl Default for ServeRequest {
             rank_cap: None,
             rank_caps: Vec::new(),
             socs: vec!["baseline".into(), "tt-edge".into()],
+            deadline_ms: None,
         }
     }
 }
@@ -144,6 +165,9 @@ impl ServeRequest {
             "socs".into(),
             Json::Arr(self.socs.iter().map(|s| Json::from(s.as_str())).collect()),
         );
+        if let Some(ms) = self.deadline_ms {
+            m.insert("deadline_ms".into(), Json::from(ms as usize));
+        }
         Json::Obj(m)
     }
 }
@@ -235,6 +259,12 @@ pub fn parse_request(text: &str) -> Result<ServeRequest, String> {
             })
             .collect::<Result<_, String>>()?;
     }
+    if let Some(d) = j.get("deadline_ms") {
+        req.deadline_ms = Some(match d {
+            Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n < 9.0e15 => *n as u64,
+            _ => return Err("deadline_ms must be a non-negative integer".into()),
+        });
+    }
     Ok(req)
 }
 
@@ -253,15 +283,55 @@ pub fn parse_requests(text: &str) -> Result<Vec<ServeRequest>, String> {
     Ok(out)
 }
 
-/// One served request: the request echo, the compression summary, and
-/// one report per requested SoC. A pure function of the request —
+/// One queue slot: a well-formed request, or — in lenient mode — a
+/// line that failed to parse and is answered in place with a
+/// structured `malformed-request` error response.
+#[derive(Clone, Debug)]
+pub enum QueueEntry {
+    Request(ServeRequest),
+    Malformed {
+        /// 1-based line number in the request file.
+        line: usize,
+        /// The parse error text.
+        error: String,
+    },
+}
+
+/// Lenient JSONL parsing (`serve --lenient`): a malformed line becomes
+/// a [`QueueEntry::Malformed`] — answered with a per-line error
+/// response — instead of failing the whole file. Blank and `#` comment
+/// lines are still skipped, and well-formed lines parse identically to
+/// [`parse_requests`].
+pub fn parse_requests_lenient(text: &str) -> Vec<QueueEntry> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        out.push(match parse_request(line) {
+            Ok(req) => QueueEntry::Request(req),
+            Err(error) => QueueEntry::Malformed { line: i + 1, error },
+        });
+    }
+    out
+}
+
+/// One served request: the request echo, and either the compression
+/// summary (one report per requested SoC) or a structured
+/// [`JobError`]. A pure function of `(request, index, chaos plan)` —
 /// byte-identical whether it was served by a hit, a miss, or any
 /// worker interleaving.
 #[derive(Clone, Debug)]
 pub struct ServeResponse {
     /// Position in the request file (responses are returned sorted).
     pub index: usize,
-    pub request: ServeRequest,
+    /// Echo of the parsed request; `None` only for lenient-mode
+    /// malformed lines, which never parsed.
+    pub request: Option<ServeRequest>,
+    /// `Some` makes this an error response (`"status": "error"` on the
+    /// wire); the compression fields below are then zero/empty.
+    pub error: Option<JobError>,
     pub compression_ratio: f64,
     pub max_rel_err: f32,
     pub final_params: usize,
@@ -269,35 +339,86 @@ pub struct ServeResponse {
 }
 
 impl ServeResponse {
+    fn ok(index: usize, request: ServeRequest, out: JobOutput) -> Self {
+        ServeResponse {
+            index,
+            request: Some(request),
+            error: None,
+            compression_ratio: out.outcome.compression_ratio,
+            max_rel_err: out.outcome.max_rel_err,
+            final_params: out.outcome.final_params,
+            reports: out.reports,
+        }
+    }
+
+    fn fail(index: usize, request: Option<ServeRequest>, error: JobError) -> Self {
+        ServeResponse {
+            index,
+            request,
+            error: Some(error),
+            compression_ratio: 0.0,
+            max_rel_err: 0.0,
+            final_params: 0,
+            reports: Vec::new(),
+        }
+    }
+
+    /// The wire object. Every response — ok or error — carries
+    /// `"index"` and `"status"`; ok responses add the request echo,
+    /// compression summary and reports, error responses an
+    /// `"error": {"code", "message"}` object (plus the echo when the
+    /// line parsed).
     pub fn to_json(&self) -> Json {
-        let mut c = BTreeMap::new();
-        c.insert("compression_ratio".into(), Json::from(self.compression_ratio));
-        c.insert("max_rel_err".into(), Json::from(f64::from(self.max_rel_err)));
-        c.insert("final_params".into(), Json::from(self.final_params));
         let mut m = BTreeMap::new();
         m.insert("index".into(), Json::from(self.index));
-        m.insert("request".into(), self.request.to_json());
-        m.insert("compression".into(), Json::Obj(c));
-        m.insert(
-            "reports".into(),
-            Json::Arr(self.reports.iter().map(|r| r.to_json()).collect()),
-        );
+        if let Some(req) = &self.request {
+            m.insert("request".into(), req.to_json());
+        }
+        match &self.error {
+            Some(e) => {
+                m.insert("status".into(), Json::from("error"));
+                let mut err = BTreeMap::new();
+                err.insert("code".into(), Json::from(e.code()));
+                err.insert("message".into(), Json::Str(e.to_string()));
+                m.insert("error".into(), Json::Obj(err));
+            }
+            None => {
+                m.insert("status".into(), Json::from("ok"));
+                let mut c = BTreeMap::new();
+                c.insert("compression_ratio".into(), Json::from(self.compression_ratio));
+                c.insert("max_rel_err".into(), Json::from(f64::from(self.max_rel_err)));
+                c.insert("final_params".into(), Json::from(self.final_params));
+                m.insert("compression".into(), Json::Obj(c));
+                m.insert(
+                    "reports".into(),
+                    Json::Arr(self.reports.iter().map(|r| r.to_json()).collect()),
+                );
+            }
+        }
         Json::Obj(m)
     }
 }
 
-/// Service knobs (`serve --workers N --cache C`).
-#[derive(Clone, Copy, Debug)]
+/// Service knobs (`serve --workers N --cache C`, plus the chaos
+/// flags).
+#[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub workers: usize,
     /// Program-cache capacity; 0 disables residency (the uncached
     /// baseline benchmarks compare against).
     pub cache_capacity: usize,
+    /// Seeded fault-injection schedule. The default plan is benign:
+    /// it draws no faults, and the drain is bit-identical to the
+    /// pre-chaos serve path.
+    pub chaos: ChaosPlan,
+    /// Extra attempts granted to retryable faults (worker panics, SVD
+    /// non-convergence) before the request answers with an error.
+    pub retries: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 1, cache_capacity: 64 }
+        ServeConfig { workers: 1, cache_capacity: 64, chaos: ChaosPlan::default(), retries: 2 }
     }
 }
 
@@ -313,6 +434,10 @@ pub struct ServeOutcome {
     pub numerics_passes: u64,
     pub workers: usize,
     pub cache_capacity: usize,
+    /// Requests answered with a structured error.
+    pub errors: usize,
+    /// Retry attempts spent across the drain (beyond first attempts).
+    pub retries: u64,
 }
 
 impl ServeOutcome {
@@ -320,10 +445,12 @@ impl ServeOutcome {
     /// purpose — CI anchors `numerics_passes=K$` on it.
     pub fn metrics_line(&self) -> String {
         format!(
-            "serve metrics: requests={} workers={} cache_capacity={} {} numerics_passes={}",
+            "serve metrics: requests={} workers={} cache_capacity={} errors={} retries={} {} numerics_passes={}",
             self.responses.len(),
             self.workers,
             self.cache_capacity,
+            self.errors,
+            self.retries,
             self.stats.render(),
             self.numerics_passes,
         )
@@ -339,6 +466,8 @@ impl ServeOutcome {
         m.insert("workers".into(), Json::from(self.workers));
         m.insert("cache_capacity".into(), Json::from(self.cache_capacity));
         m.insert("numerics_passes".into(), Json::from(self.numerics_passes as usize));
+        m.insert("errors".into(), Json::from(self.errors));
+        m.insert("retries".into(), Json::from(self.retries as usize));
         m.insert("wall_ms".into(), Json::from(wall_ms));
         let rps = if wall_ms > 0.0 {
             self.responses.len() as f64 / (wall_ms / 1e3)
@@ -350,84 +479,195 @@ impl ServeOutcome {
     }
 }
 
-/// Serve one request through the shared cache.
-fn serve_one(index: usize, req: &ServeRequest, cache: &ProgramCache) -> ServeResponse {
-    let spec = req.spec();
+/// One attempt at a request: apply this attempt's fault decisions,
+/// then run the job through the shared cache. Always called inside
+/// [`supervise`]'s `catch_unwind`, so an injected (or real) panic —
+/// including the hard-stall `SvdNonConvergence` raised mid-recording —
+/// never escapes the worker.
+fn execute_request(
+    index: usize,
+    req: &ServeRequest,
+    cache: &ProgramCache,
+    faults: &RequestFaults,
+    token: &CancelToken,
+    plan: &ChaosPlan,
+) -> Result<JobOutput, JobError> {
+    if faults.panic {
+        panic!("chaos: injected worker panic on request {index}");
+    }
+    let spec = req.spec().with_stall(faults.stall);
     let socs = req.soc_configs();
-    let out = match req.workload {
+    if faults.poison {
+        // Poison one seeded weight slot of the materialized input and
+        // submit through ::model — the job's NaN screen rejects it
+        // before any numerics run. The poisoned key can never collide
+        // with the clean one (the NaN bit pattern is in the
+        // fingerprint), so the cache stays uncontaminated.
+        let mut layers = req.workload.layers(req.seed);
+        let li = plan.poison_slot(index, layers.len());
+        let wi = plan.poison_slot(index, layers[li].1.data.len());
+        layers[li].1.data[wi] = f32::NAN;
+        return CompressionJob::model(&layers)
+            .spec(spec)
+            .socs(&socs)
+            .cached(cache)
+            .cancel(token)
+            .try_run();
+    }
+    match req.workload {
         // The synthetic builder keys the cache by generator params —
         // a hit never even materializes the weights.
         Workload::Resnet32 => CompressionJob::synthetic(req.seed)
             .spec(spec)
             .socs(&socs)
             .cached(cache)
-            .run(),
+            .cancel(token)
+            .try_run(),
         Workload::Tiny => {
             let layers = req.workload.layers(req.seed);
-            CompressionJob::model(&layers).spec(spec).socs(&socs).cached(cache).run()
+            CompressionJob::model(&layers)
+                .spec(spec)
+                .socs(&socs)
+                .cached(cache)
+                .cancel(token)
+                .try_run()
         }
         // Transformer inputs key the cache by spec (name, dims, seed)
         // and materialize lazily on a miss, like `synthetic`.
         Workload::TinyGpt | Workload::BertBase | Workload::Activations => {
             let mut backing = None;
-            req.workload.job(req.seed, &mut backing).spec(spec).socs(&socs).cached(cache).run()
+            req.workload
+                .job(req.seed, &mut backing)
+                .spec(spec)
+                .socs(&socs)
+                .cached(cache)
+                .cancel(token)
+                .try_run()
         }
-    }
-    .expect("serve requests carry no cancel token");
-    ServeResponse {
-        index,
-        request: req.clone(),
-        compression_ratio: out.outcome.compression_ratio,
-        max_rel_err: out.outcome.max_rel_err,
-        final_params: out.outcome.final_params,
-        reports: out.reports,
     }
 }
 
-/// Drain `requests` with a fresh cache of `cfg.cache_capacity`.
+/// Serve one queue entry through the supervised retry loop. Returns
+/// the response plus the retries spent — both pure functions of
+/// `(entry, index, plan)`, never of worker identity or scheduling, so
+/// drains stay byte-identical at any worker count.
+fn serve_entry(
+    index: usize,
+    entry: &QueueEntry,
+    cache: &ProgramCache,
+    cfg: &ServeConfig,
+) -> (ServeResponse, u64) {
+    let req = match entry {
+        QueueEntry::Malformed { line, error } => {
+            let e = JobError::MalformedRequest(format!("request line {line}: {error}"));
+            return (ServeResponse::fail(index, None, e), 0);
+        }
+        QueueEntry::Request(req) => req,
+    };
+    let mut retries = 0u64;
+    loop {
+        let attempt = retries as usize;
+        if attempt > 0 {
+            // Seeded bounded backoff: deterministic in value, pure
+            // wall delay — it never reaches a byte-pinned artifact.
+            std::thread::sleep(Duration::from_millis(cfg.chaos.backoff_ms(index, attempt)));
+        }
+        let faults = cfg.chaos.for_request(index, attempt);
+        let token = if faults.cancel { CancelToken::cancelled() } else { CancelToken::default() };
+        let result = with_deadline(req.deadline_ms, &token, || {
+            supervise(|| execute_request(index, req, cache, &faults, &token, &cfg.chaos))
+        });
+        match result {
+            Ok(out) => return (ServeResponse::ok(index, req.clone(), out), retries),
+            Err(e) => {
+                // A cancellation with a deadline armed (and no
+                // injected cancel) is the deadline firing.
+                let e = if e == JobError::Cancelled && req.deadline_ms.is_some() && !faults.cancel
+                {
+                    JobError::DeadlineExceeded
+                } else {
+                    e
+                };
+                if e.retryable() && attempt < cfg.retries {
+                    retries += 1;
+                    continue;
+                }
+                return (ServeResponse::fail(index, Some(req.clone()), e), retries);
+            }
+        }
+    }
+}
+
+/// Drain `requests` with a fresh cache of `cfg.cache_capacity`
+/// (honouring `cfg.chaos`/`cfg.retries`; the default config is the
+/// benign, no-retry-needed path).
 pub fn serve(requests: &[ServeRequest], cfg: &ServeConfig) -> ServeOutcome {
     let cache = ProgramCache::new(cfg.cache_capacity);
-    serve_with_cache(requests, cfg.workers, &cache)
+    let entries: Vec<QueueEntry> = requests.iter().cloned().map(QueueEntry::Request).collect();
+    drain(&entries, cfg, &cache)
+}
+
+/// Drain a lenient-parsed queue (well-formed requests interleaved with
+/// malformed lines answered in place) with a fresh cache.
+pub fn serve_queue(entries: &[QueueEntry], cfg: &ServeConfig) -> ServeOutcome {
+    let cache = ProgramCache::new(cfg.cache_capacity);
+    drain(entries, cfg, &cache)
 }
 
 /// Drain `requests` against a caller-owned (possibly pre-warmed)
-/// cache. `workers <= 1` drains inline on the calling thread; more
-/// workers steal requests off a shared cursor (the `pipeline` idiom)
-/// and responses are re-sorted into request order.
+/// cache, under the benign default plan.
 pub fn serve_with_cache(
     requests: &[ServeRequest],
     workers: usize,
     cache: &ProgramCache,
 ) -> ServeOutcome {
+    let entries: Vec<QueueEntry> = requests.iter().cloned().map(QueueEntry::Request).collect();
+    let cfg = ServeConfig { workers, cache_capacity: cache.capacity(), ..ServeConfig::default() };
+    drain(&entries, &cfg, cache)
+}
+
+/// The shared drain loop. `workers <= 1` drains inline on the calling
+/// thread; more workers steal entries off a shared cursor (the
+/// `pipeline` idiom) and responses are re-sorted into request order.
+fn drain(entries: &[QueueEntry], cfg: &ServeConfig, cache: &ProgramCache) -> ServeOutcome {
     let capacity = cache.capacity();
-    let workers = workers.max(1).min(requests.len().max(1));
-    let (responses, numerics_passes) = if workers <= 1 {
+    let workers = cfg.workers.max(1).min(entries.len().max(1));
+    let (responses, numerics_passes, retries) = if workers <= 1 {
         let before = numerics_pass_count();
-        let responses: Vec<ServeResponse> = requests
+        let mut retries = 0u64;
+        let responses: Vec<ServeResponse> = entries
             .iter()
             .enumerate()
-            .map(|(i, req)| serve_one(i, req, cache))
+            .map(|(i, entry)| {
+                let (resp, spent) = serve_entry(i, entry, cache, cfg);
+                retries += spent;
+                resp
+            })
             .collect();
-        (responses, numerics_pass_count() - before)
+        (responses, numerics_pass_count() - before, retries)
     } else {
         let cursor = AtomicUsize::new(0);
         let passes = AtomicU64::new(0);
+        let retry_total = AtomicU64::new(0);
         let (tx, rx) = mpsc::channel::<ServeResponse>();
         std::thread::scope(|scope| {
             for _ in 0..workers {
                 let tx = tx.clone();
                 let cursor = &cursor;
                 let passes = &passes;
+                let retry_total = &retry_total;
                 scope.spawn(move || {
                     // Fresh scope threads start at 0 passes, but take a
                     // baseline anyway in case a runtime reuses threads.
                     let before = numerics_pass_count();
                     loop {
                         let i = cursor.fetch_add(1, Ordering::Relaxed);
-                        if i >= requests.len() {
+                        if i >= entries.len() {
                             break;
                         }
-                        if tx.send(serve_one(i, &requests[i], cache)).is_err() {
+                        let (resp, spent) = serve_entry(i, &entries[i], cache, cfg);
+                        retry_total.fetch_add(spent, Ordering::Relaxed);
+                        if tx.send(resp).is_err() {
                             break;
                         }
                     }
@@ -438,15 +678,42 @@ pub fn serve_with_cache(
         drop(tx);
         let mut responses: Vec<ServeResponse> = rx.into_iter().collect();
         responses.sort_by_key(|r| r.index);
-        (responses, passes.load(Ordering::Relaxed))
+        (responses, passes.load(Ordering::Relaxed), retry_total.load(Ordering::Relaxed))
     };
+    let errors = responses.iter().filter(|r| r.error.is_some()).count();
     ServeOutcome {
         responses,
         stats: cache.stats(),
         numerics_passes,
         workers,
         cache_capacity: capacity,
+        errors,
+        retries,
     }
+}
+
+/// The fault-report-v1 artifact (schema in `EXPERIMENTS/README.md`):
+/// the chaos plan's identity plus the drain's structured-error
+/// accounting. `ttedge serve` writes it whenever the plan is not
+/// benign.
+pub fn fault_report(outcome: &ServeOutcome, plan: &ChaosPlan) -> Json {
+    let mut counts: BTreeMap<&'static str, usize> = BTreeMap::new();
+    for r in &outcome.responses {
+        if let Some(e) = &r.error {
+            *counts.entry(e.code()).or_insert(0) += 1;
+        }
+    }
+    let by_code: BTreeMap<String, Json> =
+        counts.into_iter().map(|(code, n)| (code.to_string(), Json::from(n))).collect();
+    let mut m = BTreeMap::new();
+    m.insert("schema".into(), Json::from("fault-report-v1"));
+    m.insert("fault_seed".into(), Json::Str(plan.seed.to_string()));
+    m.insert("requests".into(), Json::from(outcome.responses.len()));
+    m.insert("ok".into(), Json::from(outcome.responses.len() - outcome.errors));
+    m.insert("errors".into(), Json::from(outcome.errors));
+    m.insert("retries".into(), Json::from(outcome.retries as usize));
+    m.insert("errors_by_code".into(), Json::Obj(by_code));
+    Json::Obj(m)
 }
 
 #[cfg(test)]
@@ -487,6 +754,8 @@ mod tests {
             (r#"{"method": 3}"#, "method must be a string"),
             (r#"{"socs": ["gpu"]}"#, "bad soc"),
             (r#"{"socs": []}"#, "must not be empty"),
+            (r#"{"deadline_ms": -5}"#, "deadline_ms"),
+            (r#"{"deadline_ms": "soon"}"#, "deadline_ms"),
             (r#"not json"#, "json error"),
         ] {
             let err = parse_request(line).unwrap_err();
@@ -540,5 +809,137 @@ mod tests {
         let j = out.metrics_json(0.0).render();
         assert!(j.contains("\"schema\":\"serve-metrics-v1\""), "{j}");
         assert!(j.contains("\"rps\":null"), "{j}");
+        assert!(j.contains("\"errors\":0"), "{j}");
+    }
+
+    fn tiny_line() -> &'static str {
+        r#"{"workload": "tiny", "eps": 0.2, "socs": ["tt-edge"]}"#
+    }
+
+    #[test]
+    fn deadline_field_parses_and_round_trips() {
+        assert_eq!(parse_request(r#"{}"#).unwrap().deadline_ms, None);
+        let req = parse_request(r#"{"workload": "tiny", "deadline_ms": 5000}"#).unwrap();
+        assert_eq!(req.deadline_ms, Some(5000));
+        let echoed = parse_request(&req.to_json().render()).unwrap();
+        assert_eq!(echoed, req);
+    }
+
+    #[test]
+    fn ok_responses_carry_status_ok_on_the_wire() {
+        let req = parse_request(tiny_line()).unwrap();
+        let out = serve(&[req], &ServeConfig::default());
+        let line = out.responses[0].to_json().render();
+        assert!(line.contains("\"status\":\"ok\""), "{line}");
+        assert!(line.contains("\"request\":"), "{line}");
+        assert!(!line.contains("\"error\""), "{line}");
+        assert_eq!((out.errors, out.retries), (0, 0));
+        assert!(out.metrics_line().contains("errors=0 retries=0"), "{}", out.metrics_line());
+    }
+
+    #[test]
+    fn lenient_queue_answers_bad_lines_in_place() {
+        let text = format!("{}\nnot json\n{{\"epz\": 1}}\n", tiny_line());
+        let entries = parse_requests_lenient(&text);
+        assert_eq!(entries.len(), 3);
+        assert!(matches!(entries[0], QueueEntry::Request(_)));
+        // strict mode still aborts the whole file
+        assert!(parse_requests(&text).is_err());
+        let out = serve_queue(&entries, &ServeConfig::default());
+        assert_eq!(out.responses.len(), 3, "every line is answered");
+        assert_eq!(out.errors, 2);
+        assert!(out.responses[0].error.is_none());
+        let bad = out.responses[1].to_json().render();
+        assert!(bad.contains("\"status\":\"error\""), "{bad}");
+        assert!(bad.contains("malformed-request"), "{bad}");
+        assert!(bad.contains("line 2"), "{bad}");
+        assert!(out.responses[1].request.is_none(), "a malformed line has no echo");
+        assert!(bad.contains("\"index\":1"), "{bad}");
+    }
+
+    #[test]
+    fn zero_deadline_is_a_structured_deadline_error() {
+        let mut req = parse_request(tiny_line()).unwrap();
+        req.deadline_ms = Some(0);
+        let out = serve(&[req], &ServeConfig::default());
+        assert_eq!(out.responses[0].error, Some(JobError::DeadlineExceeded));
+        assert_eq!(out.errors, 1);
+        let line = out.responses[0].to_json().render();
+        assert!(line.contains("deadline-exceeded"), "{line}");
+    }
+
+    #[test]
+    fn injected_faults_become_structured_errors_not_process_death() {
+        let reqs: Vec<ServeRequest> =
+            (0..5).map(|_| parse_request(tiny_line()).unwrap()).collect();
+        let cfg = ServeConfig {
+            chaos: ChaosPlan {
+                forced_panics: vec![1],
+                forced_stalls: vec![2],
+                forced_cancels: vec![3],
+                forced_poison: vec![4],
+                ..ChaosPlan::default()
+            },
+            ..ServeConfig::default()
+        };
+        let out = serve(&reqs, &cfg);
+        assert_eq!(out.responses.len(), 5, "every request is answered");
+        assert!(out.responses[0].error.is_none());
+        let code = |i: usize| out.responses[i].error.as_ref().unwrap().code();
+        assert_eq!(code(1), "worker-panic");
+        assert_eq!(code(2), "svd-non-convergence");
+        assert_eq!(code(3), "cancelled");
+        assert_eq!(code(4), "non-finite-input");
+        assert_eq!(out.errors, 4);
+        // panic and non-convergence are retryable; forced faults burn
+        // every attempt, the rest fail fast
+        assert_eq!(out.retries, 2 * cfg.retries as u64);
+        assert!(out.stats.conserved(), "{:?}", out.stats);
+        let report = fault_report(&out, &cfg.chaos).render();
+        assert!(report.contains("\"schema\":\"fault-report-v1\""), "{report}");
+        assert!(report.contains("\"errors\":4"), "{report}");
+        assert!(report.contains("\"worker-panic\":1"), "{report}");
+        assert!(report.contains("\"ok\":1"), "{report}");
+    }
+
+    #[test]
+    fn soft_stalls_are_rescued_and_still_serve_ok() {
+        let req = parse_request(tiny_line()).unwrap();
+        let cfg = ServeConfig {
+            chaos: ChaosPlan { stall: 1.0, ..ChaosPlan::default() },
+            ..ServeConfig::default()
+        };
+        let out = serve(&[req], &cfg);
+        assert!(out.responses[0].error.is_none(), "{:?}", out.responses[0].error);
+        assert!(out.responses[0].compression_ratio > 1.0);
+        assert_eq!(out.errors, 0);
+    }
+
+    #[test]
+    fn chaos_drains_are_byte_identical_across_workers_and_reruns() {
+        let reqs: Vec<ServeRequest> = (0..6)
+            .map(|i| {
+                let mut r = parse_request(tiny_line()).unwrap();
+                r.seed = 40 + (i % 2) as u64;
+                r
+            })
+            .collect();
+        let chaos =
+            ChaosPlan { seed: 7, panic: 0.4, stall: 0.4, cancel: 0.2, ..ChaosPlan::default() };
+        let render = |out: &ServeOutcome| {
+            out.responses.iter().map(|r| r.to_json().render()).collect::<Vec<_>>().join("\n")
+        };
+        let cfg = |workers| ServeConfig {
+            workers,
+            chaos: chaos.clone(),
+            ..ServeConfig::default()
+        };
+        let serial = serve(&reqs, &cfg(1));
+        let rerun = serve(&reqs, &cfg(1));
+        let wide = serve(&reqs, &cfg(4));
+        assert_eq!(render(&serial), render(&rerun), "same plan must replay byte-for-byte");
+        assert_eq!(render(&serial), render(&wide), "worker count must not leak into responses");
+        assert_eq!(serial.errors, wide.errors);
+        assert_eq!(serial.retries, wide.retries);
     }
 }

@@ -19,6 +19,11 @@ pub struct BidiagSvd {
     pub vt: Matrix,
     /// Total implicit-shift QR steps taken (convergence metric).
     pub iterations: usize,
+    /// False when the sweep hit its iteration cap with superdiagonal
+    /// mass remaining — the caller must not trust `sigma` and should
+    /// fall back (ISSUE 10: `ttd::decompose` reruns through the
+    /// one-sided Jacobi cross-check before erroring).
+    pub converged: bool,
 }
 
 /// Plane rotation `(c, s)` with `c*a + s*b = r`, `-s*a + c*b = 0`.
@@ -99,6 +104,7 @@ pub fn diagonalize<S: TraceSink>(
     let anorm = b.frobenius().max(1e-30);
     let max_iter = 40 * n.max(1) * n.max(1) + 100;
     let mut iterations = 0usize;
+    let mut converged = true;
 
     if n > 0 {
         let mut hi = n - 1;
@@ -164,6 +170,7 @@ pub fn diagonalize<S: TraceSink>(
             if handled_zero {
                 iterations += 1;
                 if iterations > max_iter {
+                    converged = false;
                     break 'outer;
                 }
                 continue 'outer;
@@ -172,6 +179,7 @@ pub fn diagonalize<S: TraceSink>(
             // One implicit-shift QR step on [lo, hi].
             iterations += 1;
             if iterations > max_iter {
+                converged = false;
                 break 'outer;
             }
             let mu = wilkinson_shift(&b, lo, hi);
@@ -209,7 +217,7 @@ pub fn diagonalize<S: TraceSink>(
         }
     }
 
-    BidiagSvd { u: u_acc, sigma, vt: vt_acc, iterations }
+    BidiagSvd { u: u_acc, sigma, vt: vt_acc, iterations, converged }
 }
 
 #[cfg(test)]
@@ -278,6 +286,7 @@ mod tests {
         let b = rand_bidiag(&mut rng, n);
         let svd = diagonalize(&b, Matrix::eye(n, n), Matrix::eye(n, n), &mut NullSink);
         assert!(svd.iterations < 8 * n, "iterations {}", svd.iterations);
+        assert!(svd.converged, "well-conditioned input must converge within the cap");
     }
 
     #[test]

@@ -20,6 +20,10 @@ pub struct Svd {
     pub sigma: Vec<f32>,
     pub vt: Matrix,
     pub qr_iterations: usize,
+    /// False when the QR diagonalization hit its iteration cap
+    /// (surfaced from [`golub_kahan::BidiagSvd::converged`];
+    /// `ttd::decompose` reacts with the [`jacobi_fallback`]).
+    pub converged: bool,
 }
 
 /// Full SVD of an arbitrary matrix through HBD + implicit-shift QR,
@@ -42,6 +46,7 @@ pub fn svd<S: TraceSink>(a: &Matrix, sink: &mut S) -> Svd {
             sigma: s.sigma,
             vt: s.u.transpose(),
             qr_iterations: s.qr_iterations,
+            converged: s.converged,
         }
     }
 }
@@ -53,7 +58,55 @@ fn svd_tall<S: TraceSink>(a: &Matrix, sink: &mut S) -> Svd {
     // diagonalize takes the HBD factors by value and returns them by
     // move — no dense matrix is cloned on the SVD hot path.
     let d = golub_kahan::diagonalize(&f.b, f.u, f.vt, sink);
-    Svd { u: d.u, sigma: d.sigma, vt: d.vt, qr_iterations: d.iterations }
+    Svd { u: d.u, sigma: d.sigma, vt: d.vt, qr_iterations: d.iterations, converged: d.converged }
+}
+
+/// Sweep cap for the Jacobi rescue path — generous for the <= 64-dim
+/// bidiagonal cores this workload produces (the cross-check suite
+/// converges well under 40).
+const JACOBI_RESCUE_SWEEPS: usize = 60;
+
+/// The ISSUE-10 rescue path for a non-converged (or chaos-stalled) QR
+/// diagonalization: bidiagonalize, run the independent one-sided
+/// [`jacobi`] cross-check on the square bidiagonal core, and compose
+/// the factors back (`A = U_hbd B V_hbd^T`, `B = U_j S V_j^T`). The
+/// HBD half emits its usual trace ops; Jacobi rotations are
+/// core-resident and uncosted — the fallback trades modeled cost
+/// fidelity for a converged factorization.
+pub fn jacobi_fallback<S: TraceSink>(a: &Matrix, sink: &mut S) -> Svd {
+    if a.rows >= a.cols {
+        jacobi_fallback_tall(a, sink)
+    } else {
+        sink.op(HwOp::SetPhase(Phase::ReshapeEtc));
+        sink.op(HwOp::Reshape { elems: a.rows * a.cols });
+        let at = a.transpose();
+        let s = jacobi_fallback_tall(&at, sink);
+        sink.op(HwOp::SetPhase(Phase::ReshapeEtc));
+        sink.op(HwOp::Reshape { elems: 2 * a.rows * a.cols });
+        Svd {
+            u: s.vt.transpose(),
+            sigma: s.sigma,
+            vt: s.u.transpose(),
+            qr_iterations: s.qr_iterations,
+            converged: s.converged,
+        }
+    }
+}
+
+fn jacobi_fallback_tall<S: TraceSink>(a: &Matrix, sink: &mut S) -> Svd {
+    sink.op(HwOp::SetPhase(Phase::Hbd));
+    let f = bidiag::bidiagonalize(a, sink);
+    sink.op(HwOp::SetPhase(Phase::QrDiag));
+    let jc = jacobi::jacobi_svd(&f.b, JACOBI_RESCUE_SWEEPS);
+    Svd {
+        u: f.u.matmul(&jc.u),
+        sigma: jc.sigma,
+        vt: jc.vt.matmul(&f.vt),
+        qr_iterations: jc.sweeps_used,
+        // `sweeps_used == cap` means the off-diagonal tolerance was
+        // never met — conservative, like the QR flag.
+        converged: jc.sweeps_used < JACOBI_RESCUE_SWEEPS,
+    }
 }
 
 #[cfg(test)]
@@ -92,6 +145,35 @@ mod tests {
                 "m={m} n={n} err {}",
                 recon.max_abs_diff(&a) / scale
             );
+            assert!(s.converged, "m={m} n={n}: QR must converge on random input");
+        });
+    }
+
+    #[test]
+    fn jacobi_fallback_factors_any_aspect_ratio() {
+        check(10, 601, |rng| {
+            let m = 2 + rng.below(20);
+            let n = 2 + rng.below(20);
+            let a = Matrix::from_vec(m, n, rng.normal_vec(m * n));
+            let s = jacobi_fallback(&a, &mut NullSink);
+            assert!(s.converged, "m={m} n={n}");
+            let k = m.min(n);
+            assert_eq!((s.u.rows, s.u.cols), (m, k));
+            assert_eq!(s.sigma.len(), k);
+            assert_eq!((s.vt.rows, s.vt.cols), (k, n));
+            let recon = reconstruct(&s);
+            let scale = a.frobenius().max(1.0);
+            assert!(
+                recon.max_abs_diff(&a) / scale < 3e-4,
+                "m={m} n={n} fallback err {}",
+                recon.max_abs_diff(&a) / scale
+            );
+            // and its singular values agree with the QR path's
+            let mut qr = svd(&a, &mut NullSink).sigma;
+            qr.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            for (a, b) in qr.iter().zip(&s.sigma) {
+                assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()), "qr {a} vs fallback {b}");
+            }
         });
     }
 

@@ -44,6 +44,7 @@ pub fn rsvd<S: TraceSink>(a: &Matrix, sketch: usize, seed: u64, sink: &mut S) ->
             sigma: s.sigma,
             vt: s.u.transpose(),
             qr_iterations: s.qr_iterations,
+            converged: s.converged,
         }
     }
 }
@@ -102,7 +103,13 @@ fn rsvd_tall<S: TraceSink>(a: &Matrix, sketch: usize, seed: u64, sink: &mut S) -
     // 4. Lift the left basis back: U = Q U_B (m x l @ l x k).
     sink.op(HwOp::SetPhase(Phase::Hbd));
     sink.op(HwOp::Gemm { m, n: s.u.cols, k: l });
-    Svd { u: q.matmul(&s.u), sigma: s.sigma, vt: s.vt, qr_iterations: s.qr_iterations }
+    Svd {
+        u: q.matmul(&s.u),
+        sigma: s.sigma,
+        vt: s.vt,
+        qr_iterations: s.qr_iterations,
+        converged: s.converged,
+    }
 }
 
 #[cfg(test)]

@@ -1,8 +1,9 @@
 //! Algorithm 1: Tensor-Train Decomposition with Sorting_Basis and
 //! delta-Truncation, emitting the hardware trace the simulator costs.
 
+use crate::fault::{JobError, SvdStall};
 use crate::trace::{HwOp, Phase, TraceSink};
-use crate::ttd::svd::{randomized, svd, Svd};
+use crate::ttd::svd::{jacobi_fallback, randomized, svd, Svd};
 use crate::ttd::tensor::{Matrix, MatrixView, Tensor};
 
 /// One TT core `G_k` of shape `(r_{k-1}, n_k, r_k)`, row-major.
@@ -268,13 +269,22 @@ pub struct TtSpec {
     pub eps: f32,
     caps: RankCaps,
     method: SvdMethod,
+    /// Chaos injection: force line 8's SVD to stall (ISSUE 10). Like
+    /// `method`, this changes the factorization path, so it is part
+    /// of spec equality and of every cache key derived from the spec.
+    stall: SvdStall,
 }
 
 impl TtSpec {
     /// Spec with prescribed accuracy `eps`, unbounded ranks, and the
     /// exact SVD.
     pub fn eps(eps: f32) -> Self {
-        TtSpec { eps, caps: RankCaps::Unbounded, method: SvdMethod::Exact }
+        TtSpec {
+            eps,
+            caps: RankCaps::Unbounded,
+            method: SvdMethod::Exact,
+            stall: SvdStall::None,
+        }
     }
 
     /// Cap every bond rank at `cap`.
@@ -306,6 +316,18 @@ impl TtSpec {
     /// Which SVD algorithm line 8 runs.
     pub fn method(&self) -> SvdMethod {
         self.method
+    }
+
+    /// Inject a forced SVD stall (the chaos path; [`SvdStall::None`]
+    /// leaves the numerics bit-identical to a spec without it).
+    pub fn with_stall(mut self, stall: SvdStall) -> Self {
+        self.stall = stall;
+        self
+    }
+
+    /// The injected stall mode.
+    pub fn svd_stall(&self) -> SvdStall {
+        self.stall
     }
 
     /// Effective cap for bond `bond` (`usize::MAX` when unbounded).
@@ -371,6 +393,28 @@ pub fn decompose<S: TraceSink>(w: &Tensor, spec: &TtSpec, sink: &mut S) -> TtDec
                 randomized::rsvd(&mat, sketch, split_seed, sink)
             }
         };
+
+        // Non-convergence handling (ISSUE 10). A hard stall models the
+        // Jacobi fallback failing too: raise the structured error as a
+        // panic payload so the serve supervisor (and the single-flight
+        // MissGuard drop path) convert it — mid-recording — into a
+        // `svd-non-convergence` response instead of process death.
+        if spec.stall == SvdStall::Hard {
+            std::panic::panic_any(JobError::SvdNonConvergence {
+                iterations: s.qr_iterations,
+            });
+        }
+        // A genuinely stuck QR sweep (or an injected soft stall) is
+        // rescued by the independent one-sided Jacobi path before
+        // giving up.
+        if spec.stall == SvdStall::Soft || !s.converged {
+            s = jacobi_fallback(&mat, sink);
+            if !s.converged {
+                std::panic::panic_any(JobError::SvdNonConvergence {
+                    iterations: s.qr_iterations,
+                });
+            }
+        }
 
         // Sorting (line 9) + Truncation (line 10)
         sink.op(HwOp::SetPhase(Phase::SortTrunc));
@@ -590,6 +634,7 @@ mod tests {
                 sigma: sig.clone(),
                 vt: Matrix::eye(k, k),
                 qr_iterations: 0,
+                converged: true,
             };
             let mut sink = VecSink::default();
             sorting_basis(&mut s, &mut sink);
@@ -670,6 +715,44 @@ mod tests {
         // keys derived from the spec)
         assert_ne!(TtSpec::eps(0.1), TtSpec::eps(0.1).rsvd(7, 8));
         assert_ne!(TtSpec::eps(0.1).rsvd(7, 8), TtSpec::eps(0.1).rsvd(8, 8));
+    }
+
+    #[test]
+    fn soft_stall_is_rescued_by_the_jacobi_fallback() {
+        // An injected soft stall reroutes every split through the
+        // Jacobi fallback — the decomposition must still satisfy the
+        // Oseledets bound, deterministically.
+        let mut rng = Rng::new(89);
+        let w = Tensor::from_vec(&[4, 6, 6], rng.normal_vec(144));
+        let eps = 0.3;
+        let spec = TtSpec::eps(eps).with_stall(SvdStall::Soft);
+        let d = decompose(&w, &spec, &mut NullSink);
+        let wr = reconstruct(&d);
+        assert!(rel_err(&wr, &w) <= eps + 1e-3, "err {}", rel_err(&wr, &w));
+        let again = decompose(&w, &spec, &mut NullSink);
+        assert_eq!(d.cores[0].data, again.cores[0].data, "fallback must be deterministic");
+    }
+
+    #[test]
+    fn hard_stall_raises_the_structured_error_as_a_panic_payload() {
+        let mut rng = Rng::new(90);
+        let w = Tensor::from_vec(&[4, 4, 4], rng.normal_vec(64));
+        let spec = TtSpec::eps(0.1).with_stall(SvdStall::Hard);
+        let payload = std::panic::catch_unwind(|| decompose(&w, &spec, &mut NullSink))
+            .expect_err("hard stall must unwind");
+        let err = payload.downcast_ref::<JobError>().expect("JobError payload");
+        assert!(matches!(err, JobError::SvdNonConvergence { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn stall_participates_in_spec_equality() {
+        assert_eq!(TtSpec::eps(0.1).svd_stall(), SvdStall::None);
+        assert_eq!(TtSpec::eps(0.1), TtSpec::eps(0.1).with_stall(SvdStall::None));
+        assert_ne!(TtSpec::eps(0.1), TtSpec::eps(0.1).with_stall(SvdStall::Soft));
+        assert_ne!(
+            TtSpec::eps(0.1).with_stall(SvdStall::Soft),
+            TtSpec::eps(0.1).with_stall(SvdStall::Hard)
+        );
     }
 
     #[test]

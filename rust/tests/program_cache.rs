@@ -48,7 +48,7 @@ fn hit_served_reports_are_byte_identical_to_fresh_numerics() {
         let requests = [req(seed, 0.12), req(seed, 0.12)];
         for workers in [1usize, 4] {
             let before = numerics_pass_count();
-            let out = serve(&requests, &ServeConfig { workers, cache_capacity: 8 });
+            let out = serve(&requests, &ServeConfig { workers, cache_capacity: 8, ..ServeConfig::default() });
             if workers == 1 {
                 assert_eq!(
                     numerics_pass_count() - before,
@@ -91,7 +91,7 @@ fn r_requests_over_k_keys_cost_exactly_k_numerics_passes() {
     ];
     for workers in [1usize, 4] {
         let before = numerics_pass_count();
-        let out = serve(&requests, &ServeConfig { workers, cache_capacity: 8 });
+        let out = serve(&requests, &ServeConfig { workers, cache_capacity: 8, ..ServeConfig::default() });
         if workers == 1 {
             assert_eq!(numerics_pass_count() - before, 3, "thread-local pass counter");
         }
@@ -114,11 +114,11 @@ fn concurrent_drain_is_byte_identical_to_serial_at_any_width() {
             _ => req(22, 0.12),
         })
         .collect();
-    let serial = serve(&requests, &ServeConfig { workers: 1, cache_capacity: 8 });
+    let serial = serve(&requests, &ServeConfig { workers: 1, cache_capacity: 8, ..ServeConfig::default() });
     let want = rendered(&serial);
     assert_eq!(serial.numerics_passes, 3);
     for workers in [2usize, 4, 8] {
-        let out = serve(&requests, &ServeConfig { workers, cache_capacity: 8 });
+        let out = serve(&requests, &ServeConfig { workers, cache_capacity: 8, ..ServeConfig::default() });
         assert_eq!(rendered(&out), want, "workers={workers}");
         // aggregate accounting is deterministic too: single-flight
         // makes exactly one miss per unique key at every width
@@ -141,7 +141,7 @@ fn rank_caps_are_part_of_the_cache_key() {
     let requests =
         [unbounded.clone(), capped.clone(), unbounded.clone(), capped.clone()];
     let before = numerics_pass_count();
-    let out = serve(&requests, &ServeConfig { workers: 1, cache_capacity: 8 });
+    let out = serve(&requests, &ServeConfig { workers: 1, cache_capacity: 8, ..ServeConfig::default() });
     assert_eq!(numerics_pass_count() - before, 2, "2 unique keys, 2 passes");
     assert_eq!(out.stats.misses, 2);
     assert_eq!(out.stats.hits, 2);
@@ -157,7 +157,7 @@ fn rank_caps_are_part_of_the_cache_key() {
     // ...while the two spellings of the same caps share one key: the
     // canonicalization half of the same bugfix.
     let spelled = [capped, per_bond];
-    let out = serve(&spelled, &ServeConfig { workers: 1, cache_capacity: 8 });
+    let out = serve(&spelled, &ServeConfig { workers: 1, cache_capacity: 8, ..ServeConfig::default() });
     assert_eq!(out.numerics_passes, 1, "rank_cap(2) == rank_caps([2,2])");
     assert_eq!(out.stats.hits, 1);
 }
@@ -177,7 +177,7 @@ fn svd_method_is_part_of_the_cache_key() {
     };
     let requests = [exact.clone(), rsvd.clone(), exact.clone(), rsvd.clone()];
     let before = numerics_pass_count();
-    let out = serve(&requests, &ServeConfig { workers: 1, cache_capacity: 8 });
+    let out = serve(&requests, &ServeConfig { workers: 1, cache_capacity: 8, ..ServeConfig::default() });
     assert_eq!(numerics_pass_count() - before, 2, "2 unique keys, 2 passes");
     assert_eq!(out.stats.misses, 2);
     assert_eq!(out.stats.hits, 2);
@@ -305,8 +305,8 @@ fn scripted_churn_pins_exact_eviction_victims() {
 #[test]
 fn capacity_zero_disables_residency_but_not_correctness() {
     let requests = [req(41, 0.12), req(41, 0.12), req(41, 0.2)];
-    let cached = serve(&requests, &ServeConfig { workers: 1, cache_capacity: 8 });
-    let uncached = serve(&requests, &ServeConfig { workers: 1, cache_capacity: 0 });
+    let cached = serve(&requests, &ServeConfig { workers: 1, cache_capacity: 8, ..ServeConfig::default() });
+    let uncached = serve(&requests, &ServeConfig { workers: 1, cache_capacity: 0, ..ServeConfig::default() });
     // identical outputs...
     assert_eq!(rendered(&cached), rendered(&uncached));
     // ...but every request paid numerics and nothing stayed resident
